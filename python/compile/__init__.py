@@ -1,0 +1,5 @@
+"""Build-time compile package: L2 JAX model + L1 Pallas kernels + AOT.
+
+Never imported at runtime — `make artifacts` runs `compile.aot` once and
+the Rust binary consumes only the emitted HLO text under `artifacts/`.
+"""

@@ -1,0 +1,103 @@
+"""AOT lowering: JAX+Pallas stage-1 graph → HLO text artifacts.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+One artifact per (m, b, p) shape variant; the Rust runtime picks the
+smallest fitting variant and zero-pads (rust/src/runtime/accel.rs).
+``manifest.json`` indexes the emitted files.
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import stage1_chunk, stage1_chunk_xla
+
+# Shape menu. m is the chunk height (one MXU tile column's worth of rows);
+# b covers the scaled budgets the benches use; p covers the paper datasets'
+# feature dims after scaling (Adult 123 → 128, SUSY 18 → 32, MNIST 784 →
+# 1024, Epsilon 2000 / scaled-ImageNet ≤ 2508 → 2560).
+CHUNK_M = 256
+B_VARIANTS = (128, 512)
+P_VARIANTS = (32, 128, 1024, 2560)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for the rust
+    side's to_tuple1 unwrap)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_stage1(m: int, b: int, p: int, use_pallas: bool = True) -> str:
+    f32 = jnp.float32
+    x = jax.ShapeDtypeStruct((m, p), f32)
+    l = jax.ShapeDtypeStruct((b, p), f32)
+    w = jax.ShapeDtypeStruct((b, b), f32)
+    gamma = jax.ShapeDtypeStruct((1, 1), f32)
+    fn = stage1_chunk if use_pallas else stage1_chunk_xla
+    lowered = jax.jit(lambda *a: (fn(*a),)).lower(x, l, w, gamma)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--no-pallas",
+        action="store_true",
+        help="lower the plain-XLA reference graph instead of the Pallas kernels",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    artifacts = []
+    for b in B_VARIANTS:
+        for p in P_VARIANTS:
+            name = f"stage1_m{CHUNK_M}_b{b}_p{p}"
+            fname = f"{name}.hlo.txt"
+            path = os.path.join(args.out, fname)
+            text = lower_stage1(CHUNK_M, b, p, use_pallas=not args.no_pallas)
+            with open(path, "w") as f:
+                f.write(text)
+            digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+            artifacts.append(
+                {
+                    "name": name,
+                    "file": fname,
+                    "m": CHUNK_M,
+                    "b": b,
+                    "p": p,
+                    "sha256_16": digest,
+                    "pallas": not args.no_pallas,
+                }
+            )
+            print(f"lowered {name}: {len(text)} chars (sha {digest})", file=sys.stderr)
+
+    manifest = {
+        "version": 1,
+        "jax": jax.__version__,
+        "chunk_m": CHUNK_M,
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(artifacts)} artifacts to {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Layer-1 Pallas kernels: the stage-1 compute hot-spots.
+
+`rbf_gram`   — tiled Gaussian Gram-block kernel (the batch kernel
+               evaluation the paper runs with custom CUDA kernels).
+`matmul`     — tiled matmul used for the whitening projection `K · W`.
+`ref`        — pure-jnp oracles for pytest/hypothesis correctness checks.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so interpret mode is both the
+correctness path and the artifact path on this testbed (DESIGN.md
+§Hardware-Adaptation).
+"""
+
+from compile.kernels.matmul import matmul_pallas
+from compile.kernels.rbf_gram import rbf_gram_pallas
+
+__all__ = ["matmul_pallas", "rbf_gram_pallas"]

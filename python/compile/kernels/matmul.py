@@ -1,0 +1,47 @@
+"""Tiled matmul Pallas kernel — the whitening projection ``K @ W``.
+
+Grid over (m/TM, n/TN) output tiles with the contraction dimension kept
+fully in VMEM (k = B ≤ 512 per artifact variant, so a (128, 512) K-tile
+plus a (512, 128) W-tile is ≈ 512 KiB — small enough to double-buffer).
+A k-blocked accumulator variant is unnecessary at these shapes; DESIGN.md
+§Perf records the VMEM budget per variant.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_M = 128
+TILE_N = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    a = a_ref[...]
+    b = b_ref[...]
+    o_ref[...] = jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul_pallas(a, b, *, interpret=True):
+    """a (m, k) @ b (k, n) with m, n multiples of the 128-tile."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction dims differ: {k} vs {k2}"
+    assert m % TILE_M == 0, f"m={m} not a multiple of {TILE_M}"
+    assert n % TILE_N == 0, f"n={n} not a multiple of {TILE_N}"
+    grid = (m // TILE_M, n // TILE_N)
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_M, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, TILE_N), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_N), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every Pallas kernel must match its oracle to float32 tolerance over the
+hypothesis-swept shape/dtype space (python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+
+
+def rbf_gram_ref(x, landmarks, gamma):
+    """K[i, j] = exp(-gamma * ||x_i - l_j||^2), computed via the Gram trick
+    (one matmul + rank-1 norm corrections), matching the paper's batch
+    kernel evaluation."""
+    x_sq = jnp.sum(x * x, axis=1, keepdims=True)  # (m, 1)
+    l_sq = jnp.sum(landmarks * landmarks, axis=1)[None, :]  # (1, b)
+    d2 = x_sq + l_sq - 2.0 * (x @ landmarks.T)
+    d2 = jnp.maximum(d2, 0.0)
+    return jnp.exp(-gamma * d2)
+
+
+def matmul_ref(a, b):
+    """Plain dense matmul."""
+    return a @ b
+
+
+def stage1_chunk_ref(x, landmarks, whiten, gamma):
+    """G_chunk = K(x, L) @ W — the full stage-1 chunk computation."""
+    return rbf_gram_ref(x, landmarks, gamma) @ whiten

@@ -1,0 +1,43 @@
+"""Layer-2 JAX graph: the stage-1 chunk computation.
+
+``stage1_chunk(x, l, w, gamma)`` = ``rbf_gram(x, l, gamma) @ w`` — one
+fused graph per chunk, calling both L1 Pallas kernels, so the distance
+matrix and the Gram block live entirely on-device and only ``G_chunk``
+returns to the host (mirroring the paper's GPU stage 1, where kernel
+evaluation, whitening and the matrix product are chained on the GPU).
+
+Shapes are static per artifact variant (m, b, p); the Rust runtime
+zero-pads inputs up to the variant (see rust/src/runtime/accel.rs for the
+exactness argument) and gamma arrives as a (1, 1) array so ONE artifact
+serves every kernel bandwidth in a grid search.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.matmul import matmul_pallas
+from compile.kernels.rbf_gram import rbf_gram_pallas
+
+
+def stage1_chunk(x, landmarks, whiten, gamma, *, interpret=True):
+    """G_chunk = K(x, L) @ W.
+
+    x:         (m, p) data chunk (zero-padded rows allowed)
+    landmarks: (b, p) landmark matrix (zero-padded rows allowed — their
+               whitening rows are zero, so they cancel)
+    whiten:    (b, b) whitening map, rank columns live in the left block
+    gamma:     (1, 1) Gaussian bandwidth
+    returns    (m, b) G chunk (tuple-wrapped by the AOT lowering)
+    """
+    k_block = rbf_gram_pallas(x, landmarks, gamma, interpret=interpret)
+    return matmul_pallas(k_block, whiten, interpret=interpret)
+
+
+def stage1_chunk_xla(x, landmarks, whiten, gamma):
+    """Reference L2 graph built from plain jnp ops (no Pallas) — used by
+    tests and by the `--no-pallas` AOT escape hatch to compare lowered
+    HLO size and structure."""
+    x_sq = jnp.sum(x * x, axis=1, keepdims=True)
+    l_sq = jnp.sum(landmarks * landmarks, axis=1)[None, :]
+    d2 = jnp.maximum(x_sq + l_sq - 2.0 * (x @ landmarks.T), 0.0)
+    k_block = jnp.exp(-jnp.reshape(gamma, ()) * d2)
+    return k_block @ whiten

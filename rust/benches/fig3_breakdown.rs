@@ -1,0 +1,118 @@
+//! Paper Figure 3: per-stage timing breakdown — "preparation" (landmarks +
+//! K_BB + eigh), "computation of the matrix G", and "linear SVM training"
+//! — on the native backend (the paper's CPU) and the PJRT artifact backend
+//! (the paper's GPU; see DESIGN.md §Hardware-Adaptation).
+//!
+//! Expected shape: the batch-friendly stages (preparation's K_BB, matrix G)
+//! benefit from the compiled/fused artifact path, while the inherently
+//! sequential SMO loop is a pure-L3 affair where the native path wins —
+//! the paper's central CPU-vs-GPU observation.
+
+mod harness;
+
+use lpdsvm::coordinator::train::{train_with_backend, TrainConfig};
+use lpdsvm::data::synth::PaperDataset;
+use lpdsvm::kernel::Kernel;
+use lpdsvm::lowrank::factor::NativeBackend;
+use lpdsvm::lowrank::Stage1Config;
+use lpdsvm::report::Table;
+use lpdsvm::runtime::{AccelBackend, Runtime};
+use lpdsvm::solver::SolverOptions;
+use lpdsvm::util::timer::StageClock;
+
+fn main() {
+    let scale = harness::bench_scale();
+    let seed = harness::bench_seed();
+    println!("fig3_breakdown: scale={scale} seed={seed}\n");
+
+    let runtime = match Runtime::load(&Runtime::default_dir()) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            println!("PJRT backend unavailable ({e}); emitting native-only breakdown");
+            None
+        }
+    };
+
+    let mut t = Table::new(
+        "Figure 3 analogue: stage breakdown (seconds)",
+        &["dataset", "backend", "preparation", "matrix G", "linear train", "total"],
+    );
+    let mut fig = Table::new(
+        "fig3 series",
+        &["dataset", "backend", "stage", "seconds"],
+    );
+
+    for ds in PaperDataset::all() {
+        let spec = ds.spec(ds.scale_with_floor(scale, 2_000), seed);
+        let data = spec.synth.generate();
+        let cfg = TrainConfig {
+            kernel: Kernel::gaussian(spec.gamma),
+            stage1: Stage1Config {
+                budget: spec.budget,
+                seed,
+                chunk: 256,
+                ..Default::default()
+            },
+            solver: SolverOptions {
+                c: spec.c,
+                seed,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+
+        let mut run = |label: &str, backend: &dyn lpdsvm::lowrank::Stage1Backend| {
+            let mut clock = StageClock::new();
+            match train_with_backend(&data, &cfg, backend, &mut clock) {
+                Ok(_) => {
+                    let prep = clock.secs("preparation");
+                    let g = clock.secs("matrix_g");
+                    let lin = clock.secs("linear_train");
+                    t.row(&[
+                        ds.name().into(),
+                        label.into(),
+                        Table::secs(prep),
+                        Table::secs(g),
+                        Table::secs(lin),
+                        Table::secs(prep + g + lin),
+                    ]);
+                    for (stage, secs) in
+                        [("preparation", prep), ("matrix_g", g), ("linear_train", lin)]
+                    {
+                        fig.row(&[
+                            ds.name().into(),
+                            label.into(),
+                            stage.into(),
+                            format!("{secs}"),
+                        ]);
+                    }
+                }
+                Err(e) => {
+                    // The paper's figure 3 likewise has missing GPU bars
+                    // where G does not fit in GPU memory; here the analogue
+                    // is a dataset exceeding the largest artifact variant.
+                    t.row(&[
+                        ds.name().into(),
+                        label.into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        format!("unavailable: {e}"),
+                    ]);
+                }
+            }
+        };
+
+        run("native", &NativeBackend);
+        if let Some(rt) = &runtime {
+            let accel = AccelBackend::new(rt);
+            run("pjrt", &accel);
+        }
+    }
+
+    println!();
+    t.print();
+    let path = harness::report_dir().join("fig3.tsv");
+    fig.write_tsv(&path).unwrap();
+    println!("figure 3 series written to {}", path.display());
+}

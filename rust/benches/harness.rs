@@ -1,0 +1,85 @@
+//! Shared bench harness (criterion is unavailable offline).
+//!
+//! Each bench target is a `harness = false` binary that uses these helpers
+//! to run the paper's workloads and print the corresponding table/figure.
+//! Scale is controlled by `LPDSVM_BENCH_SCALE` (fraction of the paper's
+//! dataset sizes, default 0.002 so `cargo bench` completes on one core)
+//! and `LPDSVM_BENCH_SEED`.
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+/// Benchmark scale factor relative to the paper's dataset sizes.
+pub fn bench_scale() -> f64 {
+    std::env::var("LPDSVM_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.002)
+}
+
+pub fn bench_seed() -> u64 {
+    std::env::var("LPDSVM_BENCH_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(42)
+}
+
+/// Directory for TSV figure exports.
+pub fn report_dir() -> std::path::PathBuf {
+    let p = std::path::PathBuf::from("target/bench-reports");
+    std::fs::create_dir_all(&p).ok();
+    p
+}
+
+/// Time a closure once (macro-benchmark: whole training runs, as in the
+/// paper's tables).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+/// Statistics over repeated timed runs (micro-benchmarks).
+pub struct Stats {
+    pub mean: f64,
+    pub median: f64,
+    pub min: f64,
+    pub stddev: f64,
+    pub samples: usize,
+}
+
+/// Run `f` `samples` times after `warmup` runs and report wall-time stats.
+pub fn bench_stats(warmup: usize, samples: usize, mut f: impl FnMut()) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / times.len() as f64;
+    Stats {
+        mean,
+        median: times[times.len() / 2],
+        min: times[0],
+        stddev: var.sqrt(),
+        samples,
+    }
+}
+
+/// Pretty print a stats line, criterion-style.
+pub fn print_stats(label: &str, s: &Stats, unit_per_iter: Option<(f64, &str)>) {
+    let extra = match unit_per_iter {
+        Some((count, unit)) => format!("  |  {:.2e} {unit}/s", count / s.mean),
+        None => String::new(),
+    };
+    println!(
+        "{label:<42} mean {:>10.4}s  median {:>10.4}s  min {:>10.4}s  ±{:>8.4}s ({} runs){extra}",
+        s.mean, s.median, s.min, s.stddev, s.samples
+    );
+}

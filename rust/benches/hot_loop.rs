@@ -1,0 +1,59 @@
+//! CD hot-loop micro-benchmark: coordinate-ascent steps per second per
+//! core as a function of the feature dimension B.
+//!
+//! Paper claim (§4): "for a realistic value like B = 10³, each CPU core
+//! performs several million coordinate ascent steps per second". Each step
+//! is one B-dot plus one B-axpy (≈ 4·B flops + 2·B·4 bytes of traffic), so
+//! on this testbed the roofline is memory-bandwidth-bound; §Perf in
+//! EXPERIMENTS.md tracks measured steps/s against that roofline.
+
+mod harness;
+
+use lpdsvm::linalg::Mat;
+use lpdsvm::solver::{solve, ProblemView, SolverOptions};
+use lpdsvm::util::rng::Rng;
+
+fn main() {
+    let seed = harness::bench_seed();
+    println!("hot_loop: CD steps/second (paper: 'several million' at B=1000)\n");
+
+    for b in [64usize, 128, 256, 512, 1024, 2048] {
+        let n = 4096usize;
+        let mut rng = Rng::new(seed ^ b as u64);
+        let mut g = Mat::zeros(n, b);
+        for v in g.data.iter_mut() {
+            *v = rng.normal() as f32 * 0.2;
+        }
+        let y: Vec<f32> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let rows: Vec<usize> = (0..n).collect();
+        let p = ProblemView::new(&g, &rows, &y);
+        // Fixed-epoch run (eps=0 never converges) to measure raw step rate;
+        // shrinking off so every step does the full O(B) work.
+        let opts = SolverOptions {
+            c: 1.0,
+            eps: 0.0,
+            max_epochs: 40,
+            shrinking: false,
+            seed,
+            ..Default::default()
+        };
+        let mut steps_total = 0u64;
+        let stats = harness::bench_stats(1, 9, || {
+            let sol = solve(&p, &opts);
+            steps_total = sol.steps;
+        });
+        // min is the noise-robust statistic on a shared/noisy host.
+        let steps_per_sec = steps_total as f64 / stats.min;
+        let gb_per_sec = steps_per_sec * (2.0 * b as f64 * 4.0) / 1e9;
+        harness::print_stats(
+            &format!("cd_steps B={b:<5} ({steps_total} steps/run)"),
+            &stats,
+            Some((steps_total as f64, "steps")),
+        );
+        println!(
+            "    → {:.2}M steps/s, effective memory traffic ≈ {:.1} GB/s",
+            steps_per_sec / 1e6,
+            gb_per_sec
+        );
+    }
+}

@@ -1,0 +1,112 @@
+//! Paper Table 3: hyperparameter grid search + cross-validation timings.
+//!
+//! Grid: log2(C) ∈ {0..9} (10 values) × log2(γ) ∈ {γ*−2 .. γ*+2} (5
+//! values), 5-fold CV ⇒ 250·C(c,2) binary problems per dataset. Reports
+//! total time, time per binary problem, and the speed-up relative to
+//! training the same problem in isolation (single-run time ÷ per-problem
+//! time), exactly as the paper's table 3 does.
+
+mod harness;
+
+use lpdsvm::coordinator::grid::{grid_search, GridConfig};
+use lpdsvm::coordinator::train::{train, TrainConfig};
+use lpdsvm::data::synth::PaperDataset;
+use lpdsvm::kernel::Kernel;
+use lpdsvm::lowrank::Stage1Config;
+use lpdsvm::report::Table;
+use lpdsvm::solver::SolverOptions;
+use lpdsvm::util::rng::Rng;
+
+fn main() {
+    let scale = harness::bench_scale();
+    let seed = harness::bench_seed();
+    println!("table3_gridsearch: scale={scale} seed={seed}\n");
+
+    let datasets = [
+        PaperDataset::Adult,
+        PaperDataset::Epsilon,
+        PaperDataset::Susy,
+        PaperDataset::Mnist8m,
+    ];
+
+    let mut t = Table::new(
+        "Table 3 analogue: grid search + 5-fold CV",
+        &[
+            "dataset",
+            "total s",
+            "problems",
+            "s/problem",
+            "single-run s",
+            "speed-up",
+            "best (C, gamma)",
+        ],
+    );
+
+    for ds in datasets {
+        let spec = ds.spec(ds.scale_with_floor(scale, 2_000), seed);
+        let data = spec.synth.generate();
+        let mut rng = Rng::new(seed ^ 0x717);
+        let (train_set, _) = data.split(0.2, &mut rng);
+
+        let base = TrainConfig {
+            kernel: Kernel::gaussian(spec.gamma),
+            stage1: Stage1Config {
+                budget: spec.budget,
+                seed,
+                ..Default::default()
+            },
+            solver: SolverOptions {
+                seed,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+
+        // Paper grid: C = 2^0..2^9; gamma = gamma* × 4^{-2..2}.
+        let grid = GridConfig {
+            c_values: (0..10).map(|i| 2f64.powi(i)).collect(),
+            gamma_values: (-2..=2).map(|i| spec.gamma * 4f64.powi(i)).collect(),
+            cv_folds: 5,
+            seed,
+            warm_start: true,
+        };
+        let result = grid_search(&train_set, &base, &grid).expect("grid search");
+
+        // Single isolated training run at the tuned parameters, for the
+        // speed-up denominator (the paper divides table-2 training time by
+        // the per-problem time).
+        let mut single_cfg = base.clone();
+        single_cfg.kernel = Kernel::gaussian(spec.gamma);
+        single_cfg.solver.c = spec.c;
+        let (_, single_s) = harness::time_once(|| train(&train_set, &single_cfg).unwrap());
+
+        let per_problem = result.secs_per_problem();
+        // Paper's speed-up definition: table-2 training time *per binary
+        // problem* (single run ÷ its OVO pair count) divided by the grid's
+        // per-problem time.
+        let n_pairs = (data.n_classes * (data.n_classes - 1) / 2).max(1);
+        let speedup = single_s / n_pairs as f64 / per_problem.max(1e-12);
+        t.row(&[
+            ds.name().into(),
+            Table::secs(result.total_secs),
+            result.n_binary_problems.to_string(),
+            format!("{:.4}", per_problem),
+            Table::secs(single_s),
+            format!("x{speedup:.2}"),
+            format!("({}, {:.2e})", result.best_c, result.best_gamma),
+        ]);
+        println!(
+            "{}: grid done — {} problems in {:.1}s (stage1 {:.1}s, best err {:.2}%)",
+            ds.name(),
+            result.n_binary_problems,
+            result.total_secs,
+            result.stage1_secs,
+            result.best_error * 100.0
+        );
+    }
+    println!();
+    t.print();
+    let path = harness::report_dir().join("table3.tsv");
+    t.write_tsv(&path).unwrap();
+    println!("table 3 written to {}", path.display());
+}

@@ -1,0 +1,335 @@
+//! Exact dual SMO solver — the ThunderSVM/LIBSVM comparator.
+//!
+//! Coordinate ascent on the *full* kernel dual (paper eq. 2) with:
+//! * a maintained gradient vector (`O(n)` update per step via the kernel
+//!   row of the stepped variable — the `O(n·p)` iteration complexity the
+//!   paper ascribes to exact solvers),
+//! * an LRU kernel-row cache ([`super::kernel_cache`]),
+//! * LIBSVM-style shrinking: variables at a bound whose gradient points
+//!   into the bound are removed aggressively; everything is unshrunk once,
+//!   when the active problem first (apparently) converges — the brittle
+//!   "lacks a systematic way of re-activating variables" behaviour the
+//!   paper contrasts with its own heuristic.
+//!
+//! One-versus-one multiclass mirrors LIBSVM; see `coordinator::ovo` which
+//! drives this solver identically to the LPD path.
+
+use crate::baselines::kernel_cache::KernelRowCache;
+use crate::data::dataset::Dataset;
+use crate::data::sparse::SparseMatrix;
+use crate::kernel::Kernel;
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// Options for the exact SMO baseline.
+#[derive(Clone, Debug)]
+pub struct ExactSmoOptions {
+    pub c: f64,
+    pub eps: f64,
+    pub max_epochs: usize,
+    pub cache_mb: usize,
+    pub shrinking: bool,
+    pub seed: u64,
+}
+
+impl Default for ExactSmoOptions {
+    fn default() -> Self {
+        ExactSmoOptions {
+            c: 1.0,
+            eps: 1e-2,
+            max_epochs: 2000,
+            cache_mb: 256,
+            shrinking: true,
+            seed: 0x53,
+        }
+    }
+}
+
+/// Trained exact-kernel binary model: support vectors + coefficients.
+#[derive(Clone, Debug)]
+pub struct ExactBinaryModel {
+    /// Support vectors (rows copied out of the training set).
+    pub sv: SparseMatrix,
+    /// Signed coefficients `α_i y_i` aligned with `sv` rows.
+    pub coef: Vec<f32>,
+    pub kernel: Kernel,
+    pub objective: f64,
+    pub converged: bool,
+    pub epochs: usize,
+    pub steps: u64,
+    pub train_secs: f64,
+}
+
+impl ExactBinaryModel {
+    /// Decision value `f(x_i) = Σ_j coef_j k(x_i, sv_j)` for each row of `x`.
+    pub fn decision(&self, x: &SparseMatrix) -> Vec<f32> {
+        let sv_sq = self.sv.row_sq_norms();
+        (0..x.rows)
+            .map(|i| {
+                let sq_i = x.row_sq_norm(i);
+                let (ci, vi) = x.row(i);
+                let mut f = 0.0f32;
+                for j in 0..self.sv.rows {
+                    let (cj, vj) = self.sv.row(j);
+                    let d = crate::data::sparse::sparse_dot(ci, vi, cj, vj);
+                    f += self.coef[j] * self.kernel.from_products(d, sq_i, sv_sq[j]);
+                }
+                f
+            })
+            .collect()
+    }
+}
+
+/// The exact SMO solver.
+pub struct ExactSmo {
+    pub kernel: Kernel,
+    pub opts: ExactSmoOptions,
+}
+
+impl ExactSmo {
+    pub fn new(kernel: Kernel, opts: ExactSmoOptions) -> Self {
+        ExactSmo { kernel, opts }
+    }
+
+    /// Train on a binary dataset (labels {0,1} → y ∈ {−1,+1}).
+    pub fn train(&self, data: &Dataset) -> ExactBinaryModel {
+        let y = data.signed_labels();
+        self.train_signed(&data.x, &y)
+    }
+
+    /// Train with explicit ±1 labels.
+    pub fn train_signed(&self, x: &SparseMatrix, y: &[f32]) -> ExactBinaryModel {
+        let n = x.rows;
+        assert_eq!(n, y.len());
+        let t0 = Instant::now();
+        let c = self.opts.c as f32;
+        let eps = self.opts.eps as f32;
+        let sq = x.row_sq_norms();
+        let mut cache = KernelRowCache::new(self.opts.cache_mb, n);
+        let mut rng = Rng::new(self.opts.seed);
+
+        let mut alpha = vec![0.0f32; n];
+        // grad_i = y_i f_i − 1 (gradient of the minimisation form).
+        let mut grad = vec![-1.0f32; n];
+        let diag: Vec<f32> = (0..n).map(|i| self.kernel.diag(sq[i])).collect();
+
+        let mut active: Vec<u32> = (0..n as u32).collect();
+        let mut unshrunk = false;
+        let mut epochs = 0usize;
+        let mut steps = 0u64;
+        let mut converged = false;
+
+        while epochs < self.opts.max_epochs {
+            epochs += 1;
+            let mut order = active.clone();
+            rng.shuffle(&mut order);
+            let mut max_viol = 0.0f32;
+            for &iu in &order {
+                let i = iu as usize;
+                let g = grad[i];
+                let a = alpha[i];
+                let viol = if a <= 0.0 {
+                    (-g).max(0.0)
+                } else if a >= c {
+                    g.max(0.0)
+                } else {
+                    g.abs()
+                };
+                max_viol = max_viol.max(viol);
+                if viol <= 1e-12 || diag[i] <= 0.0 {
+                    continue;
+                }
+                let a_new = (a - g / diag[i]).clamp(0.0, c);
+                let delta = a_new - a;
+                if delta == 0.0 {
+                    continue;
+                }
+                alpha[i] = a_new;
+                steps += 1;
+                // O(n) gradient maintenance with the kernel row of i.
+                let row = cache.get(i, x, &self.kernel, &sq);
+                let yi = y[i];
+                for j in 0..n {
+                    grad[j] += delta * yi * y[j] * row[j];
+                }
+            }
+
+            if max_viol < eps {
+                if self.opts.shrinking && !unshrunk && active.len() < n {
+                    // LIBSVM behaviour: reconstruct the full problem once.
+                    active = (0..n as u32).collect();
+                    unshrunk = true;
+                    continue;
+                }
+                converged = true;
+                break;
+            }
+
+            if self.opts.shrinking && !unshrunk {
+                // Aggressive bound shrinking (brittle on purpose).
+                let thresh = max_viol.min(1.0);
+                active.retain(|&iu| {
+                    let i = iu as usize;
+                    let shrinkable = (alpha[i] <= 0.0 && grad[i] > thresh)
+                        || (alpha[i] >= c && grad[i] < -thresh);
+                    !shrinkable
+                });
+                if active.is_empty() {
+                    active = (0..n as u32).collect();
+                    unshrunk = true;
+                }
+            }
+        }
+
+        // Extract support vectors.
+        let sv_idx: Vec<usize> = (0..n).filter(|&i| alpha[i] > 0.0).collect();
+        let sv = x.select_rows(&sv_idx);
+        let coef: Vec<f32> = sv_idx.iter().map(|&i| alpha[i] * y[i]).collect();
+
+        // Dual objective: Σα − ½ Σ_ij α_i α_j y_i y_j K_ij. Compute via f:
+        // D = Σα − ½ Σ_i α_i y_i f_i, and y_i f_i = grad_i + 1.
+        let sum_a: f64 = alpha.iter().map(|&a| a as f64).sum();
+        let quad: f64 = (0..n)
+            .map(|i| alpha[i] as f64 * (grad[i] as f64 + 1.0))
+            .sum();
+        let objective = sum_a - 0.5 * quad;
+
+        ExactBinaryModel {
+            sv,
+            coef,
+            kernel: self.kernel,
+            objective,
+            converged,
+            epochs,
+            steps,
+            train_secs: t0.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{FeatureStyle, SynthSpec};
+
+    fn binary_data(n: usize, sep: f32, seed: u64) -> Dataset {
+        SynthSpec {
+            name: "t".into(),
+            n,
+            p: 8,
+            n_classes: 2,
+            sep,
+            latent: 3,
+            noise: 1.0,
+            style: FeatureStyle::Dense,
+            seed,
+        }
+        .generate()
+    }
+
+    fn error_rate(model: &ExactBinaryModel, data: &Dataset) -> f64 {
+        let scores = model.decision(&data.x);
+        let y = data.signed_labels();
+        let wrong = scores
+            .iter()
+            .zip(&y)
+            .filter(|(s, y)| s.signum() != y.signum())
+            .count();
+        wrong as f64 / data.len() as f64
+    }
+
+    #[test]
+    fn learns_separable_data() {
+        let data = binary_data(150, 4.0, 1);
+        let smo = ExactSmo::new(Kernel::gaussian(0.1), ExactSmoOptions::default());
+        let model = smo.train(&data);
+        assert!(model.converged);
+        assert!(error_rate(&model, &data) < 0.05, "err {}", error_rate(&model, &data));
+    }
+
+    #[test]
+    fn alpha_in_box_and_svs_extracted() {
+        let data = binary_data(100, 1.5, 2);
+        let opts = ExactSmoOptions {
+            c: 0.5,
+            ..Default::default()
+        };
+        let smo = ExactSmo::new(Kernel::gaussian(0.2), opts);
+        let model = smo.train(&data);
+        assert!(!model.coef.is_empty());
+        for &co in &model.coef {
+            assert!(co.abs() <= 0.5 + 1e-5, "coef {co} exceeds C");
+        }
+        assert_eq!(model.sv.rows, model.coef.len());
+    }
+
+    #[test]
+    fn shrinking_preserves_objective() {
+        let data = binary_data(120, 2.0, 3);
+        let mk = |shrinking| {
+            let opts = ExactSmoOptions {
+                eps: 1e-3,
+                shrinking,
+                ..Default::default()
+            };
+            ExactSmo::new(Kernel::gaussian(0.2), opts).train(&data)
+        };
+        let a = mk(true);
+        let b = mk(false);
+        assert!(
+            (a.objective - b.objective).abs() < 1e-2 * (1.0 + b.objective.abs()),
+            "{} vs {}",
+            a.objective,
+            b.objective
+        );
+    }
+
+    #[test]
+    fn matches_lowrank_solver_with_full_budget() {
+        // With budget = n the Nyström approximation is exact, so LPD-SVM and
+        // the exact solver optimise the same dual → same optimal objective.
+        let data = binary_data(80, 2.0, 4);
+        let kernel = Kernel::gaussian(0.3);
+        let exact = ExactSmo::new(
+            kernel,
+            ExactSmoOptions {
+                eps: 1e-4,
+                c: 1.0,
+                ..Default::default()
+            },
+        )
+        .train(&data);
+
+        let cfg = crate::lowrank::Stage1Config {
+            budget: 80,
+            eps_rank: 1e-9,
+            ..Default::default()
+        };
+        let mut clock = crate::util::timer::StageClock::new();
+        let factor = crate::lowrank::LowRankFactor::compute(
+            &data.x,
+            kernel,
+            &cfg,
+            &crate::lowrank::factor::NativeBackend,
+            &mut clock,
+        )
+        .unwrap();
+        let rows: Vec<usize> = (0..data.len()).collect();
+        let y = data.signed_labels();
+        let p = crate::solver::ProblemView::new(&factor.g, &rows, &y);
+        let sol = crate::solver::solve(
+            &p,
+            &crate::solver::SolverOptions {
+                eps: 1e-4,
+                c: 1.0,
+                ..Default::default()
+            },
+        );
+        assert!(
+            (sol.objective - exact.objective).abs() < 2e-2 * (1.0 + exact.objective.abs()),
+            "lowrank {} vs exact {}",
+            sol.objective,
+            exact.objective
+        );
+    }
+}

@@ -1,0 +1,146 @@
+//! LRU cache of kernel matrix rows — the classic LIBSVM memory/compute
+//! trade-off that LPD-SVM's complete precomputation of `G` eliminates.
+
+use crate::data::sparse::SparseMatrix;
+use crate::kernel::Kernel;
+use std::collections::HashMap;
+
+/// Caches full kernel rows `K[i, :]` with least-recently-used eviction.
+pub struct KernelRowCache {
+    capacity_rows: usize,
+    rows: HashMap<usize, (u64, Vec<f32>)>, // i -> (last_use, row)
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl KernelRowCache {
+    /// `capacity_mb` of row storage for a problem with `n` points.
+    pub fn new(capacity_mb: usize, n: usize) -> Self {
+        let bytes_per_row = n * std::mem::size_of::<f32>();
+        let capacity_rows = ((capacity_mb * 1024 * 1024) / bytes_per_row.max(1)).max(2);
+        KernelRowCache {
+            capacity_rows,
+            rows: HashMap::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Fetch row `i`, computing it on a miss. The closure computes the full
+    /// row (cost `O(n·p)` — the expense the paper's low-rank approach
+    /// avoids).
+    pub fn get(
+        &mut self,
+        i: usize,
+        x: &SparseMatrix,
+        kernel: &Kernel,
+        sq_norms: &[f32],
+    ) -> &[f32] {
+        self.tick += 1;
+        let tick = self.tick;
+        if self.rows.contains_key(&i) {
+            self.hits += 1;
+            let e = self.rows.get_mut(&i).unwrap();
+            e.0 = tick;
+            return &e.1;
+        }
+        self.misses += 1;
+        if self.rows.len() >= self.capacity_rows {
+            // Evict the least recently used row.
+            if let Some((&lru, _)) = self.rows.iter().min_by_key(|(_, (t, _))| *t) {
+                self.rows.remove(&lru);
+            }
+        }
+        let row = compute_row(i, x, kernel, sq_norms);
+        self.rows.entry(i).or_insert((tick, row)).1.as_slice()
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+fn compute_row(i: usize, x: &SparseMatrix, kernel: &Kernel, sq_norms: &[f32]) -> Vec<f32> {
+    let n = x.rows;
+    let (ci, vi) = x.row(i);
+    let sq_i = sq_norms[i];
+    let mut out = Vec::with_capacity(n);
+    for j in 0..n {
+        let (cj, vj) = x.row(j);
+        let d = crate::data::sparse::sparse_dot(ci, vi, cj, vj);
+        out.push(kernel.from_products(d, sq_i, sq_norms[j]));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{FeatureStyle, SynthSpec};
+
+    fn data(n: usize) -> SparseMatrix {
+        SynthSpec {
+            name: "t".into(),
+            n,
+            p: 6,
+            n_classes: 2,
+            sep: 1.0,
+            latent: 3,
+            noise: 1.0,
+            style: FeatureStyle::Dense,
+            seed: 1,
+        }
+        .generate()
+        .x
+    }
+
+    #[test]
+    fn rows_are_correct() {
+        let x = data(20);
+        let sq = x.row_sq_norms();
+        let k = Kernel::gaussian(0.3);
+        let mut cache = KernelRowCache::new(16, 20);
+        let row = cache.get(3, &x, &k, &sq).to_vec();
+        for j in 0..20 {
+            let want = k.eval_sparse(&x, 3, &x, j);
+            assert!((row[j] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn hit_on_second_access() {
+        let x = data(10);
+        let sq = x.row_sq_norms();
+        let k = Kernel::gaussian(0.3);
+        let mut cache = KernelRowCache::new(16, 10);
+        cache.get(0, &x, &k, &sq);
+        cache.get(0, &x, &k, &sq);
+        assert_eq!(cache.hits, 1);
+        assert_eq!(cache.misses, 1);
+    }
+
+    #[test]
+    fn evicts_lru_under_pressure() {
+        let x = data(100);
+        let sq = x.row_sq_norms();
+        let k = Kernel::gaussian(0.3);
+        // Tiny cache: 100 rows * 400B = 40 KB; capacity ~2 rows at 0 MB -> min 2.
+        let mut cache = KernelRowCache::new(0, 100);
+        assert_eq!(cache.capacity_rows, 2);
+        cache.get(0, &x, &k, &sq);
+        cache.get(1, &x, &k, &sq);
+        cache.get(0, &x, &k, &sq); // refresh 0 — makes 1 the LRU
+        cache.get(2, &x, &k, &sq); // evicts 1
+        assert_eq!(cache.len(), 2);
+        cache.get(0, &x, &k, &sq);
+        assert_eq!(cache.hits, 2); // 0 twice
+        cache.get(1, &x, &k, &sq); // 1 was evicted → miss
+        assert_eq!(cache.misses, 4);
+    }
+}

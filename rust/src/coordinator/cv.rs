@@ -1,0 +1,240 @@
+//! Cross-validation with a shared stage 1.
+//!
+//! Paper §4 ("Cross Validation, Parameter Tuning, and Multi-Class
+//! Training"): the feature-space representation is fixed ONCE on the whole
+//! dataset, `G` is precomputed, and only then is the data subdivided into
+//! folds — every fold reuses the same `G`, paying stage 1 exactly once.
+//! (The paper notes the slight optimistic bias this can introduce and
+//! argues it is immaterial for parameter tuning; see footnote 4.)
+
+use crate::coordinator::ovo::{self, WarmStore};
+use crate::coordinator::train::TrainConfig;
+use crate::data::dataset::Dataset;
+use crate::data::folds::Folds;
+use crate::linalg::Mat;
+use crate::lowrank::LowRankFactor;
+use crate::model::multiclass::{error_rate, BinaryHead};
+use crate::model::ModelKind;
+use crate::model::MulticlassModel;
+use crate::util::rng::Rng;
+use crate::util::timer::StageClock;
+
+/// Cross-validation configuration.
+#[derive(Clone, Debug)]
+pub struct CvConfig {
+    pub folds: usize,
+    pub seed: u64,
+}
+
+impl Default for CvConfig {
+    fn default() -> Self {
+        CvConfig { folds: 5, seed: 7 }
+    }
+}
+
+/// Result of one cross-validation run.
+#[derive(Clone, Debug)]
+pub struct CvResult {
+    pub fold_errors: Vec<f64>,
+    pub mean_error: f64,
+    /// Number of binary problems trained (folds × pairs).
+    pub n_binary_problems: usize,
+    pub total_secs: f64,
+}
+
+/// Run k-fold CV for a fixed hyperparameter setting, computing stage 1
+/// once on the full dataset.
+pub fn cross_validate(
+    data: &Dataset,
+    cfg: &TrainConfig,
+    cv: &CvConfig,
+) -> anyhow::Result<CvResult> {
+    let mut clock = StageClock::new();
+    let factor = LowRankFactor::compute(
+        &data.x,
+        cfg.kernel,
+        &cfg.stage1,
+        &crate::lowrank::factor::NativeBackend,
+        &mut clock,
+    )?;
+    let folds = Folds::stratified(&data.labels, cv.folds, &mut Rng::new(cv.seed));
+    cross_validate_shared(data, &factor, &folds, cfg, None).map(|(r, _)| r)
+}
+
+/// CV over a *precomputed* factor and fold assignment — the entry the grid
+/// search uses so stage 1 and folds are shared across all (C, γ) points.
+/// `warm` optionally carries per-(fold, pair) dual variables from a
+/// previous (smaller-C) run; the updated store is returned.
+pub fn cross_validate_shared(
+    data: &Dataset,
+    factor: &LowRankFactor,
+    folds: &Folds,
+    cfg: &TrainConfig,
+    warm: Option<&Vec<WarmStore>>,
+) -> anyhow::Result<(CvResult, Vec<WarmStore>)> {
+    let t0 = std::time::Instant::now();
+    let pairs = if data.n_classes == 2 {
+        vec![(0u32, 1u32)]
+    } else {
+        data.class_pairs()
+    };
+    let threads = cfg.effective_threads();
+
+    let mut fold_errors = Vec::with_capacity(folds.k);
+    let mut stores: Vec<WarmStore> = Vec::with_capacity(folds.k);
+    for f in 0..folds.k {
+        let (train_idx, val_idx) = folds.split(f);
+        let (heads, store) = ovo::train_all_pairs(
+            &factor.g,
+            &data.labels,
+            &train_idx,
+            &pairs,
+            &cfg.solver,
+            threads,
+            cfg.compact_pairs,
+            warm.map(|w| &w[f]),
+        );
+        let err = evaluate_heads(&factor.g, &heads, data, &val_idx);
+        fold_errors.push(err);
+        stores.push(store);
+    }
+
+    let mean_error = fold_errors.iter().sum::<f64>() / fold_errors.len().max(1) as f64;
+    Ok((
+        CvResult {
+            n_binary_problems: folds.k * pairs.len(),
+            mean_error,
+            fold_errors,
+            total_secs: t0.elapsed().as_secs_f64(),
+        },
+        stores,
+    ))
+}
+
+/// Evaluate a set of heads on validation rows using the shared `G`.
+fn evaluate_heads(g: &Mat, heads: &[BinaryHead], data: &Dataset, val_idx: &[usize]) -> f64 {
+    let kind = if data.n_classes == 2 {
+        ModelKind::Binary
+    } else {
+        ModelKind::OneVsOne {
+            n_classes: data.n_classes,
+        }
+    };
+    // Borrow trick: build a lightweight model around clones of the small
+    // parts; G rows are selected, not copied wholesale.
+    let g_val = g.select_rows(val_idx);
+    let model = MulticlassModel {
+        factor: LowRankFactor {
+            g: Mat::zeros(0, g.cols),
+            landmarks: Mat::zeros(0, 0),
+            landmark_sq: vec![],
+            whiten: Mat::zeros(0, 0),
+            rank: g.cols,
+            eigenvalues: vec![],
+            kernel: crate::kernel::Kernel::Linear,
+            landmark_idx: vec![],
+        },
+        heads: heads.to_vec(),
+        kind,
+    };
+    let preds = model.predict_from_features(&g_val);
+    let truth: Vec<u32> = val_idx.iter().map(|&i| data.labels[i]).collect();
+    error_rate(&preds, &truth)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{FeatureStyle, PaperDataset, SynthSpec};
+    use crate::kernel::Kernel;
+    use crate::lowrank::Stage1Config;
+    use crate::solver::SolverOptions;
+
+    #[test]
+    fn cv_binary_reasonable_error() {
+        let spec = PaperDataset::Adult.spec(0.02, 11);
+        let data = spec.synth.generate();
+        let cfg = TrainConfig {
+            kernel: Kernel::gaussian(spec.gamma),
+            stage1: Stage1Config {
+                budget: 64,
+                ..Default::default()
+            },
+            solver: SolverOptions {
+                c: spec.c,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let r = cross_validate(&data, &cfg, &CvConfig::default()).unwrap();
+        assert_eq!(r.fold_errors.len(), 5);
+        assert_eq!(r.n_binary_problems, 5);
+        assert!(r.mean_error < 0.35, "cv error {}", r.mean_error);
+    }
+
+    #[test]
+    fn cv_multiclass_counts_problems() {
+        let data = SynthSpec {
+            name: "mc".into(),
+            n: 300,
+            p: 10,
+            n_classes: 4,
+            sep: 4.0,
+            latent: 4,
+            noise: 1.0,
+            style: FeatureStyle::Dense,
+            seed: 12,
+        }
+        .generate();
+        let cfg = TrainConfig {
+            kernel: Kernel::gaussian(0.05),
+            stage1: Stage1Config {
+                budget: 48,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let cv = CvConfig { folds: 3, seed: 1 };
+        let r = cross_validate(&data, &cfg, &cv).unwrap();
+        assert_eq!(r.n_binary_problems, 3 * 6);
+        assert!(r.mean_error < 0.25, "cv error {}", r.mean_error);
+    }
+
+    #[test]
+    fn cv_error_worse_than_train_error_on_noisy_data() {
+        // Validation error should not be (much) below training error.
+        let data = SynthSpec {
+            name: "noisy".into(),
+            n: 400,
+            p: 8,
+            n_classes: 2,
+            sep: 1.2,
+            latent: 4,
+            noise: 1.0,
+            style: FeatureStyle::Dense,
+            seed: 13,
+        }
+        .generate();
+        let cfg = TrainConfig {
+            kernel: Kernel::gaussian(0.1),
+            stage1: Stage1Config {
+                budget: 64,
+                ..Default::default()
+            },
+            solver: SolverOptions {
+                c: 8.0,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let model = crate::coordinator::train::train(&data, &cfg).unwrap();
+        let train_err = model.error_rate(&data.x, &data.labels).unwrap();
+        let r = cross_validate(&data, &cfg, &CvConfig::default()).unwrap();
+        assert!(
+            r.mean_error >= train_err - 0.02,
+            "cv {} < train {}",
+            r.mean_error,
+            train_err
+        );
+    }
+}

@@ -1,0 +1,19 @@
+//! The coordination layer — the paper's "parallelism" ingredient.
+//!
+//! A large SVM job decomposes into many *independent* binary training
+//! runs: one per class pair (one-versus-one), per CV fold, per grid point.
+//! The paper's key observations, all implemented here:
+//!
+//! * the expensive stage 1 (landmarks + eigh + `G`) depends only on the
+//!   kernel parameter, so it is computed once per γ and shared across all
+//!   C values, folds, and class pairs;
+//! * warm starts along the C-grid cut epochs substantially;
+//! * the resulting pool of independent solves is embarrassingly parallel —
+//!   scheduled here over a thread pool (the paper's OpenMP cores / multiple
+//!   GPUs).
+
+pub mod cv;
+pub mod grid;
+pub mod ovo;
+pub mod regression;
+pub mod train;

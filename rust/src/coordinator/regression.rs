@@ -1,0 +1,157 @@
+//! Regression (ε-SVR) entry point — the paper's §2 notes the decision
+//! function is "directly suitable for regression tasks"; this wires the
+//! SVR dual solver (`solver::svr`) to stage 1 exactly as classification.
+
+use crate::data::sparse::SparseMatrix;
+use crate::kernel::Kernel;
+use crate::lowrank::factor::{NativeBackend, Stage1Backend};
+use crate::lowrank::{LowRankFactor, Stage1Config};
+use crate::solver::svr::{solve_svr, SvrOptions, SvrSolution};
+use crate::util::timer::StageClock;
+
+/// Configuration for one SVR training run.
+#[derive(Clone, Debug)]
+pub struct SvrTrainConfig {
+    pub kernel: Kernel,
+    pub stage1: Stage1Config,
+    pub svr: SvrOptions,
+}
+
+impl Default for SvrTrainConfig {
+    fn default() -> Self {
+        SvrTrainConfig {
+            kernel: Kernel::gaussian(0.1),
+            stage1: Stage1Config::default(),
+            svr: SvrOptions::default(),
+        }
+    }
+}
+
+/// A trained regression model.
+pub struct SvrModel {
+    pub factor: LowRankFactor,
+    pub w: Vec<f32>,
+    pub solution: SvrSolution,
+}
+
+impl SvrModel {
+    /// Predict targets for new inputs.
+    pub fn predict(&self, x: &SparseMatrix) -> anyhow::Result<Vec<f32>> {
+        self.predict_with_backend(x, &NativeBackend)
+    }
+
+    pub fn predict_with_backend(
+        &self,
+        x: &SparseMatrix,
+        backend: &dyn Stage1Backend,
+    ) -> anyhow::Result<Vec<f32>> {
+        let g = self.factor.transform(x, backend, 1024)?;
+        Ok(g.matvec(&self.w))
+    }
+
+    /// Mean absolute error against targets.
+    pub fn mae(&self, x: &SparseMatrix, y: &[f32]) -> anyhow::Result<f64> {
+        let preds = self.predict(x)?;
+        anyhow::ensure!(preds.len() == y.len());
+        Ok(preds
+            .iter()
+            .zip(y)
+            .map(|(p, t)| (p - t).abs() as f64)
+            .sum::<f64>()
+            / y.len().max(1) as f64)
+    }
+}
+
+/// Train ε-SVR: stage 1 (shared with classification), then the SVR dual.
+pub fn train_svr(
+    x: &SparseMatrix,
+    y: &[f32],
+    cfg: &SvrTrainConfig,
+) -> anyhow::Result<SvrModel> {
+    anyhow::ensure!(x.rows == y.len(), "targets/rows mismatch");
+    anyhow::ensure!(x.rows > 0, "empty dataset");
+    let mut clock = StageClock::new();
+    let factor = LowRankFactor::compute(x, cfg.kernel, &cfg.stage1, &NativeBackend, &mut clock)?;
+    let solution = solve_svr(&factor.g, y, &cfg.svr);
+    Ok(SvrModel {
+        w: solution.w.clone(),
+        factor,
+        solution,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn learns_nonlinear_function_end_to_end() {
+        // y = x₀² − x₁, not linear in input space.
+        let mut rng = Rng::new(4);
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..500 {
+            let a = rng.range_f64(-1.5, 1.5) as f32;
+            let b = rng.range_f64(-1.5, 1.5) as f32;
+            rows.push(vec![(0u32, a), (1, b)]);
+            y.push(a * a - b);
+        }
+        let x = SparseMatrix::from_rows(2, &rows);
+        let cfg = SvrTrainConfig {
+            kernel: Kernel::gaussian(1.0),
+            stage1: Stage1Config {
+                budget: 80,
+                ..Default::default()
+            },
+            svr: SvrOptions {
+                c: 10.0,
+                epsilon_tube: 0.02,
+                max_epochs: 2000,
+                ..Default::default()
+            },
+        };
+        let model = train_svr(&x, &y, &cfg).unwrap();
+        let mae = model.mae(&x, &y).unwrap();
+        assert!(mae < 0.08, "MAE {mae}");
+    }
+
+    #[test]
+    fn generalises_to_fresh_points() {
+        let mut rng = Rng::new(8);
+        let make = |rng: &mut Rng, n: usize| {
+            let mut rows = Vec::new();
+            let mut y = Vec::new();
+            for _ in 0..n {
+                let a = rng.range_f64(-1.0, 1.0) as f32;
+                rows.push(vec![(0u32, a)]);
+                y.push((3.0 * a).sin());
+            }
+            (SparseMatrix::from_rows(1, &rows), y)
+        };
+        let (x_train, y_train) = make(&mut rng, 400);
+        let (x_test, y_test) = make(&mut rng, 100);
+        let cfg = SvrTrainConfig {
+            kernel: Kernel::gaussian(4.0),
+            stage1: Stage1Config {
+                budget: 60,
+                ..Default::default()
+            },
+            svr: SvrOptions {
+                c: 20.0,
+                epsilon_tube: 0.01,
+                max_epochs: 3000,
+                ..Default::default()
+            },
+        };
+        let model = train_svr(&x_train, &y_train, &cfg).unwrap();
+        let mae = model.mae(&x_test, &y_test).unwrap();
+        assert!(mae < 0.1, "test MAE {mae}");
+    }
+
+    #[test]
+    fn rejects_mismatched_lengths() {
+        let x = SparseMatrix::from_rows(1, &[vec![(0u32, 1.0)]]);
+        assert!(train_svr(&x, &[1.0, 2.0], &SvrTrainConfig::default()).is_err());
+    }
+}

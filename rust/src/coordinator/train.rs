@@ -1,0 +1,186 @@
+//! Top-level training entry points (single model, fixed hyperparameters).
+
+use crate::data::dataset::Dataset;
+use crate::kernel::Kernel;
+use crate::lowrank::factor::NativeBackend;
+use crate::lowrank::{LowRankFactor, Stage1Backend, Stage1Config};
+use crate::model::multiclass::MulticlassModel;
+use crate::model::ModelKind;
+use crate::solver::SolverOptions;
+use crate::util::threads;
+use crate::util::timer::StageClock;
+
+/// Configuration for one training run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub kernel: Kernel,
+    pub stage1: Stage1Config,
+    pub solver: SolverOptions,
+    /// Worker threads for pair-parallel training (0 = auto).
+    pub threads: usize,
+    /// Copy each OVO pair's rows into a contiguous matrix before solving
+    /// (cache locality; see `coordinator::ovo`).
+    pub compact_pairs: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            kernel: Kernel::gaussian(0.1),
+            stage1: Stage1Config::default(),
+            solver: SolverOptions::default(),
+            threads: 0,
+            compact_pairs: true,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn effective_threads(&self) -> usize {
+        if self.threads == 0 {
+            threads::default_threads()
+        } else {
+            self.threads
+        }
+    }
+}
+
+/// Train with the native (pure-Rust) stage-1 backend.
+pub fn train(data: &Dataset, cfg: &TrainConfig) -> anyhow::Result<MulticlassModel> {
+    let mut clock = StageClock::new();
+    train_with_backend(data, cfg, &NativeBackend, &mut clock)
+}
+
+/// Train with an explicit stage-1 backend (native or PJRT accelerator),
+/// accumulating per-stage wall times into `clock` under the paper's
+/// figure-3 stage names ("preparation", "matrix_g", "linear_train").
+pub fn train_with_backend(
+    data: &Dataset,
+    cfg: &TrainConfig,
+    backend: &dyn Stage1Backend,
+    clock: &mut StageClock,
+) -> anyhow::Result<MulticlassModel> {
+    anyhow::ensure!(!data.is_empty(), "empty dataset");
+    anyhow::ensure!(data.n_classes >= 2, "need at least two classes");
+
+    // Stage 1 (times itself into "preparation" + "matrix_g").
+    let factor = LowRankFactor::compute(&data.x, cfg.kernel, &cfg.stage1, backend, clock)?;
+
+    // Stage 2.
+    let subset: Vec<usize> = (0..data.len()).collect();
+    let threads = cfg.effective_threads();
+    let (heads, kind) = clock.time("linear_train", || {
+        if data.n_classes == 2 {
+            let (head, _) = super::ovo::train_pair(
+                &factor.g,
+                &data.labels,
+                &subset,
+                0,
+                1,
+                &cfg.solver,
+                false, // binary uses all rows; compaction buys nothing
+                None,
+            );
+            (vec![head], ModelKind::Binary)
+        } else {
+            let pairs = data.class_pairs();
+            let (heads, _) = super::ovo::train_all_pairs(
+                &factor.g,
+                &data.labels,
+                &subset,
+                &pairs,
+                &cfg.solver,
+                threads,
+                cfg.compact_pairs,
+                None,
+            );
+            (
+                heads,
+                ModelKind::OneVsOne {
+                    n_classes: data.n_classes,
+                },
+            )
+        }
+    });
+
+    Ok(MulticlassModel {
+        factor,
+        heads,
+        kind,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::PaperDataset;
+
+    #[test]
+    fn binary_end_to_end() {
+        let spec = PaperDataset::Adult.spec(0.02, 3);
+        let data = spec.synth.generate();
+        let cfg = TrainConfig {
+            kernel: Kernel::gaussian(spec.gamma),
+            stage1: Stage1Config {
+                budget: 64,
+                ..Default::default()
+            },
+            solver: SolverOptions {
+                c: spec.c,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let model = train(&data, &cfg).unwrap();
+        assert_eq!(model.kind, ModelKind::Binary);
+        let err = model.error_rate(&data.x, &data.labels).unwrap();
+        assert!(err < 0.25, "train error {err}");
+    }
+
+    #[test]
+    fn multiclass_end_to_end() {
+        let spec = crate::data::synth::SynthSpec {
+            name: "mc".into(),
+            n: 400,
+            p: 12,
+            n_classes: 5,
+            sep: 6.0,
+            latent: 4,
+            noise: 1.0,
+            style: crate::data::synth::FeatureStyle::Dense,
+            seed: 9,
+        };
+        let data = spec.generate();
+        let cfg = TrainConfig {
+            kernel: Kernel::gaussian(0.05),
+            stage1: Stage1Config {
+                budget: 64,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let model = train(&data, &cfg).unwrap();
+        assert_eq!(model.heads.len(), 10); // C(5,2)
+        let err = model.error_rate(&data.x, &data.labels).unwrap();
+        assert!(err < 0.15, "train error {err}");
+    }
+
+    #[test]
+    fn stage_clock_has_all_three_stages() {
+        let spec = PaperDataset::Adult.spec(0.005, 4);
+        let data = spec.synth.generate();
+        let cfg = TrainConfig::default();
+        let mut clock = StageClock::new();
+        train_with_backend(&data, &cfg, &NativeBackend, &mut clock).unwrap();
+        for stage in ["preparation", "matrix_g", "linear_train"] {
+            assert!(clock.secs(stage) > 0.0, "missing stage {stage}");
+        }
+    }
+
+    #[test]
+    fn rejects_empty_and_single_class() {
+        let x = crate::data::sparse::SparseMatrix::from_rows(2, &[vec![(0, 1.0)]]);
+        let ds = Dataset::new("one", x, vec![0], 1);
+        assert!(train(&ds, &TrainConfig::default()).is_err());
+    }
+}

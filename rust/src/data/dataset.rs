@@ -1,0 +1,187 @@
+//! Labeled dataset: sparse features + integer class labels, with the
+//! subset/split operations the coordinator needs (OVO pair extraction,
+//! train/test splits, stratified views).
+
+use crate::data::sparse::SparseMatrix;
+use crate::util::rng::Rng;
+
+/// A classification dataset. Labels are class ids `0..n_classes`.
+/// Binary problems use labels {0, 1} which map to y ∈ {−1, +1}.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: SparseMatrix,
+    pub labels: Vec<u32>,
+    pub n_classes: usize,
+    /// Human-readable name (used in bench tables).
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn new(name: &str, x: SparseMatrix, labels: Vec<u32>, n_classes: usize) -> Self {
+        assert_eq!(x.rows, labels.len(), "feature/label count mismatch");
+        assert!(
+            labels.iter().all(|&l| (l as usize) < n_classes),
+            "label out of range"
+        );
+        Dataset {
+            x,
+            labels,
+            n_classes,
+            name: name.to_string(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.x.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.cols
+    }
+
+    /// ±1 labels for a binary dataset (n_classes == 2): class 1 → +1.
+    pub fn signed_labels(&self) -> Vec<f32> {
+        assert_eq!(self.n_classes, 2, "signed_labels needs a binary problem");
+        self.labels
+            .iter()
+            .map(|&l| if l == 1 { 1.0 } else { -1.0 })
+            .collect()
+    }
+
+    /// Subset by row indices (labels follow).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            x: self.x.select_rows(idx),
+            labels: idx.iter().map(|&i| self.labels[i]).collect(),
+            n_classes: self.n_classes,
+            name: self.name.clone(),
+        }
+    }
+
+    /// Indices of all points belonging to class `c`.
+    pub fn class_indices(&self, c: u32) -> Vec<usize> {
+        (0..self.len()).filter(|&i| self.labels[i] == c).collect()
+    }
+
+    /// Number of points per class.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_classes];
+        for &l in &self.labels {
+            counts[l as usize] += 1;
+        }
+        counts
+    }
+
+    /// Shuffled train/test split with `test_frac` of the points held out.
+    pub fn split(&self, test_frac: f64, rng: &mut Rng) -> (Dataset, Dataset) {
+        assert!((0.0..1.0).contains(&test_frac));
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut idx);
+        let n_test = ((self.len() as f64) * test_frac).round() as usize;
+        let (test_idx, train_idx) = idx.split_at(n_test);
+        (self.subset(train_idx), self.subset(test_idx))
+    }
+
+    /// All unordered class pairs `(a, b)`, `a < b` — the OVO sub-problems.
+    pub fn class_pairs(&self) -> Vec<(u32, u32)> {
+        let c = self.n_classes as u32;
+        let mut pairs = Vec::with_capacity((c as usize * (c as usize - 1)) / 2);
+        for a in 0..c {
+            for b in (a + 1)..c {
+                pairs.push((a, b));
+            }
+        }
+        pairs
+    }
+
+    /// Extract the binary sub-problem for classes `(a, b)`: points of class
+    /// `a` become label 0 (−1), class `b` label 1 (+1). Returns the
+    /// sub-dataset and the original row indices.
+    pub fn ovo_subproblem(&self, a: u32, b: u32) -> (Dataset, Vec<usize>) {
+        let idx: Vec<usize> = (0..self.len())
+            .filter(|&i| self.labels[i] == a || self.labels[i] == b)
+            .collect();
+        let labels: Vec<u32> = idx
+            .iter()
+            .map(|&i| if self.labels[i] == b { 1 } else { 0 })
+            .collect();
+        let ds = Dataset {
+            x: self.x.select_rows(&idx),
+            labels,
+            n_classes: 2,
+            name: format!("{}[{a}v{b}]", self.name),
+        };
+        (ds, idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let x = SparseMatrix::from_rows(
+            2,
+            &[
+                vec![(0, 1.0)],
+                vec![(1, 1.0)],
+                vec![(0, -1.0)],
+                vec![(1, -1.0)],
+                vec![(0, 2.0)],
+                vec![(1, 2.0)],
+            ],
+        );
+        Dataset::new("toy", x, vec![0, 1, 2, 0, 1, 2], 3)
+    }
+
+    #[test]
+    fn class_counts_and_indices() {
+        let d = toy();
+        assert_eq!(d.class_counts(), vec![2, 2, 2]);
+        assert_eq!(d.class_indices(1), vec![1, 4]);
+    }
+
+    #[test]
+    fn ovo_pairs_count() {
+        let d = toy();
+        assert_eq!(d.class_pairs(), vec![(0, 1), (0, 2), (1, 2)]);
+    }
+
+    #[test]
+    fn ovo_subproblem_relabels() {
+        let d = toy();
+        let (sub, idx) = d.ovo_subproblem(0, 2);
+        assert_eq!(idx, vec![0, 2, 3, 5]);
+        assert_eq!(sub.labels, vec![0, 1, 0, 1]);
+        assert_eq!(sub.n_classes, 2);
+        assert_eq!(sub.signed_labels(), vec![-1.0, 1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let d = toy();
+        let mut rng = Rng::new(1);
+        let (train, test) = d.split(0.33, &mut rng);
+        assert_eq!(train.len() + test.len(), d.len());
+        assert_eq!(test.len(), 2);
+    }
+
+    #[test]
+    fn subset_follows_labels() {
+        let d = toy();
+        let s = d.subset(&[5, 0]);
+        assert_eq!(s.labels, vec![2, 0]);
+        assert_eq!(s.x.row(0).1, d.x.row(5).1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn label_out_of_range_panics() {
+        let x = SparseMatrix::from_rows(1, &[vec![(0, 1.0)]]);
+        Dataset::new("bad", x, vec![5], 2);
+    }
+}

@@ -1,0 +1,105 @@
+//! Cross-validation folds.
+//!
+//! The paper's CV design (§4) fixes the feature representation (landmarks +
+//! whitening) ONCE on the full dataset and only then subdivides into folds,
+//! so the expensive first stage is shared across all folds. These fold
+//! structures therefore index into a shared `G` matrix rather than copying
+//! features.
+
+use crate::util::rng::Rng;
+
+/// A k-fold partition of `0..n`, stratified by class label so every fold
+/// sees every class (needed for OVO sub-problems inside each fold).
+#[derive(Clone, Debug)]
+pub struct Folds {
+    pub assignments: Vec<u32>, // fold id per point
+    pub k: usize,
+}
+
+impl Folds {
+    /// Stratified k-fold assignment.
+    pub fn stratified(labels: &[u32], k: usize, rng: &mut Rng) -> Self {
+        assert!(k >= 2, "need at least 2 folds");
+        assert!(labels.len() >= k, "fewer points than folds");
+        let n_classes = labels.iter().copied().max().map_or(1, |m| m as usize + 1);
+        let mut assignments = vec![0u32; labels.len()];
+        for c in 0..n_classes as u32 {
+            let mut idx: Vec<usize> = (0..labels.len()).filter(|&i| labels[i] == c).collect();
+            rng.shuffle(&mut idx);
+            for (pos, &i) in idx.iter().enumerate() {
+                assignments[i] = (pos % k) as u32;
+            }
+        }
+        Folds { assignments, k }
+    }
+
+    /// (train indices, validation indices) for fold `f`.
+    pub fn split(&self, f: usize) -> (Vec<usize>, Vec<usize>) {
+        assert!(f < self.k);
+        let mut train = Vec::new();
+        let mut val = Vec::new();
+        for (i, &a) in self.assignments.iter().enumerate() {
+            if a as usize == f {
+                val.push(i);
+            } else {
+                train.push(i);
+            }
+        }
+        (train, val)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn folds_partition_everything() {
+        let labels: Vec<u32> = (0..100).map(|i| (i % 3) as u32).collect();
+        let mut rng = Rng::new(1);
+        let folds = Folds::stratified(&labels, 5, &mut rng);
+        let mut seen = vec![false; 100];
+        for f in 0..5 {
+            let (train, val) = folds.split(f);
+            assert_eq!(train.len() + val.len(), 100);
+            for &i in &val {
+                assert!(!seen[i], "point {i} in two validation folds");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn stratification_balances_classes() {
+        // 60 of class 0, 30 of class 1, 10 of class 2 across 5 folds.
+        let mut labels = vec![0u32; 60];
+        labels.extend(vec![1u32; 30]);
+        labels.extend(vec![2u32; 10]);
+        let mut rng = Rng::new(2);
+        let folds = Folds::stratified(&labels, 5, &mut rng);
+        for f in 0..5 {
+            let (_, val) = folds.split(f);
+            let c0 = val.iter().filter(|&&i| labels[i] == 0).count();
+            let c1 = val.iter().filter(|&&i| labels[i] == 1).count();
+            let c2 = val.iter().filter(|&&i| labels[i] == 2).count();
+            assert_eq!(c0, 12);
+            assert_eq!(c1, 6);
+            assert_eq!(c2, 2);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let labels: Vec<u32> = (0..50).map(|i| (i % 2) as u32).collect();
+        let a = Folds::stratified(&labels, 4, &mut Rng::new(9));
+        let b = Folds::stratified(&labels, 4, &mut Rng::new(9));
+        assert_eq!(a.assignments, b.assignments);
+    }
+
+    #[test]
+    #[should_panic]
+    fn one_fold_rejected() {
+        Folds::stratified(&[0, 1, 0, 1], 1, &mut Rng::new(0));
+    }
+}

@@ -1,0 +1,177 @@
+//! LIBSVM/SVMlight text format I/O.
+//!
+//! Format per line: `<label> <index>:<value> <index>:<value> ...` with
+//! 1-based feature indices. This is the format of every dataset in the
+//! paper's table 1 (all published on the LIBSVM site), so real files can be
+//! dropped in place of the synthetic analogues without code changes.
+
+use crate::data::dataset::Dataset;
+use crate::data::sparse::SparseMatrix;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+/// Parse a LIBSVM file. Labels may be arbitrary integers or ±1; they are
+/// remapped to contiguous class ids `0..n_classes` in sorted label order
+/// (so −1 → 0, +1 → 1 for the usual binary convention).
+pub fn read(path: &Path) -> Result<Dataset> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening LIBSVM file {}", path.display()))?;
+    parse(BufReader::new(file), &path.display().to_string())
+}
+
+/// Parse LIBSVM-format text from any reader.
+pub fn parse<R: BufRead>(reader: R, name: &str) -> Result<Dataset> {
+    let mut raw_labels: Vec<i64> = Vec::new();
+    let mut rows: Vec<Vec<(u32, f32)>> = Vec::new();
+    let mut max_col = 0u32;
+
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label_txt = parts.next().unwrap();
+        let label: i64 = label_txt
+            .parse::<f64>()
+            .map(|f| f as i64)
+            .with_context(|| format!("line {}: bad label '{label_txt}'", lineno + 1))?;
+        let mut entries = Vec::new();
+        for tok in parts {
+            let (idx_txt, val_txt) = tok
+                .split_once(':')
+                .with_context(|| format!("line {}: bad feature '{tok}'", lineno + 1))?;
+            let idx: u32 = idx_txt
+                .parse()
+                .with_context(|| format!("line {}: bad index '{idx_txt}'", lineno + 1))?;
+            if idx == 0 {
+                bail!("line {}: LIBSVM indices are 1-based, found 0", lineno + 1);
+            }
+            let val: f32 = val_txt
+                .parse()
+                .with_context(|| format!("line {}: bad value '{val_txt}'", lineno + 1))?;
+            let col = idx - 1;
+            max_col = max_col.max(col + 1);
+            entries.push((col, val));
+        }
+        entries.sort_by_key(|&(c, _)| c);
+        // Duplicate indices: keep the last occurrence (LIBSVM behaviour).
+        entries.dedup_by(|a, b| {
+            if a.0 == b.0 {
+                b.1 = a.1;
+                true
+            } else {
+                false
+            }
+        });
+        raw_labels.push(label);
+        rows.push(entries);
+    }
+
+    // Remap labels to 0..k in sorted order.
+    let mut label_map: BTreeMap<i64, u32> = BTreeMap::new();
+    for &l in &raw_labels {
+        let next = label_map.len() as u32;
+        label_map.entry(l).or_insert(next);
+    }
+    // Re-sort the map values so classes are ordered by raw label.
+    let sorted: Vec<i64> = label_map.keys().copied().collect();
+    for (i, l) in sorted.iter().enumerate() {
+        label_map.insert(*l, i as u32);
+    }
+    let labels: Vec<u32> = raw_labels.iter().map(|l| label_map[l]).collect();
+    let n_classes = label_map.len().max(1);
+
+    let x = SparseMatrix::from_rows(max_col as usize, &rows);
+    Ok(Dataset::new(name, x, labels, n_classes))
+}
+
+/// Write a dataset in LIBSVM format. Binary datasets are written with
+/// labels −1/+1; multiclass with raw class ids.
+pub fn write(ds: &Dataset, path: &Path) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for i in 0..ds.len() {
+        let label = if ds.n_classes == 2 {
+            if ds.labels[i] == 1 { 1 } else { -1 }
+        } else {
+            ds.labels[i] as i64
+        };
+        write!(f, "{label}")?;
+        let (cols, vals) = ds.x.row(i);
+        for (&c, &v) in cols.iter().zip(vals) {
+            write!(f, " {}:{}", c + 1, v)?;
+        }
+        writeln!(f)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_basic_binary() {
+        let text = "+1 1:0.5 3:1.5\n-1 2:2.0\n+1 1:1.0\n";
+        let ds = parse(Cursor::new(text), "t").unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.dim(), 3);
+        assert_eq!(ds.n_classes, 2);
+        // −1 sorts before +1 → class 0.
+        assert_eq!(ds.labels, vec![1, 0, 1]);
+        assert_eq!(ds.x.row(0).0, &[0, 2]);
+        assert_eq!(ds.x.row(0).1, &[0.5, 1.5]);
+    }
+
+    #[test]
+    fn parse_multiclass_remaps_sorted() {
+        let text = "3 1:1\n7 1:1\n3 2:1\n0 1:1\n";
+        let ds = parse(Cursor::new(text), "t").unwrap();
+        assert_eq!(ds.n_classes, 3);
+        assert_eq!(ds.labels, vec![1, 2, 1, 0]); // 0→0, 3→1, 7→2
+    }
+
+    #[test]
+    fn skips_comments_and_blank_lines() {
+        let text = "# header\n+1 1:1.0 # trailing\n\n-1 2:1.0\n";
+        let ds = parse(Cursor::new(text), "t").unwrap();
+        assert_eq!(ds.len(), 2);
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        assert!(parse(Cursor::new("+1 0:1.0\n"), "t").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_feature() {
+        assert!(parse(Cursor::new("+1 1=3\n"), "t").is_err());
+        assert!(parse(Cursor::new("x 1:1\n"), "t").is_err());
+    }
+
+    #[test]
+    fn roundtrip_through_file() {
+        let text = "+1 1:0.25 4:-1\n-1 2:3\n";
+        let ds = parse(Cursor::new(text), "t").unwrap();
+        let dir = std::env::temp_dir().join("lpdsvm_test_libsvm");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.svm");
+        write(&ds, &path).unwrap();
+        let back = read(&path).unwrap();
+        assert_eq!(back.len(), ds.len());
+        assert_eq!(back.labels, ds.labels);
+        assert_eq!(back.x.to_dense(), ds.x.to_dense());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn unsorted_indices_get_sorted() {
+        let ds = parse(Cursor::new("+1 3:3 1:1\n-1 1:1\n"), "t").unwrap();
+        assert_eq!(ds.x.row(0).0, &[0, 2]);
+        assert_eq!(ds.x.row(0).1, &[1.0, 3.0]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Dataset substrate: sparse feature storage, LIBSVM-format I/O, synthetic
+//! analogues of the paper's five benchmark datasets, splits and CV folds.
+
+pub mod dataset;
+pub mod folds;
+pub mod libsvm;
+pub mod scale;
+pub mod sparse;
+pub mod synth;
+
+pub use dataset::Dataset;
+pub use sparse::SparseMatrix;

@@ -1,0 +1,141 @@
+//! Feature scaling.
+//!
+//! The paper notes EigenPro's sensitivity to data scaling; LIBSVM practice
+//! is to scale features to `[0,1]` or `[-1,1]` before training. We provide
+//! per-feature min-max scaling (fit on train, apply to test) and unit-norm
+//! row scaling.
+
+use crate::data::dataset::Dataset;
+use crate::data::sparse::SparseMatrix;
+
+/// Per-feature affine scaling parameters `x' = (x - min) * scale`.
+#[derive(Clone, Debug)]
+pub struct MinMaxScaler {
+    pub min: Vec<f32>,
+    pub scale: Vec<f32>,
+}
+
+impl MinMaxScaler {
+    /// Fit to map each feature's observed range onto `[0, 1]`.
+    ///
+    /// NOTE on sparsity: for sparse data we treat the implicit zeros as
+    /// observations (LIBSVM's `svm-scale` does the same), so a feature with
+    /// range [0, hi] keeps zeros at zero and the output stays sparse.
+    pub fn fit(x: &SparseMatrix) -> Self {
+        let mut min = vec![0.0f32; x.cols];
+        let mut max = vec![0.0f32; x.cols];
+        for i in 0..x.rows {
+            let (c, v) = x.row(i);
+            for (&ci, &vi) in c.iter().zip(v) {
+                let j = ci as usize;
+                if vi < min[j] {
+                    min[j] = vi;
+                }
+                if vi > max[j] {
+                    max[j] = vi;
+                }
+            }
+        }
+        let scale = min
+            .iter()
+            .zip(&max)
+            .map(|(&lo, &hi)| if hi > lo { 1.0 / (hi - lo) } else { 0.0 })
+            .collect();
+        MinMaxScaler { min, scale }
+    }
+
+    /// Apply the scaling. Entries are shifted only where `min != 0`, which
+    /// for LIBSVM-style data keeps the matrix sparse.
+    ///
+    /// CAVEAT (shared with LIBSVM's `svm-scale`): for features with
+    /// negative values the implicit zeros *conceptually* map to a positive
+    /// target `(0−min)·scale`, which a sparse transform cannot
+    /// materialise; stored entries are scaled exactly, implicit zeros stay
+    /// zero. Prefer non-negative encodings when exact affine semantics
+    /// matter.
+    pub fn transform(&self, x: &SparseMatrix) -> SparseMatrix {
+        let mut out = SparseMatrix::empty(x.cols);
+        let mut buf = Vec::new();
+        for i in 0..x.rows {
+            buf.clear();
+            let (c, v) = x.row(i);
+            for (&ci, &vi) in c.iter().zip(v) {
+                let j = ci as usize;
+                let scaled = (vi - self.min[j]) * self.scale[j];
+                buf.push((ci, scaled));
+            }
+            out.push_row(&buf);
+        }
+        out
+    }
+
+    pub fn transform_dataset(&self, ds: &Dataset) -> Dataset {
+        Dataset::new(&ds.name, self.transform(&ds.x), ds.labels.clone(), ds.n_classes)
+    }
+}
+
+/// Scale every row to unit L2 norm (zero rows untouched).
+pub fn unit_norm_rows(x: &SparseMatrix) -> SparseMatrix {
+    let mut out = SparseMatrix::empty(x.cols);
+    let mut buf = Vec::new();
+    for i in 0..x.rows {
+        buf.clear();
+        let (c, v) = x.row(i);
+        let norm = v.iter().map(|a| a * a).sum::<f32>().sqrt();
+        let inv = if norm > 0.0 { 1.0 / norm } else { 0.0 };
+        for (&ci, &vi) in c.iter().zip(v) {
+            buf.push((ci, vi * inv));
+        }
+        out.push_row(&buf);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minmax_maps_to_unit_interval() {
+        let x = SparseMatrix::from_rows(
+            2,
+            &[vec![(0, 2.0), (1, -4.0)], vec![(0, 6.0), (1, 4.0)]],
+        );
+        let s = MinMaxScaler::fit(&x);
+        let t = s.transform(&x);
+        let d = t.to_dense();
+        for &v in &d.data {
+            assert!((0.0..=1.0).contains(&v), "{v}");
+        }
+        // Feature 0: range [0 (implicit), 6] -> 2.0 maps to 1/3.
+        assert!((d.at(0, 0) - 2.0 / 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn constant_feature_maps_to_zero() {
+        let x = SparseMatrix::from_rows(1, &[vec![(0, 5.0)], vec![(0, 5.0)]]);
+        let s = MinMaxScaler::fit(&x);
+        let t = s.transform(&x);
+        // range [0, 5] -> 5 maps to 1. A truly constant nonzero feature
+        // still has implicit-zero min, so it scales, not collapses.
+        assert!((t.to_dense().at(0, 0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn unit_norm() {
+        let x = SparseMatrix::from_rows(3, &[vec![(0, 3.0), (2, 4.0)], vec![]]);
+        let u = unit_norm_rows(&x);
+        assert!((u.row_sq_norm(0) - 1.0).abs() < 1e-6);
+        assert_eq!(u.row(1).0.len(), 0);
+    }
+
+    #[test]
+    fn fit_on_train_apply_to_test() {
+        let train = SparseMatrix::from_rows(1, &[vec![(0, 0.0)], vec![(0, 10.0)]]);
+        let test = SparseMatrix::from_rows(1, &[vec![(0, 20.0)]]);
+        let s = MinMaxScaler::fit(&train);
+        let t = s.transform(&test);
+        // Out-of-range test values extrapolate (no clamping), like svm-scale.
+        assert!((t.to_dense().at(0, 0) - 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,270 @@
+//! Kernel functions and batch kernel-block evaluation.
+//!
+//! The paper supports the general-purpose kernels whose batch evaluation
+//! reduces to a matrix-matrix product (its §4 observation): Gaussian,
+//! polynomial, and hyperbolic tangent, plus linear. Batch evaluation of a
+//! kernel block `K(X_sel, L)` is implemented the same way the paper's CUDA
+//! kernels do it — inner-product matrix via (sparse×dense) GEMM, then
+//! row/column norms and an elementwise map:
+//!     gaussian:  exp(-γ(‖x‖² + ‖z‖² − 2⟨x,z⟩))
+//!     poly:      (γ⟨x,z⟩ + c₀)^d
+//!     tanh:      tanh(γ⟨x,z⟩ + c₀)
+//! This is exactly the computation the L1 Pallas kernel performs on the
+//! accelerator path (python/compile/kernels/rbf_gram.py).
+
+use crate::data::sparse::SparseMatrix;
+use crate::linalg::Mat;
+
+/// Kernel function with its parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Kernel {
+    /// `exp(-γ ‖x−z‖²)`
+    Gaussian { gamma: f64 },
+    /// `(γ ⟨x,z⟩ + coef0)^degree`
+    Polynomial { gamma: f64, coef0: f64, degree: u32 },
+    /// `tanh(γ ⟨x,z⟩ + coef0)`
+    Tanh { gamma: f64, coef0: f64 },
+    /// `⟨x,z⟩`
+    Linear,
+}
+
+impl Kernel {
+    pub fn gaussian(gamma: f64) -> Kernel {
+        Kernel::Gaussian { gamma }
+    }
+
+    /// Kernel value from the inner product and the two squared norms —
+    /// shared by all evaluation paths (pointwise, block, sparse).
+    #[inline]
+    pub fn from_products(&self, dot: f32, sq_a: f32, sq_b: f32) -> f32 {
+        match *self {
+            Kernel::Gaussian { gamma } => {
+                let d2 = (sq_a + sq_b - 2.0 * dot).max(0.0);
+                (-(gamma as f32) * d2).exp()
+            }
+            Kernel::Polynomial { gamma, coef0, degree } => {
+                (gamma as f32 * dot + coef0 as f32).powi(degree as i32)
+            }
+            Kernel::Tanh { gamma, coef0 } => (gamma as f32 * dot + coef0 as f32).tanh(),
+            Kernel::Linear => dot,
+        }
+    }
+
+    /// `k(x, x)` given ‖x‖².
+    #[inline]
+    pub fn diag(&self, sq: f32) -> f32 {
+        self.from_products(sq, sq, sq)
+    }
+
+    /// Single kernel evaluation between two sparse rows.
+    pub fn eval_sparse(&self, x: &SparseMatrix, i: usize, z: &SparseMatrix, j: usize) -> f32 {
+        let dot = x.row_dot(i, z, j);
+        self.from_products(dot, x.row_sq_norm(i), z.row_sq_norm(j))
+    }
+
+    /// Batch kernel block `K[r, c] = k(x[rows[r]], landmarks[c])` where
+    /// `landmarks` is dense `B×p` with precomputed squared norms.
+    /// This is the stage-1 workhorse (native backend); the accelerator
+    /// backend computes the same block through the AOT Pallas artifact.
+    pub fn block(
+        &self,
+        x: &SparseMatrix,
+        rows: &[usize],
+        landmarks: &Mat,
+        landmark_sq: &[f32],
+    ) -> Mat {
+        assert_eq!(landmarks.rows, landmark_sq.len());
+        // Inner products via sparse × denseᵀ GEMM.
+        let mut dots = x.select_matmul_dense_t(rows, landmarks);
+        // Elementwise kernel map.
+        match *self {
+            Kernel::Linear => dots,
+            _ => {
+                for (r, &i) in rows.iter().enumerate() {
+                    let sq_x = x.row_sq_norm(i);
+                    let row = dots.row_mut(r);
+                    for (c, v) in row.iter_mut().enumerate() {
+                        *v = self.from_products(*v, sq_x, landmark_sq[c]);
+                    }
+                }
+                dots
+            }
+        }
+    }
+
+    /// Full symmetric kernel matrix of a (small) landmark set — the `K_BB`
+    /// that stage 1 eigendecomposes.
+    pub fn symmetric_matrix(&self, landmarks: &Mat, landmark_sq: &[f32]) -> Mat {
+        let b = landmarks.rows;
+        let mut k = Mat::zeros(b, b);
+        for i in 0..b {
+            for j in 0..=i {
+                let dot = crate::linalg::dense::dot(landmarks.row(i), landmarks.row(j));
+                let v = self.from_products(dot, landmark_sq[i], landmark_sq[j]);
+                k.set(i, j, v);
+                k.set(j, i, v);
+            }
+        }
+        k
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Gaussian { .. } => "gaussian",
+            Kernel::Polynomial { .. } => "polynomial",
+            Kernel::Tanh { .. } => "tanh",
+            Kernel::Linear => "linear",
+        }
+    }
+
+    /// Replace γ (used by grid search over kernel bandwidths).
+    pub fn with_gamma(&self, new_gamma: f64) -> Kernel {
+        match *self {
+            Kernel::Gaussian { .. } => Kernel::Gaussian { gamma: new_gamma },
+            Kernel::Polynomial { coef0, degree, .. } => Kernel::Polynomial {
+                gamma: new_gamma,
+                coef0,
+                degree,
+            },
+            Kernel::Tanh { coef0, .. } => Kernel::Tanh {
+                gamma: new_gamma,
+                coef0,
+            },
+            Kernel::Linear => Kernel::Linear,
+        }
+    }
+
+    pub fn gamma(&self) -> Option<f64> {
+        match *self {
+            Kernel::Gaussian { gamma } => Some(gamma),
+            Kernel::Polynomial { gamma, .. } => Some(gamma),
+            Kernel::Tanh { gamma, .. } => Some(gamma),
+            Kernel::Linear => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_sparse(n: usize, p: usize, seed: u64) -> SparseMatrix {
+        let mut rng = Rng::new(seed);
+        let mut rows: Vec<Vec<(u32, f32)>> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut row = Vec::new();
+            for c in 0..p as u32 {
+                if rng.bool(0.6) {
+                    row.push((c, rng.normal() as f32));
+                }
+            }
+            rows.push(row);
+        }
+        SparseMatrix::from_rows(p, &rows)
+    }
+
+    #[test]
+    fn gaussian_self_similarity_is_one() {
+        let x = random_sparse(5, 8, 1);
+        let k = Kernel::gaussian(0.3);
+        for i in 0..5 {
+            let v = k.eval_sparse(&x, i, &x, i);
+            assert!((v - 1.0).abs() < 1e-6, "k(x,x)={v}");
+        }
+    }
+
+    #[test]
+    fn gaussian_matches_direct_formula() {
+        let x = random_sparse(6, 5, 2);
+        let k = Kernel::gaussian(0.7);
+        let d = x.to_dense();
+        for i in 0..6 {
+            for j in 0..6 {
+                let d2: f32 = d
+                    .row(i)
+                    .iter()
+                    .zip(d.row(j))
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                let want = (-0.7f32 * d2).exp();
+                let got = k.eval_sparse(&x, i, &x, j);
+                assert!((got - want).abs() < 1e-5, "({i},{j}) {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_matches_pointwise() {
+        let x = random_sparse(10, 6, 3);
+        let landmarks = random_sparse(4, 6, 4).to_dense();
+        let lm_sq = landmarks.row_sq_norms();
+        for k in [
+            Kernel::gaussian(0.5),
+            Kernel::Polynomial {
+                gamma: 0.3,
+                coef0: 1.0,
+                degree: 3,
+            },
+            Kernel::Tanh {
+                gamma: 0.1,
+                coef0: -0.2,
+            },
+            Kernel::Linear,
+        ] {
+            let rows: Vec<usize> = vec![0, 3, 7];
+            let block = k.block(&x, &rows, &landmarks, &lm_sq);
+            let lsp = SparseMatrix::from_dense(&landmarks);
+            for (r, &i) in rows.iter().enumerate() {
+                for c in 0..4 {
+                    let want = k.eval_sparse(&x, i, &lsp, c);
+                    assert!(
+                        (block.at(r, c) - want).abs() < 1e-5,
+                        "{} ({r},{c}): {} vs {want}",
+                        k.name(),
+                        block.at(r, c)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_matrix_is_symmetric_psd_diag() {
+        let landmarks = random_sparse(8, 5, 5).to_dense();
+        let sq = landmarks.row_sq_norms();
+        let k = Kernel::gaussian(0.4);
+        let m = k.symmetric_matrix(&landmarks, &sq);
+        for i in 0..8 {
+            assert!((m.at(i, i) - 1.0).abs() < 1e-6);
+            for j in 0..8 {
+                assert_eq!(m.at(i, j), m.at(j, i));
+                assert!(m.at(i, j) <= 1.0 + 1e-6);
+                assert!(m.at(i, j) >= 0.0);
+            }
+        }
+        // PSD check via eigensolver.
+        let e = crate::linalg::eigen::sym_eig(&m, 50, 1e-12);
+        assert!(e.values.iter().all(|&l| l > -1e-4), "{:?}", e.values);
+    }
+
+    #[test]
+    fn with_gamma_updates() {
+        let k = Kernel::gaussian(0.1).with_gamma(0.9);
+        assert_eq!(k.gamma(), Some(0.9));
+        assert_eq!(Kernel::Linear.with_gamma(0.5), Kernel::Linear);
+    }
+
+    #[test]
+    fn polynomial_known_value() {
+        // x = [1,2], z = [3,4]: dot=11; (0.5*11 + 1)^2 = 42.25
+        let x = SparseMatrix::from_rows(2, &[vec![(0, 1.0), (1, 2.0)]]);
+        let z = SparseMatrix::from_rows(2, &[vec![(0, 3.0), (1, 4.0)]]);
+        let k = Kernel::Polynomial {
+            gamma: 0.5,
+            coef0: 1.0,
+            degree: 2,
+        };
+        assert!((k.eval_sparse(&x, 0, &z, 0) - 42.25).abs() < 1e-5);
+    }
+}

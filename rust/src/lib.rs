@@ -1,0 +1,72 @@
+//! # LPD-SVM — Low-rank Parallel Dual SVM
+//!
+//! Reproduction of T. Glasmachers, *"Recipe for Fast Large-scale SVM
+//! Training: Polishing, Parallelism, and more RAM!"* (2022), as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Stage 1** ([`lowrank`]): Nyström landmark sampling, eigendecomposition
+//!   of `K_BB` with adaptive rank truncation, and complete precomputation of
+//!   the factor `G = K_nB·V·Λ^{-1/2}` — natively ([`lowrank::factor::NativeBackend`])
+//!   or through AOT-compiled JAX+Pallas artifacts on PJRT ([`runtime`]).
+//! * **Stage 2** ([`solver`]): dual coordinate ascent over the rows of `G`
+//!   with the paper's shrinking, stopping, and warm-start polish.
+//! * **Coordination** ([`coordinator`]): one-versus-one multiclass,
+//!   cross-validation and grid search that share `G`, scheduled over a
+//!   thread pool.
+//! * **Baselines** ([`baselines`]): an exact dual SMO solver
+//!   (LIBSVM/ThunderSVM-style) and an LLSVM-style chunked solver for the
+//!   paper's table 2 comparison.
+//!
+//! Quickstart:
+//!
+//! ```no_run
+//! use lpdsvm::prelude::*;
+//!
+//! let spec = PaperDataset::Adult.spec(0.02, 42);
+//! let data = spec.synth.generate();
+//! let cfg = TrainConfig {
+//!     kernel: Kernel::gaussian(spec.gamma),
+//!     stage1: Stage1Config { budget: spec.budget, ..Default::default() },
+//!     solver: SolverOptions { c: spec.c, ..Default::default() },
+//!     ..Default::default()
+//! };
+//! let model = train(&data, &cfg).unwrap();
+//! let preds = model.predict(&data.x).unwrap();
+//! ```
+
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod kernel;
+pub mod linalg;
+pub mod lowrank;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod solver;
+pub mod testing;
+pub mod util;
+
+pub use coordinator::train::{train, TrainConfig};
+
+/// Convenient single-import surface for examples and downstream users.
+pub mod prelude {
+    pub use crate::baselines::exact_smo::{ExactSmo, ExactSmoOptions};
+    pub use crate::baselines::llsvm::{Llsvm, LlsvmOptions};
+    pub use crate::coordinator::cv::{cross_validate, CvConfig};
+    pub use crate::coordinator::regression::{train_svr, SvrModel, SvrTrainConfig};
+    pub use crate::coordinator::grid::{grid_search, GridConfig, GridResult};
+    pub use crate::coordinator::train::{train, train_with_backend, TrainConfig};
+    pub use crate::data::dataset::Dataset;
+    pub use crate::data::sparse::SparseMatrix;
+    pub use crate::data::synth::{FeatureStyle, PaperDataset, PaperSpec, SynthSpec};
+    pub use crate::kernel::Kernel;
+    pub use crate::linalg::Mat;
+    pub use crate::lowrank::factor::NativeBackend;
+    pub use crate::lowrank::{LowRankFactor, Stage1Backend, Stage1Config};
+    pub use crate::model::multiclass::MulticlassModel;
+    pub use crate::model::ModelKind;
+    pub use crate::solver::{solve, Solution, SolverOptions};
+    pub use crate::util::rng::Rng;
+    pub use crate::util::timer::StageClock;
+}

@@ -1,0 +1,147 @@
+//! Cholesky factorisation.
+//!
+//! The paper (§4, footnote 3) considers Cholesky "an attractive alternative
+//! at first glance" for factoring `K_BB` but rejects it because kernel
+//! matrices are often only *semi*-definite and Cholesky requires strict
+//! positive definiteness. We implement it anyway: (a) tests demonstrate the
+//! failure mode the paper describes, (b) the shifted variant is a useful
+//! cross-check for the Jacobi eigensolver, and (c) downstream users may
+//! want it for well-conditioned kernels.
+
+use crate::linalg::Mat;
+
+/// Lower-triangular Cholesky factor `L` with `L Lᵀ = A`.
+/// Returns `Err` with the failing pivot index if `A` is not (numerically)
+/// strictly positive definite — exactly the breakdown the paper warns about.
+pub fn cholesky(a: &Mat) -> Result<Mat, usize> {
+    assert_eq!(a.rows, a.cols, "cholesky needs a square matrix");
+    let n = a.rows;
+    let mut l = vec![0.0f64; n * n];
+    for j in 0..n {
+        let mut d = a.at(j, j) as f64;
+        for k in 0..j {
+            d -= l[j * n + k] * l[j * n + k];
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return Err(j);
+        }
+        let dj = d.sqrt();
+        l[j * n + j] = dj;
+        for i in (j + 1)..n {
+            let mut s = a.at(i, j) as f64;
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            l[i * n + j] = s / dj;
+        }
+    }
+    Ok(Mat::from_vec(
+        n,
+        n,
+        l.into_iter().map(|x| x as f32).collect(),
+    ))
+}
+
+/// Solve `L y = b` (forward substitution) for lower-triangular `L`.
+pub fn forward_subst(l: &Mat, b: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut s = b[i] as f64;
+        for k in 0..i {
+            s -= l.at(i, k) as f64 * y[k];
+        }
+        y[i] = s / l.at(i, i) as f64;
+    }
+    y.into_iter().map(|x| x as f32).collect()
+}
+
+/// Solve `Lᵀ x = y` (backward substitution).
+pub fn backward_subst_t(l: &Mat, y: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    assert_eq!(y.len(), n);
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut s = y[i] as f64;
+        for k in (i + 1)..n {
+            s -= l.at(k, i) as f64 * x[k];
+        }
+        x[i] = s / l.at(i, i) as f64;
+    }
+    x.into_iter().map(|x| x as f32).collect()
+}
+
+/// Solve `A x = b` given the Cholesky factor of `A`.
+pub fn chol_solve(l: &Mat, b: &[f32]) -> Vec<f32> {
+    backward_subst_t(l, &forward_subst(l, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64, jitter: f32) -> Mat {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(n, n + 2, |_, _| rng.normal() as f32);
+        let mut a = x.matmul_nt(&x);
+        for i in 0..n {
+            let v = a.at(i, i) + jitter;
+            a.set(i, i, v);
+        }
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = random_spd(12, 3, 0.5);
+        let l = cholesky(&a).unwrap();
+        let llt = l.matmul_nt(&l);
+        assert!(a.max_abs_diff(&llt) < 1e-3, "{}", a.max_abs_diff(&llt));
+    }
+
+    #[test]
+    fn solve_matches() {
+        let a = random_spd(8, 9, 1.0);
+        let l = cholesky(&a).unwrap();
+        let mut rng = Rng::new(1);
+        let x_true: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+        let b = a.matvec(&x_true);
+        let x = chol_solve(&l, &b);
+        for i in 0..8 {
+            assert!((x[i] - x_true[i]).abs() < 1e-3, "{} vs {}", x[i], x_true[i]);
+        }
+    }
+
+    #[test]
+    fn fails_on_semidefinite_matrix() {
+        // Rank-1 PSD matrix — the paper's footnote-3 failure mode: Cholesky
+        // breaks down on a semi-definite kernel matrix.
+        let v = Mat::from_vec(3, 1, vec![1., 2., 3.]);
+        let a = v.matmul_nt(&v);
+        let r = cholesky(&a);
+        assert!(r.is_err(), "expected breakdown on semidefinite input");
+        // ... while the Jacobi eigensolver handles it fine:
+        let e = crate::linalg::eigen::sym_eig(&a, 40, 1e-13);
+        assert_eq!(e.effective_rank(1e-6), 1);
+        assert!((e.values[0] - 14.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn fails_on_indefinite_matrix() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 2., 1.]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn triangular_structure() {
+        let a = random_spd(6, 5, 0.5);
+        let l = cholesky(&a).unwrap();
+        for i in 0..6 {
+            for j in (i + 1)..6 {
+                assert_eq!(l.at(i, j), 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,424 @@
+//! Row-major dense `f32` matrix with the operations the solver needs:
+//! blocked GEMM, transposed products, row views, and a few vector
+//! primitives (`dot`, `axpy`) shared with the CD hot loop.
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// `self @ other` — cache-blocked i-k-j GEMM. Row-major friendly: the
+    /// inner loop is a contiguous axpy over the output row, which the
+    /// compiler auto-vectorises.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        const BK: usize = 64;
+        for kb in (0..k).step_by(BK) {
+            let kend = (kb + BK).min(k);
+            for i in 0..m {
+                let arow = &self.data[i * k..(i + 1) * k];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for kk in kb..kend {
+                    let a = arow[kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &other.data[kk * n..(kk + 1) * n];
+                    axpy(a, brow, orow);
+                }
+            }
+        }
+        out
+    }
+
+    /// `self @ otherᵀ` — rows of both operands are contiguous, so each
+    /// output entry is a straight dot product. Used for Gram blocks.
+    pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
+        let (m, n) = (self.rows, other.rows);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let a = self.row(i);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o = dot(a, other.row(j));
+            }
+        }
+        out
+    }
+
+    /// `self @ v` for a vector `v` (len = cols).
+    pub fn matvec(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(v.len(), self.cols);
+        (0..self.rows).map(|i| dot(self.row(i), v)).collect()
+    }
+
+    /// Squared L2 norm of every row.
+    pub fn row_sq_norms(&self) -> Vec<f32> {
+        (0..self.rows).map(|i| dot(self.row(i), self.row(i))).collect()
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Select a subset of rows into a new matrix.
+    pub fn select_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Vertically stack `self` on top of `other`.
+    pub fn vstack(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols);
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Mat::from_vec(self.rows + other.rows, self.cols, data)
+    }
+
+    /// Maximum absolute entry-wise difference (test helper).
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Contiguous dot product — the single hottest primitive in the whole
+/// solver (called once per CD step with `len = B`). Dispatches to an
+/// AVX2+FMA kernel when the CPU supports it (the x86-64 *baseline* target
+/// only guarantees SSE2, so compile-time autovectorisation alone leaves
+/// half the FLOPs on the table — see EXPERIMENTS.md §Perf iteration 3).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_available() {
+            // SAFETY: feature presence checked above.
+            return unsafe { dot_avx2(a, b) };
+        }
+    }
+    dot_scalar(a, b)
+}
+
+/// Portable 8-lane accumulation: independent partial sums break the
+/// sequential FP dependency chain and map onto SSE lanes.
+#[inline]
+fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = [0.0f32; 8];
+    for c in 0..chunks {
+        let ao = &a[c * 8..c * 8 + 8];
+        let bo = &b[c * 8..c * 8 + 8];
+        for l in 0..8 {
+            acc[l] += ao[l] * bo[l];
+        }
+    }
+    let mut s = (acc[0] + acc[4]) + (acc[1] + acc[5]) + (acc[2] + acc[6]) + (acc[3] + acc[7]);
+    for i in chunks * 8..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn avx2_available() -> bool {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    static STATE: AtomicU8 = AtomicU8::new(0); // 0 unknown, 1 yes, 2 no
+    match STATE.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            let yes = std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma");
+            STATE.store(if yes { 1 } else { 2 }, Ordering::Relaxed);
+            yes
+        }
+    }
+}
+
+/// AVX2+FMA dot: 4×8-lane accumulators (32 floats/iter) hide FMA latency.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    use core::arch::x86_64::*;
+    let n = a.len();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut acc2 = _mm256_setzero_ps();
+    let mut acc3 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 32 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+        acc1 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(ap.add(i + 8)),
+            _mm256_loadu_ps(bp.add(i + 8)),
+            acc1,
+        );
+        acc2 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(ap.add(i + 16)),
+            _mm256_loadu_ps(bp.add(i + 16)),
+            acc2,
+        );
+        acc3 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(ap.add(i + 24)),
+            _mm256_loadu_ps(bp.add(i + 24)),
+            acc3,
+        );
+        i += 32;
+    }
+    while i + 8 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+        i += 8;
+    }
+    let acc = _mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3));
+    let hi = _mm256_extractf128_ps(acc, 1);
+    let lo = _mm256_castps256_ps128(acc);
+    let sum4 = _mm_add_ps(hi, lo);
+    let sum2 = _mm_add_ps(sum4, _mm_movehl_ps(sum4, sum4));
+    let sum1 = _mm_add_ss(sum2, _mm_shuffle_ps(sum2, sum2, 0b01));
+    let mut s = _mm_cvtss_f32(sum1);
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+/// `y += a * x` over contiguous slices — the CD step's weight update.
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_available() {
+            // SAFETY: feature presence checked above.
+            unsafe { axpy_avx2(a, x, y) };
+            return;
+        }
+    }
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy_avx2(a: f32, x: &[f32], y: &mut [f32]) {
+    use core::arch::x86_64::*;
+    let n = x.len();
+    let av = _mm256_set1_ps(a);
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let y0 = _mm256_fmadd_ps(av, _mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)));
+        let y1 = _mm256_fmadd_ps(
+            av,
+            _mm256_loadu_ps(xp.add(i + 8)),
+            _mm256_loadu_ps(yp.add(i + 8)),
+        );
+        _mm256_storeu_ps(yp.add(i), y0);
+        _mm256_storeu_ps(yp.add(i + 8), y1);
+        i += 16;
+    }
+    while i + 8 <= n {
+        let y0 = _mm256_fmadd_ps(av, _mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)));
+        _mm256_storeu_ps(yp.add(i), y0);
+        i += 8;
+    }
+    while i < n {
+        *y.get_unchecked_mut(i) += a * x.get_unchecked(i);
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: f32, b: f32, tol: f32) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_fn(4, 4, |i, j| (i * 4 + j) as f32);
+        let i4 = Mat::eye(4);
+        assert_eq!(a.matmul(&i4), a);
+        assert_eq!(i4.matmul(&a), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_nt_matches_matmul() {
+        let a = Mat::from_fn(5, 7, |i, j| ((i * 13 + j * 7) % 5) as f32 - 2.0);
+        let b = Mat::from_fn(6, 7, |i, j| ((i * 3 + j) % 4) as f32 - 1.5);
+        let via_t = a.matmul(&b.transpose());
+        let direct = a.matmul_nt(&b);
+        assert!(via_t.max_abs_diff(&direct) < 1e-5);
+    }
+
+    #[test]
+    fn matmul_blocked_matches_naive_large() {
+        // Exercise the BK blocking boundary (k > 64).
+        let a = Mat::from_fn(9, 130, |i, j| ((i + j) % 7) as f32 * 0.25 - 0.5);
+        let b = Mat::from_fn(130, 11, |i, j| ((i * j) % 5) as f32 * 0.5 - 1.0);
+        let c = a.matmul(&b);
+        for i in 0..9 {
+            for j in 0..11 {
+                let mut s = 0.0;
+                for k in 0..130 {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                assert!(approx(c.at(i, j), s, 1e-5), "({i},{j}): {} vs {s}", c.at(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let a = Mat::from_fn(4, 6, |i, j| (i as f32 - j as f32) * 0.5);
+        let v: Vec<f32> = (0..6).map(|i| i as f32 * 0.3 - 1.0).collect();
+        let got = a.matvec(&v);
+        let vm = Mat::from_vec(6, 1, v.clone());
+        let want = a.matmul(&vm);
+        for i in 0..4 {
+            assert!(approx(got[i], want.at(i, 0), 1e-6));
+        }
+    }
+
+    #[test]
+    fn dot_handles_remainder_lengths() {
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 31] {
+            let a: Vec<f32> = (0..n).map(|i| i as f32 * 0.1).collect();
+            let b: Vec<f32> = (0..n).map(|i| 1.0 - i as f32 * 0.05).collect();
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!(approx(dot(&a, &b), want, 1e-5), "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_basic() {
+        let x = [1.0f32, 2.0, 3.0];
+        let mut y = [10.0f32, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Mat::from_fn(3, 5, |i, j| (i * 5 + j) as f32);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn select_rows_and_vstack() {
+        let a = Mat::from_fn(4, 2, |i, j| (i * 2 + j) as f32);
+        let top = a.select_rows(&[0, 2]);
+        let bot = a.select_rows(&[1, 3]);
+        let all = top.vstack(&bot);
+        assert_eq!(all.row(0), a.row(0));
+        assert_eq!(all.row(1), a.row(2));
+        assert_eq!(all.row(2), a.row(1));
+        assert_eq!(all.row(3), a.row(3));
+    }
+
+    #[test]
+    fn row_sq_norms() {
+        let a = Mat::from_vec(2, 2, vec![3., 4., 0., 2.]);
+        assert_eq!(a.row_sq_norms(), vec![25., 4.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_shape_mismatch_panics() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(4, 2);
+        let _ = a.matmul(&b);
+    }
+}

@@ -1,0 +1,258 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi method.
+//!
+//! The paper (§4, footnote 3) rejects Cholesky for the landmark matrix
+//! `K_BB` because kernel matrices are routinely *near*-singular and
+//! Cholesky needs strict positive definiteness; it uses an eigensolver
+//! (cuSOLVER `syevd` on GPU) and then drops eigenvalues below
+//! `ε·λ_max`. Our substitute is cyclic Jacobi in `f64`: O(B³) per sweep,
+//! unconditionally stable on symmetric matrices, and accurate for the small
+//! eigenvalues we must threshold. It runs once per kernel parameter, on a
+//! B×B matrix, so it is never the bottleneck (matching the paper's own
+//! breakdown where eigh is part of "preparation").
+
+use crate::linalg::Mat;
+
+/// Result of a symmetric eigendecomposition: `A = V diag(λ) Vᵀ`,
+/// eigenvalues sorted in DESCENDING order, `V` column-orthonormal
+/// (stored row-major: `vectors.at(i, k)` is component `i` of eigenvector `k`).
+#[derive(Clone, Debug)]
+pub struct SymEig {
+    pub values: Vec<f64>,
+    pub vectors: Mat,
+}
+
+/// Cyclic Jacobi eigensolver for a symmetric matrix given as `Mat` (f32
+/// storage, f64 compute). `max_sweeps` bounds the work; convergence is
+/// declared when the off-diagonal Frobenius norm falls below
+/// `tol * ||A||_F`.
+pub fn sym_eig(a: &Mat, max_sweeps: usize, tol: f64) -> SymEig {
+    assert_eq!(a.rows, a.cols, "sym_eig needs a square matrix");
+    let n = a.rows;
+    // Work in f64 for accuracy near machine-epsilon thresholds.
+    let mut m: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let fro: f64 = m.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let thresh = tol * fro.max(f64::MIN_POSITIVE);
+
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += m[p * n + q] * m[p * n + q];
+            }
+        }
+        if (2.0 * off).sqrt() <= thresh {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[p * n + q];
+                if apq.abs() <= thresh / (n as f64) {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                // Stable rotation computation (Golub & Van Loan 8.4).
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    -1.0 / (-theta + (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // Apply rotation to rows/cols p and q of A.
+                for k in 0..n {
+                    let akp = m[k * n + p];
+                    let akq = m[k * n + q];
+                    m[k * n + p] = c * akp - s * akq;
+                    m[k * n + q] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = m[p * n + k];
+                    let aqk = m[q * n + k];
+                    m[p * n + k] = c * apk - s * aqk;
+                    m[q * n + k] = s * apk + c * aqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // Extract diagonal, sort descending, permute eigenvector columns.
+    let mut order: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| m[i * n + i]).collect();
+    order.sort_by(|&i, &j| diag[j].partial_cmp(&diag[i]).unwrap());
+    let values: Vec<f64> = order.iter().map(|&i| diag[i]).collect();
+    let mut vectors = Mat::zeros(n, n);
+    for (newk, &oldk) in order.iter().enumerate() {
+        for i in 0..n {
+            vectors.data[i * n + newk] = v[i * n + oldk] as f32;
+        }
+    }
+    SymEig { values, vectors }
+}
+
+impl SymEig {
+    /// Number of eigenvalues kept when dropping those below
+    /// `eps * λ_max` (the paper's adaptive rank truncation). Non-positive
+    /// eigenvalues are always dropped.
+    pub fn effective_rank(&self, eps: f64) -> usize {
+        let lmax = self.values.first().copied().unwrap_or(0.0);
+        if lmax <= 0.0 {
+            return 0;
+        }
+        self.values
+            .iter()
+            .take_while(|&&l| l > eps * lmax && l > 0.0)
+            .count()
+    }
+
+    /// Whitening map `W = V_r Λ_r^{-1/2}` (n×r) such that
+    /// `(K_nB W)(K_nB W)ᵀ ≈ K_nB K_BB⁺ K_Bn` — the Nyström factor map.
+    pub fn whitening_map(&self, rank: usize) -> Mat {
+        let n = self.vectors.rows;
+        let r = rank.min(self.values.len());
+        let mut w = Mat::zeros(n, r);
+        for k in 0..r {
+            let scale = 1.0 / self.values[k].max(f64::MIN_POSITIVE).sqrt();
+            for i in 0..n {
+                w.data[i * r + k] = (self.vectors.at(i, k) as f64 * scale) as f32;
+            }
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_symmetric(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.normal() as f32;
+                a.set(i, j, v);
+                a.set(j, i, v);
+            }
+        }
+        a
+    }
+
+    fn reconstruct(e: &SymEig) -> Mat {
+        let n = e.vectors.rows;
+        Mat::from_fn(n, n, |i, j| {
+            (0..n)
+                .map(|k| {
+                    e.vectors.at(i, k) as f64 * e.values[k] * e.vectors.at(j, k) as f64
+                })
+                .sum::<f64>() as f32
+        })
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Mat::from_vec(3, 3, vec![3., 0., 0., 0., 1., 0., 0., 0., 2.]);
+        let e = sym_eig(&a, 30, 1e-12);
+        assert!((e.values[0] - 3.0).abs() < 1e-9);
+        assert!((e.values[1] - 2.0).abs() < 1e-9);
+        assert!((e.values[2] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1.
+        let a = Mat::from_vec(2, 2, vec![2., 1., 1., 2.]);
+        let e = sym_eig(&a, 30, 1e-14);
+        assert!((e.values[0] - 3.0).abs() < 1e-10);
+        assert!((e.values[1] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn reconstruction_random() {
+        let a = random_symmetric(24, 7);
+        let e = sym_eig(&a, 50, 1e-13);
+        let r = reconstruct(&e);
+        assert!(a.max_abs_diff(&r) < 1e-4, "diff {}", a.max_abs_diff(&r));
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let a = random_symmetric(16, 3);
+        let e = sym_eig(&a, 50, 1e-13);
+        let vt_v = e.vectors.transpose().matmul(&e.vectors);
+        assert!(vt_v.max_abs_diff(&Mat::eye(16)) < 1e-5);
+    }
+
+    #[test]
+    fn eigen_equation_holds() {
+        let a = random_symmetric(12, 11);
+        let e = sym_eig(&a, 50, 1e-13);
+        for k in 0..12 {
+            let v: Vec<f32> = (0..12).map(|i| e.vectors.at(i, k)).collect();
+            let av = a.matvec(&v);
+            for i in 0..12 {
+                let want = e.values[k] as f32 * v[i];
+                assert!(
+                    (av[i] - want).abs() < 1e-4,
+                    "k={k} i={i}: {} vs {want}",
+                    av[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn psd_gram_matrix_nonnegative_spectrum() {
+        // Gram matrix of random vectors is PSD: eigenvalues >= -tiny.
+        let mut rng = Rng::new(5);
+        let x = Mat::from_fn(10, 4, |_, _| rng.normal() as f32);
+        let g = x.matmul_nt(&x);
+        let e = sym_eig(&g, 50, 1e-13);
+        assert!(e.values.iter().all(|&l| l > -1e-5), "{:?}", e.values);
+        // Rank <= 4: at most 4 eigenvalues significantly above zero.
+        assert_eq!(e.effective_rank(1e-6), 4);
+    }
+
+    #[test]
+    fn effective_rank_thresholding() {
+        let a = Mat::from_vec(3, 3, vec![1., 0., 0., 0., 1e-3, 0., 0., 0., 1e-9]);
+        let e = sym_eig(&a, 30, 1e-14);
+        assert_eq!(e.effective_rank(1e-6), 2);
+        assert_eq!(e.effective_rank(1e-12), 3);
+        assert_eq!(e.effective_rank(0.5), 1);
+    }
+
+    #[test]
+    fn whitening_map_whitens() {
+        // W = V Λ^{-1/2}  =>  Wᵀ A W = I on the kept subspace.
+        let a = random_symmetric(8, 13);
+        // Make PSD: A := AᵀA (via matmul with transpose).
+        let a = a.transpose().matmul(&a);
+        let e = sym_eig(&a, 60, 1e-13);
+        let r = e.effective_rank(1e-10);
+        let w = e.whitening_map(r);
+        let wtaw = w.transpose().matmul(&a.matmul(&w));
+        assert!(wtaw.max_abs_diff(&Mat::eye(r)) < 1e-3);
+    }
+
+    #[test]
+    fn one_by_one() {
+        let a = Mat::from_vec(1, 1, vec![4.0]);
+        let e = sym_eig(&a, 10, 1e-14);
+        assert_eq!(e.values.len(), 1);
+        assert!((e.values[0] - 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,17 @@
+//! Dense linear-algebra substrate.
+//!
+//! The paper's stage 1 needs batched GEMM (cuBLAS on their box) and a
+//! symmetric eigendecomposition of the B×B landmark kernel matrix
+//! (cuSOLVER `syevd`). Neither BLAS nor LAPACK is linkable offline, so this
+//! module implements both from scratch: a cache-blocked row-major GEMM and
+//! a cyclic-Jacobi eigensolver (chosen over QR iteration for robustness on
+//! the near-singular kernel matrices the paper §4 warns about — Jacobi
+//! degrades gracefully, and the paper itself rejects Cholesky for the same
+//! reason; we still ship Cholesky for tests and comparison).
+
+pub mod chol;
+pub mod dense;
+pub mod eigen;
+
+pub use dense::Mat;
+pub use eigen::SymEig;

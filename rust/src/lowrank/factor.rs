@@ -1,0 +1,341 @@
+//! The low-rank factor `G` — complete precomputation ("more RAM!").
+//!
+//! `G = K_nB · W` with `W = V_r Λ_r^{-1/2}` from the eigendecomposition of
+//! the landmark matrix `K_BB`, truncated at `ε·λ_max` (the paper's adaptive
+//! rank reduction for numerically noisy eigendirections). `G Gᵀ` is the
+//! Nyström approximation of the full kernel matrix, so stage 2 reduces to a
+//! *linear* SVM over the rows of `G`.
+//!
+//! Assembly is chunked: both the native backend (Rust GEMM) and the
+//! accelerator backend (AOT-compiled JAX+Pallas artifact via PJRT) consume
+//! fixed-size row chunks, mirroring the paper's streaming design for
+//! "G fits in CPU RAM but not GPU RAM".
+
+use crate::data::sparse::SparseMatrix;
+use crate::kernel::Kernel;
+use crate::linalg::eigen::sym_eig;
+use crate::linalg::Mat;
+use crate::lowrank::landmarks::{self, LandmarkStrategy};
+use crate::util::rng::Rng;
+use crate::util::timer::StageClock;
+
+/// Stage-1 configuration.
+#[derive(Clone, Debug)]
+pub struct Stage1Config {
+    /// Budget B: number of landmark points.
+    pub budget: usize,
+    /// Relative eigenvalue threshold ε: drop λ < ε·λ_max. The paper drops
+    /// "components close to machine precision times the largest
+    /// eigenvalue"; 1e-6 is a robust default for f32 storage.
+    pub eps_rank: f64,
+    /// Row-chunk size for streaming assembly.
+    pub chunk: usize,
+    pub strategy: LandmarkStrategy,
+    pub seed: u64,
+}
+
+impl Default for Stage1Config {
+    fn default() -> Self {
+        Stage1Config {
+            budget: 512,
+            eps_rank: 1e-6,
+            chunk: 256,
+            strategy: LandmarkStrategy::Uniform,
+            seed: 0x5eed,
+        }
+    }
+}
+
+/// Backend that turns a row chunk into its `G` chunk. `Native` runs the
+/// Rust GEMM path; implementations in `runtime::accel` run the AOT
+/// JAX+Pallas artifact on the PJRT client (the paper's "GPU path").
+// NOTE: deliberately NOT `Sync` — the PJRT-backed implementation wraps raw
+// C pointers. Stage-1 chunks are processed sequentially per factor; pair-
+// level parallelism happens above this layer on plain `Mat` data.
+pub trait Stage1Backend {
+    /// Compute `K(X[rows], L) @ W` for one chunk.
+    /// `x_sq[r]` are the squared norms of the selected rows.
+    fn g_chunk(
+        &self,
+        x: &SparseMatrix,
+        rows: &[usize],
+        landmarks: &Mat,
+        landmark_sq: &[f32],
+        whiten: &Mat,
+        kernel: &Kernel,
+    ) -> anyhow::Result<Mat>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust backend (the paper's CPU path: Eigen + OpenMP there, our
+/// blocked GEMM + thread pool here).
+pub struct NativeBackend;
+
+impl Stage1Backend for NativeBackend {
+    fn g_chunk(
+        &self,
+        x: &SparseMatrix,
+        rows: &[usize],
+        landmarks: &Mat,
+        landmark_sq: &[f32],
+        whiten: &Mat,
+        kernel: &Kernel,
+    ) -> anyhow::Result<Mat> {
+        let k_block = kernel.block(x, rows, landmarks, landmark_sq);
+        Ok(k_block.matmul(whiten))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// The fully precomputed low-rank representation (stage-1 output).
+#[derive(Clone, Debug)]
+pub struct LowRankFactor {
+    /// `G` — n × rank, row i is the feature vector of training point i.
+    pub g: Mat,
+    /// Dense landmark matrix (B × p) and its squared row norms.
+    pub landmarks: Mat,
+    pub landmark_sq: Vec<f32>,
+    /// Whitening map `W = V_r Λ_r^{-1/2}` (B × rank).
+    pub whiten: Mat,
+    /// Effective rank after eigenvalue truncation (= G.cols).
+    pub rank: usize,
+    /// Eigenvalues of `K_BB` (descending, full length B).
+    pub eigenvalues: Vec<f64>,
+    pub kernel: Kernel,
+    /// Indices of the landmark rows in the source dataset.
+    pub landmark_idx: Vec<usize>,
+}
+
+impl LowRankFactor {
+    /// Run stage 1: select landmarks, factor `K_BB`, assemble `G`.
+    /// Stage timings are accumulated into `clock` under the paper's
+    /// figure-3 stage names: "preparation" (landmarks + K_BB + eigh) and
+    /// "matrix_g" (chunked assembly).
+    pub fn compute(
+        x: &SparseMatrix,
+        kernel: Kernel,
+        cfg: &Stage1Config,
+        backend: &dyn Stage1Backend,
+        clock: &mut StageClock,
+    ) -> anyhow::Result<LowRankFactor> {
+        anyhow::ensure!(x.rows > 0, "empty dataset");
+        let mut rng = Rng::new(cfg.seed);
+
+        // --- preparation: landmarks, K_BB, eigendecomposition ---
+        let (landmark_idx, lm, lm_sq, eig, rank, whiten) = clock.time("preparation", || {
+            let landmark_idx = landmarks::select(x, cfg.budget, cfg.strategy, &kernel, &mut rng);
+            let (lm, lm_sq) = landmarks::densify(x, &landmark_idx);
+            let k_bb = kernel.symmetric_matrix(&lm, &lm_sq);
+            let eig = sym_eig(&k_bb, 40, 1e-12);
+            let rank = eig.effective_rank(cfg.eps_rank).max(1);
+            let whiten = eig.whitening_map(rank);
+            (landmark_idx, lm, lm_sq, eig, rank, whiten)
+        });
+
+        // --- matrix G: chunked assembly through the backend ---
+        let g = clock.time("matrix_g", || -> anyhow::Result<Mat> {
+            let mut g = Mat::zeros(x.rows, rank);
+            let rows_all: Vec<usize> = (0..x.rows).collect();
+            for chunk in rows_all.chunks(cfg.chunk.max(1)) {
+                let gc = backend.g_chunk(x, chunk, &lm, &lm_sq, &whiten, &kernel)?;
+                debug_assert_eq!(gc.rows, chunk.len());
+                debug_assert_eq!(gc.cols, rank);
+                for (r, &i) in chunk.iter().enumerate() {
+                    g.row_mut(i).copy_from_slice(gc.row(r));
+                }
+            }
+            Ok(g)
+        })?;
+
+        Ok(LowRankFactor {
+            g,
+            landmarks: lm,
+            landmark_sq: lm_sq,
+            whiten,
+            rank,
+            eigenvalues: eig.values,
+            kernel,
+            landmark_idx,
+        })
+    }
+
+    /// Map *new* data (e.g. a test set) into the same feature space:
+    /// `G_new = K(X_new, L) W`. Used at prediction time and for CV folds.
+    pub fn transform(
+        &self,
+        x: &SparseMatrix,
+        backend: &dyn Stage1Backend,
+        chunk: usize,
+    ) -> anyhow::Result<Mat> {
+        let mut g = Mat::zeros(x.rows, self.rank);
+        let rows_all: Vec<usize> = (0..x.rows).collect();
+        for c in rows_all.chunks(chunk.max(1)) {
+            let gc = backend.g_chunk(
+                x,
+                c,
+                &self.landmarks,
+                &self.landmark_sq,
+                &self.whiten,
+                &self.kernel,
+            )?;
+            for (r, &i) in c.iter().enumerate() {
+                g.row_mut(i).copy_from_slice(gc.row(r));
+            }
+        }
+        Ok(g)
+    }
+
+    /// Nyström kernel approximation `k̃(i, j) = ⟨G_i, G_j⟩` (test helper /
+    /// diagnostics).
+    pub fn approx_kernel(&self, i: usize, j: usize) -> f32 {
+        crate::linalg::dense::dot(self.g.row(i), self.g.row(j))
+    }
+
+    /// RAM held by `G` in bytes — the paper's "more RAM" budget check.
+    pub fn g_bytes(&self) -> usize {
+        self.g.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{FeatureStyle, SynthSpec};
+
+    fn dataset(n: usize, p: usize, seed: u64) -> SparseMatrix {
+        SynthSpec {
+            name: "t".into(),
+            n,
+            p,
+            n_classes: 2,
+            sep: 2.0,
+            latent: 4,
+            noise: 1.0,
+            style: FeatureStyle::Dense,
+            seed,
+        }
+        .generate()
+        .x
+    }
+
+    fn compute(x: &SparseMatrix, budget: usize) -> LowRankFactor {
+        let cfg = Stage1Config {
+            budget,
+            chunk: 19, // deliberately not dividing n evenly
+            ..Default::default()
+        };
+        let mut clock = StageClock::new();
+        LowRankFactor::compute(x, Kernel::gaussian(0.2), &cfg, &NativeBackend, &mut clock)
+            .unwrap()
+    }
+
+    #[test]
+    fn g_has_expected_shape() {
+        let x = dataset(100, 10, 1);
+        let f = compute(&x, 32);
+        assert_eq!(f.g.rows, 100);
+        assert_eq!(f.g.cols, f.rank);
+        assert!(f.rank <= 32);
+        assert!(f.rank >= 1);
+    }
+
+    #[test]
+    fn nystrom_exact_on_landmarks() {
+        // For landmark points themselves, G G^T reproduces the kernel
+        // exactly (up to truncation): Nyström is exact on its inducing set.
+        let x = dataset(60, 8, 2);
+        let f = compute(&x, 60); // budget = n → full Nyström = exact kernel
+        for &i in f.landmark_idx.iter().take(10) {
+            for &j in f.landmark_idx.iter().take(10) {
+                let exact = f.kernel.eval_sparse(&x, i, &x, j);
+                let approx = f.approx_kernel(i, j);
+                assert!(
+                    (exact - approx).abs() < 1e-3,
+                    "({i},{j}): {exact} vs {approx}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn approximation_improves_with_budget() {
+        let x = dataset(150, 10, 3);
+        let err = |budget: usize| -> f64 {
+            let f = compute(&x, budget);
+            let mut total = 0.0f64;
+            let mut cnt = 0;
+            for i in (0..150).step_by(7) {
+                for j in (0..150).step_by(11) {
+                    let exact = f.kernel.eval_sparse(&x, i, &x, j) as f64;
+                    total += (exact - f.approx_kernel(i, j) as f64).abs();
+                    cnt += 1;
+                }
+            }
+            total / cnt as f64
+        };
+        let e_small = err(8);
+        let e_big = err(96);
+        assert!(
+            e_big < e_small * 0.8,
+            "budget 96 err {e_big} not clearly below budget 8 err {e_small}"
+        );
+    }
+
+    #[test]
+    fn transform_consistent_with_training_g() {
+        // Transforming the training data again must reproduce G.
+        let x = dataset(80, 6, 4);
+        let f = compute(&x, 24);
+        let g2 = f.transform(&x, &NativeBackend, 23).unwrap();
+        assert!(f.g.max_abs_diff(&g2) < 1e-5);
+    }
+
+    #[test]
+    fn rank_truncation_drops_noise_dims() {
+        // Low-dimensional data (latent rank ~p) with a large budget: K_BB is
+        // strongly rank-deficient under a near-linear kernel scale, so the
+        // effective rank must come out well below B.
+        let x = dataset(120, 4, 5);
+        let cfg = Stage1Config {
+            budget: 64,
+            eps_rank: 1e-4,
+            chunk: 64,
+            ..Default::default()
+        };
+        let mut clock = StageClock::new();
+        let f = LowRankFactor::compute(
+            &x,
+            Kernel::gaussian(0.001), // nearly linear regime
+            &cfg,
+            &NativeBackend,
+            &mut clock,
+        )
+        .unwrap();
+        assert!(f.rank < 64, "rank {} should be < budget", f.rank);
+    }
+
+    #[test]
+    fn stage_clock_populated() {
+        let x = dataset(50, 5, 6);
+        let cfg = Stage1Config {
+            budget: 16,
+            ..Default::default()
+        };
+        let mut clock = StageClock::new();
+        LowRankFactor::compute(&x, Kernel::gaussian(0.3), &cfg, &NativeBackend, &mut clock)
+            .unwrap();
+        assert!(clock.secs("preparation") > 0.0);
+        assert!(clock.secs("matrix_g") > 0.0);
+    }
+
+    #[test]
+    fn g_bytes_reports_ram() {
+        let x = dataset(64, 5, 7);
+        let f = compute(&x, 16);
+        assert_eq!(f.g_bytes(), 64 * f.rank * 4);
+    }
+}

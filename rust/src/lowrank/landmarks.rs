@@ -1,0 +1,182 @@
+//! Landmark (basis) selection for the Nyström subspace.
+//!
+//! The paper settles on a fixed random sample of training points (§4): it
+//! precludes merging-style budget maintenance but enables complete
+//! precomputation of `G`. We also provide a k-means++-style diverse
+//! sampler as an optional improvement (the paper cites data-dependent
+//! subspaces [26] as the motivation for Nyström over random features).
+
+use crate::data::sparse::SparseMatrix;
+use crate::kernel::Kernel;
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// Landmark selection strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LandmarkStrategy {
+    /// Uniform random subset of the training points (paper default).
+    Uniform,
+    /// Greedy kernel k-means++ seeding: each landmark picked with
+    /// probability proportional to its squared kernel distance from the
+    /// span of already-chosen landmarks (approximated by min distance).
+    KmeansPlusPlus,
+}
+
+/// Select `b` landmark row indices from `x`.
+pub fn select(
+    x: &SparseMatrix,
+    b: usize,
+    strategy: LandmarkStrategy,
+    kernel: &Kernel,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    let b = b.min(x.rows);
+    match strategy {
+        LandmarkStrategy::Uniform => {
+            let mut idx = rng.sample_indices(x.rows, b);
+            idx.sort_unstable();
+            idx
+        }
+        LandmarkStrategy::KmeansPlusPlus => kmeanspp(x, b, kernel, rng),
+    }
+}
+
+fn kmeanspp(x: &SparseMatrix, b: usize, kernel: &Kernel, rng: &mut Rng) -> Vec<usize> {
+    let n = x.rows;
+    // Subsample candidates for tractability on large n.
+    let n_cand = (b * 16).min(n);
+    let cand = rng.sample_indices(n, n_cand);
+    let mut chosen = vec![cand[rng.usize(n_cand)]];
+    // d2[i] = min over chosen c of kernel distance^2 between cand[i] and c:
+    // ||φ(x)-φ(c)||² = k(x,x) + k(c,c) − 2 k(x,c).
+    let mut d2 = vec![f32::MAX; n_cand];
+    while chosen.len() < b {
+        let last = *chosen.last().unwrap();
+        let mut total = 0.0f64;
+        for (i, &ci) in cand.iter().enumerate() {
+            let kxx = kernel.diag(x.row_sq_norm(ci));
+            let kcc = kernel.diag(x.row_sq_norm(last));
+            let kxc = kernel.eval_sparse(x, ci, x, last);
+            let d = (kxx + kcc - 2.0 * kxc).max(0.0);
+            if d < d2[i] {
+                d2[i] = d;
+            }
+            total += d2[i] as f64;
+        }
+        if total <= 0.0 {
+            // Degenerate: all candidates coincide with chosen set; fall back
+            // to uniform fill.
+            for &ci in &cand {
+                if !chosen.contains(&ci) {
+                    chosen.push(ci);
+                    if chosen.len() == b {
+                        break;
+                    }
+                }
+            }
+            break;
+        }
+        let mut target = rng.f64() * total;
+        let mut pick = cand[0];
+        for (i, &ci) in cand.iter().enumerate() {
+            target -= d2[i] as f64;
+            if target <= 0.0 {
+                pick = ci;
+                break;
+            }
+        }
+        if !chosen.contains(&pick) {
+            chosen.push(pick);
+        } else if let Some(&alt) = cand.iter().find(|c| !chosen.contains(c)) {
+            chosen.push(alt);
+        } else {
+            break;
+        }
+    }
+    chosen.sort_unstable();
+    chosen.dedup();
+    chosen
+}
+
+/// Densify the selected landmark rows into a `B×p` matrix with
+/// precomputed squared norms — the representation both backends consume.
+pub fn densify(x: &SparseMatrix, idx: &[usize]) -> (Mat, Vec<f32>) {
+    let mut m = Mat::zeros(idx.len(), x.cols);
+    for (r, &i) in idx.iter().enumerate() {
+        let (c, v) = x.row(i);
+        let row = m.row_mut(r);
+        for (&ci, &vi) in c.iter().zip(v) {
+            row[ci as usize] = vi;
+        }
+    }
+    let sq = m.row_sq_norms();
+    (m, sq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{FeatureStyle, SynthSpec};
+
+    fn data(n: usize) -> SparseMatrix {
+        SynthSpec {
+            name: "t".into(),
+            n,
+            p: 12,
+            n_classes: 2,
+            sep: 2.0,
+            latent: 4,
+            noise: 1.0,
+            style: FeatureStyle::Dense,
+            seed: 3,
+        }
+        .generate()
+        .x
+    }
+
+    #[test]
+    fn uniform_selects_distinct_sorted() {
+        let x = data(100);
+        let mut rng = Rng::new(1);
+        let idx = select(&x, 20, LandmarkStrategy::Uniform, &Kernel::gaussian(0.1), &mut rng);
+        assert_eq!(idx.len(), 20);
+        assert!(idx.windows(2).all(|w| w[0] < w[1]));
+        assert!(idx.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn budget_capped_at_n() {
+        let x = data(10);
+        let mut rng = Rng::new(1);
+        let idx = select(&x, 50, LandmarkStrategy::Uniform, &Kernel::gaussian(0.1), &mut rng);
+        assert_eq!(idx.len(), 10);
+    }
+
+    #[test]
+    fn kmeanspp_selects_enough_distinct() {
+        let x = data(200);
+        let mut rng = Rng::new(2);
+        let idx = select(
+            &x,
+            16,
+            LandmarkStrategy::KmeansPlusPlus,
+            &Kernel::gaussian(0.2),
+            &mut rng,
+        );
+        assert!(idx.len() >= 15, "got {}", idx.len());
+        let mut d = idx.clone();
+        d.dedup();
+        assert_eq!(d.len(), idx.len());
+    }
+
+    #[test]
+    fn densify_matches_rows() {
+        let x = data(30);
+        let (m, sq) = densify(&x, &[3, 17]);
+        assert_eq!(m.rows, 2);
+        assert_eq!(m.cols, 12);
+        assert!((sq[0] - x.row_sq_norm(3)).abs() < 1e-5);
+        let dense = x.to_dense();
+        assert_eq!(m.row(1), dense.row(17));
+    }
+}

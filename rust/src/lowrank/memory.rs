@@ -1,0 +1,167 @@
+//! "More RAM!" — memory planning for the complete precomputation of `G`.
+//!
+//! The paper's headline trade-off (§4): a low-rank factor of size `n × B`
+//! replaces the `n × n` kernel matrix, so with `B ≈ 10³..10⁴` the entire
+//! factor fits in host RAM (their example: B = 10³, n = 10⁶ fits in an
+//! 8 GB laptop; 512 GB servers afford two orders of magnitude more).
+//! This module makes that arithmetic a first-class, testable object:
+//! estimate the footprint of a training plan, check it against a budget,
+//! and — inverting the paper's reasoning — compute the largest affordable
+//! budget `B` for a given machine.
+
+use crate::data::dataset::Dataset;
+
+const F32: usize = std::mem::size_of::<f32>();
+
+/// Estimated peak RAM of one LPD-SVM training run (bytes, dominant terms).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemoryPlan {
+    /// The `n × B` factor G — the paper's dominant term.
+    pub g_bytes: usize,
+    /// Landmarks (B × p dense) + K_BB (B × B) + eigenvectors (B × B) +
+    /// whitening map (B × B).
+    pub stage1_bytes: usize,
+    /// Solver state: α, gradients/bookkeeping (n) + v (B) per concurrent
+    /// binary problem.
+    pub solver_bytes: usize,
+    /// Input data (CSR: values + indices + indptr).
+    pub data_bytes: usize,
+}
+
+impl MemoryPlan {
+    /// Build the plan for a dataset / budget / thread count.
+    pub fn estimate(data: &Dataset, budget: usize, threads: usize) -> MemoryPlan {
+        let n = data.len();
+        let b = budget.min(n);
+        let p = data.dim();
+        MemoryPlan {
+            g_bytes: n * b * F32,
+            stage1_bytes: b * p * F32 + 3 * b * b * F32,
+            solver_bytes: threads.max(1) * (2 * n * F32 + b * F32 + n),
+            data_bytes: data.x.nnz() * (F32 + std::mem::size_of::<u32>())
+                + (n + 1) * std::mem::size_of::<usize>(),
+        }
+    }
+
+    /// Total bytes.
+    pub fn total(&self) -> usize {
+        self.g_bytes + self.stage1_bytes + self.solver_bytes + self.data_bytes
+    }
+
+    /// Does the plan fit in `budget_bytes`?
+    pub fn fits(&self, budget_bytes: usize) -> bool {
+        self.total() <= budget_bytes
+    }
+
+    /// Human-readable summary.
+    pub fn summary(&self) -> String {
+        let gib = |x: usize| x as f64 / (1024.0 * 1024.0 * 1024.0);
+        format!(
+            "G {:.3} GiB + stage1 {:.3} GiB + solver {:.3} GiB + data {:.3} GiB = {:.3} GiB",
+            gib(self.g_bytes),
+            gib(self.stage1_bytes),
+            gib(self.solver_bytes),
+            gib(self.data_bytes),
+            gib(self.total())
+        )
+    }
+}
+
+/// Largest budget `B` whose plan fits in `budget_bytes` (0 if even B = 16
+/// does not fit). Monotone in B, so binary search.
+pub fn max_affordable_budget(data: &Dataset, threads: usize, budget_bytes: usize) -> usize {
+    let (mut lo, mut hi) = (0usize, data.len().max(1));
+    if !MemoryPlan::estimate(data, 16.min(hi), threads).fits(budget_bytes) {
+        return 0;
+    }
+    while lo < hi {
+        let mid = lo + (hi - lo).div_ceil(2);
+        if MemoryPlan::estimate(data, mid, threads).fits(budget_bytes) {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse::SparseMatrix;
+
+    fn dataset(n: usize, p: usize, nnz_per_row: usize) -> Dataset {
+        let rows: Vec<Vec<(u32, f32)>> = (0..n)
+            .map(|i| {
+                (0..nnz_per_row)
+                    .map(|k| (((i + k * 7) % p) as u32, 1.0))
+                    .collect::<std::collections::BTreeMap<u32, f32>>()
+                    .into_iter()
+                    .collect()
+            })
+            .collect();
+        let x = SparseMatrix::from_rows(p, &rows);
+        let labels = (0..n).map(|i| (i % 2) as u32).collect();
+        Dataset::new("m", x, labels, 2)
+    }
+
+    #[test]
+    fn paper_laptop_example() {
+        // Paper §4: B = 10³, n = 10⁶ → G is 4 GB, fits an 8 GB laptop.
+        let n = 1_000_000;
+        let b = 1_000;
+        // Synthetic metadata-only dataset (tiny p to keep the test fast).
+        let data = dataset(1_000, 10, 4); // scale G arithmetic by hand:
+        let plan = MemoryPlan {
+            g_bytes: n * b * F32,
+            ..MemoryPlan::estimate(&data, b, 1)
+        };
+        assert_eq!(plan.g_bytes, 4_000_000_000);
+        assert!(plan.fits(8 * 1024 * 1024 * 1024));
+    }
+
+    #[test]
+    fn g_dominates_for_large_n() {
+        let data = dataset(20_000, 50, 8);
+        let plan = MemoryPlan::estimate(&data, 1_000, 4);
+        assert!(plan.g_bytes > plan.stage1_bytes);
+        assert!(plan.g_bytes > plan.solver_bytes);
+        assert!(plan.g_bytes > plan.data_bytes);
+        assert_eq!(plan.g_bytes, 20_000 * 1_000 * 4);
+    }
+
+    #[test]
+    fn budget_clamped_to_n() {
+        let data = dataset(100, 10, 3);
+        let plan = MemoryPlan::estimate(&data, 10_000, 1);
+        assert_eq!(plan.g_bytes, 100 * 100 * 4);
+    }
+
+    #[test]
+    fn max_affordable_is_monotone_and_tight() {
+        let data = dataset(5_000, 30, 5);
+        let small = max_affordable_budget(&data, 1, 2 * 1024 * 1024);
+        let large = max_affordable_budget(&data, 1, 64 * 1024 * 1024);
+        assert!(small < large, "{small} !< {large}");
+        // The found budget fits; the next one up does not (unless capped).
+        assert!(MemoryPlan::estimate(&data, large, 1).fits(64 * 1024 * 1024));
+        if large < data.len() {
+            assert!(!MemoryPlan::estimate(&data, large + 1, 1).fits(64 * 1024 * 1024));
+        }
+    }
+
+    #[test]
+    fn zero_when_nothing_fits() {
+        let data = dataset(10_000, 30, 5);
+        assert_eq!(max_affordable_budget(&data, 1, 1024), 0);
+    }
+
+    #[test]
+    fn summary_mentions_all_terms() {
+        let data = dataset(100, 10, 3);
+        let s = MemoryPlan::estimate(&data, 32, 1).summary();
+        for term in ["G ", "stage1", "solver", "data", "="] {
+            assert!(s.contains(term), "missing {term} in {s}");
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Stage 1 of LPD-SVM: the low-rank feature construction.
+//!
+//! Pipeline (paper figure 1): sample `B` landmarks → compute `K_BB` →
+//! eigendecompose → drop eigenvalues below `ε·λ_max` → whitening map
+//! `W = V_r Λ_r^{-1/2}` → fully precompute `G = K_nB W` (n×r) held in RAM.
+
+pub mod factor;
+pub mod landmarks;
+pub mod memory;
+
+pub use factor::{LowRankFactor, Stage1Backend, Stage1Config};
+pub use memory::{max_affordable_budget, MemoryPlan};

@@ -1,0 +1,356 @@
+//! `lpdsvm` — command-line interface to the LPD-SVM system.
+//!
+//! Subcommands:
+//!   gen-data   synthesise a paper-analogue dataset in LIBSVM format
+//!   train      train a model (binary or OVO multiclass)
+//!   predict    predict with a saved model, report error if labels given
+//!   cv         k-fold cross validation (stage 1 shared across folds)
+//!   grid       (C, γ) grid search with CV, warm starts, G-reuse
+//!   info       show artifact / runtime information
+
+use lpdsvm::coordinator::cv::{cross_validate, CvConfig};
+use lpdsvm::coordinator::grid::{grid_search, GridConfig};
+use lpdsvm::coordinator::train::{train_with_backend, TrainConfig};
+use lpdsvm::data::synth::PaperDataset;
+use lpdsvm::data::{dataset::Dataset, libsvm};
+use lpdsvm::kernel::Kernel;
+use lpdsvm::lowrank::factor::NativeBackend;
+use lpdsvm::lowrank::{Stage1Backend, Stage1Config};
+use lpdsvm::model::io as model_io;
+use lpdsvm::model::multiclass::error_rate;
+use lpdsvm::report::Table;
+use lpdsvm::runtime::{AccelBackend, Runtime};
+use lpdsvm::solver::SolverOptions;
+use lpdsvm::util::cli::{parse, ArgSpec};
+use lpdsvm::util::timer::StageClock;
+use std::path::Path;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            print_usage();
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd {
+        "gen-data" => cmd_gen_data(&rest),
+        "train" => cmd_train(&rest),
+        "predict" => cmd_predict(&rest),
+        "cv" => cmd_cv(&rest),
+        "grid" => cmd_grid(&rest),
+        "info" => cmd_info(&rest),
+        "--help" | "-h" | "help" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            print_usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "lpdsvm — Low-rank Parallel Dual SVM (Glasmachers 2022 reproduction)\n\n\
+         Usage: lpdsvm <command> [options]   (each command supports --help)\n\n\
+         Commands:\n\
+           gen-data   synthesise a paper-analogue dataset (LIBSVM format)\n\
+           train      train a model and save it\n\
+           predict    predict with a saved model\n\
+           cv         k-fold cross-validation\n\
+           grid       (C, gamma) grid search with CV + warm starts\n\
+           info       artifact/runtime information"
+    );
+}
+
+fn load_data(path: &str) -> anyhow::Result<Dataset> {
+    libsvm::read(Path::new(path))
+}
+
+fn backend_args() -> Vec<ArgSpec> {
+    vec![ArgSpec::opt(
+        "backend",
+        "native",
+        "stage-1 backend: native | pjrt",
+    )]
+}
+
+/// Run `f` with the requested backend (constructing the PJRT runtime on
+/// demand so the native path never touches artifacts).
+fn with_backend<T>(
+    name: &str,
+    f: impl FnOnce(&dyn Stage1Backend) -> anyhow::Result<T>,
+) -> anyhow::Result<T> {
+    match name {
+        "native" => f(&NativeBackend),
+        "pjrt" => {
+            let rt = Runtime::load(&Runtime::default_dir())?;
+            let backend = AccelBackend::new(&rt);
+            f(&backend)
+        }
+        other => anyhow::bail!("unknown backend '{other}' (native | pjrt)"),
+    }
+}
+
+fn cmd_gen_data(args: &[String]) -> anyhow::Result<()> {
+    let specs = vec![
+        ArgSpec::opt(
+            "dataset",
+            "adult",
+            "adult | epsilon | susy | mnist8m | imagenet",
+        ),
+        ArgSpec::opt("scale", "0.01", "fraction of the paper's n in (0,1]"),
+        ArgSpec::opt("seed", "42", "RNG seed"),
+        ArgSpec::opt("out", "", "output path (LIBSVM format)"),
+        ArgSpec::flag("list", "list dataset specs and exit"),
+    ];
+    let p = parse("gen-data", "Synthesise a paper-analogue dataset", &specs, args)?;
+    if p.flag("list") {
+        let mut t = Table::new(
+            "paper datasets (table 1 analogues)",
+            &["name", "n(full)", "p", "classes", "B", "C", "gamma"],
+        );
+        for d in PaperDataset::all() {
+            let s = d.spec(1.0, 0);
+            t.row(&[
+                d.name().into(),
+                s.synth.n.to_string(),
+                s.synth.p.to_string(),
+                s.synth.n_classes.to_string(),
+                s.budget.to_string(),
+                s.c.to_string(),
+                format!("{:e}", s.gamma),
+            ]);
+        }
+        t.print();
+        return Ok(());
+    }
+    anyhow::ensure!(!p.str("out").is_empty(), "--out is required (or use --list)");
+    let dataset = PaperDataset::from_name(p.str("dataset"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{}'", p.str("dataset")))?;
+    let spec = dataset.spec(p.f64("scale")?, p.u64("seed")?);
+    let data = spec.synth.generate();
+    libsvm::write(&data, Path::new(p.str("out")))?;
+    println!(
+        "wrote {} ({} points, {} features, {} classes, density {:.3}) to {}",
+        data.name,
+        data.len(),
+        data.dim(),
+        data.n_classes,
+        data.x.density(),
+        p.str("out")
+    );
+    Ok(())
+}
+
+fn train_cfg_from(p: &lpdsvm::util::cli::Parsed) -> anyhow::Result<TrainConfig> {
+    Ok(TrainConfig {
+        kernel: Kernel::gaussian(p.f64("gamma")?),
+        stage1: Stage1Config {
+            budget: p.usize("budget")?,
+            eps_rank: p.f64("eps-rank")?,
+            chunk: p.usize("chunk")?,
+            seed: p.u64("seed")?,
+            ..Default::default()
+        },
+        solver: SolverOptions {
+            c: p.f64("c")?,
+            eps: p.f64("eps")?,
+            shrinking: !p.flag("no-shrinking"),
+            seed: p.u64("seed")?,
+            ..Default::default()
+        },
+        threads: p.usize("threads")?,
+        compact_pairs: true,
+    })
+}
+
+fn train_args() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec::req("data", "training data (LIBSVM format)"),
+        ArgSpec::opt("budget", "512", "landmark budget B"),
+        ArgSpec::opt("c", "1.0", "regularisation C"),
+        ArgSpec::opt("gamma", "0.05", "Gaussian kernel bandwidth"),
+        ArgSpec::opt("eps", "0.01", "KKT stopping tolerance"),
+        ArgSpec::opt("eps-rank", "1e-6", "eigenvalue truncation threshold"),
+        ArgSpec::opt("chunk", "256", "stage-1 chunk rows"),
+        ArgSpec::opt("threads", "0", "worker threads (0 = auto)"),
+        ArgSpec::opt("seed", "42", "RNG seed"),
+        ArgSpec::flag("no-shrinking", "disable shrinking"),
+    ]
+}
+
+fn cmd_train(args: &[String]) -> anyhow::Result<()> {
+    let mut specs = train_args();
+    specs.push(ArgSpec::req("model-out", "path to save the trained model"));
+    specs.extend(backend_args());
+    let p = parse("train", "Train an LPD-SVM model", &specs, args)?;
+    let data = load_data(p.str("data"))?;
+    let cfg = train_cfg_from(&p)?;
+    let mut clock = StageClock::new();
+    let model = with_backend(p.str("backend"), |b| {
+        train_with_backend(&data, &cfg, b, &mut clock)
+    })?;
+    model_io::save(&model, Path::new(p.str("model-out")))?;
+    let train_err = model.error_rate(&data.x, &data.labels)?;
+    let mut t = Table::new("training summary", &["stage", "seconds"]);
+    for (k, v) in clock.entries() {
+        t.row(&[k, Table::secs(v)]);
+    }
+    t.print();
+    println!(
+        "rank={} heads={} train_error={}% model={}",
+        model.factor.rank,
+        model.heads.len(),
+        Table::pct(train_err),
+        p.str("model-out")
+    );
+    Ok(())
+}
+
+fn cmd_predict(args: &[String]) -> anyhow::Result<()> {
+    let mut specs = vec![
+        ArgSpec::req("model", "saved model path"),
+        ArgSpec::req("data", "input data (LIBSVM format; labels used for error)"),
+        ArgSpec::opt("out", "", "write predictions to this file (one per line)"),
+    ];
+    specs.extend(backend_args());
+    let p = parse("predict", "Predict with a saved model", &specs, args)?;
+    let model = model_io::load(Path::new(p.str("model")))?;
+    let data = load_data(p.str("data"))?;
+    let t0 = std::time::Instant::now();
+    let preds = with_backend(p.str("backend"), |b| {
+        model.predict_with_backend(&data.x, b)
+    })?;
+    let secs = t0.elapsed().as_secs_f64();
+    let err = error_rate(&preds, &data.labels);
+    println!(
+        "predicted {} points in {} s — error {}%",
+        preds.len(),
+        Table::secs(secs),
+        Table::pct(err)
+    );
+    if !p.str("out").is_empty() {
+        let text: String = preds.iter().map(|c| format!("{c}\n")).collect();
+        std::fs::write(p.str("out"), text)?;
+    }
+    Ok(())
+}
+
+fn cmd_cv(args: &[String]) -> anyhow::Result<()> {
+    let mut specs = train_args();
+    specs.push(ArgSpec::opt("folds", "5", "number of CV folds"));
+    let p = parse("cv", "k-fold cross validation (shared stage 1)", &specs, args)?;
+    let data = load_data(p.str("data"))?;
+    let cfg = train_cfg_from(&p)?;
+    let cv = CvConfig {
+        folds: p.usize("folds")?,
+        seed: p.u64("seed")?,
+    };
+    let r = cross_validate(&data, &cfg, &cv)?;
+    let mut t = Table::new("cross-validation", &["fold", "error %"]);
+    for (i, e) in r.fold_errors.iter().enumerate() {
+        t.row(&[i.to_string(), Table::pct(*e)]);
+    }
+    t.print();
+    println!(
+        "mean error {}% over {} binary problems in {} s",
+        Table::pct(r.mean_error),
+        r.n_binary_problems,
+        Table::secs(r.total_secs)
+    );
+    Ok(())
+}
+
+fn cmd_grid(args: &[String]) -> anyhow::Result<()> {
+    let mut specs = train_args();
+    specs.push(ArgSpec::opt("folds", "5", "CV folds per grid point"));
+    specs.push(ArgSpec::opt(
+        "c-grid",
+        "0.25,1,4,16,64",
+        "comma-separated C values",
+    ));
+    specs.push(ArgSpec::opt(
+        "gamma-grid",
+        "0.01,0.05,0.2",
+        "comma-separated gamma values",
+    ));
+    specs.push(ArgSpec::flag("no-warm-start", "disable warm starts along C"));
+    let p = parse("grid", "Grid search with CV + warm starts", &specs, args)?;
+    let data = load_data(p.str("data"))?;
+    let base = train_cfg_from(&p)?;
+    let parse_grid = |s: &str| -> anyhow::Result<Vec<f64>> {
+        s.split(',')
+            .map(|x| x.trim().parse::<f64>().map_err(Into::into))
+            .collect()
+    };
+    let grid = GridConfig {
+        c_values: parse_grid(p.str("c-grid"))?,
+        gamma_values: parse_grid(p.str("gamma-grid"))?,
+        cv_folds: p.usize("folds")?,
+        seed: p.u64("seed")?,
+        warm_start: !p.flag("no-warm-start"),
+    };
+    let r = grid_search(&data, &base, &grid)?;
+    let mut t = Table::new("grid search", &["gamma", "C", "cv error %"]);
+    for pt in &r.points {
+        t.row(&[
+            format!("{:e}", pt.gamma),
+            pt.c.to_string(),
+            Table::pct(pt.cv.mean_error),
+        ]);
+    }
+    t.print();
+    println!(
+        "best: gamma={:e} C={} error {}%  |  {} binary problems, total {} s, {} s/problem (stage1 {} s)",
+        r.best_gamma,
+        r.best_c,
+        Table::pct(r.best_error),
+        r.n_binary_problems,
+        Table::secs(r.total_secs),
+        Table::secs(r.secs_per_problem()),
+        Table::secs(r.stage1_secs),
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &[String]) -> anyhow::Result<()> {
+    let specs = vec![ArgSpec::flag("artifacts", "also compile every artifact")];
+    let p = parse("info", "Show runtime / artifact information", &specs, args)?;
+    println!("lpdsvm {} — three-layer rust+JAX+Pallas build", env!("CARGO_PKG_VERSION"));
+    println!("threads: {}", lpdsvm::util::threads::default_threads());
+    let dir = Runtime::default_dir();
+    match Runtime::load(&dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            let mut t = Table::new("artifacts", &["name", "m", "b", "p", "file"]);
+            for a in rt.artifacts() {
+                t.row(&[
+                    a.name.clone(),
+                    a.m.to_string(),
+                    a.b.to_string(),
+                    a.p.to_string(),
+                    a.file.clone(),
+                ]);
+            }
+            t.print();
+            if p.flag("artifacts") {
+                for a in rt.artifacts() {
+                    let t0 = std::time::Instant::now();
+                    rt.executable(a)?;
+                    println!("compiled {} in {:.2}s", a.name, t0.elapsed().as_secs_f64());
+                }
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,287 @@
+//! Model persistence: a self-describing binary container (serde is not
+//! available offline, and the matrices are large enough that JSON would be
+//! wasteful anyway).
+//!
+//! Layout: magic "LPDSVM1\0", a JSON header (lengths + kernel + kind),
+//! then raw little-endian f32/f64 payload sections in header order.
+
+use crate::kernel::Kernel;
+use crate::linalg::Mat;
+use crate::lowrank::LowRankFactor;
+use crate::model::multiclass::{BinaryHead, MulticlassModel};
+use crate::model::ModelKind;
+use crate::util::json::{arr, num, obj, s, Json};
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"LPDSVM1\0";
+
+fn kernel_to_json(k: &Kernel) -> Json {
+    match *k {
+        Kernel::Gaussian { gamma } => obj(vec![("type", s("gaussian")), ("gamma", num(gamma))]),
+        Kernel::Polynomial { gamma, coef0, degree } => obj(vec![
+            ("type", s("polynomial")),
+            ("gamma", num(gamma)),
+            ("coef0", num(coef0)),
+            ("degree", num(degree as f64)),
+        ]),
+        Kernel::Tanh { gamma, coef0 } => obj(vec![
+            ("type", s("tanh")),
+            ("gamma", num(gamma)),
+            ("coef0", num(coef0)),
+        ]),
+        Kernel::Linear => obj(vec![("type", s("linear"))]),
+    }
+}
+
+fn kernel_from_json(j: &Json) -> Result<Kernel> {
+    let t = j
+        .get("type")
+        .and_then(|t| t.as_str())
+        .context("kernel.type missing")?;
+    let g = |key: &str| -> Result<f64> {
+        j.get(key)
+            .and_then(|v| v.as_f64())
+            .with_context(|| format!("kernel.{key} missing"))
+    };
+    Ok(match t {
+        "gaussian" => Kernel::Gaussian { gamma: g("gamma")? },
+        "polynomial" => Kernel::Polynomial {
+            gamma: g("gamma")?,
+            coef0: g("coef0")?,
+            degree: g("degree")? as u32,
+        },
+        "tanh" => Kernel::Tanh {
+            gamma: g("gamma")?,
+            coef0: g("coef0")?,
+        },
+        "linear" => Kernel::Linear,
+        other => bail!("unknown kernel type '{other}'"),
+    })
+}
+
+fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    let mut buf = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Save a model to `path`.
+pub fn save(model: &MulticlassModel, path: &Path) -> Result<()> {
+    let f = &model.factor;
+    let kind_json = match model.kind {
+        ModelKind::Binary => obj(vec![("type", s("binary"))]),
+        ModelKind::OneVsOne { n_classes } => obj(vec![
+            ("type", s("ovo")),
+            ("n_classes", num(n_classes as f64)),
+        ]),
+    };
+    let heads_json = arr(model
+        .heads
+        .iter()
+        .map(|h| {
+            obj(vec![
+                ("a", num(h.pair.0 as f64)),
+                ("b", num(h.pair.1 as f64)),
+                ("objective", num(h.objective)),
+                ("converged", Json::Bool(h.converged)),
+                ("sv_count", num(h.sv_count as f64)),
+                ("steps", num(h.steps as f64)),
+            ])
+        })
+        .collect());
+    let header = obj(vec![
+        ("kind", kind_json),
+        ("kernel", kernel_to_json(&f.kernel)),
+        ("rank", num(f.rank as f64)),
+        ("budget", num(f.landmarks.rows as f64)),
+        ("dim", num(f.landmarks.cols as f64)),
+        ("heads", heads_json),
+        (
+            "eigenvalues",
+            arr(f.eigenvalues.iter().map(|&v| num(v)).collect()),
+        ),
+    ]);
+    let header_bytes = header.to_string().into_bytes();
+
+    let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+    out.write_all(MAGIC)?;
+    out.write_all(&(header_bytes.len() as u64).to_le_bytes())?;
+    out.write_all(&header_bytes)?;
+    // Payload: landmarks, whiten, each head's w. (G itself is NOT saved —
+    // it is training-time state; prediction only needs landmarks + W.)
+    write_f32s(&mut out, &f.landmarks.data)?;
+    write_f32s(&mut out, &f.whiten.data)?;
+    for h in &model.heads {
+        write_f32s(&mut out, &h.w)?;
+    }
+    Ok(())
+}
+
+/// Load a model from `path`. The training-time `G` matrix is not stored;
+/// the loaded factor has an empty `g` (prediction does not need it).
+pub fn load(path: &Path) -> Result<MulticlassModel> {
+    let mut input = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    input.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an LPD-SVM model file");
+    }
+    let mut len8 = [0u8; 8];
+    input.read_exact(&mut len8)?;
+    let hlen = u64::from_le_bytes(len8) as usize;
+    let mut hbytes = vec![0u8; hlen];
+    input.read_exact(&mut hbytes)?;
+    let header = Json::parse(std::str::from_utf8(&hbytes)?)?;
+
+    let rank = header.get("rank").and_then(|v| v.as_usize()).context("rank")?;
+    let budget = header
+        .get("budget")
+        .and_then(|v| v.as_usize())
+        .context("budget")?;
+    let dim = header.get("dim").and_then(|v| v.as_usize()).context("dim")?;
+    let kernel = kernel_from_json(header.get("kernel").context("kernel")?)?;
+    let kind = match header
+        .get("kind")
+        .and_then(|k| k.get("type"))
+        .and_then(|t| t.as_str())
+    {
+        Some("binary") => ModelKind::Binary,
+        Some("ovo") => ModelKind::OneVsOne {
+            n_classes: header
+                .get("kind")
+                .and_then(|k| k.get("n_classes"))
+                .and_then(|v| v.as_usize())
+                .context("kind.n_classes")?,
+        },
+        _ => bail!("bad model kind"),
+    };
+    let eigenvalues: Vec<f64> = header
+        .get("eigenvalues")
+        .and_then(|v| v.as_arr())
+        .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+        .unwrap_or_default();
+
+    let landmarks = Mat::from_vec(budget, dim, read_f32s(&mut input, budget * dim)?);
+    let landmark_sq = landmarks.row_sq_norms();
+    let whiten = Mat::from_vec(budget, rank, read_f32s(&mut input, budget * rank)?);
+
+    let heads_meta = header
+        .get("heads")
+        .and_then(|v| v.as_arr())
+        .context("heads")?;
+    let mut heads = Vec::with_capacity(heads_meta.len());
+    for hm in heads_meta {
+        let w = read_f32s(&mut input, rank)?;
+        heads.push(BinaryHead {
+            pair: (
+                hm.get("a").and_then(|v| v.as_usize()).context("head.a")? as u32,
+                hm.get("b").and_then(|v| v.as_usize()).context("head.b")? as u32,
+            ),
+            w,
+            objective: hm.get("objective").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            converged: matches!(hm.get("converged"), Some(Json::Bool(true))),
+            sv_count: hm.get("sv_count").and_then(|v| v.as_usize()).unwrap_or(0),
+            steps: hm.get("steps").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+        });
+    }
+
+    let factor = LowRankFactor {
+        g: Mat::zeros(0, rank),
+        landmarks,
+        landmark_sq,
+        whiten,
+        rank,
+        eigenvalues,
+        kernel,
+        landmark_idx: Vec::new(),
+    };
+    Ok(MulticlassModel {
+        factor,
+        heads,
+        kind,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::train::{train, TrainConfig};
+    use crate::data::synth::PaperDataset;
+    use crate::lowrank::Stage1Config;
+    use crate::solver::SolverOptions;
+
+    #[test]
+    fn save_load_roundtrip_predictions_match() {
+        let spec = PaperDataset::Adult.spec(0.01, 5);
+        let data = spec.synth.generate();
+        let cfg = TrainConfig {
+            kernel: Kernel::gaussian(spec.gamma),
+            stage1: Stage1Config {
+                budget: 32,
+                ..Default::default()
+            },
+            solver: SolverOptions::default(),
+            ..Default::default()
+        };
+        let model = train(&data, &cfg).unwrap();
+        let preds = model.predict(&data.x).unwrap();
+
+        let dir = std::env::temp_dir().join("lpdsvm_model_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.lpd");
+        save(&model, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        let preds2 = loaded.predict(&data.x).unwrap();
+        assert_eq!(preds, preds2);
+        assert_eq!(loaded.kind, model.kind);
+        assert_eq!(loaded.factor.rank, model.factor.rank);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("lpdsvm_model_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.lpd");
+        std::fs::write(&path, b"NOTAMODEL").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn kernel_json_roundtrip() {
+        for k in [
+            Kernel::gaussian(0.25),
+            Kernel::Polynomial {
+                gamma: 0.5,
+                coef0: 1.0,
+                degree: 3,
+            },
+            Kernel::Tanh {
+                gamma: 0.1,
+                coef0: -1.0,
+            },
+            Kernel::Linear,
+        ] {
+            let j = kernel_to_json(&k);
+            let back = kernel_from_json(&j).unwrap();
+            assert_eq!(k, back);
+        }
+    }
+}

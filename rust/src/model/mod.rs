@@ -1,0 +1,20 @@
+//! Trained model representations and persistence.
+//!
+//! An LPD-SVM model is the stage-1 factor metadata (landmarks + whitening
+//! map + kernel) plus linear weights in G-space: one weight vector for a
+//! binary problem, one per class pair for one-versus-one multiclass.
+//! Prediction is `G_new = K(X_new, L)·W` followed by a dense matmul and
+//! (for multiclass) pairwise voting — the batch-friendly step the paper
+//! runs on the GPU.
+
+pub mod io;
+pub mod multiclass;
+
+pub use multiclass::{BinaryHead, MulticlassModel};
+
+/// Discriminates the model head.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Binary,
+    OneVsOne { n_classes: usize },
+}

@@ -1,0 +1,199 @@
+//! Binary and one-versus-one multiclass model heads over a shared
+//! low-rank factor.
+
+use crate::data::sparse::SparseMatrix;
+use crate::linalg::Mat;
+use crate::lowrank::factor::{NativeBackend, Stage1Backend};
+use crate::lowrank::LowRankFactor;
+use crate::model::ModelKind;
+
+/// One trained binary head: weights in G-space plus training diagnostics.
+#[derive(Clone, Debug)]
+pub struct BinaryHead {
+    /// The class pair this head separates (for OVO; `(0,1)` for binary).
+    pub pair: (u32, u32),
+    /// Weight vector, length = factor rank. Decision value on a feature
+    /// row `g` is `⟨g, w⟩`; positive ⇒ class `pair.1`.
+    pub w: Vec<f32>,
+    pub objective: f64,
+    pub converged: bool,
+    pub sv_count: usize,
+    pub steps: u64,
+}
+
+/// A full trained model: factor + one or more binary heads.
+pub struct MulticlassModel {
+    pub factor: LowRankFactor,
+    pub heads: Vec<BinaryHead>,
+    pub kind: ModelKind,
+}
+
+impl MulticlassModel {
+    pub fn n_classes(&self) -> usize {
+        match self.kind {
+            ModelKind::Binary => 2,
+            ModelKind::OneVsOne { n_classes } => n_classes,
+        }
+    }
+
+    /// Map new inputs into G-space using the given backend.
+    pub fn features(
+        &self,
+        x: &SparseMatrix,
+        backend: &dyn Stage1Backend,
+    ) -> anyhow::Result<Mat> {
+        self.factor.transform(x, backend, 1024)
+    }
+
+    /// Predict class labels with the native backend.
+    pub fn predict(&self, x: &SparseMatrix) -> anyhow::Result<Vec<u32>> {
+        self.predict_with_backend(x, &NativeBackend)
+    }
+
+    /// Predict class labels; `backend` controls how features are computed
+    /// (native GEMM vs PJRT artifact).
+    pub fn predict_with_backend(
+        &self,
+        x: &SparseMatrix,
+        backend: &dyn Stage1Backend,
+    ) -> anyhow::Result<Vec<u32>> {
+        let g = self.features(x, backend)?;
+        Ok(self.predict_from_features(&g))
+    }
+
+    /// Predict from precomputed G-space features (e.g. shared across folds).
+    pub fn predict_from_features(&self, g: &Mat) -> Vec<u32> {
+        match self.kind {
+            ModelKind::Binary => {
+                let head = &self.heads[0];
+                g.matvec(&head.w)
+                    .into_iter()
+                    .map(|s| if s > 0.0 { 1 } else { 0 })
+                    .collect()
+            }
+            ModelKind::OneVsOne { n_classes } => {
+                // Batch decision values: scores = G · W_pairsᵀ (n × pairs) —
+                // one dense matmul, the GPU-friendly prediction path.
+                let w_mat = self.weight_matrix();
+                let scores = g.matmul_nt(&w_mat);
+                (0..g.rows)
+                    .map(|i| {
+                        let mut votes = vec![0u32; n_classes];
+                        for (p, head) in self.heads.iter().enumerate() {
+                            let winner = if scores.at(i, p) > 0.0 {
+                                head.pair.1
+                            } else {
+                                head.pair.0
+                            };
+                            votes[winner as usize] += 1;
+                        }
+                        // Ties break toward the lowest class id (stable,
+                        // LIBSVM-compatible).
+                        let mut best = 0usize;
+                        for c in 1..n_classes {
+                            if votes[c] > votes[best] {
+                                best = c;
+                            }
+                        }
+                        best as u32
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Stack all head weights into a `pairs × rank` matrix.
+    pub fn weight_matrix(&self) -> Mat {
+        let rank = self.factor.rank;
+        let mut m = Mat::zeros(self.heads.len(), rank);
+        for (i, h) in self.heads.iter().enumerate() {
+            m.row_mut(i).copy_from_slice(&h.w);
+        }
+        m
+    }
+
+    /// Classification error rate against ground-truth labels.
+    pub fn error_rate(&self, x: &SparseMatrix, labels: &[u32]) -> anyhow::Result<f64> {
+        let preds = self.predict(x)?;
+        Ok(error_rate(&preds, labels))
+    }
+}
+
+/// Fraction of mismatched labels.
+pub fn error_rate(preds: &[u32], labels: &[u32]) -> f64 {
+    assert_eq!(preds.len(), labels.len());
+    if preds.is_empty() {
+        return 0.0;
+    }
+    preds
+        .iter()
+        .zip(labels)
+        .filter(|(p, l)| p != l)
+        .count() as f64
+        / preds.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_rate_basic() {
+        assert_eq!(error_rate(&[1, 0, 1], &[1, 1, 1]), 1.0 / 3.0);
+        assert_eq!(error_rate(&[], &[]), 0.0);
+    }
+
+    // Full-model behaviour is covered by coordinator::train tests and the
+    // integration suite; unit tests here focus on the voting logic.
+    #[test]
+    fn ovo_voting_majority() {
+        use crate::kernel::Kernel;
+        // Hand-built degenerate model: rank-1 factor, 3 classes, heads with
+        // fixed weights so votes are deterministic.
+        let factor = LowRankFactor {
+            g: Mat::from_vec(1, 1, vec![1.0]),
+            landmarks: Mat::from_vec(1, 1, vec![1.0]),
+            landmark_sq: vec![1.0],
+            whiten: Mat::from_vec(1, 1, vec![1.0]),
+            rank: 1,
+            eigenvalues: vec![1.0],
+            kernel: Kernel::Linear,
+            landmark_idx: vec![0],
+        };
+        let heads = vec![
+            BinaryHead {
+                pair: (0, 1),
+                w: vec![1.0], // positive scores → class 1
+                objective: 0.0,
+                converged: true,
+                sv_count: 0,
+                steps: 0,
+            },
+            BinaryHead {
+                pair: (0, 2),
+                w: vec![-1.0], // negative → class 0
+                objective: 0.0,
+                converged: true,
+                sv_count: 0,
+                steps: 0,
+            },
+            BinaryHead {
+                pair: (1, 2),
+                w: vec![1.0], // positive → class 2
+                objective: 0.0,
+                converged: true,
+                sv_count: 0,
+                steps: 0,
+            },
+        ];
+        let model = MulticlassModel {
+            factor,
+            heads,
+            kind: ModelKind::OneVsOne { n_classes: 3 },
+        };
+        // Feature g = [2.0]: head votes → 1, 0, 2 → tie broken by lowest id.
+        let g = Mat::from_vec(1, 1, vec![2.0]);
+        let pred = model.predict_from_features(&g);
+        assert_eq!(pred, vec![0]);
+    }
+}

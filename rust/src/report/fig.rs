@@ -1,0 +1,68 @@
+//! ASCII log-scale bar rendering for figure-style bench output (the paper's
+//! figures 2/3 are log-scale bar charts; this gives a terminal-native
+//! approximation alongside the TSV export).
+
+/// Render a horizontal log-scale bar for `value` seconds within
+/// `[lo, hi]`, `width` characters wide.
+pub fn log_bar(value: f64, lo: f64, hi: f64, width: usize) -> String {
+    if !(value.is_finite()) || value <= 0.0 {
+        return String::new();
+    }
+    let lo = lo.max(1e-9);
+    let hi = hi.max(lo * 10.0);
+    let t = ((value.ln() - lo.ln()) / (hi.ln() - lo.ln())).clamp(0.0, 1.0);
+    let n = (t * width as f64).round() as usize;
+    "█".repeat(n.max(1))
+}
+
+/// Render a labelled group of log-scale bars.
+pub fn bar_chart(title: &str, entries: &[(String, f64)], width: usize) -> String {
+    let mut out = format!("-- {title} (log scale) --\n");
+    let lo = entries
+        .iter()
+        .map(|(_, v)| *v)
+        .filter(|v| *v > 0.0)
+        .fold(f64::MAX, f64::min);
+    let hi = entries.iter().map(|(_, v)| *v).fold(0.0f64, f64::max);
+    let label_w = entries.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    for (label, v) in entries {
+        out.push_str(&format!(
+            "{label:<label_w$}  {:>10.4}s  {}\n",
+            v,
+            log_bar(*v, lo, hi, width)
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bars_monotone_in_value() {
+        let a = log_bar(0.01, 0.01, 100.0, 40).len();
+        let b = log_bar(1.0, 0.01, 100.0, 40).len();
+        let c = log_bar(100.0, 0.01, 100.0, 40).len();
+        assert!(a <= b && b <= c);
+        assert!(c >= 40 * 3); // "█" is 3 bytes
+    }
+
+    #[test]
+    fn zero_and_nan_are_empty() {
+        assert!(log_bar(0.0, 0.1, 1.0, 10).is_empty());
+        assert!(log_bar(f64::NAN, 0.1, 1.0, 10).is_empty());
+    }
+
+    #[test]
+    fn chart_contains_labels() {
+        let s = bar_chart(
+            "demo",
+            &[("fast".into(), 0.01), ("slow".into(), 10.0)],
+            20,
+        );
+        assert!(s.contains("fast"));
+        assert!(s.contains("slow"));
+        assert!(s.contains("log scale"));
+    }
+}

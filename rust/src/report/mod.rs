@@ -1,0 +1,6 @@
+//! Paper-style tables and figure data emission for the bench harness.
+
+pub mod fig;
+pub mod table;
+
+pub use table::Table;

@@ -1,0 +1,133 @@
+//! Plain-text table rendering (paper tables 2/3) and TSV series emission
+//! (figures 2/3) for the benchmark harness.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A simple column-aligned table.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Format seconds the way the paper's tables do (3 significant-ish
+    /// digits, comma grouping is skipped).
+    pub fn secs(x: f64) -> String {
+        if x >= 100.0 {
+            format!("{x:.0}")
+        } else if x >= 1.0 {
+            format!("{x:.2}")
+        } else {
+            format!("{x:.3}")
+        }
+    }
+
+    /// Format an error rate as percent.
+    pub fn pct(x: f64) -> String {
+        format!("{:.2}", x * 100.0)
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(s, "{:<w$}  ", c, w = widths[i]);
+            }
+            s.trim_end().to_string()
+        };
+        let _ = writeln!(out, "{}", line(&self.header, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * widths.len();
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+
+    /// Write the table as TSV (figure-data export for external plotting).
+    pub fn write_tsv(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut s = String::new();
+        let _ = writeln!(s, "# {}", self.title);
+        let _ = writeln!(s, "{}", self.header.join("\t"));
+        for row in &self.rows {
+            let _ = writeln!(s, "{}", row.join("\t"));
+        }
+        std::fs::write(path, s)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["solver", "time"]);
+        t.row(&["LPD-SVM".into(), "1.23".into()]);
+        t.row(&["ThunderSVM".into(), "456".into()]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert!(r.contains("LPD-SVM"));
+        assert!(r.lines().count() >= 5);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(Table::secs(1402.86), "1403");
+        assert_eq!(Table::secs(89.86), "89.86");
+        assert_eq!(Table::secs(0.123), "0.123");
+        assert_eq!(Table::pct(0.1477), "14.77");
+    }
+
+    #[test]
+    fn tsv_written() {
+        let mut t = Table::new("fig", &["x", "y"]);
+        t.row(&["1".into(), "2".into()]);
+        let dir = std::env::temp_dir().join("lpdsvm_table");
+        let path = dir.join("fig.tsv");
+        t.write_tsv(&path).unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.contains("x\ty"));
+        assert!(content.contains("1\t2"));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("bad", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

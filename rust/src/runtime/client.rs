@@ -1,0 +1,186 @@
+//! Artifact registry + PJRT client wrapper.
+//!
+//! `artifacts/manifest.json` (written by `python/compile/aot.py`) lists the
+//! lowered shape variants. Interchange is HLO **text**: jax ≥ 0.5 emits
+//! HloModuleProtos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects, while the text parser reassigns ids (see aot.py and
+//! /opt/xla-example/README.md).
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// One lowered artifact: a stage-1 chunk computation with static shapes.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// Rows per chunk.
+    pub m: usize,
+    /// Landmark/budget dimension (also the padded output width).
+    pub b: usize,
+    /// Input feature dimension.
+    pub p: usize,
+}
+
+/// PJRT client + lazily compiled executables, keyed by artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    artifacts: Vec<ArtifactMeta>,
+    executables: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Load the manifest from an artifacts directory and start a PJRT CPU
+    /// client. Fails cleanly if artifacts were never built (`make
+    /// artifacts`).
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Json::parse(&text)?;
+        let mut artifacts = Vec::new();
+        for a in manifest
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .context("manifest.artifacts missing")?
+        {
+            artifacts.push(ArtifactMeta {
+                name: a
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .context("artifact.name")?
+                    .to_string(),
+                file: a
+                    .get("file")
+                    .and_then(|v| v.as_str())
+                    .context("artifact.file")?
+                    .to_string(),
+                m: a.get("m").and_then(|v| v.as_usize()).context("artifact.m")?,
+                b: a.get("b").and_then(|v| v.as_usize()).context("artifact.b")?,
+                p: a.get("p").and_then(|v| v.as_usize()).context("artifact.p")?,
+            });
+        }
+        anyhow::ensure!(!artifacts.is_empty(), "manifest lists no artifacts");
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT: {e}"))?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            artifacts,
+            executables: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts directory: `$LPDSVM_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("LPDSVM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The underlying PJRT client (device-buffer uploads etc.).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn artifacts(&self) -> &[ArtifactMeta] {
+        &self.artifacts
+    }
+
+    /// Smallest stage-1 variant that fits `b` landmarks and `p` features.
+    pub fn pick_stage1(&self, b: usize, p: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.name.starts_with("stage1") && a.b >= b && a.p >= p)
+            .min_by_key(|a| (a.b, a.p))
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    pub fn executable(&self, meta: &ArtifactMeta) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.executables.borrow().get(&meta.name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing HLO {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", meta.name))?;
+        let exe = Rc::new(exe);
+        self.executables
+            .borrow_mut()
+            .insert(meta.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables held in the cache.
+    pub fn compiled_count(&self) -> usize {
+        self.executables.borrow().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // Tests run from the crate root; fall back to env override.
+        Runtime::default_dir()
+    }
+
+    #[test]
+    fn manifest_loads_when_built() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::load(&dir).unwrap();
+        assert!(!rt.artifacts().is_empty());
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    }
+
+    #[test]
+    fn pick_smallest_fitting_variant() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::load(&dir).unwrap();
+        if let Some(a) = rt.pick_stage1(10, 10) {
+            assert!(a.b >= 10 && a.p >= 10);
+            // No strictly smaller fitting variant exists.
+            for other in rt.artifacts() {
+                if other.name.starts_with("stage1") && other.b >= 10 && other.p >= 10 {
+                    assert!((a.b, a.p) <= (other.b, other.p));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn missing_dir_fails_with_hint() {
+        let err = match Runtime::load(Path::new("/nonexistent/artifacts")) {
+            Ok(_) => panic!("expected failure"),
+            Err(e) => e,
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime — the "accelerator" path.
+//!
+//! Loads the HLO-text artifacts that `python/compile/aot.py` lowered from
+//! the JAX+Pallas stage-1 graph, compiles them once per shape variant on
+//! the PJRT CPU client (the stand-in for the paper's CUDA devices — see
+//! DESIGN.md §Hardware-Adaptation), and exposes them as a
+//! [`crate::lowrank::Stage1Backend`] so the rest of the system is
+//! backend-agnostic. Python never runs at request time; the artifacts are
+//! self-contained HLO.
+
+pub mod accel;
+pub mod client;
+
+pub use accel::AccelBackend;
+pub use client::{ArtifactMeta, Runtime};

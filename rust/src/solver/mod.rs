@@ -1,0 +1,24 @@
+//! Stage 2 of LPD-SVM: dual coordinate ascent on the precomputed low-rank
+//! features — a *linear* SVM solver over the rows of `G` (paper §4).
+//!
+//! The dual problem is `max_{α∈[0,C]ⁿ} 1ᵀα − ½ αᵀ Q̃ α` with
+//! `Q̃_ij = y_i y_j ⟨G_i, G_j⟩`. Because `Q̃` factors through `G`, a single
+//! coordinate step costs `O(B)` via the maintained primal vector
+//! `v = Σ_j α_j y_j G_j`:
+//!
+//!   grad_i = y_i ⟨G_i, v⟩ − 1
+//!   α_i ← clip(α_i − grad_i / ⟨G_i,G_i⟩, [0, C])     (truncated Newton)
+//!   v  += (α_i^new − α_i^old) y_i G_i
+//!
+//! plus the paper's "polishing": robust shrinking (remove after k=5
+//! unchanged visits, spend an η=5% time budget on re-activation sweeps), a
+//! LIBLINEAR-style maximum-KKT-violation stopping rule, and warm starts.
+
+pub mod cd;
+pub mod shrinking;
+pub mod state;
+pub mod svr;
+
+pub use cd::{solve, Solution, SolverOptions};
+pub use state::ProblemView;
+pub use svr::{solve_svr, SvrOptions, SvrSolution};

@@ -1,0 +1,152 @@
+//! The paper's "simplistic yet robust and effective" shrinking heuristic.
+//!
+//! Rule (§4 "Shrinking"): if a variable is visited `k` times in a row (we
+//! use the paper's k = 5) without changing, remove it from the active set;
+//! dedicate a fixed fraction η (paper: 5%) of total computation time to
+//! sweeps over the removed variables that re-activate any violator. Unlike
+//! LIBSVM's heuristic this has a *systematic* re-activation path, which is
+//! what makes it robust.
+
+/// Active-set bookkeeping with unchanged-visit counters.
+pub struct ActiveSet {
+    /// Local variable indices currently active, iterated each epoch.
+    pub active: Vec<u32>,
+    /// Consecutive unchanged-visit count per variable (saturating at k).
+    unchanged: Vec<u8>,
+    /// Threshold k.
+    k: u8,
+    /// Variables removed from the active set.
+    pub inactive: Vec<u32>,
+}
+
+impl ActiveSet {
+    pub fn new(n: usize, k: u8) -> Self {
+        ActiveSet {
+            active: (0..n as u32).collect(),
+            unchanged: vec![0; n],
+            k,
+            inactive: Vec::new(),
+        }
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Record the outcome of visiting variable `i`. Returns `true` if the
+    /// variable just crossed the threshold and should be shrunk.
+    #[inline]
+    pub fn visit(&mut self, i: u32, changed: bool) -> bool {
+        let c = &mut self.unchanged[i as usize];
+        if changed {
+            *c = 0;
+            false
+        } else {
+            *c = c.saturating_add(1);
+            *c >= self.k
+        }
+    }
+
+    /// Remove the variables flagged during the last epoch (swap-remove to
+    /// stay O(#removed)); their ids move to the inactive list.
+    pub fn shrink(&mut self, flagged: &[u32]) {
+        if flagged.is_empty() {
+            return;
+        }
+        // Mark and filter in one pass (flagged lists are small).
+        let mut mark = vec![false; self.unchanged.len()];
+        for &i in flagged {
+            mark[i as usize] = true;
+        }
+        self.active.retain(|&i| {
+            if mark[i as usize] {
+                self.inactive.push(i);
+                false
+            } else {
+                true
+            }
+        });
+    }
+
+    /// Move `i` (currently inactive) back into the active set with a reset
+    /// counter.
+    pub fn reactivate_all(&mut self, violators: &[u32]) {
+        if violators.is_empty() {
+            return;
+        }
+        let mut mark = vec![false; self.unchanged.len()];
+        for &i in violators {
+            mark[i as usize] = true;
+            self.unchanged[i as usize] = 0;
+        }
+        self.inactive.retain(|&i| {
+            if mark[i as usize] {
+                self.active.push(i);
+                false
+            } else {
+                true
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shrinks_after_k_unchanged_visits() {
+        let mut s = ActiveSet::new(3, 5);
+        for _ in 0..4 {
+            assert!(!s.visit(1, false));
+        }
+        assert!(s.visit(1, false), "5th unchanged visit should flag");
+    }
+
+    #[test]
+    fn change_resets_counter() {
+        let mut s = ActiveSet::new(2, 5);
+        for _ in 0..4 {
+            s.visit(0, false);
+        }
+        s.visit(0, true); // reset
+        for _ in 0..4 {
+            assert!(!s.visit(0, false));
+        }
+        assert!(s.visit(0, false));
+    }
+
+    #[test]
+    fn shrink_moves_to_inactive() {
+        let mut s = ActiveSet::new(5, 5);
+        s.shrink(&[1, 3]);
+        assert_eq!(s.n_active(), 3);
+        assert_eq!(s.inactive, vec![1, 3]);
+        assert!(!s.active.contains(&1));
+        assert!(!s.active.contains(&3));
+    }
+
+    #[test]
+    fn reactivate_returns_violators() {
+        let mut s = ActiveSet::new(5, 5);
+        s.shrink(&[0, 2, 4]);
+        s.reactivate_all(&[2, 4]);
+        assert_eq!(s.inactive, vec![0]);
+        assert_eq!(s.n_active(), 4);
+        assert!(s.active.contains(&2));
+        // counters were reset
+        for _ in 0..4 {
+            assert!(!s.visit(2, false));
+        }
+        assert!(s.visit(2, false));
+    }
+
+    #[test]
+    fn empty_ops_are_noops() {
+        let mut s = ActiveSet::new(3, 5);
+        s.shrink(&[]);
+        s.reactivate_all(&[]);
+        assert_eq!(s.n_active(), 3);
+        assert!(s.inactive.is_empty());
+    }
+}

@@ -1,0 +1,297 @@
+//! ε-insensitive support vector *regression* on the low-rank features.
+//!
+//! The paper (§2) notes the decision function "is directly suitable for
+//! regression tasks" and that the dual problems for regression "are of a
+//! similar form"; this module supplies that head. We solve the L1-SVR dual
+//! over `G` with one variable β_i ∈ [−C, C] per point (the standard
+//! α⁺−α⁻ folding):
+//!
+//!   max_β  −½ βᵀK̃β + βᵀy − ε‖β‖₁,   β ∈ [−C, C]ⁿ,  K̃ = G Gᵀ
+//!
+//! Coordinate ascent step (LIBLINEAR's L1-SVR update, O(B) via the
+//! maintained `w = Σ β_i G_i`): with g = ⟨G_i, w⟩ − y_i,
+//!   β⁺-direction gradient: g + ε,  β⁻-direction: g − ε,
+//! soft-thresholded Newton step and clip to the box.
+
+use crate::linalg::dense::{axpy, dot};
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// Options for an SVR training run.
+#[derive(Clone, Debug)]
+pub struct SvrOptions {
+    pub c: f64,
+    /// Width of the ε-insensitive tube.
+    pub epsilon_tube: f64,
+    /// KKT stopping tolerance.
+    pub eps: f64,
+    pub max_epochs: usize,
+    pub seed: u64,
+}
+
+impl Default for SvrOptions {
+    fn default() -> Self {
+        SvrOptions {
+            c: 1.0,
+            epsilon_tube: 0.1,
+            eps: 1e-3,
+            max_epochs: 1000,
+            seed: 0x5B,
+        }
+    }
+}
+
+/// Trained SVR head.
+#[derive(Clone, Debug)]
+pub struct SvrSolution {
+    pub beta: Vec<f32>,
+    /// Weights in G-space; prediction is `⟨g(x), w⟩`.
+    pub w: Vec<f32>,
+    pub converged: bool,
+    pub epochs: usize,
+    pub sv_count: usize,
+    pub violation: f64,
+}
+
+/// Violation of the SVR KKT conditions for variable `i`, where
+/// `g = ⟨G_i, w⟩ − y_i` is the smooth-part gradient. Minimisation form:
+/// `f(β) = ½βᵀK̃β − βᵀy + ε‖β‖₁` with box `[−C, C]`.
+#[inline]
+fn svr_violation(g: f32, beta: f32, c: f32, eps_tube: f32) -> f32 {
+    let gp = g + eps_tube; // ∂f for β > 0 moves
+    let gn = g - eps_tube; // ∂f for β < 0 moves
+    if beta >= c {
+        gp.max(0.0) // improvement only by decreasing β
+    } else if beta <= -c {
+        (-gn).max(0.0)
+    } else if beta > 0.0 {
+        gp.abs()
+    } else if beta < 0.0 {
+        gn.abs()
+    } else {
+        // At 0: moving up helps if gp < 0, down if gn > 0.
+        (-gp).max(0.0).max(gn.max(0.0))
+    }
+}
+
+/// Train ε-SVR over rows of `g_mat` with targets `y`.
+pub fn solve_svr(g_mat: &Mat, y: &[f32], opts: &SvrOptions) -> SvrSolution {
+    let n = g_mat.rows;
+    assert_eq!(n, y.len());
+    let c = opts.c as f32;
+    let tube = opts.epsilon_tube as f32;
+    let mut beta = vec![0.0f32; n];
+    let mut w = vec![0.0f32; g_mat.cols];
+    let diag: Vec<f32> = (0..n)
+        .map(|i| {
+            let r = g_mat.row(i);
+            dot(r, r)
+        })
+        .collect();
+    let mut rng = Rng::new(opts.seed);
+    let mut order: Vec<u32> = (0..n as u32).collect();
+
+    let mut epochs = 0;
+    let mut converged = false;
+    let mut max_viol = 0.0f32;
+    while epochs < opts.max_epochs {
+        epochs += 1;
+        rng.shuffle(&mut order);
+        max_viol = 0.0;
+        for &iu in &order {
+            let i = iu as usize;
+            let d = diag[i];
+            if d <= 0.0 {
+                continue;
+            }
+            let gi = g_mat.row(i);
+            let g = dot(gi, &w) - y[i];
+            let b_old = beta[i];
+            max_viol = max_viol.max(svr_violation(g, b_old, c, tube));
+            // Exact coordinate minimiser of the quadratic + ε|·| along i:
+            // soft-threshold the unconstrained Newton point, then box-clip.
+            // (g is the gradient of the smooth part at b_old.)
+            let u = b_old - g / d;
+            let t = tube / d;
+            let b_new = if u > t {
+                (u - t).min(c)
+            } else if u < -t {
+                (u + t).max(-c)
+            } else {
+                0.0
+            };
+            let delta = b_new - b_old;
+            if delta != 0.0 {
+                beta[i] = b_new;
+                axpy(delta, gi, &mut w);
+            }
+        }
+        if (max_viol as f64) < opts.eps {
+            converged = true;
+            break;
+        }
+    }
+
+    SvrSolution {
+        sv_count: beta.iter().filter(|&&b| b != 0.0).count(),
+        beta,
+        w,
+        converged,
+        epochs,
+        violation: max_viol as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// y = 2·g0 − g1 + noise, linear in feature space.
+    fn linear_problem(n: usize, noise: f32, seed: u64) -> (Mat, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let mut g = Mat::zeros(n, 3);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let a = rng.normal() as f32;
+            let b = rng.normal() as f32;
+            g.set(i, 0, a);
+            g.set(i, 1, b);
+            g.set(i, 2, 1.0); // bias feature
+            y.push(2.0 * a - b + noise * rng.normal() as f32);
+        }
+        (g, y)
+    }
+
+    #[test]
+    fn fits_linear_function() {
+        let (g, y) = linear_problem(300, 0.0, 1);
+        let sol = solve_svr(
+            &g,
+            &y,
+            &SvrOptions {
+                c: 10.0,
+                epsilon_tube: 0.05,
+                ..Default::default()
+            },
+        );
+        let preds = g.matvec(&sol.w);
+        let mae: f32 =
+            preds.iter().zip(&y).map(|(p, t)| (p - t).abs()).sum::<f32>() / y.len() as f32;
+        assert!(mae < 0.1, "MAE {mae}");
+        assert!((sol.w[0] - 2.0).abs() < 0.2, "w0 {}", sol.w[0]);
+        assert!((sol.w[1] + 1.0).abs() < 0.2, "w1 {}", sol.w[1]);
+    }
+
+    #[test]
+    fn beta_in_box() {
+        let (g, y) = linear_problem(200, 0.5, 2);
+        let opts = SvrOptions {
+            c: 0.3,
+            ..Default::default()
+        };
+        let sol = solve_svr(&g, &y, &opts);
+        for &b in &sol.beta {
+            assert!(b.abs() <= 0.3 + 1e-5, "beta {b} outside box");
+        }
+    }
+
+    #[test]
+    fn wide_tube_gives_sparse_solution() {
+        let (g, y) = linear_problem(200, 0.1, 3);
+        let narrow = solve_svr(
+            &g,
+            &y,
+            &SvrOptions {
+                epsilon_tube: 0.01,
+                ..Default::default()
+            },
+        );
+        let wide = solve_svr(
+            &g,
+            &y,
+            &SvrOptions {
+                epsilon_tube: 1.0,
+                ..Default::default()
+            },
+        );
+        assert!(
+            wide.sv_count < narrow.sv_count,
+            "wide tube {} should have fewer SVs than narrow {}",
+            wide.sv_count,
+            narrow.sv_count
+        );
+    }
+
+    #[test]
+    fn predictions_within_tube_on_clean_data() {
+        let (g, y) = linear_problem(150, 0.0, 4);
+        let tube = 0.2;
+        let sol = solve_svr(
+            &g,
+            &y,
+            &SvrOptions {
+                c: 100.0,
+                epsilon_tube: tube,
+                eps: 1e-4,
+                max_epochs: 3000,
+                ..Default::default()
+            },
+        );
+        assert!(sol.converged);
+        let preds = g.matvec(&sol.w);
+        for (p, t) in preds.iter().zip(&y) {
+            assert!(
+                (p - t).abs() <= tube as f32 + 0.05,
+                "residual {} beyond tube",
+                (p - t).abs()
+            );
+        }
+    }
+
+    #[test]
+    fn end_to_end_kernel_regression() {
+        // Nonlinear target through the full stage-1 + SVR pipeline:
+        // y = sin(2 x0) on 1-D inputs, Gaussian kernel features.
+        use crate::data::sparse::SparseMatrix;
+        use crate::kernel::Kernel;
+        use crate::lowrank::factor::NativeBackend;
+        use crate::lowrank::{LowRankFactor, Stage1Config};
+        use crate::util::timer::StageClock;
+        let n = 400;
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        let mut rng = Rng::new(9);
+        for _ in 0..n {
+            let x = rng.range_f64(-2.0, 2.0) as f32;
+            rows.push(vec![(0u32, x)]);
+            y.push((2.0 * x).sin());
+        }
+        let x = SparseMatrix::from_rows(1, &rows);
+        let mut clock = StageClock::new();
+        let factor = LowRankFactor::compute(
+            &x,
+            Kernel::gaussian(2.0),
+            &Stage1Config {
+                budget: 50,
+                ..Default::default()
+            },
+            &NativeBackend,
+            &mut clock,
+        )
+        .unwrap();
+        let sol = solve_svr(
+            &factor.g,
+            &y,
+            &SvrOptions {
+                c: 10.0,
+                epsilon_tube: 0.02,
+                max_epochs: 2000,
+                ..Default::default()
+            },
+        );
+        let preds = factor.g.matvec(&sol.w);
+        let mae: f32 =
+            preds.iter().zip(&y).map(|(p, t)| (p - t).abs()).sum::<f32>() / n as f32;
+        assert!(mae < 0.08, "kernel SVR MAE {mae}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Property-based testing mini-framework.
+//!
+//! The offline registry has no `proptest`, so this module provides the
+//! subset the test suite needs: composable random generators, a `forall`
+//! runner with a fixed case budget, and greedy shrinking of failing
+//! inputs. Deterministic by construction (seeded from the property name),
+//! so failures are reproducible.
+
+pub mod prop;
+
+pub use prop::{forall, Gen};

@@ -1,0 +1,223 @@
+//! `forall`-style property runner with shrinking.
+
+use crate::util::rng::Rng;
+
+/// A generator produces a value from an RNG and knows how to shrink a
+/// failing value toward smaller counterexamples.
+pub struct Gen<T> {
+    pub generate: Box<dyn Fn(&mut Rng) -> T>,
+    pub shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    pub fn new(
+        generate: impl Fn(&mut Rng) -> T + 'static,
+        shrink: impl Fn(&T) -> Vec<T> + 'static,
+    ) -> Self {
+        Gen {
+            generate: Box::new(generate),
+            shrink: Box::new(shrink),
+        }
+    }
+
+    /// Map the generated value (shrinking is lost; fine for derived gens).
+    pub fn map<U: Clone + 'static>(self, f: impl Fn(T) -> U + Clone + 'static) -> Gen<U> {
+        let g = self.generate;
+        Gen {
+            generate: Box::new(move |rng| f(g(rng))),
+            shrink: Box::new(|_| Vec::new()),
+        }
+    }
+}
+
+/// usize in `[lo, hi]`, shrinking toward `lo`.
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    assert!(lo <= hi);
+    Gen::new(
+        move |rng| lo + rng.usize(hi - lo + 1),
+        move |&v| {
+            let mut out = Vec::new();
+            if v > lo {
+                out.push(lo);
+                out.push(lo + (v - lo) / 2);
+                out.push(v - 1);
+            }
+            out.dedup();
+            out
+        },
+    )
+}
+
+/// f64 in `[lo, hi)`, shrinking toward the midpoint-free simple values.
+pub fn f64_in(lo: f64, hi: f64) -> Gen<f64> {
+    Gen::new(
+        move |rng| rng.range_f64(lo, hi),
+        move |&v| {
+            let mut out = Vec::new();
+            for cand in [lo, 0.0, 1.0, (lo + hi) / 2.0] {
+                if cand >= lo && cand < hi && (cand - v).abs() > 1e-12 {
+                    out.push(cand);
+                }
+            }
+            out
+        },
+    )
+}
+
+/// Vec of f32 with length from `len_gen`, entries in `[lo, hi)`. Shrinks by
+/// halving the vector and zeroing entries.
+pub fn vec_f32(len: Gen<usize>, lo: f32, hi: f32) -> Gen<Vec<f32>> {
+    let gen_len = len.generate;
+    Gen::new(
+        move |rng| {
+            let n = gen_len(rng);
+            (0..n)
+                .map(|_| lo + (hi - lo) * rng.f32())
+                .collect::<Vec<f32>>()
+        },
+        |v| {
+            let mut out = Vec::new();
+            if v.len() > 1 {
+                out.push(v[..v.len() / 2].to_vec());
+                out.push(v[..v.len() - 1].to_vec());
+            }
+            if v.iter().any(|&x| x != 0.0) {
+                out.push(vec![0.0; v.len()]);
+            }
+            out
+        },
+    )
+}
+
+/// Outcome of a property check.
+pub struct Failure<T> {
+    pub original: T,
+    pub shrunk: T,
+    pub shrink_steps: usize,
+    pub message: String,
+}
+
+/// Run `prop` on `cases` random inputs; on failure, greedily shrink and
+/// panic with both the original and minimised counterexample. The RNG seed
+/// derives from `name`, so reruns are deterministic.
+pub fn forall<T: Clone + std::fmt::Debug + 'static>(
+    name: &str,
+    cases: usize,
+    gen: &Gen<T>,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let seed = name
+        .bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x100000001b3)
+        });
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = (gen.generate)(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let failure = shrink_failure(gen, input, msg, &mut prop);
+            panic!(
+                "property '{name}' failed (case {case}/{cases}):\n  original: {:?}\n  shrunk ({} steps): {:?}\n  error: {}",
+                failure.original, failure.shrink_steps, failure.shrunk, failure.message
+            );
+        }
+    }
+}
+
+fn shrink_failure<T: Clone + std::fmt::Debug>(
+    gen: &Gen<T>,
+    original: T,
+    first_msg: String,
+    prop: &mut impl FnMut(&T) -> Result<(), String>,
+) -> Failure<T> {
+    let mut current = original.clone();
+    let mut message = first_msg;
+    let mut steps = 0;
+    // Greedy descent, bounded to avoid pathological loops.
+    'outer: for _ in 0..200 {
+        for cand in (gen.shrink)(&current) {
+            if let Err(msg) = prop(&cand) {
+                current = cand;
+                message = msg;
+                steps += 1;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    Failure {
+        original,
+        shrunk: current,
+        shrink_steps: steps,
+        message,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("usize-bounds", 200, &usize_in(2, 50), |&n| {
+            if (2..=50).contains(&n) {
+                Ok(())
+            } else {
+                Err(format!("{n} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let result = std::panic::catch_unwind(|| {
+            forall("must-fail", 100, &usize_in(0, 100), |&n| {
+                if n < 37 {
+                    Ok(())
+                } else {
+                    Err("too big".into())
+                }
+            });
+        });
+        let err = result.expect_err("property should fail");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("must-fail"), "{msg}");
+        // Shrinker should find a small counterexample (37 or close to it).
+        assert!(msg.contains("shrunk"), "{msg}");
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        forall(
+            "vec-bounds",
+            100,
+            &vec_f32(usize_in(0, 20), -1.0, 1.0),
+            |v| {
+                if v.len() <= 20 && v.iter().all(|&x| (-1.0..1.0).contains(&x)) {
+                    Ok(())
+                } else {
+                    Err(format!("bad vec {v:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first: Vec<usize> = Vec::new();
+        let gen = usize_in(0, 1000);
+        forall("det", 10, &gen, |&n| {
+            first.push(n);
+            Ok(())
+        });
+        let mut second: Vec<usize> = Vec::new();
+        forall("det", 10, &gen, |&n| {
+            second.push(n);
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

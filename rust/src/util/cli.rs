@@ -1,0 +1,224 @@
+//! Tiny declarative CLI parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generated `--help` text. Each subcommand in `main.rs` declares an
+//! `ArgSpec` list; parsing returns a `Parsed` map with typed getters.
+
+use std::collections::BTreeMap;
+
+/// Declaration of one accepted option.
+#[derive(Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+impl ArgSpec {
+    pub fn opt(name: &'static str, default: &'static str, help: &'static str) -> Self {
+        ArgSpec {
+            name,
+            help,
+            default: Some(default),
+            is_flag: false,
+        }
+    }
+    pub fn req(name: &'static str, help: &'static str) -> Self {
+        ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+        }
+    }
+    pub fn flag(name: &'static str, help: &'static str) -> Self {
+        ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        }
+    }
+}
+
+/// Parsed argument values.
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn str(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown or missing option --{name}"))
+    }
+    pub fn opt_str(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+    pub fn usize(&self, name: &str) -> anyhow::Result<usize> {
+        self.str(name)
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--{name}: {e}"))
+    }
+    pub fn f64(&self, name: &str) -> anyhow::Result<f64> {
+        self.str(name)
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--{name}: {e}"))
+    }
+    pub fn u64(&self, name: &str) -> anyhow::Result<u64> {
+        self.str(name)
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--{name}: {e}"))
+    }
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+}
+
+/// Render help text for a subcommand.
+pub fn help(cmd: &str, about: &str, specs: &[ArgSpec]) -> String {
+    let mut out = format!("{about}\n\nUsage: lpdsvm {cmd} [options]\n\nOptions:\n");
+    for s in specs {
+        let head = if s.is_flag {
+            format!("  --{}", s.name)
+        } else {
+            format!("  --{} <value>", s.name)
+        };
+        let dflt = match s.default {
+            Some(d) if !s.is_flag => format!(" [default: {d}]"),
+            _ if !s.is_flag => " [required]".to_string(),
+            _ => String::new(),
+        };
+        out.push_str(&format!("{head:<28} {}{dflt}\n", s.help));
+    }
+    out.push_str("  --help                     show this message\n");
+    out
+}
+
+/// Parse `args` (excluding program name and subcommand) against `specs`.
+pub fn parse(cmd: &str, about: &str, specs: &[ArgSpec], args: &[String]) -> anyhow::Result<Parsed> {
+    let mut values = BTreeMap::new();
+    let mut flags = BTreeMap::new();
+    let mut positional = Vec::new();
+    for s in specs {
+        if let Some(d) = s.default {
+            values.insert(s.name.to_string(), d.to_string());
+        }
+    }
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if a == "--help" || a == "-h" {
+            println!("{}", help(cmd, about, specs));
+            std::process::exit(0);
+        }
+        if let Some(rest) = a.strip_prefix("--") {
+            let (key, inline_val) = match rest.split_once('=') {
+                Some((k, v)) => (k, Some(v.to_string())),
+                None => (rest, None),
+            };
+            let spec = specs
+                .iter()
+                .find(|s| s.name == key)
+                .ok_or_else(|| anyhow::anyhow!("unknown option --{key} (see --help)"))?;
+            if spec.is_flag {
+                if inline_val.is_some() {
+                    anyhow::bail!("--{key} is a flag and takes no value");
+                }
+                flags.insert(key.to_string(), true);
+            } else {
+                let v = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        args.get(i)
+                            .ok_or_else(|| anyhow::anyhow!("--{key} requires a value"))?
+                            .clone()
+                    }
+                };
+                values.insert(key.to_string(), v);
+            }
+        } else {
+            positional.push(a.clone());
+        }
+        i += 1;
+    }
+    for s in specs {
+        if !s.is_flag && !values.contains_key(s.name) {
+            anyhow::bail!("missing required option --{} (see --help)", s.name);
+        }
+    }
+    Ok(Parsed {
+        values,
+        flags,
+        positional,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<ArgSpec> {
+        vec![
+            ArgSpec::opt("budget", "512", "budget size B"),
+            ArgSpec::req("data", "dataset path"),
+            ArgSpec::flag("no-shrinking", "disable shrinking"),
+        ]
+    }
+
+    fn to_args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let p = parse("train", "", &specs(), &to_args(&["--data", "x.svm"])).unwrap();
+        assert_eq!(p.str("budget"), "512");
+        assert_eq!(p.str("data"), "x.svm");
+        assert!(!p.flag("no-shrinking"));
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let p = parse(
+            "train",
+            "",
+            &specs(),
+            &to_args(&["--data=x", "--budget=64", "--no-shrinking"]),
+        )
+        .unwrap();
+        assert_eq!(p.usize("budget").unwrap(), 64);
+        assert!(p.flag("no-shrinking"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(parse("train", "", &specs(), &to_args(&["--budget", "8"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(parse("train", "", &specs(), &to_args(&["--data", "x", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let p = parse("train", "", &specs(), &to_args(&["--data", "x", "extra"])).unwrap();
+        assert_eq!(p.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn flag_with_value_errors() {
+        assert!(parse(
+            "train",
+            "",
+            &specs(),
+            &to_args(&["--data", "x", "--no-shrinking=1"])
+        )
+        .is_err());
+    }
+}

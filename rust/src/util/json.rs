@@ -1,0 +1,378 @@
+//! Minimal JSON value + writer + parser (serde is unavailable offline).
+//!
+//! Used for: the artifacts manifest written by `python/compile/aot.py`,
+//! model save/load, and bench report files. Supports the JSON subset those
+//! producers emit (no surrogate escapes, numbers as f64).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|x| x as usize)
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.as_obj().and_then(|m| m.get(key))
+    }
+
+    /// Serialize to a compact JSON string.
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.fract() == 0.0 && x.abs() < 1e15 {
+                    let _ = write!(out, "{}", *x as i64);
+                } else {
+                    let _ = write!(out, "{x}");
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse a JSON document.
+    pub fn parse(s: &str) -> anyhow::Result<Json> {
+        let mut p = Parser {
+            b: s.as_bytes(),
+            i: 0,
+        };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            anyhow::bail!("trailing characters at byte {}", p.i);
+        }
+        Ok(v)
+    }
+}
+
+/// Convenience builders.
+pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+pub fn arr(items: Vec<Json>) -> Json {
+    Json::Arr(items)
+}
+pub fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+pub fn s(x: &str) -> Json {
+    Json::Str(x.to_string())
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> anyhow::Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of JSON"))
+    }
+
+    fn eat(&mut self, c: u8) -> anyhow::Result<()> {
+        if self.peek()? == c {
+            self.i += 1;
+            Ok(())
+        } else {
+            anyhow::bail!(
+                "expected '{}' at byte {}, found '{}'",
+                c as char,
+                self.i,
+                self.b[self.i] as char
+            )
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> anyhow::Result<Json> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            anyhow::bail!("invalid literal at byte {}", self.i)
+        }
+    }
+
+    fn value(&mut self) -> anyhow::Result<Json> {
+        match self.peek()? {
+            b'n' => self.lit("null", Json::Null),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b'[' => {
+                self.i += 1;
+                let mut v = Vec::new();
+                self.ws();
+                if self.peek()? == b']' {
+                    self.i += 1;
+                    return Ok(Json::Arr(v));
+                }
+                loop {
+                    self.ws();
+                    v.push(self.value()?);
+                    self.ws();
+                    match self.peek()? {
+                        b',' => self.i += 1,
+                        b']' => {
+                            self.i += 1;
+                            return Ok(Json::Arr(v));
+                        }
+                        c => anyhow::bail!("expected ',' or ']' found '{}'", c as char),
+                    }
+                }
+            }
+            b'{' => {
+                self.i += 1;
+                let mut m = BTreeMap::new();
+                self.ws();
+                if self.peek()? == b'}' {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                loop {
+                    self.ws();
+                    let k = self.string()?;
+                    self.ws();
+                    self.eat(b':')?;
+                    self.ws();
+                    m.insert(k, self.value()?);
+                    self.ws();
+                    match self.peek()? {
+                        b',' => self.i += 1,
+                        b'}' => {
+                            self.i += 1;
+                            return Ok(Json::Obj(m));
+                        }
+                        c => anyhow::bail!("expected ',' or '}}' found '{}'", c as char),
+                    }
+                }
+            }
+            _ => self.number(),
+        }
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                anyhow::bail!("truncated \\u escape");
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            let code = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                        }
+                        _ => anyhow::bail!("bad escape at byte {}", self.i),
+                    }
+                }
+                c => {
+                    // Re-synchronise on UTF-8 multibyte sequences.
+                    if c < 0x80 {
+                        out.push(c as char);
+                    } else {
+                        let start = self.i - 1;
+                        let width = utf8_width(c);
+                        let end = (start + width).min(self.b.len());
+                        out.push_str(std::str::from_utf8(&self.b[start..end])?);
+                        self.i = end;
+                    }
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> anyhow::Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let txt = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Json::Num(txt.parse::<f64>().map_err(|e| {
+            anyhow::anyhow!("bad number '{txt}' at byte {start}: {e}")
+        })?))
+    }
+}
+
+fn utf8_width(b: u8) -> usize {
+    match b {
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        0xF0..=0xF7 => 4,
+        _ => 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_basic() {
+        let v = obj(vec![
+            ("name", s("rbf_gram")),
+            ("m", num(256.0)),
+            ("ok", Json::Bool(true)),
+            ("tags", arr(vec![s("a"), s("b")])),
+            ("none", Json::Null),
+        ]);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn parses_nested() {
+        let v = Json::parse(r#"{"a": [1, 2.5, {"b": "x\ny"}], "c": -3e2}"#).unwrap();
+        assert_eq!(v.get("c").unwrap().as_f64().unwrap(), -300.0);
+        let a = v.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(a[1].as_f64().unwrap(), 2.5);
+        assert_eq!(a[2].get("b").unwrap().as_str().unwrap(), "x\ny");
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        assert!(Json::parse("{} x").is_err());
+        assert!(Json::parse("[1,").is_err());
+        assert!(Json::parse("").is_err());
+    }
+
+    #[test]
+    fn integers_print_without_fraction() {
+        assert_eq!(num(3.0).to_string(), "3");
+        assert_eq!(num(3.5).to_string(), "3.5");
+    }
+
+    #[test]
+    fn escapes_roundtrip() {
+        let v = s("quote\" slash\\ tab\t nl\n");
+        let back = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn unicode_passthrough() {
+        let v = s("λ-svm αβγ");
+        let back = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn parses_python_json_output() {
+        // Shape emitted by python's json.dump for the artifacts manifest.
+        let text = r#"{"artifacts": [{"name": "stage1", "file": "stage1_m256_b128_p64.hlo.txt", "m": 256, "b": 128, "p": 64}], "version": 1}"#;
+        let v = Json::parse(text).unwrap();
+        let a = v.get("artifacts").unwrap().as_arr().unwrap();
+        assert_eq!(a[0].get("m").unwrap().as_usize().unwrap(), 256);
+    }
+}

@@ -1,0 +1,8 @@
+//! Self-contained substitutes for crates unavailable in this offline
+//! environment (clap, rand, tokio, serde, criterion). See DESIGN.md §2.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod threads;
+pub mod timer;

@@ -1,0 +1,108 @@
+//! Scoped worker pool built on `std::thread::scope` — the offline registry
+//! has neither rayon nor tokio. The coordinator schedules many independent
+//! binary SVM problems (OVO pairs × folds × grid points) over this pool,
+//! mirroring the paper's OpenMP/multi-GPU job farm.
+//!
+//! The pool is work-stealing-free by design: jobs are pulled from a shared
+//! atomic counter over an indexed job list, which is both simpler and
+//! contention-free for the coarse-grained jobs we schedule (each job is an
+//! entire SVM training run).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use: respects `LPDSVM_THREADS`, defaults to
+/// available parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("LPDSVM_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `f(i)` for every `i in 0..n` across `threads` workers and collect the
+/// results in index order. `f` must be `Sync` (shared) — per-job state should
+/// be created inside the closure.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots: Vec<SlotPtr<T>> = out
+        .iter_mut()
+        .map(|s| SlotPtr(s as *mut Option<T>))
+        .collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let next = &next;
+            let f = &f;
+            let slots = &slots;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                // SAFETY: each index i is claimed by exactly one worker via
+                // the atomic counter, so each slot is written once with no
+                // aliasing; the scope guarantees the borrow outlives workers.
+                let slot: *mut Option<T> = slots[i].0;
+                unsafe { *slot = Some(v) };
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("job not run")).collect()
+}
+
+/// Covariant raw pointer wrapper so slots can be shared across the scope.
+struct SlotPtr<T>(*mut Option<T>);
+// SAFETY: disjoint writes enforced by the atomic job counter (see above).
+unsafe impl<T: Send> Sync for SlotPtr<T> {}
+unsafe impl<T: Send> Send for SlotPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let out = parallel_map(100, 4, |i| i * 2);
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let out = parallel_map(5, 1, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn empty_job_list() {
+        let out: Vec<usize> = parallel_map(0, 8, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_jobs() {
+        let out = parallel_map(3, 64, |i| i);
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn heavy_closure_state_is_per_call() {
+        // Each job builds its own Vec — no shared mutable state needed.
+        let out = parallel_map(32, 8, |i| (0..i).sum::<usize>());
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, (0..i).sum::<usize>());
+        }
+    }
+}

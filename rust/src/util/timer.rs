@@ -1,0 +1,114 @@
+//! Wall-clock stage timing used throughout the benches and the figure-3
+//! breakdown. Deliberately tiny: `Timer` measures one span, `StageClock`
+//! accumulates named stages (preparation / G computation / linear training)
+//! exactly as the paper's figure 3 reports them.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// One-shot wall clock.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Accumulates durations under stage names, preserving insertion order via
+/// BTreeMap keys prefixed by first-seen index.
+#[derive(Default, Clone)]
+pub struct StageClock {
+    stages: BTreeMap<String, Duration>,
+    order: Vec<String>,
+}
+
+impl StageClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f` and accumulate under `stage`.
+    pub fn time<T>(&mut self, stage: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(stage, t.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, stage: &str, d: Duration) {
+        if !self.stages.contains_key(stage) {
+            self.order.push(stage.to_string());
+        }
+        *self.stages.entry(stage.to_string()).or_default() += d;
+    }
+
+    pub fn get(&self, stage: &str) -> Duration {
+        self.stages.get(stage).copied().unwrap_or_default()
+    }
+
+    pub fn secs(&self, stage: &str) -> f64 {
+        self.get(stage).as_secs_f64()
+    }
+
+    pub fn total(&self) -> Duration {
+        self.stages.values().copied().sum()
+    }
+
+    /// Stages in first-seen order with accumulated seconds.
+    pub fn entries(&self) -> Vec<(String, f64)> {
+        self.order
+            .iter()
+            .map(|k| (k.clone(), self.secs(k)))
+            .collect()
+    }
+
+    /// Merge another clock into this one (used when joining worker results).
+    pub fn merge(&mut self, other: &StageClock) {
+        for (k, v) in other.entries() {
+            self.add(&k, Duration::from_secs_f64(v));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_stages() {
+        let mut c = StageClock::new();
+        c.add("prep", Duration::from_millis(10));
+        c.add("prep", Duration::from_millis(5));
+        c.add("train", Duration::from_millis(1));
+        assert!((c.secs("prep") - 0.015).abs() < 1e-9);
+        assert_eq!(c.entries().len(), 2);
+        assert_eq!(c.entries()[0].0, "prep");
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut c = StageClock::new();
+        let v = c.time("work", || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(c.secs("work") >= 0.0);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = StageClock::new();
+        a.add("x", Duration::from_millis(2));
+        let mut b = StageClock::new();
+        b.add("x", Duration::from_millis(3));
+        b.add("y", Duration::from_millis(1));
+        a.merge(&b);
+        assert!((a.secs("x") - 0.005).abs() < 1e-9);
+        assert!((a.secs("y") - 0.001).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,105 @@
+//! Native vs PJRT backend parity — the cross-layer contract of the whole
+//! three-layer design. Skipped (with a message) if artifacts are missing.
+
+use lpdsvm::coordinator::train::{train_with_backend, TrainConfig};
+use lpdsvm::data::synth::PaperDataset;
+use lpdsvm::kernel::Kernel;
+use lpdsvm::lowrank::factor::NativeBackend;
+use lpdsvm::lowrank::Stage1Config;
+use lpdsvm::runtime::{AccelBackend, Runtime};
+use lpdsvm::solver::SolverOptions;
+use lpdsvm::util::timer::StageClock;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(Runtime::load(&dir).expect("artifacts present but unloadable"))
+    } else {
+        eprintln!("skipping backend parity: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn full_training_agrees_across_backends() {
+    let Some(rt) = runtime() else { return };
+    for ds in [PaperDataset::Adult, PaperDataset::Susy] {
+        let spec = ds.spec(0.002, 21);
+        let data = spec.synth.generate();
+        let cfg = TrainConfig {
+            kernel: Kernel::gaussian(spec.gamma),
+            stage1: Stage1Config {
+                budget: spec.budget.min(512),
+                chunk: 256,
+                ..Default::default()
+            },
+            solver: SolverOptions {
+                c: spec.c,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut c1 = StageClock::new();
+        let m_native = train_with_backend(&data, &cfg, &NativeBackend, &mut c1).unwrap();
+        let accel = AccelBackend::new(&rt);
+        let mut c2 = StageClock::new();
+        let m_accel = train_with_backend(&data, &cfg, &accel, &mut c2).unwrap();
+
+        let g_diff = m_native.factor.g.max_abs_diff(&m_accel.factor.g);
+        assert!(g_diff < 5e-3, "{}: G diff {g_diff}", ds.name());
+        // Predictions must agree on (almost) every point.
+        let p1 = m_native.predict(&data.x).unwrap();
+        let p2 = m_accel.predict(&data.x).unwrap();
+        let disagree = p1.iter().zip(&p2).filter(|(a, b)| a != b).count();
+        assert!(
+            (disagree as f64) < 0.01 * data.len() as f64,
+            "{}: {} of {} predictions disagree",
+            ds.name(),
+            disagree,
+            data.len()
+        );
+    }
+}
+
+#[test]
+fn transform_matches_for_fresh_data() {
+    let Some(rt) = runtime() else { return };
+    let spec = PaperDataset::Epsilon.spec(0.0005, 23);
+    let data = spec.synth.generate();
+    let cfg = Stage1Config {
+        budget: 96,
+        chunk: 256,
+        ..Default::default()
+    };
+    let kernel = Kernel::gaussian(spec.gamma);
+    let mut clock = StageClock::new();
+    let factor = lpdsvm::lowrank::LowRankFactor::compute(
+        &data.x,
+        kernel,
+        &cfg,
+        &NativeBackend,
+        &mut clock,
+    )
+    .unwrap();
+    // Fresh data through both transform paths.
+    let fresh = PaperDataset::Epsilon.spec(0.0003, 99).synth.generate();
+    let g_native = factor.transform(&fresh.x, &NativeBackend, 256).unwrap();
+    let accel = AccelBackend::new(&rt);
+    let g_accel = factor.transform(&fresh.x, &accel, 256).unwrap();
+    let diff = g_native.max_abs_diff(&g_accel);
+    assert!(diff < 5e-3, "transform diff {diff}");
+}
+
+#[test]
+fn artifact_variant_selection_is_minimal() {
+    let Some(rt) = runtime() else { return };
+    // p=123-style input must NOT pick the p=2560 variant.
+    let a = rt.pick_stage1(64, 123).expect("variant for p=123");
+    assert_eq!(a.p, 128, "picked {:?}", (a.b, a.p));
+    assert_eq!(a.b, 128);
+    let b = rt.pick_stage1(200, 1500).expect("variant for b=200,p=1500");
+    assert_eq!(b.b, 512);
+    assert_eq!(b.p, 2560);
+    // Oversized request has no variant.
+    assert!(rt.pick_stage1(10_000, 10).is_none());
+}

@@ -1,0 +1,201 @@
+//! Cross-module integration tests: full pipelines at tiny scale.
+
+use lpdsvm::baselines::exact_smo::{ExactSmo, ExactSmoOptions};
+use lpdsvm::coordinator::cv::{cross_validate, CvConfig};
+use lpdsvm::coordinator::grid::{grid_search, GridConfig};
+use lpdsvm::coordinator::train::{train, TrainConfig};
+use lpdsvm::data::synth::PaperDataset;
+use lpdsvm::data::{dataset::Dataset, libsvm};
+use lpdsvm::kernel::Kernel;
+use lpdsvm::lowrank::Stage1Config;
+use lpdsvm::model::io as model_io;
+use lpdsvm::solver::SolverOptions;
+use lpdsvm::util::rng::Rng;
+
+fn quick_cfg(gamma: f64, c: f64, budget: usize) -> TrainConfig {
+    TrainConfig {
+        kernel: Kernel::gaussian(gamma),
+        stage1: Stage1Config {
+            budget,
+            ..Default::default()
+        },
+        solver: SolverOptions {
+            c,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn every_paper_dataset_trains_and_generalises() {
+    // Error ceilings per analogue at tiny scale — generous, but they catch
+    // any wholesale regression in the pipeline (e.g. broken whitening).
+    let ceilings = [
+        (PaperDataset::Adult, 0.30),
+        (PaperDataset::Epsilon, 0.25),
+        (PaperDataset::Susy, 0.40),
+        (PaperDataset::Mnist8m, 0.25),
+        // ~44 classes at this scale with ~46 train points each — random
+        // guessing would be ≈ 98%, the paper's real-feature error is 37.5%.
+        (PaperDataset::ImageNet, 0.85),
+    ];
+    for (ds, ceiling) in ceilings {
+        // 800-point floor: below that, a 25% hold-out is too few points
+        // for the ceiling to be more than coin-flip noise.
+        let spec = ds.spec(ds.scale_with_floor(0.002, 800), 42);
+        let data = spec.synth.generate();
+        let mut rng = Rng::new(1);
+        let (train_set, test_set) = data.split(0.25, &mut rng);
+        let cfg = quick_cfg(spec.gamma, spec.c, spec.budget.min(256));
+        let model = train(&train_set, &cfg).unwrap();
+        let err = model.error_rate(&test_set.x, &test_set.labels).unwrap();
+        assert!(
+            err < ceiling,
+            "{}: test error {:.3} above ceiling {ceiling}",
+            ds.name(),
+            err
+        );
+    }
+}
+
+#[test]
+fn libsvm_roundtrip_preserves_training_behaviour() {
+    let spec = PaperDataset::Adult.spec(0.004, 7);
+    let data = spec.synth.generate();
+    let dir = std::env::temp_dir().join("lpdsvm_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("adult_tiny.svm");
+    libsvm::write(&data, &path).unwrap();
+    let reloaded = libsvm::read(&path).unwrap();
+    assert_eq!(reloaded.len(), data.len());
+
+    let cfg = quick_cfg(spec.gamma, spec.c, 64);
+    let m1 = train(&data, &cfg).unwrap();
+    let m2 = train(&reloaded, &cfg).unwrap();
+    let p1 = m1.predict(&data.x).unwrap();
+    let p2 = m2.predict(&reloaded.x).unwrap();
+    assert_eq!(p1, p2, "training on round-tripped data must match");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn model_file_predicts_identically_after_reload() {
+    let spec = PaperDataset::Mnist8m.spec(0.0002, 3);
+    let data = spec.synth.generate();
+    let cfg = quick_cfg(spec.gamma, spec.c, 48);
+    let model = train(&data, &cfg).unwrap();
+    let dir = std::env::temp_dir().join("lpdsvm_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("mc.lpd");
+    model_io::save(&model, &path).unwrap();
+    let loaded = model_io::load(&path).unwrap();
+    assert_eq!(
+        model.predict(&data.x).unwrap(),
+        loaded.predict(&data.x).unwrap()
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn lpd_tracks_exact_solver_accuracy() {
+    // Table-2 shape at miniature scale: LPD within a few points of exact.
+    let spec = PaperDataset::Adult.spec(0.008, 11);
+    let data = spec.synth.generate();
+    let mut rng = Rng::new(5);
+    let (train_set, test_set) = data.split(0.3, &mut rng);
+
+    let exact = ExactSmo::new(
+        Kernel::gaussian(spec.gamma),
+        ExactSmoOptions {
+            c: spec.c,
+            ..Default::default()
+        },
+    )
+    .train(&train_set);
+    let scores = exact.decision(&test_set.x);
+    let y = test_set.signed_labels();
+    let exact_err = scores
+        .iter()
+        .zip(&y)
+        .filter(|(s, y)| (**s > 0.0) != (**y > 0.0))
+        .count() as f64
+        / y.len() as f64;
+
+    let model = train(&train_set, &quick_cfg(spec.gamma, spec.c, spec.budget.min(256))).unwrap();
+    let lpd_err = model.error_rate(&test_set.x, &test_set.labels).unwrap();
+    assert!(
+        lpd_err <= exact_err + 0.06,
+        "LPD err {lpd_err:.3} too far above exact {exact_err:.3}"
+    );
+}
+
+#[test]
+fn cv_and_grid_compose() {
+    let spec = PaperDataset::Susy.spec(0.00006, 13);
+    let data = spec.synth.generate();
+    let cfg = quick_cfg(spec.gamma, spec.c, 32);
+    let cv = cross_validate(&data, &cfg, &CvConfig { folds: 3, seed: 2 }).unwrap();
+    assert_eq!(cv.fold_errors.len(), 3);
+
+    let grid = GridConfig {
+        c_values: vec![1.0, 8.0],
+        gamma_values: vec![spec.gamma],
+        cv_folds: 3,
+        seed: 2,
+        warm_start: true,
+    };
+    let gr = grid_search(&data, &cfg, &grid).unwrap();
+    assert_eq!(gr.points.len(), 2);
+    assert!(gr.n_binary_problems == 6);
+    // The fixed-γ grid at C=1/8 must bracket the plain CV result sanely.
+    assert!(gr.best_error <= cv.mean_error + 0.1);
+}
+
+#[test]
+fn unbalanced_classes_train() {
+    // Failure-injection style: 95/5 class imbalance must not panic and
+    // must beat always-majority slightly with tuned C.
+    let spec = PaperDataset::Adult.spec(0.004, 17);
+    let mut data = spec.synth.generate();
+    // Drop most of class 1.
+    let keep: Vec<usize> = (0..data.len())
+        .filter(|&i| data.labels[i] == 0 || i % 8 == 0)
+        .collect();
+    data = data.subset(&keep);
+    let counts = data.class_counts();
+    assert!(counts[0] > counts[1] * 3);
+    let model = train(&data, &quick_cfg(spec.gamma, spec.c, 64)).unwrap();
+    let err = model.error_rate(&data.x, &data.labels).unwrap();
+    let majority_err = counts[1] as f64 / data.len() as f64;
+    assert!(
+        err <= majority_err + 1e-9,
+        "err {err:.3} worse than majority baseline {majority_err:.3}"
+    );
+}
+
+#[test]
+fn duplicate_points_and_constant_features_are_handled() {
+    // Degenerate data: duplicated rows (singular K_BB — the case that
+    // breaks Cholesky and motivates the paper's eigh + truncation) plus an
+    // all-constant feature.
+    let mut rows = Vec::new();
+    let mut labels = Vec::new();
+    for i in 0..60 {
+        let v = if i % 2 == 0 { 1.0 } else { -1.0 };
+        // Feature 0 constant, features 1-2 informative, every row repeated.
+        rows.push(vec![(0u32, 1.0f32), (1, v), (2, v * 0.5)]);
+        labels.push(if i % 2 == 0 { 1u32 } else { 0 });
+    }
+    let x = lpdsvm::data::sparse::SparseMatrix::from_rows(3, &rows);
+    let data = Dataset::new("degenerate", x, labels, 2);
+    let model = train(&data, &quick_cfg(0.3, 1.0, 40)).unwrap();
+    // Rank must collapse below the budget (duplicates ⇒ singular K_BB).
+    assert!(
+        model.factor.rank < 40,
+        "rank {} should collapse on duplicated data",
+        model.factor.rank
+    );
+    let err = model.error_rate(&data.x, &data.labels).unwrap();
+    assert_eq!(err, 0.0, "separable degenerate data must be solved exactly");
+}

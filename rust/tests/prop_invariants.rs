@@ -1,0 +1,312 @@
+//! Property-based tests over the solver and stage-1 invariants
+//! (DESIGN.md §5), using the in-repo property-testing framework
+//! (`lpdsvm::testing`) — proptest is unavailable offline.
+
+use lpdsvm::kernel::Kernel;
+use lpdsvm::linalg::dense::dot;
+use lpdsvm::linalg::eigen::sym_eig;
+use lpdsvm::linalg::Mat;
+use lpdsvm::lowrank::factor::NativeBackend;
+use lpdsvm::lowrank::{LowRankFactor, Stage1Config};
+use lpdsvm::solver::{solve, ProblemView, SolverOptions};
+use lpdsvm::testing::prop::{forall, usize_in, Gen};
+use lpdsvm::util::rng::Rng;
+use lpdsvm::util::timer::StageClock;
+
+/// A random linear-SVM problem instance (G features + labels + C).
+#[derive(Clone, Debug)]
+struct RandomProblem {
+    n: usize,
+    dim: usize,
+    c: f64,
+    noise: f64,
+    seed: u64,
+}
+
+fn problem_gen() -> Gen<RandomProblem> {
+    Gen::new(
+        |rng: &mut Rng| RandomProblem {
+            n: 10 + rng.usize(150),
+            dim: 1 + rng.usize(16),
+            c: [0.1, 0.5, 1.0, 4.0, 32.0][rng.usize(5)],
+            noise: rng.f64() * 0.2,
+            seed: rng.next_u64(),
+        },
+        |p| {
+            let mut shrunk = Vec::new();
+            if p.n > 10 {
+                shrunk.push(RandomProblem { n: 10 + (p.n - 10) / 2, ..p.clone() });
+            }
+            if p.dim > 1 {
+                shrunk.push(RandomProblem { dim: 1 + (p.dim - 1) / 2, ..p.clone() });
+            }
+            if p.noise > 0.0 {
+                shrunk.push(RandomProblem { noise: 0.0, ..p.clone() });
+            }
+            shrunk
+        },
+    )
+}
+
+fn materialise(p: &RandomProblem) -> (Mat, Vec<usize>, Vec<f32>) {
+    let mut rng = Rng::new(p.seed);
+    let mut g = Mat::zeros(p.n, p.dim);
+    let mut y = Vec::with_capacity(p.n);
+    for i in 0..p.n {
+        let cls = if i % 2 == 0 { 1.0f32 } else { -1.0 };
+        for j in 0..p.dim {
+            let mean = if j == 0 { cls * 1.5 } else { 0.0 };
+            g.set(i, j, mean + rng.normal() as f32 * 0.5);
+        }
+        let label = if rng.bool(p.noise) { -cls } else { cls };
+        y.push(label);
+    }
+    (g, (0..p.n).collect(), y)
+}
+
+#[test]
+fn prop_alpha_always_in_box() {
+    forall("alpha-in-box", 40, &problem_gen(), |p| {
+        let (g, rows, y) = materialise(p);
+        let view = ProblemView::new(&g, &rows, &y);
+        let sol = solve(
+            &view,
+            &SolverOptions {
+                c: p.c,
+                seed: p.seed,
+                ..Default::default()
+            },
+        );
+        for (i, &a) in sol.alpha.iter().enumerate() {
+            if !(0.0..=p.c as f32 + 1e-6).contains(&a) {
+                return Err(format!("alpha[{i}] = {a} outside [0, {}]", p.c));
+            }
+            if !a.is_finite() {
+                return Err(format!("alpha[{i}] not finite"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kkt_holds_at_convergence() {
+    forall("kkt-at-convergence", 25, &problem_gen(), |p| {
+        let (g, rows, y) = materialise(p);
+        let view = ProblemView::new(&g, &rows, &y);
+        let opts = SolverOptions {
+            c: p.c,
+            eps: 1e-3,
+            max_epochs: 5000,
+            seed: p.seed,
+            ..Default::default()
+        };
+        let sol = solve(&view, &opts);
+        if !sol.converged {
+            // Not a failure per se (epoch cap) but must self-report.
+            return if sol.violation >= 1e-3 {
+                Ok(())
+            } else {
+                Err("not converged but violation < eps".into())
+            };
+        }
+        for i in 0..view.len() {
+            let grad = y[i] * dot(view.feature_row(i), &sol.w) - 1.0;
+            let viol = if sol.alpha[i] <= 0.0 {
+                (-grad).max(0.0)
+            } else if sol.alpha[i] >= p.c as f32 {
+                grad.max(0.0)
+            } else {
+                grad.abs()
+            };
+            // The stopping rule samples each variable's violation at its
+            // visit time within the final epoch; later updates can nudge
+            // earlier gradients (same semantics as LIBLINEAR), so allow a
+            // small multiple of eps here.
+            if viol > 5e-3 {
+                return Err(format!("KKT violated at {i}: {viol}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shrinking_reaches_same_objective() {
+    forall("shrink-same-objective", 20, &problem_gen(), |p| {
+        let (g, rows, y) = materialise(p);
+        let view = ProblemView::new(&g, &rows, &y);
+        let base = SolverOptions {
+            c: p.c,
+            eps: 1e-4,
+            max_epochs: 5000,
+            seed: p.seed,
+            ..Default::default()
+        };
+        let with = solve(&view, &base);
+        let without = solve(
+            &view,
+            &SolverOptions {
+                shrinking: false,
+                ..base
+            },
+        );
+        let tol = 5e-3 * (1.0 + without.objective.abs());
+        if (with.objective - without.objective).abs() > tol {
+            return Err(format!(
+                "objectives differ: {} vs {}",
+                with.objective, without.objective
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_warm_start_matches_cold_start() {
+    forall("warm-equals-cold", 15, &problem_gen(), |p| {
+        let (g, rows, y) = materialise(p);
+        let view = ProblemView::new(&g, &rows, &y);
+        let small = solve(
+            &view,
+            &SolverOptions {
+                c: p.c * 0.5,
+                eps: 1e-4,
+                seed: p.seed,
+                ..Default::default()
+            },
+        );
+        let opts_big = SolverOptions {
+            c: p.c,
+            eps: 1e-4,
+            seed: p.seed,
+            ..Default::default()
+        };
+        let cold = solve(&view, &opts_big);
+        let warm = solve(
+            &view,
+            &SolverOptions {
+                warm_alpha: Some(small.alpha),
+                ..opts_big
+            },
+        );
+        let tol = 5e-3 * (1.0 + cold.objective.abs());
+        if (warm.objective - cold.objective).abs() > tol {
+            return Err(format!(
+                "warm {} vs cold {}",
+                warm.objective, cold.objective
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_objective_monotone_along_c_path() {
+    forall("objective-monotone-c", 15, &problem_gen(), |p| {
+        let (g, rows, y) = materialise(p);
+        let view = ProblemView::new(&g, &rows, &y);
+        let mut last = -f64::MAX;
+        for mult in [0.25, 0.5, 1.0, 2.0] {
+            let sol = solve(
+                &view,
+                &SolverOptions {
+                    c: p.c * mult,
+                    eps: 1e-5,
+                    max_epochs: 5000,
+                    seed: p.seed,
+                    ..Default::default()
+                },
+            );
+            if sol.objective < last - 1e-5 * (1.0 + last.abs()) {
+                return Err(format!(
+                    "objective dropped from {last} to {} at C×{mult}",
+                    sol.objective
+                ));
+            }
+            last = sol.objective;
+        }
+        Ok(())
+    });
+}
+
+/// Stage-1 invariant: the Nyström approximation `G Gᵀ` is PSD and matches
+/// the exact kernel on landmark pairs.
+#[test]
+fn prop_nystrom_psd_and_exact_on_landmarks() {
+    forall("nystrom-psd", 12, &usize_in(20, 80), |&n| {
+        let mut rng = Rng::new(n as u64 * 31 + 5);
+        let mut rows = Vec::new();
+        for _ in 0..n {
+            let mut row = Vec::new();
+            for c in 0..8u32 {
+                if rng.bool(0.7) {
+                    row.push((c, rng.normal() as f32));
+                }
+            }
+            rows.push(row);
+        }
+        let x = lpdsvm::data::sparse::SparseMatrix::from_rows(8, &rows);
+        let kernel = Kernel::gaussian(0.2);
+        let mut clock = StageClock::new();
+        let factor = LowRankFactor::compute(
+            &x,
+            kernel,
+            &Stage1Config {
+                budget: n / 2,
+                ..Default::default()
+            },
+            &NativeBackend,
+            &mut clock,
+        )
+        .map_err(|e| e.to_string())?;
+        // PSD: eigenvalues of the n×n approx matrix are >= -tol.
+        let approx = factor.g.matmul_nt(&factor.g);
+        let eig = sym_eig(&approx, 40, 1e-10);
+        if let Some(&lmin) = eig.values.last() {
+            if lmin < -1e-3 {
+                return Err(format!("G Gᵀ not PSD: λ_min = {lmin}"));
+            }
+        }
+        // Exactness on landmark pairs.
+        for (ai, &i) in factor.landmark_idx.iter().enumerate().step_by(7) {
+            for &j in factor.landmark_idx.iter().skip(ai).step_by(11) {
+                let exact = kernel.eval_sparse(&x, i, &x, j);
+                let approx = factor.approx_kernel(i, j);
+                if (exact - approx).abs() > 5e-3 {
+                    return Err(format!(
+                        "Nyström not exact on landmarks ({i},{j}): {exact} vs {approx}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Jacobi eigensolver invariant on random Gram matrices.
+#[test]
+fn prop_jacobi_reconstructs_gram_matrices() {
+    forall("jacobi-reconstruction", 20, &usize_in(2, 24), |&n| {
+        let mut rng = Rng::new(n as u64 * 97 + 3);
+        let x = Mat::from_fn(n, n + 2, |_, _| rng.normal() as f32);
+        let a = x.matmul_nt(&x);
+        let e = sym_eig(&a, 50, 1e-12);
+        // A v_k = λ_k v_k
+        for k in 0..n {
+            let v: Vec<f32> = (0..n).map(|i| e.vectors.at(i, k)).collect();
+            let av = a.matvec(&v);
+            for i in 0..n {
+                let want = e.values[k] as f32 * v[i];
+                let scale = 1.0 + e.values[0].abs() as f32;
+                if (av[i] - want).abs() > 1e-3 * scale {
+                    return Err(format!(
+                        "eigen equation fails at k={k} i={i}: {} vs {want}",
+                        av[i]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
