@@ -1,0 +1,140 @@
+//! Serving throughput: micro-batched engine vs naive per-request loop.
+//!
+//! The acceptance workload for the `serve` subsystem: a synthetic OVO
+//! problem, ≥ 10k single-row requests, engine batch caps swept over
+//! {1, 8, 64, 256}. The naive baseline is what the repo offered before
+//! the subsystem existed — one blocking `predict()` per request on one
+//! thread. The engine should clear 4× at the larger batch sizes: one
+//! stage-1 GEMM per batch amortizes the landmark/whitening traffic that
+//! the naive loop re-reads per row, and scoring fans across all cores.
+//!
+//!     cargo bench --bench serve_throughput
+//!     LPDSVM_SERVE_REQUESTS=50000 cargo bench --bench serve_throughput
+
+mod harness;
+
+use lpdsvm::coordinator::train::{train, TrainConfig};
+use lpdsvm::data::sparse::SparseMatrix;
+use lpdsvm::data::synth::{FeatureStyle, SynthSpec};
+use lpdsvm::lowrank::Stage1Config;
+use lpdsvm::report::Table;
+use lpdsvm::serve::{ModelRegistry, ServeConfig, ServeEngine};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let seed = harness::bench_seed();
+    let n_requests: usize = std::env::var("LPDSVM_SERVE_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10_000);
+
+    // Synthetic OVO workload: 6 classes → 15 binary heads.
+    let data = SynthSpec {
+        name: "serve-bench".into(),
+        n: 2000,
+        p: 24,
+        n_classes: 6,
+        sep: 5.0,
+        latent: 6,
+        noise: 1.0,
+        style: FeatureStyle::Dense,
+        seed,
+    }
+    .generate();
+    let cfg = TrainConfig {
+        stage1: Stage1Config {
+            budget: 128,
+            seed,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let model = train(&data, &cfg).expect("bench model trains");
+    println!(
+        "serve_throughput: {} requests against a {}-class model (rank {}, {} heads)\n",
+        n_requests,
+        data.n_classes,
+        model.factor.rank,
+        model.heads.len()
+    );
+
+    let rows: Vec<Vec<(u32, f32)>> = (0..data.len()).map(|i| data.x.row_entries(i)).collect();
+
+    // --- naive baseline: blocking single-row predict, one thread ---
+    let expected = model.predict(&data.x).expect("baseline predictions");
+    let (naive_err, naive_secs) = harness::time_once(|| {
+        let mut mismatches = 0usize;
+        for i in 0..n_requests {
+            let j = i % rows.len();
+            let x = SparseMatrix::from_rows(data.dim(), &[rows[j].clone()]);
+            let pred = model.predict(&x).expect("naive predict");
+            if pred[0] != expected[j] {
+                mismatches += 1;
+            }
+        }
+        mismatches
+    });
+    let naive_rps = n_requests as f64 / naive_secs;
+    assert_eq!(naive_err, 0, "naive loop must agree with batch predict");
+    println!(
+        "naive per-request loop: {} s  →  {:.0} req/s (1 thread, batch size 1)\n",
+        Table::secs(naive_secs),
+        naive_rps
+    );
+
+    // --- engine sweep over batch caps ---
+    let registry = Arc::new(ModelRegistry::new());
+    registry.insert("m", model);
+    let mut t = Table::new(
+        "micro-batched serving vs naive loop",
+        &[
+            "max_batch", "req/s", "speedup", "p50 ms", "p99 ms", "mean batch", "batches",
+        ],
+    );
+    let mut best_speedup = 0.0f64;
+    for max_batch in [1usize, 8, 64, 256] {
+        let engine = ServeEngine::start(
+            Arc::clone(&registry),
+            ServeConfig {
+                max_batch,
+                max_wait: Duration::from_micros(200),
+                workers: 0, // one per core
+            },
+        );
+        let t0 = Instant::now();
+        let tickets: Vec<_> = (0..n_requests)
+            .map(|i| engine.submit("m", &rows[i % rows.len()]))
+            .collect();
+        let mut mismatches = 0usize;
+        for (i, ticket) in tickets.iter().enumerate() {
+            let pred = ticket.wait().expect("engine prediction");
+            if pred.label != expected[i % rows.len()] {
+                mismatches += 1;
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        assert_eq!(mismatches, 0, "engine must agree with batch predict");
+        let m = engine.metrics();
+        let rps = n_requests as f64 / secs;
+        let speedup = rps / naive_rps;
+        best_speedup = best_speedup.max(speedup);
+        t.row(&[
+            max_batch.to_string(),
+            format!("{rps:.0}"),
+            format!("{speedup:.2}x"),
+            format!("{:.3}", m.latency_us.quantile(0.50) as f64 / 1e3),
+            format!("{:.3}", m.latency_us.quantile(0.99) as f64 / 1e3),
+            format!("{:.1}", m.batch_size.mean()),
+            m.batches.load(std::sync::atomic::Ordering::Relaxed).to_string(),
+        ]);
+        engine.shutdown();
+    }
+    t.print();
+    t.write_tsv(&harness::report_dir().join("serve_throughput.tsv"))
+        .ok();
+    println!(
+        "best speedup over the naive loop: {best_speedup:.1}x (acceptance target: ≥ 4x at \
+         batch 64–256 on a multi-core host)"
+    );
+}

@@ -82,6 +82,13 @@ impl SparseMatrix {
         sparse_dot(ci, vi, cj, vj)
     }
 
+    /// Row `i` as owned `(column, value)` pairs — the wire format of one
+    /// serving request (`serve::ServeEngine::submit`).
+    pub fn row_entries(&self, i: usize) -> Vec<(u32, f32)> {
+        let (c, v) = self.row(i);
+        c.iter().copied().zip(v.iter().copied()).collect()
+    }
+
     /// Dense copy of row `i` (length `cols`).
     pub fn row_dense(&self, i: usize) -> Vec<f32> {
         let mut out = vec![0.0; self.cols];
@@ -231,6 +238,13 @@ mod tests {
         assert_eq!(m.row_dot(1, &m, 0), 0.0);
         // empty row
         assert_eq!(m.row_dot(2, &m, 3), 0.0);
+    }
+
+    #[test]
+    fn row_entries_roundtrip() {
+        let m = sample();
+        assert_eq!(m.row_entries(0), vec![(0, 1.0), (2, 2.0)]);
+        assert!(m.row_entries(2).is_empty());
     }
 
     #[test]

@@ -16,6 +16,11 @@
 //! * **Baselines** ([`baselines`]): an exact dual SMO solver
 //!   (LIBSVM/ThunderSVM-style) and an LLSVM-style chunked solver for the
 //!   paper's table 2 comparison.
+//! * **Serving** ([`serve`]): a micro-batching inference engine over
+//!   trained models — request coalescing under a latency/size policy, a
+//!   hot-swappable model registry, per-request tickets, and
+//!   latency/throughput metrics, reusing the same `Stage1Backend`
+//!   abstraction so batches score through native GEMM or the PJRT path.
 //!
 //! Quickstart:
 //!
@@ -43,6 +48,7 @@ pub mod lowrank;
 pub mod model;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod solver;
 pub mod testing;
 pub mod util;
@@ -66,6 +72,9 @@ pub mod prelude {
     pub use crate::lowrank::{LowRankFactor, Stage1Backend, Stage1Config};
     pub use crate::model::multiclass::MulticlassModel;
     pub use crate::model::ModelKind;
+    pub use crate::serve::{
+        ModelRegistry, PredictResult, Prediction, ServeConfig, ServeEngine,
+    };
     pub use crate::solver::{solve, Solution, SolverOptions};
     pub use crate::util::rng::Rng;
     pub use crate::util::timer::StageClock;

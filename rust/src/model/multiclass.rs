@@ -112,16 +112,28 @@ impl MulticlassModel {
         m
     }
 
-    /// Classification error rate against ground-truth labels.
+    /// Classification error rate against ground-truth labels. Errors on
+    /// zero rows (an error rate over nothing is meaningless, and silently
+    /// returning 0.0 would read as "perfect") and on a row/label count
+    /// mismatch.
     pub fn error_rate(&self, x: &SparseMatrix, labels: &[u32]) -> anyhow::Result<f64> {
+        anyhow::ensure!(x.rows > 0, "error_rate: empty input (0 rows)");
+        anyhow::ensure!(
+            x.rows == labels.len(),
+            "error_rate: {} rows but {} labels",
+            x.rows,
+            labels.len()
+        );
         let preds = self.predict(x)?;
         Ok(error_rate(&preds, labels))
     }
 }
 
-/// Fraction of mismatched labels.
+/// Fraction of mismatched labels. Empty input is defined as error 0.0
+/// (no divide-by-zero NaN); callers that need "no data" surfaced as a
+/// failure should go through [`MulticlassModel::error_rate`].
 pub fn error_rate(preds: &[u32], labels: &[u32]) -> f64 {
-    assert_eq!(preds.len(), labels.len());
+    assert_eq!(preds.len(), labels.len(), "prediction/label count mismatch");
     if preds.is_empty() {
         return 0.0;
     }
@@ -195,5 +207,109 @@ mod tests {
         let g = Mat::from_vec(1, 1, vec![2.0]);
         let pred = model.predict_from_features(&g);
         assert_eq!(pred, vec![0]);
+    }
+
+    /// Degenerate rank-1 factor for hand-built voting tests.
+    fn unit_factor() -> LowRankFactor {
+        use crate::kernel::Kernel;
+        LowRankFactor {
+            g: Mat::from_vec(1, 1, vec![1.0]),
+            landmarks: Mat::from_vec(1, 1, vec![1.0]),
+            landmark_sq: vec![1.0],
+            whiten: Mat::from_vec(1, 1, vec![1.0]),
+            rank: 1,
+            eigenvalues: vec![1.0],
+            kernel: Kernel::Linear,
+            landmark_idx: vec![0],
+        }
+    }
+
+    fn head(pair: (u32, u32), w: f32) -> BinaryHead {
+        BinaryHead {
+            pair,
+            w: vec![w],
+            objective: 0.0,
+            converged: true,
+            sv_count: 0,
+            steps: 0,
+        }
+    }
+
+    #[test]
+    fn binary_sign_convention_positive_is_pair_1() {
+        // Decision value ⟨g, w⟩ > 0 must yield class pair.1 (= 1 for
+        // binary); ≤ 0 (including exactly 0) yields pair.0 (= 0).
+        let model = MulticlassModel {
+            factor: unit_factor(),
+            heads: vec![head((0, 1), 1.0)],
+            kind: ModelKind::Binary,
+        };
+        let g = Mat::from_vec(3, 1, vec![2.5, -2.5, 0.0]);
+        assert_eq!(model.predict_from_features(&g), vec![1, 0, 0]);
+    }
+
+    #[test]
+    fn ovo_head_sign_convention_positive_is_pair_1() {
+        // One 3-class model where a single feature sign decides every
+        // head: positive score → pair.1 wins that head's vote.
+        let model = MulticlassModel {
+            factor: unit_factor(),
+            heads: vec![head((0, 1), 1.0), head((0, 2), 1.0), head((1, 2), 1.0)],
+            kind: ModelKind::OneVsOne { n_classes: 3 },
+        };
+        // g = +1: votes (0,1)→1, (0,2)→2, (1,2)→2 ⇒ class 2 on 2 votes.
+        assert_eq!(
+            model.predict_from_features(&Mat::from_vec(1, 1, vec![1.0])),
+            vec![2]
+        );
+        // g = −1: every head votes pair.0 ⇒ class 0 on 2 votes.
+        assert_eq!(
+            model.predict_from_features(&Mat::from_vec(1, 1, vec![-1.0])),
+            vec![0]
+        );
+    }
+
+    #[test]
+    fn ovo_equal_votes_tie_breaks_to_lowest_class_id() {
+        // 4 classes, weights arranged so classes 1 and 2 each collect two
+        // votes (classes 0 and 3 one each): the LIBSVM-compatible rule
+        // must deterministically pick class 1, the lowest tied id.
+        // Per-head votes at g = [1.0]: 1, 2, 0, 1, 3, 2 ⇒ tally
+        // [1, 2, 2, 1] over classes 0..4.
+        let model = MulticlassModel {
+            factor: unit_factor(),
+            heads: vec![
+                head((0, 1), 1.0),  // +1 → votes 1
+                head((0, 2), 1.0),  // +1 → votes 2
+                head((0, 3), -1.0), // −1 → votes 0
+                head((1, 2), -1.0), // −1 → votes 1
+                head((1, 3), 1.0),  // +1 → votes 3
+                head((2, 3), -1.0), // −1 → votes 2
+            ],
+            kind: ModelKind::OneVsOne { n_classes: 4 },
+        };
+        let pred = model.predict_from_features(&Mat::from_vec(1, 1, vec![1.0]));
+        assert_eq!(pred, vec![1], "tie between classes 1 and 2 breaks low");
+        // Scaling the feature must not change the outcome (tie-break is a
+        // function of votes, not margins).
+        let pred2 = model.predict_from_features(&Mat::from_vec(1, 1, vec![42.0]));
+        assert_eq!(pred2, vec![1]);
+    }
+
+    #[test]
+    fn model_error_rate_rejects_empty_and_mismatched_inputs() {
+        let model = MulticlassModel {
+            factor: unit_factor(),
+            heads: vec![head((0, 1), 1.0)],
+            kind: ModelKind::Binary,
+        };
+        let empty = SparseMatrix::empty(1);
+        let err = model.error_rate(&empty, &[]).unwrap_err();
+        assert!(format!("{err}").contains("empty"), "got: {err}");
+        let one = SparseMatrix::from_rows(1, &[vec![(0, 1.0)]]);
+        let err = model.error_rate(&one, &[0, 1]).unwrap_err();
+        assert!(format!("{err}").contains("labels"), "got: {err}");
+        // Well-formed input still works.
+        assert!(model.error_rate(&one, &[1]).is_ok());
     }
 }

@@ -13,6 +13,8 @@ use crate::kernel::Kernel;
 use crate::linalg::Mat;
 use crate::lowrank::factor::Stage1Backend;
 use crate::runtime::client::{ArtifactMeta, Runtime};
+#[cfg(not(feature = "xla"))]
+use crate::runtime::xla_stub as xla;
 use anyhow::{Context, Result};
 use std::cell::RefCell;
 

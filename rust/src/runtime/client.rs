@@ -7,6 +7,8 @@
 //! /opt/xla-example/README.md).
 
 use crate::util::json::Json;
+#[cfg(not(feature = "xla"))]
+use crate::runtime::xla_stub as xla;
 use anyhow::{Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;

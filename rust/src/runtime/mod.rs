@@ -10,6 +10,18 @@
 
 pub mod accel;
 pub mod client;
+#[cfg(not(feature = "xla"))]
+pub mod xla_stub;
+
+// The feature only removes the stub; it cannot supply the real bindings
+// by itself. Fail with an actionable message instead of unresolved-module
+// errors at every `xla::` path.
+#[cfg(feature = "xla")]
+compile_error!(
+    "the `xla` feature requires real PJRT bindings: add a vendored `xla` \
+     path dependency to rust/Cargo.toml (the crate is not on the offline \
+     registry), then remove this guard"
+);
 
 pub use accel::AccelBackend;
 pub use client::{ArtifactMeta, Runtime};

@@ -1,0 +1,487 @@
+//! The micro-batching inference engine.
+//!
+//! Single-row requests enter a shared queue; workers coalesce them into
+//! batches under a latency/size policy (dispatch when `max_batch` rows are
+//! waiting, or when the oldest request has waited `max_wait`) and score
+//! each batch with one stage-1 transform (`G_batch = K(X_batch, L)·W`)
+//! plus one blocked GEMM against the stacked head weights — the same
+//! amortization that wins at training time (paper §4; Tyree et al. make
+//! the identical observation for inference). Each worker owns its own
+//! [`Stage1Backend`] instance (the trait is deliberately `!Sync`: the PJRT
+//! implementation wraps raw device handles), so native GEMM and the
+//! AOT-Pallas path both serve without code changes.
+
+use crate::data::sparse::SparseMatrix;
+use crate::kernel::Kernel;
+use crate::linalg::Mat;
+use crate::lowrank::factor::NativeBackend;
+use crate::lowrank::Stage1Backend;
+use crate::runtime::{AccelBackend, Runtime};
+use crate::serve::metrics::ServeMetrics;
+use crate::serve::registry::ModelRegistry;
+use crate::serve::session::{self, Fulfiller, Prediction, PredictResult, ServeError, Ticket};
+use crate::util::threads;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batching/parallelism policy for one engine instance.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Dispatch a batch as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// Dispatch a partial batch once the oldest queued request has waited
+    /// this long — the tail-latency bound under light traffic.
+    pub max_wait: Duration,
+    /// Scoring worker threads (0 = one per available core).
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 256,
+            max_wait: Duration::from_millis(2),
+            workers: 0,
+        }
+    }
+}
+
+/// Constructs one [`Stage1Backend`] per worker thread. The trait is
+/// object-safe and `Send + Sync` so a single provider can be shared across
+/// the pool while each worker gets a private backend (required because
+/// backends themselves are `!Sync`).
+pub trait BackendProvider: Send + Sync {
+    fn backend(&self) -> anyhow::Result<Box<dyn Stage1Backend + '_>>;
+}
+
+/// Provider for the pure-Rust GEMM path — the default.
+pub struct NativeProvider;
+
+impl BackendProvider for NativeProvider {
+    fn backend(&self) -> anyhow::Result<Box<dyn Stage1Backend + '_>> {
+        Ok(Box::new(NativeBackend))
+    }
+}
+
+/// Provider for the PJRT path: each serve worker loads its own
+/// [`Runtime`] from the artifacts directory (PJRT handles are not
+/// `Sync`, so they cannot be shared across the pool).
+pub struct PjrtProvider {
+    dir: std::path::PathBuf,
+}
+
+impl PjrtProvider {
+    /// Serve from AOT artifacts in `dir`.
+    pub fn new(dir: std::path::PathBuf) -> Self {
+        PjrtProvider { dir }
+    }
+}
+
+impl Default for PjrtProvider {
+    /// Uses [`Runtime::default_dir`] (`$LPDSVM_ARTIFACTS` or `./artifacts`).
+    fn default() -> Self {
+        PjrtProvider::new(Runtime::default_dir())
+    }
+}
+
+/// Owns a worker-local PJRT runtime. `AccelBackend` is rebuilt per chunk,
+/// which re-uploads the factor constants — acceptable for serving batches
+/// (one chunk per batch); a per-worker constant cache is future work.
+struct OwnedAccel {
+    rt: Runtime,
+}
+
+impl Stage1Backend for OwnedAccel {
+    fn g_chunk(
+        &self,
+        x: &SparseMatrix,
+        rows: &[usize],
+        landmarks: &Mat,
+        landmark_sq: &[f32],
+        whiten: &Mat,
+        kernel: &Kernel,
+    ) -> anyhow::Result<Mat> {
+        AccelBackend::new(&self.rt).g_chunk(x, rows, landmarks, landmark_sq, whiten, kernel)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+impl BackendProvider for PjrtProvider {
+    fn backend(&self) -> anyhow::Result<Box<dyn Stage1Backend + '_>> {
+        Ok(Box::new(OwnedAccel {
+            rt: Runtime::load(&self.dir)?,
+        }))
+    }
+}
+
+/// One queued request.
+struct PendingRequest {
+    model: String,
+    entries: Vec<(u32, f32)>,
+    fulfiller: Fulfiller,
+    enqueued: Instant,
+}
+
+struct QueueState {
+    queue: VecDeque<PendingRequest>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+    registry: Arc<ModelRegistry>,
+    /// Behind its own `Arc` so each request's abandonment hook can count a
+    /// failure even when a panic unwinds the batch that owned it.
+    metrics: Arc<ServeMetrics>,
+    cfg: ServeConfig,
+    /// Workers whose backend constructed successfully. A worker that fails
+    /// init exits instead of competing for batches — unless it was the
+    /// last one, in which case it stays to reject traffic so clients
+    /// never hang on an engine with zero scoring capacity.
+    healthy_workers: AtomicUsize,
+}
+
+/// The serving engine: queue + batcher + worker pool. Dropping (or calling
+/// [`ServeEngine::shutdown`]) drains the queue — every accepted request is
+/// resolved before the workers exit.
+pub struct ServeEngine {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    started: Instant,
+}
+
+impl ServeEngine {
+    /// Start with the native stage-1 backend.
+    pub fn start(registry: Arc<ModelRegistry>, cfg: ServeConfig) -> ServeEngine {
+        Self::start_with_provider(registry, cfg, Arc::new(NativeProvider))
+    }
+
+    /// Start with an explicit backend provider (e.g. one constructing PJRT
+    /// backends per worker).
+    pub fn start_with_provider(
+        registry: Arc<ModelRegistry>,
+        cfg: ServeConfig,
+        provider: Arc<dyn BackendProvider>,
+    ) -> ServeEngine {
+        let mut cfg = cfg;
+        cfg.max_batch = cfg.max_batch.max(1);
+        let n_workers = if cfg.workers == 0 {
+            threads::default_threads()
+        } else {
+            cfg.workers
+        }
+        .max(1);
+        cfg.workers = n_workers;
+
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState {
+                queue: VecDeque::new(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            registry,
+            metrics: Arc::new(ServeMetrics::new()),
+            cfg,
+            healthy_workers: AtomicUsize::new(n_workers),
+        });
+        let workers = (0..n_workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                let provider = Arc::clone(&provider);
+                std::thread::Builder::new()
+                    .name(format!("lpdsvm-serve-{i}"))
+                    .spawn(move || match provider.backend() {
+                        Ok(backend) => worker_loop(&shared, backend.as_ref()),
+                        Err(e) => {
+                            let left = shared.healthy_workers.fetch_sub(1, Ordering::AcqRel) - 1;
+                            if left > 0 {
+                                return; // healthy workers carry the traffic
+                            }
+                            let msg = format!("worker backend init failed: {e:#}");
+                            while let Some(batch) = next_batch(&shared) {
+                                for r in batch {
+                                    fail(&shared, r.fulfiller, msg.clone());
+                                }
+                            }
+                        }
+                    })
+                    .expect("spawning serve worker")
+            })
+            .collect();
+        ServeEngine {
+            shared,
+            workers,
+            started: Instant::now(),
+        }
+    }
+
+    /// Enqueue one prediction request against the named model. `features`
+    /// are sparse `(column, value)` pairs in any order; duplicate columns
+    /// are summed. Never blocks on scoring — returns a [`Ticket`] that
+    /// resolves when the request's batch completes.
+    pub fn submit(&self, model: &str, features: &[(u32, f32)]) -> Ticket {
+        let (ticket, mut fulfiller) = session::channel();
+        // If the engine ever abandons this request (panic unwinding the
+        // batch), it still counts as failed — the metrics invariant
+        // `submitted == completed + failed + in-flight` must hold.
+        let metrics = Arc::clone(&self.shared.metrics);
+        fulfiller.on_abandon(move || metrics.note_failed());
+        let mut entries = features.to_vec();
+        normalize_entries(&mut entries);
+        let mut st = self.shared.state.lock().unwrap();
+        if st.shutdown {
+            drop(st);
+            self.shared.metrics.note_rejected_at_submit();
+            fulfiller.fulfill(Err(ServeError("engine is shut down".to_string())));
+            return ticket;
+        }
+        self.shared.metrics.note_submitted();
+        st.queue.push_back(PendingRequest {
+            model: model.to_string(),
+            entries,
+            fulfiller,
+            enqueued: Instant::now(),
+        });
+        drop(st);
+        // One waiter is enough: the woken worker re-evaluates the batch
+        // trigger, and busy workers re-check the queue when they finish.
+        // (notify_all here would stampede every idle worker per request.)
+        self.shared.cv.notify_one();
+        ticket
+    }
+
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.shared.metrics
+    }
+
+    pub fn registry(&self) -> Arc<ModelRegistry> {
+        Arc::clone(&self.shared.registry)
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.shared.cfg
+    }
+
+    /// Wall time since the engine started (denominator for throughput).
+    pub fn elapsed(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    /// Stop accepting requests, drain the queue, and join the workers.
+    pub fn shutdown(mut self) {
+        self.do_shutdown();
+    }
+
+    fn do_shutdown(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServeEngine {
+    fn drop(&mut self) {
+        self.do_shutdown();
+    }
+}
+
+/// Canonicalise a request row for CSR assembly: sort by column and sum
+/// duplicate columns (clients may legitimately emit `(c, a)` and `(c, b)`
+/// for an additive feature).
+fn normalize_entries(entries: &mut Vec<(u32, f32)>) {
+    entries.sort_unstable_by_key(|e| e.0);
+    entries.dedup_by(|b, a| {
+        if a.0 == b.0 {
+            a.1 += b.1;
+            true
+        } else {
+            false
+        }
+    });
+}
+
+/// Pull the next batch: up to `max_batch` consecutive requests for the
+/// same model (FIFO — a model change in the stream closes the batch).
+/// Blocks until the size or latency trigger fires; `None` means shutdown
+/// with an empty queue, i.e. the worker should exit.
+fn next_batch(shared: &Shared) -> Option<Vec<PendingRequest>> {
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if st.queue.is_empty() {
+            if st.shutdown {
+                return None;
+            }
+            st = shared.cv.wait(st).unwrap();
+            continue;
+        }
+        let waited = st.queue.front().unwrap().enqueued.elapsed();
+        if st.queue.len() >= shared.cfg.max_batch || waited >= shared.cfg.max_wait || st.shutdown
+        {
+            let model = st.queue.front().unwrap().model.clone();
+            let mut batch = Vec::new();
+            while batch.len() < shared.cfg.max_batch {
+                match st.queue.front() {
+                    Some(r) if r.model == model => batch.push(st.queue.pop_front().unwrap()),
+                    _ => break,
+                }
+            }
+            shared.metrics.note_batch(batch.len());
+            return Some(batch);
+        }
+        let remaining = shared.cfg.max_wait.saturating_sub(waited);
+        let (guard, _) = shared.cv.wait_timeout(st, remaining).unwrap();
+        st = guard;
+    }
+}
+
+fn fail(shared: &Shared, fulfiller: Fulfiller, msg: String) {
+    shared.metrics.note_failed();
+    fulfiller.fulfill(Err(ServeError(msg)));
+}
+
+fn worker_loop(shared: &Shared, backend: &dyn Stage1Backend) {
+    while let Some(batch) = next_batch(shared) {
+        // A scoring panic (e.g. a hot-swapped model whose head weights
+        // disagree with its factor rank) must not kill the worker: the
+        // unwind drops the batch's `Fulfiller`s, which rejects those
+        // tickets, and the worker lives on to serve the next batch.
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            process_batch(shared, backend, batch);
+        }));
+        if caught.is_err() {
+            shared.metrics.note_batch_panic();
+        }
+    }
+}
+
+fn process_batch(shared: &Shared, backend: &dyn Stage1Backend, batch: Vec<PendingRequest>) {
+    let t0 = Instant::now();
+    let name = batch[0].model.clone();
+    let Some(model) = shared.registry.get(&name) else {
+        let msg = format!("model '{name}' is not registered");
+        for r in batch {
+            fail(shared, r.fulfiller, msg.clone());
+        }
+        shared.metrics.note_service(t0.elapsed());
+        return;
+    };
+    let dim = model.factor.landmarks.cols;
+
+    // Reject rows the model cannot consume; score the rest as one batch.
+    let mut scorable = Vec::with_capacity(batch.len());
+    let mut rows = Vec::with_capacity(batch.len());
+    for mut r in batch {
+        match r.entries.last() {
+            Some(&(c, _)) if c as usize >= dim => {
+                let msg =
+                    format!("feature index {c} out of range for model '{name}' (dim {dim})");
+                fail(shared, r.fulfiller, msg);
+            }
+            _ => {
+                rows.push(std::mem::take(&mut r.entries));
+                scorable.push(r);
+            }
+        }
+    }
+    if scorable.is_empty() {
+        shared.metrics.note_service(t0.elapsed());
+        return;
+    }
+
+    let x = SparseMatrix::from_rows(dim, &rows);
+    // Rejected rows are not part of the scored batch.
+    let batch_size = scorable.len();
+    match model.features(&x, backend) {
+        Ok(g) => {
+            let preds = model.predict_from_features(&g);
+            for (r, label) in scorable.into_iter().zip(preds) {
+                let queue_wait = t0.saturating_duration_since(r.enqueued);
+                let total = r.enqueued.elapsed();
+                shared.metrics.note_completed(total, queue_wait);
+                r.fulfiller.fulfill(Ok(Prediction {
+                    label,
+                    batch_size,
+                    queue_us: queue_wait.as_micros() as u64,
+                    total_us: total.as_micros() as u64,
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = format!("stage-1 transform failed: {e:#}");
+            for r in scorable {
+                fail(shared, r.fulfiller, msg.clone());
+            }
+        }
+    }
+    shared.metrics.note_service(t0.elapsed());
+}
+
+/// Convenience for tests and synchronous callers: submit and wait.
+pub fn predict_one(engine: &ServeEngine, model: &str, features: &[(u32, f32)]) -> PredictResult {
+    engine.submit(model, features).wait()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(max_batch: usize, max_wait_ms: u64, workers: usize) -> ServeEngine {
+        ServeEngine::start(
+            Arc::new(ModelRegistry::new()),
+            ServeConfig {
+                max_batch,
+                max_wait: Duration::from_millis(max_wait_ms),
+                workers,
+            },
+        )
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let e = engine(8, 1, 2);
+        let err = predict_one(&e, "nope", &[(0, 1.0)]).unwrap_err();
+        assert!(err.0.contains("not registered"));
+        assert_eq!(e.metrics().failed.load(std::sync::atomic::Ordering::Relaxed), 1);
+        e.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_pending_tickets() {
+        // max_wait far in the future: only the shutdown path can dispatch.
+        let e = engine(64, 10_000, 1);
+        let t = e.submit("m", &[(0, 1.0)]);
+        e.shutdown();
+        // The ticket resolved during drain (error: model never registered)
+        // rather than hanging past shutdown.
+        assert!(t.try_get().expect("resolved during shutdown").is_err());
+    }
+
+    #[test]
+    fn normalize_entries_sorts_and_sums_duplicates() {
+        let mut entries = vec![(3u32, 1.0f32), (1, 2.0), (3, 4.0)];
+        normalize_entries(&mut entries);
+        assert_eq!(entries, vec![(1, 2.0), (3, 5.0)]);
+        let mut empty: Vec<(u32, f32)> = vec![];
+        normalize_entries(&mut empty);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn config_defaults_clamped() {
+        let e = engine(0, 1, 0);
+        assert!(e.config().max_batch >= 1);
+        assert!(e.config().workers >= 1);
+        e.shutdown();
+    }
+}

@@ -1,0 +1,257 @@
+//! Serving metrics: lock-free counters and log₂-bucketed histograms for
+//! latency, queue depth, and batch-size distribution, plus a
+//! [`crate::report::Table`] rendering for the CLI throughput report.
+//!
+//! Everything is plain atomics so the submit path and every worker can
+//! record without contending on a lock; snapshots are approximate under
+//! concurrent writers, which is fine for operational telemetry.
+
+use crate::report::Table;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+const BUCKETS: usize = 40;
+
+/// Histogram over `u64` values with power-of-two buckets: bucket `i`
+/// (i ≥ 1) counts values in `[2^(i-1), 2^i)`; bucket 0 counts zeros.
+/// Percentiles are reported as the upper edge of the covering bucket —
+/// at most 2× off, which is plenty for latency reporting.
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+// [T; 40] has no Default impl (arrays stop at 32), hence the manual one.
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket_index(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            ((64 - v.leading_zeros()) as usize).min(BUCKETS - 1)
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Upper bucket edge covering quantile `q` ∈ [0, 1].
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return if i == 0 { 0 } else { 1u64 << i };
+            }
+        }
+        self.max()
+    }
+}
+
+/// All counters for one engine instance.
+#[derive(Default)]
+pub struct ServeMetrics {
+    /// Requests accepted by `submit`.
+    pub submitted: AtomicU64,
+    /// Requests fulfilled with a prediction.
+    pub completed: AtomicU64,
+    /// Requests fulfilled with an error.
+    pub failed: AtomicU64,
+    /// Batches dispatched to workers.
+    pub batches: AtomicU64,
+    /// Batches whose scoring panicked (their requests were rejected).
+    pub batch_panics: AtomicU64,
+    /// Current queue depth (submitted, not yet pulled into a batch).
+    pub queue_depth: AtomicU64,
+    /// High-water mark of `queue_depth`.
+    pub queue_depth_max: AtomicU64,
+    /// End-to-end request latency, microseconds.
+    pub latency_us: Histogram,
+    /// Time spent waiting in the queue, microseconds.
+    pub queue_wait_us: Histogram,
+    /// Per-batch service time (stage 1 + scoring + fulfilment), microseconds.
+    pub service_us: Histogram,
+    /// Distribution of dispatched batch sizes.
+    pub batch_size: Histogram,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub(crate) fn note_submitted(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        let depth = self.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.queue_depth_max.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_size.record(size as u64);
+        self.queue_depth.fetch_sub(size as u64, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_completed(&self, latency: Duration, queue_wait: Duration) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.latency_us.record(latency.as_micros() as u64);
+        self.queue_wait_us.record(queue_wait.as_micros() as u64);
+    }
+
+    pub(crate) fn note_failed(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_batch_panic(&self) {
+        self.batch_panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request rejected at the submit boundary (engine shut down): it
+    /// counts as submitted *and* failed, but never entered the queue, so
+    /// `queue_depth` stays untouched — keeping
+    /// `submitted == completed + failed + in-flight` consistent.
+    pub(crate) fn note_rejected_at_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_service(&self, service: Duration) {
+        self.service_us.record(service.as_micros() as u64);
+    }
+
+    /// Completed requests per second over `elapsed`.
+    pub fn throughput(&self, elapsed: Duration) -> f64 {
+        let secs = elapsed.as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.completed.load(Ordering::Relaxed) as f64 / secs
+        }
+    }
+
+    /// Render the operational report printed by the `serve` subcommand.
+    pub fn table(&self, elapsed: Duration) -> Table {
+        let mut t = Table::new("serving report", &["metric", "value"]);
+        let c = |a: &AtomicU64| a.load(Ordering::Relaxed).to_string();
+        let ms = |us: u64| format!("{:.3}", us as f64 / 1e3);
+        t.row(&["requests submitted".into(), c(&self.submitted)]);
+        t.row(&["requests completed".into(), c(&self.completed)]);
+        t.row(&["requests failed".into(), c(&self.failed)]);
+        t.row(&["batches dispatched".into(), c(&self.batches)]);
+        t.row(&["batch panics".into(), c(&self.batch_panics)]);
+        t.row(&["mean batch size".into(), format!("{:.1}", self.batch_size.mean())]);
+        t.row(&["max queue depth".into(), c(&self.queue_depth_max)]);
+        t.row(&["latency p50 (ms)".into(), ms(self.latency_us.quantile(0.50))]);
+        t.row(&["latency p90 (ms)".into(), ms(self.latency_us.quantile(0.90))]);
+        t.row(&["latency p99 (ms)".into(), ms(self.latency_us.quantile(0.99))]);
+        t.row(&["latency max (ms)".into(), ms(self.latency_us.max())]);
+        t.row(&["queue wait mean (ms)".into(), format!("{:.3}", self.queue_wait_us.mean() / 1e3)]);
+        t.row(&["batch service mean (ms)".into(), format!("{:.3}", self.service_us.mean() / 1e3)]);
+        t.row(&[
+            "throughput (req/s)".into(),
+            format!("{:.0}", self.throughput(elapsed)),
+        ]);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_stats() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 1, 2, 3, 100, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.max(), 1000);
+        assert!((h.mean() - (1107.0 / 7.0)).abs() < 1e-9);
+        // q=0 clamps to the first recorded value's bucket (zero here).
+        assert_eq!(h.quantile(0.0), 0);
+        // All seven values are ≤ 1024, so p100 lands in that bucket.
+        assert_eq!(h.quantile(1.0), 1024);
+        // Median of {0,1,1,2,3,100,1000} is 2 → bucket [2,4) → edge 4.
+        assert_eq!(h.quantile(0.5), 4);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.99), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn histogram_huge_values_clamp() {
+        let h = Histogram::new();
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 1);
+        assert!(h.quantile(0.5) > 0);
+    }
+
+    #[test]
+    fn metrics_counters_flow() {
+        let m = ServeMetrics::new();
+        for _ in 0..4 {
+            m.note_submitted();
+        }
+        assert_eq!(m.queue_depth_max.load(Ordering::Relaxed), 4);
+        m.note_batch(4);
+        assert_eq!(m.queue_depth.load(Ordering::Relaxed), 0);
+        for _ in 0..3 {
+            m.note_completed(Duration::from_micros(500), Duration::from_micros(100));
+        }
+        m.note_failed();
+        m.note_service(Duration::from_micros(400));
+        assert_eq!(m.completed.load(Ordering::Relaxed), 3);
+        assert_eq!(m.failed.load(Ordering::Relaxed), 1);
+        assert!(m.throughput(Duration::from_secs(1)) > 2.9);
+        let table = m.table(Duration::from_secs(1));
+        assert!(table.render().contains("requests submitted"));
+    }
+}

@@ -1,0 +1,42 @@
+//! Batched inference serving for trained LPD-SVM models.
+//!
+//! The training side of this codebase gets its speed from amortizing work
+//! over large blocks of rows — the precomputed factor `G`, chunked GEMM,
+//! many-core pair parallelism. This module applies the same recipe to
+//! prediction traffic: single-row requests are coalesced into batches
+//! under a latency/size policy, mapped into G-space with **one** stage-1
+//! transform per batch, and scored with one dense GEMM against the stacked
+//! OVO head weights, fanned across a worker pool.
+//!
+//! Components:
+//!
+//! * [`engine`] — request queue, micro-batcher, worker pool, shutdown.
+//! * [`registry`] — named models behind `Arc`, hot-swappable with zero
+//!   downtime, loadable from [`crate::model::io`] files.
+//! * [`metrics`] — latency histograms, queue depth, batch-size
+//!   distribution, throughput counters.
+//! * [`session`] — per-request tickets (futures-style result delivery).
+//!
+//! ```no_run
+//! use lpdsvm::prelude::*;
+//! use std::sync::Arc;
+//!
+//! # fn model() -> MulticlassModel { unimplemented!() }
+//! let registry = Arc::new(ModelRegistry::new());
+//! registry.insert("default", model());
+//! let engine = ServeEngine::start(registry, ServeConfig::default());
+//! let ticket = engine.submit("default", &[(0, 0.5), (3, -1.2)]);
+//! let prediction = ticket.wait().unwrap();
+//! println!("class {} (batch of {})", prediction.label, prediction.batch_size);
+//! engine.shutdown();
+//! ```
+
+pub mod engine;
+pub mod metrics;
+pub mod registry;
+pub mod session;
+
+pub use engine::{BackendProvider, NativeProvider, PjrtProvider, ServeConfig, ServeEngine};
+pub use metrics::{Histogram, ServeMetrics};
+pub use registry::ModelRegistry;
+pub use session::{PredictResult, Prediction, ServeError, Ticket};

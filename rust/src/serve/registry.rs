@@ -1,0 +1,142 @@
+//! Named-model registry with hot swap.
+//!
+//! Models live behind `Arc`, so replacing a name is atomic from the
+//! serving path's point of view: batches formed before a swap finish on
+//! the old model (their `Arc` keeps it alive), batches formed after see
+//! the new one — zero downtime, no draining required.
+
+use crate::model::io as model_io;
+use crate::model::multiclass::MulticlassModel;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, RwLock};
+
+/// Thread-safe map of serving name → trained model.
+#[derive(Default)]
+pub struct ModelRegistry {
+    models: RwLock<HashMap<String, Arc<MulticlassModel>>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or hot-swap) `name`. Returns the replaced model, if any.
+    pub fn insert(&self, name: &str, model: MulticlassModel) -> Option<Arc<MulticlassModel>> {
+        self.insert_arc(name, Arc::new(model))
+    }
+
+    /// Register an already-shared model (e.g. one also used elsewhere).
+    pub fn insert_arc(
+        &self,
+        name: &str,
+        model: Arc<MulticlassModel>,
+    ) -> Option<Arc<MulticlassModel>> {
+        self.models
+            .write()
+            .unwrap()
+            .insert(name.to_string(), model)
+    }
+
+    /// Load a model file via [`crate::model::io`] and register it under
+    /// `name` (the `serve` subcommand's `--model` path, and the unit of
+    /// hot deployment: re-invoking with the same name swaps in place).
+    pub fn load_file(
+        &self,
+        name: &str,
+        path: &Path,
+    ) -> anyhow::Result<Option<Arc<MulticlassModel>>> {
+        let model = model_io::load(path)?;
+        Ok(self.insert(name, model))
+    }
+
+    /// Fetch a model for scoring. Cheap: one read-lock + `Arc` clone.
+    pub fn get(&self, name: &str) -> Option<Arc<MulticlassModel>> {
+        self.models.read().unwrap().get(name).cloned()
+    }
+
+    /// Unregister `name`; in-flight batches holding the `Arc` still finish.
+    pub fn remove(&self, name: &str) -> Option<Arc<MulticlassModel>> {
+        self.models.write().unwrap().remove(name)
+    }
+
+    /// Registered names, sorted for stable display.
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.models.read().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::train::{train, TrainConfig};
+    use crate::data::synth::PaperDataset;
+    use crate::lowrank::Stage1Config;
+
+    fn tiny_model(seed: u64) -> MulticlassModel {
+        let spec = PaperDataset::Adult.spec(0.005, seed);
+        let data = spec.synth.generate();
+        let cfg = TrainConfig {
+            stage1: Stage1Config {
+                budget: 16,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        train(&data, &cfg).unwrap()
+    }
+
+    #[test]
+    fn insert_get_remove_names() {
+        let reg = ModelRegistry::new();
+        assert!(reg.is_empty());
+        assert!(reg.insert("a", tiny_model(1)).is_none());
+        assert!(reg.insert("b", tiny_model(2)).is_none());
+        assert_eq!(reg.names(), vec!["a".to_string(), "b".to_string()]);
+        assert!(reg.get("a").is_some());
+        assert!(reg.get("missing").is_none());
+        assert!(reg.remove("a").is_some());
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn hot_swap_replaces_and_returns_old() {
+        let reg = ModelRegistry::new();
+        reg.insert("m", tiny_model(3));
+        let before = reg.get("m").unwrap();
+        let replaced = reg.insert("m", tiny_model(4)).unwrap();
+        assert!(Arc::ptr_eq(&before, &replaced));
+        let after = reg.get("m").unwrap();
+        assert!(!Arc::ptr_eq(&before, &after));
+    }
+
+    #[test]
+    fn load_file_roundtrip() {
+        let model = tiny_model(5);
+        let dir = std::env::temp_dir().join("lpdsvm_registry");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("reg.lpd");
+        model_io::save(&model, &path).unwrap();
+
+        let reg = ModelRegistry::new();
+        reg.load_file("disk", &path).unwrap();
+        let loaded = reg.get("disk").unwrap();
+        assert_eq!(loaded.factor.rank, model.factor.rank);
+        assert_eq!(loaded.heads.len(), model.heads.len());
+        assert!(reg.load_file("disk", Path::new("/nonexistent.lpd")).is_err());
+        // A failed load must not clobber the registered model.
+        assert!(reg.get("disk").is_some());
+        std::fs::remove_file(&path).ok();
+    }
+}

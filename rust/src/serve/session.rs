@@ -1,0 +1,227 @@
+//! Per-request handles: a one-shot slot that the engine fulfils and the
+//! client waits on — the futures-style rendezvous of the serving layer,
+//! built on `Mutex` + `Condvar` (the offline registry has no tokio, and a
+//! blocking wait matches the synchronous client API anyway).
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// A completed prediction, as delivered back to the submitting client.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Prediction {
+    /// Predicted class id.
+    pub label: u32,
+    /// Size of the batch this request was scored in.
+    pub batch_size: usize,
+    /// Microseconds the request spent queued before its batch was formed.
+    pub queue_us: u64,
+    /// Microseconds from submit to fulfilment (queue + stage 1 + scoring).
+    pub total_us: u64,
+}
+
+/// Serving-side failure, delivered through the ticket instead of a label.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeError(pub String);
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Result type delivered through a [`Ticket`].
+pub type PredictResult = Result<Prediction, ServeError>;
+
+struct Slot {
+    value: Mutex<Option<PredictResult>>,
+    ready: Condvar,
+}
+
+/// Client-side handle to one in-flight request. Obtained from
+/// `ServeEngine::submit`; resolves exactly once.
+pub struct Ticket {
+    slot: Arc<Slot>,
+}
+
+impl Ticket {
+    /// Block until the engine fulfils (or rejects) the request.
+    pub fn wait(&self) -> PredictResult {
+        let mut v = self.slot.value.lock().unwrap();
+        loop {
+            if let Some(r) = v.as_ref() {
+                return r.clone();
+            }
+            v = self.slot.ready.wait(v).unwrap();
+        }
+    }
+
+    /// Block for at most `timeout`; `None` if the request is still pending.
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<PredictResult> {
+        let mut v = self.slot.value.lock().unwrap();
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if let Some(r) = v.as_ref() {
+                return Some(r.clone());
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self.slot.ready.wait_timeout(v, deadline - now).unwrap();
+            v = guard;
+        }
+    }
+
+    /// Non-blocking poll.
+    pub fn try_get(&self) -> Option<PredictResult> {
+        self.slot.value.lock().unwrap().clone()
+    }
+
+    /// Whether the engine has already resolved this request.
+    pub fn is_done(&self) -> bool {
+        self.slot.value.lock().unwrap().is_some()
+    }
+}
+
+/// Engine-side half: fulfils the paired [`Ticket`] exactly once. Dropping
+/// an unfulfilled `Fulfiller` rejects the ticket so clients can never hang
+/// on a request the engine lost (worker panic, shutdown race).
+pub(crate) struct Fulfiller {
+    slot: Arc<Slot>,
+    done: bool,
+    on_abandon: Option<Box<dyn FnOnce() + Send>>,
+}
+
+impl Fulfiller {
+    pub(crate) fn fulfill(mut self, result: PredictResult) {
+        self.resolve(result);
+        self.done = true;
+    }
+
+    /// Run `f` if this fulfiller is dropped without an explicit
+    /// [`Fulfiller::fulfill`] (the abandonment path — e.g. a worker panic
+    /// unwinding a batch). Lets the engine keep failure accounting exact
+    /// even for requests it never got to resolve.
+    pub(crate) fn on_abandon(&mut self, f: impl FnOnce() + Send + 'static) {
+        self.on_abandon = Some(Box::new(f));
+    }
+
+    fn resolve(&self, result: PredictResult) {
+        let mut v = self.slot.value.lock().unwrap();
+        if v.is_none() {
+            *v = Some(result);
+            self.slot.ready.notify_all();
+        }
+    }
+}
+
+impl Drop for Fulfiller {
+    fn drop(&mut self) {
+        if !self.done {
+            self.resolve(Err(ServeError(
+                "request dropped before completion (worker panic or engine shutdown)".into(),
+            )));
+            if let Some(f) = self.on_abandon.take() {
+                f();
+            }
+        }
+    }
+}
+
+/// Create a connected (client, engine) pair for one request.
+pub(crate) fn channel() -> (Ticket, Fulfiller) {
+    let slot = Arc::new(Slot {
+        value: Mutex::new(None),
+        ready: Condvar::new(),
+    });
+    (
+        Ticket { slot: slot.clone() },
+        Fulfiller {
+            slot,
+            done: false,
+            on_abandon: None,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fulfil_then_wait() {
+        let (ticket, fulfiller) = channel();
+        fulfiller.fulfill(Ok(Prediction {
+            label: 3,
+            batch_size: 8,
+            queue_us: 10,
+            total_us: 20,
+        }));
+        assert_eq!(ticket.wait().unwrap().label, 3);
+        // Resolves idempotently for repeated reads.
+        assert!(ticket.is_done());
+        assert_eq!(ticket.try_get().unwrap().unwrap().label, 3);
+    }
+
+    #[test]
+    fn wait_blocks_until_fulfilled_cross_thread() {
+        let (ticket, fulfiller) = channel();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            fulfiller.fulfill(Ok(Prediction {
+                label: 1,
+                batch_size: 1,
+                queue_us: 0,
+                total_us: 0,
+            }));
+        });
+        assert_eq!(ticket.wait().unwrap().label, 1);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn dropped_fulfiller_rejects() {
+        let (ticket, fulfiller) = channel();
+        drop(fulfiller);
+        let err = ticket.wait().unwrap_err();
+        assert!(err.0.contains("dropped"));
+    }
+
+    #[test]
+    fn on_abandon_fires_only_for_dropped_fulfillers() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let hits = Arc::new(AtomicU32::new(0));
+
+        let (ticket, mut fulfiller) = channel();
+        let h = Arc::clone(&hits);
+        fulfiller.on_abandon(move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        });
+        drop(fulfiller);
+        assert!(ticket.wait().is_err());
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+
+        let (ticket, mut fulfiller) = channel();
+        let h = Arc::clone(&hits);
+        fulfiller.on_abandon(move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        });
+        fulfiller.fulfill(Ok(Prediction {
+            label: 0,
+            batch_size: 1,
+            queue_us: 0,
+            total_us: 0,
+        }));
+        assert!(ticket.wait().is_ok());
+        assert_eq!(hits.load(Ordering::Relaxed), 1, "fulfilled ⇒ no abandon");
+    }
+
+    #[test]
+    fn timeout_on_pending() {
+        let (ticket, _keep) = channel();
+        assert!(ticket.wait_timeout(Duration::from_millis(5)).is_none());
+        assert!(!ticket.is_done());
+    }
+}

@@ -1,0 +1,290 @@
+//! Integration tests for the serving subsystem: submit → batch → result
+//! delivery, agreement with the blocking predict path, hot model swap
+//! through the registry, and the model-file → registry → engine pipeline.
+
+use lpdsvm::coordinator::train::{train, TrainConfig};
+use lpdsvm::data::dataset::Dataset;
+use lpdsvm::data::synth::{FeatureStyle, PaperDataset, SynthSpec};
+use lpdsvm::kernel::Kernel;
+use lpdsvm::linalg::Mat;
+use lpdsvm::lowrank::{LowRankFactor, Stage1Config};
+use lpdsvm::model::io as model_io;
+use lpdsvm::model::multiclass::{BinaryHead, MulticlassModel};
+use lpdsvm::model::ModelKind;
+use lpdsvm::serve::{ModelRegistry, ServeConfig, ServeEngine};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn binary_dataset(seed: u64) -> Dataset {
+    PaperDataset::Adult.spec(0.005, seed).synth.generate()
+}
+
+fn multiclass_dataset(seed: u64) -> Dataset {
+    SynthSpec {
+        name: "serve-mc".into(),
+        n: 240,
+        p: 10,
+        n_classes: 4,
+        sep: 5.0,
+        latent: 4,
+        noise: 1.0,
+        style: FeatureStyle::Dense,
+        seed,
+    }
+    .generate()
+}
+
+fn quick_train(data: &Dataset) -> MulticlassModel {
+    let cfg = TrainConfig {
+        stage1: Stage1Config {
+            budget: 24,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    train(data, &cfg).unwrap()
+}
+
+fn request_rows(data: &Dataset) -> Vec<Vec<(u32, f32)>> {
+    (0..data.len()).map(|i| data.x.row_entries(i)).collect()
+}
+
+fn engine_cfg(max_batch: usize, max_wait: Duration, workers: usize) -> ServeConfig {
+    ServeConfig {
+        max_batch,
+        max_wait,
+        workers,
+    }
+}
+
+#[test]
+fn batched_results_match_blocking_predict() {
+    let data = multiclass_dataset(11);
+    let model = quick_train(&data);
+    let expected = model.predict(&data.x).unwrap();
+
+    let registry = Arc::new(ModelRegistry::new());
+    registry.insert("m", model);
+    let engine = ServeEngine::start(
+        Arc::clone(&registry),
+        engine_cfg(16, Duration::from_millis(2), 2),
+    );
+
+    let rows = request_rows(&data);
+    let tickets: Vec<_> = rows.iter().map(|r| engine.submit("m", r)).collect();
+    let got: Vec<u32> = tickets
+        .iter()
+        .map(|t| t.wait().expect("prediction delivered").label)
+        .collect();
+    assert_eq!(got, expected, "engine must agree with MulticlassModel::predict");
+
+    let m = engine.metrics();
+    let n = data.len() as u64;
+    assert_eq!(m.submitted.load(Ordering::Relaxed), n);
+    assert_eq!(m.completed.load(Ordering::Relaxed), n);
+    assert_eq!(m.failed.load(Ordering::Relaxed), 0);
+    let batches = m.batches.load(Ordering::Relaxed);
+    assert!(batches >= n / 16, "at least ⌈n/max_batch⌉ batches");
+    assert!(m.latency_us.count() == n);
+    engine.shutdown();
+}
+
+#[test]
+fn size_trigger_forms_full_batches() {
+    let data = multiclass_dataset(12);
+    let model = quick_train(&data);
+    let registry = Arc::new(ModelRegistry::new());
+    registry.insert("m", model);
+    // max_wait far beyond the test horizon (even a preempted CI host won't
+    // stall 60s between submits): only the size trigger (8 queued
+    // requests) can dispatch, so every prediction must report
+    // batch_size == 8.
+    let engine = ServeEngine::start(
+        Arc::clone(&registry),
+        engine_cfg(8, Duration::from_secs(60), 1),
+    );
+    let rows = request_rows(&data);
+    let tickets: Vec<_> = rows.iter().take(8).map(|r| engine.submit("m", r)).collect();
+    for t in &tickets {
+        let pred = t.wait().unwrap();
+        assert_eq!(pred.batch_size, 8, "size trigger should fill the batch");
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn latency_trigger_dispatches_partial_batch() {
+    let data = binary_dataset(13);
+    let model = quick_train(&data);
+    let registry = Arc::new(ModelRegistry::new());
+    registry.insert("m", model);
+    // Queue 3 requests with a huge max_batch: only max_wait can fire.
+    let engine = ServeEngine::start(
+        Arc::clone(&registry),
+        engine_cfg(4096, Duration::from_millis(5), 1),
+    );
+    let rows = request_rows(&data);
+    let tickets: Vec<_> = rows.iter().take(3).map(|r| engine.submit("m", r)).collect();
+    for t in &tickets {
+        let pred = t.wait().unwrap();
+        assert!(pred.batch_size <= 3);
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn hot_swap_switches_predictions_without_restart() {
+    let data = binary_dataset(14);
+    let model_a = quick_train(&data);
+    // Model B: identical features, inverted labels — its predictions are
+    // (mostly) the complement of A's, making a swap observable.
+    let flipped = Dataset::new(
+        "flipped",
+        data.x.clone(),
+        data.labels.iter().map(|&l| 1 - l).collect(),
+        2,
+    );
+    let model_b = quick_train(&flipped);
+    let expect_a = model_a.predict(&data.x).unwrap();
+    let expect_b = model_b.predict(&data.x).unwrap();
+    let disagree = expect_a
+        .iter()
+        .zip(&expect_b)
+        .filter(|(a, b)| a != b)
+        .count();
+    assert!(
+        disagree > data.len() / 2,
+        "swap test needs models that disagree (got {disagree}/{})",
+        data.len()
+    );
+
+    let registry = Arc::new(ModelRegistry::new());
+    registry.insert("m", model_a);
+    let engine = ServeEngine::start(
+        Arc::clone(&registry),
+        engine_cfg(32, Duration::from_millis(2), 2),
+    );
+    let rows = request_rows(&data);
+
+    let round1: Vec<u32> = rows
+        .iter()
+        .map(|r| engine.submit("m", r).wait().unwrap().label)
+        .collect();
+    assert_eq!(round1, expect_a);
+
+    // Hot swap while the engine keeps running — no restart, no drain.
+    let replaced = registry.insert("m", model_b);
+    assert!(replaced.is_some());
+
+    let round2: Vec<u32> = rows
+        .iter()
+        .map(|r| engine.submit("m", r).wait().unwrap().label)
+        .collect();
+    assert_eq!(round2, expect_b);
+    engine.shutdown();
+}
+
+#[test]
+fn saved_model_serves_through_registry_load_file() {
+    let data = binary_dataset(15);
+    let model = quick_train(&data);
+    let expected = model.predict(&data.x).unwrap();
+    let dir = std::env::temp_dir().join("lpdsvm_serve_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("served.lpd");
+    model_io::save(&model, &path).unwrap();
+
+    let registry = Arc::new(ModelRegistry::new());
+    registry.load_file("disk", &path).unwrap();
+    let engine = ServeEngine::start(
+        Arc::clone(&registry),
+        engine_cfg(64, Duration::from_millis(2), 2),
+    );
+    let rows = request_rows(&data);
+    let got: Vec<u32> = rows
+        .iter()
+        .map(|r| engine.submit("disk", r).wait().unwrap().label)
+        .collect();
+    assert_eq!(got, expected);
+    engine.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn scoring_panic_rejects_tickets_and_worker_survives() {
+    // A structurally broken model — head weight length (3) disagrees with
+    // the factor rank (1) — makes scoring panic. The engine must reject
+    // that batch's tickets instead of hanging them, and keep serving.
+    let broken = MulticlassModel {
+        factor: LowRankFactor {
+            g: Mat::from_vec(1, 1, vec![1.0]),
+            landmarks: Mat::from_vec(1, 1, vec![1.0]),
+            landmark_sq: vec![1.0],
+            whiten: Mat::from_vec(1, 1, vec![1.0]),
+            rank: 1,
+            eigenvalues: vec![1.0],
+            kernel: Kernel::Linear,
+            landmark_idx: vec![0],
+        },
+        heads: vec![BinaryHead {
+            pair: (0, 1),
+            w: vec![1.0, 2.0, 3.0], // wrong length on purpose
+            objective: 0.0,
+            converged: true,
+            sv_count: 0,
+            steps: 0,
+        }],
+        kind: ModelKind::Binary,
+    };
+    let registry = Arc::new(ModelRegistry::new());
+    registry.insert("m", broken);
+    let engine = ServeEngine::start(
+        Arc::clone(&registry),
+        engine_cfg(4, Duration::from_millis(2), 1),
+    );
+    let err = engine.submit("m", &[(0, 1.0)]).wait().unwrap_err();
+    assert!(err.0.contains("dropped"), "got: {err}");
+    assert_eq!(engine.metrics().batch_panics.load(Ordering::Relaxed), 1);
+    // The abandoned request still counts as failed (metrics invariant).
+    assert_eq!(engine.metrics().failed.load(Ordering::Relaxed), 1);
+
+    // Hot-swap in a sane model: the same (sole) worker must still be alive.
+    let data = binary_dataset(17);
+    let model = quick_train(&data);
+    let expected = model.predict(&data.x).unwrap();
+    registry.insert("m", model);
+    let rows = request_rows(&data);
+    let got: Vec<u32> = rows
+        .iter()
+        .map(|r| engine.submit("m", r).wait().unwrap().label)
+        .collect();
+    assert_eq!(got, expected);
+    engine.shutdown();
+}
+
+#[test]
+fn per_request_errors_do_not_poison_the_batch() {
+    let data = binary_dataset(16);
+    let dim = data.dim() as u32;
+    let model = quick_train(&data);
+    let registry = Arc::new(ModelRegistry::new());
+    registry.insert("m", model);
+    let engine = ServeEngine::start(
+        Arc::clone(&registry),
+        engine_cfg(8, Duration::from_millis(5), 1),
+    );
+    let rows = request_rows(&data);
+    // One poisoned request (feature index past the model's dimension)
+    // sandwiched between good ones.
+    let good_before = engine.submit("m", &rows[0]);
+    let bad = engine.submit("m", &[(dim + 7, 1.0)]);
+    let good_after = engine.submit("m", &rows[1]);
+    assert!(good_before.wait().is_ok());
+    let err = bad.wait().unwrap_err();
+    assert!(err.0.contains("out of range"), "got: {err}");
+    assert!(good_after.wait().is_ok());
+    assert_eq!(engine.metrics().failed.load(Ordering::Relaxed), 1);
+    assert_eq!(engine.metrics().completed.load(Ordering::Relaxed), 2);
+    engine.shutdown();
+}
