@@ -58,7 +58,7 @@ fn main() -> anyhow::Result<()> {
     let model_native = lpdsvm::coordinator::train::train_with_backend(
         &train_set,
         &cfg,
-        &NativeBackend,
+        &NativeBackend::default(),
         &mut native_clock,
     )?;
     let err_native = model_native.error_rate(&test_set.x, &test_set.labels)?;

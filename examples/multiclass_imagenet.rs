@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
     let model = lpdsvm::coordinator::train::train_with_backend(
         &train_set,
         &cfg,
-        &NativeBackend,
+        &NativeBackend::default(),
         &mut clock,
     )?;
 

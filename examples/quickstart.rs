@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
     let model = lpdsvm::coordinator::train::train_with_backend(
         &train_set,
         &cfg,
-        &NativeBackend,
+        &NativeBackend::default(),
         &mut clock,
     )?;
     println!(

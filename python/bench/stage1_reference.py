@@ -1,0 +1,151 @@
+#!/usr/bin/env python3
+"""NumPy reference mirror of `rust/benches/stage1_throughput.rs`.
+
+Runs the same stage-1 pipeline shape — landmark Gram + eigendecomposition,
+then the chunked `G = kernel_block(X, L) @ W` assembly — with the same
+row-band threading strategy (contiguous bands of output rows per worker;
+NumPy releases the GIL inside its kernels, so bands genuinely run in
+parallel). BLAS-internal threading is pinned to 1 so the sweep measures
+*our* banding, not OpenBLAS's.
+
+This exists for environments that can run Python but not `cargo bench`
+(e.g. the container this repo is grown in): it produces a
+`BENCH_stage1.json` with the same schema so the perf trajectory file can
+be seeded/checked anywhere. The Rust bench overwrites it with native
+numbers whenever it runs — treat those as authoritative.
+
+    python3 python/bench/stage1_reference.py [--smoke] [--out PATH]
+"""
+
+import argparse
+import json
+import os
+import sys
+import threading
+import time
+
+# Pin BLAS threading *before* importing numpy so t=1 is truly serial.
+for var in ("OMP_NUM_THREADS", "OPENBLAS_NUM_THREADS", "MKL_NUM_THREADS"):
+    os.environ.setdefault(var, "1")
+
+import numpy as np  # noqa: E402
+
+
+def kernel_block(x, x_sq, lm, lm_sq, gamma):
+    """Gaussian block exp(-gamma * ||x - l||^2) via the GEMM identity."""
+    dots = x @ lm.T
+    d2 = np.maximum(x_sq[:, None] + lm_sq[None, :] - 2.0 * dots, 0.0)
+    return np.exp(-gamma * d2)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="BENCH_stage1.json")
+    ap.add_argument("--seed", type=int, default=42)
+    args = ap.parse_args()
+
+    n, p, budget, chunk = (3_000, 48, 160, 256) if args.smoke else (24_000, 96, 640, 512)
+    cores = os.cpu_count() or 1
+    x = np.random.default_rng(args.seed).standard_normal((n, p)).astype(np.float32)
+    x_sq = (x * x).sum(axis=1)
+    gamma = np.float32(0.5 / p)
+
+    results = []
+    serial_g = None
+    serial_secs = None
+    sweep = sorted(set([1, 2, 4, 8, cores]))
+    for t in sweep:
+        t0 = time.perf_counter()
+        # Fresh generator per sweep point: same landmarks for every thread
+        # count (mirrors the fixed cfg.seed in the Rust bench).
+        rng = np.random.default_rng(args.seed + 1)
+        lm = x[np.sort(rng.choice(n, budget, replace=False))]
+        lm_sq = (lm * lm).sum(axis=1)
+        kbb = kernel_block(lm, lm_sq, lm, lm_sq, gamma).astype(np.float64)
+        evals, evecs = np.linalg.eigh(kbb)
+        keep = evals > evals.max() * 1e-6
+        rank = int(keep.sum())
+        w = (evecs[:, keep] / np.sqrt(evals[keep])).astype(np.float32)
+        prep = time.perf_counter() - t0
+
+        g = np.zeros((n, rank), dtype=np.float32)
+        # Band boundaries are chunk-aligned so every chunk is the exact
+        # same slice at every thread count (BLAS rounding depends on the
+        # slice shape) — mirroring the bit-identical contract of the Rust
+        # row-band kernel.
+        chunks = [(cs, min(cs + chunk, n)) for cs in range(0, n, chunk)]
+
+        def band(work):
+            for cs, ce in work:
+                k = kernel_block(x[cs:ce], x_sq[cs:ce], lm, lm_sq, gamma)
+                g[cs:ce] = k @ w
+
+        t0 = time.perf_counter()
+        if t == 1:
+            band(chunks)
+        else:
+            bs = -(-len(chunks) // t)
+            workers = [
+                threading.Thread(target=band, args=(chunks[i * bs : (i + 1) * bs],))
+                for i in range(t)
+                if i * bs < len(chunks)
+            ]
+            for wk in workers:
+                wk.start()
+            for wk in workers:
+                wk.join()
+        mg = time.perf_counter() - t0
+
+        if serial_g is None:
+            serial_g, serial_secs = g, mg
+        elif not np.array_equal(serial_g, g):
+            print(f"FATAL: t={t} diverged from serial", file=sys.stderr)
+            return 1
+
+        flops = n * 2.0 * budget * (p + rank)
+        gflops = flops / max(mg, 1e-12) / 1e9
+        speedup = serial_secs / max(mg, 1e-12)
+        results.append(
+            {
+                "threads": t,
+                "preparation_s": round(prep, 6),
+                "matrix_g_s": round(mg, 6),
+                "gflops": round(gflops, 3),
+                "speedup_vs_1thread": round(speedup, 3),
+                "rank": rank,
+            }
+        )
+        print(
+            f"threads={t:>2}  prep={prep:.3f}s  matrix_g={mg:.3f}s  "
+            f"{gflops:.2f} GFLOP/s  {speedup:.2f}x"
+        )
+
+    doc = {
+        "bench": "stage1_throughput",
+        "source": "python/bench/stage1_reference.py (NumPy mirror; no Rust "
+        "toolchain in the build container — `cargo bench --bench "
+        "stage1_throughput` overwrites this with native numbers)",
+        "smoke": args.smoke,
+        "dataset": {
+            "n": n,
+            "p": p,
+            "classes": 6,
+            "budget": budget,
+            "chunk": chunk,
+            "kernel": "gaussian",
+            "seed": args.seed,
+        },
+        "host_cores": cores,
+        "results": results,
+        "best_speedup_vs_1thread": max(r["speedup_vs_1thread"] for r in results),
+    }
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -103,7 +103,7 @@ fn main() {
             }
         };
 
-        run("native", &NativeBackend);
+        run("native", &NativeBackend::default());
         if let Some(rt) = &runtime {
             let accel = AccelBackend::new(rt);
             run("pjrt", &accel);

@@ -49,7 +49,7 @@ fn main() {
                 seed,
                 ..Default::default()
             },
-            &NativeBackend,
+            &NativeBackend::default(),
             &mut clock,
         )
         .expect("stage 1");

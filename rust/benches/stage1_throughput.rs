@@ -1,0 +1,166 @@
+//! Stage-1 compute-backbone throughput: thread sweep over the parallel
+//! tiled GEMM + kernel-block pipeline that assembles the factor `G`.
+//!
+//! Runs `LowRankFactor::compute` on a synthetic multi-class dataset for
+//! threads ∈ {1, 2, 4, 8, all}, reports per-stage seconds, matrix_g
+//! GFLOP/s and the speedup over the single-thread path, and asserts the
+//! parallel factor is bit-identical to the serial one. Results are written
+//! to `BENCH_stage1.json` (override with `LPDSVM_BENCH_STAGE1_OUT`) so the
+//! perf trajectory is tracked in-repo from PR 2 onward.
+//!
+//!     cargo bench --bench stage1_throughput              # full workload
+//!     cargo bench --bench stage1_throughput -- --smoke   # CI fast mode
+//!
+//! Optional regression gate: set `LPDSVM_BENCH_MIN_SPEEDUP=2.5` to fail
+//! the run unless the best matrix_g speedup reaches that factor (left
+//! unset on hosts whose core count cannot support it).
+
+mod harness;
+
+use lpdsvm::data::synth::{FeatureStyle, SynthSpec};
+use lpdsvm::kernel::Kernel;
+use lpdsvm::lowrank::factor::{LowRankFactor, NativeBackend};
+use lpdsvm::lowrank::Stage1Config;
+use lpdsvm::report::Table;
+use lpdsvm::util::json::{arr, num, obj, s, Json};
+use lpdsvm::util::threads;
+use lpdsvm::util::timer::StageClock;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let seed = harness::bench_seed();
+    let cores = threads::default_threads();
+
+    // Synthetic multi-class workload; `--smoke` keeps CI bounded while
+    // still crossing the chunk, KC and NC tile boundaries.
+    let (n, p, budget, chunk) = if smoke {
+        (3_000, 48, 160, 256)
+    } else {
+        (24_000, 96, 640, 512)
+    };
+    let data = SynthSpec {
+        name: "stage1-bench".into(),
+        n,
+        p,
+        n_classes: 6,
+        sep: 4.0,
+        latent: 8,
+        noise: 1.0,
+        style: FeatureStyle::Dense,
+        seed,
+    }
+    .generate();
+    let kernel = Kernel::gaussian(0.5 / p as f64);
+    println!(
+        "stage1_throughput{}: n={n} p={p} B={budget} chunk={chunk} cores={cores}\n",
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let mut sweep = vec![1usize, 2, 4, 8, cores];
+    sweep.sort_unstable();
+    sweep.dedup();
+
+    let mut table = Table::new(
+        "stage-1 thread sweep (matrix_g = kernel block + K·W GEMM)",
+        &["threads", "prep s", "matrix_g s", "GFLOP/s", "speedup"],
+    );
+    let mut rows_json: Vec<Json> = Vec::new();
+    let mut serial_g: Option<lpdsvm::linalg::Mat> = None;
+    let mut serial_secs = 0.0f64;
+    let mut best_speedup = 0.0f64;
+
+    for &t in &sweep {
+        let cfg = Stage1Config {
+            budget,
+            chunk,
+            seed,
+            threads: t,
+            ..Default::default()
+        };
+        let backend = NativeBackend::with_threads(t);
+        let mut clock = StageClock::new();
+        let factor = LowRankFactor::compute(&data.x, kernel, &cfg, &backend, &mut clock)
+            .expect("stage 1 computes");
+        let prep = clock.secs("preparation");
+        let mg = clock.secs("matrix_g");
+
+        // Differential check: every thread count must reproduce the
+        // serial factor bit for bit.
+        if let Some(reference) = serial_g.as_ref() {
+            assert_eq!(
+                reference, &factor.g,
+                "threads={t} produced a different G than threads=1"
+            );
+        } else {
+            serial_g = Some(factor.g.clone());
+            serial_secs = mg;
+        }
+
+        // matrix_g FLOPs: per row, B dots of dim p for the kernel block
+        // (2·B·p) plus the B×rank whitening GEMM (2·B·rank).
+        let flops_per_row = 2.0 * budget as f64 * (p as f64 + factor.rank as f64);
+        let flops = n as f64 * flops_per_row;
+        let gflops = flops / mg.max(1e-12) / 1e9;
+        let speedup = serial_secs / mg.max(1e-12);
+        best_speedup = best_speedup.max(speedup);
+        table.row(&[
+            t.to_string(),
+            Table::secs(prep),
+            Table::secs(mg),
+            format!("{gflops:.2}"),
+            format!("{speedup:.2}x"),
+        ]);
+        rows_json.push(obj(vec![
+            ("threads", num(t as f64)),
+            ("preparation_s", num(prep)),
+            ("matrix_g_s", num(mg)),
+            ("gflops", num(gflops)),
+            ("speedup_vs_1thread", num(speedup)),
+            ("rank", num(factor.rank as f64)),
+        ]));
+    }
+
+    table.print();
+    table
+        .write_tsv(&harness::report_dir().join("stage1_throughput.tsv"))
+        .ok();
+    println!(
+        "\nbest matrix_g speedup: {best_speedup:.2}x on {cores} cores \
+         (acceptance target: ≥ 3x at 8 threads on an ≥ 8-core host)"
+    );
+
+    let out_path = std::env::var("LPDSVM_BENCH_STAGE1_OUT")
+        .unwrap_or_else(|_| "BENCH_stage1.json".to_string());
+    let doc = obj(vec![
+        ("bench", s("stage1_throughput")),
+        ("source", s("cargo bench --bench stage1_throughput")),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "dataset",
+            obj(vec![
+                ("n", num(n as f64)),
+                ("p", num(p as f64)),
+                ("classes", num(6.0)),
+                ("budget", num(budget as f64)),
+                ("chunk", num(chunk as f64)),
+                ("kernel", s(kernel.name())),
+                ("seed", num(seed as f64)),
+            ]),
+        ),
+        ("host_cores", num(cores as f64)),
+        ("results", arr(rows_json)),
+        ("best_speedup_vs_1thread", num(best_speedup)),
+    ]);
+    std::fs::write(&out_path, doc.to_string() + "\n").expect("write bench json");
+    println!("wrote {out_path}");
+
+    if let Some(min) = std::env::var("LPDSVM_BENCH_MIN_SPEEDUP")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+    {
+        assert!(
+            best_speedup >= min,
+            "matrix_g speedup regression: best {best_speedup:.2}x < required {min:.2}x"
+        );
+    }
+}

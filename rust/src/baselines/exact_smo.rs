@@ -310,7 +310,7 @@ mod tests {
             &data.x,
             kernel,
             &cfg,
-            &crate::lowrank::factor::NativeBackend,
+            &crate::lowrank::factor::NativeBackend::default(),
             &mut clock,
         )
         .unwrap();

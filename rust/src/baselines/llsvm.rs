@@ -54,7 +54,7 @@ pub struct LlsvmModel {
 
 impl LlsvmModel {
     pub fn decision(&self, x: &crate::data::sparse::SparseMatrix) -> anyhow::Result<Vec<f32>> {
-        let g = self.factor.transform(x, &NativeBackend, 4096)?;
+        let g = self.factor.transform(x, &NativeBackend::default(), 4096)?;
         Ok(g.matvec(&self.w))
     }
 }
@@ -81,10 +81,11 @@ impl Llsvm {
             chunk: 4096,
             strategy: landmarks::LandmarkStrategy::Uniform,
             seed: self.opts.seed,
+            ..Default::default()
         };
         let mut clock = StageClock::new();
         let factor =
-            LowRankFactor::compute(&data.x, self.kernel, &cfg, &NativeBackend, &mut clock)?;
+            LowRankFactor::compute(&data.x, self.kernel, &cfg, &NativeBackend::default(), &mut clock)?;
 
         // One pass over the data in chunks; 30 CD epochs inside each chunk,
         // carrying the weight vector across chunks. No stopping criterion.
@@ -186,7 +187,7 @@ mod tests {
                 &data.x,
                 Kernel::gaussian(0.02),
                 &cfg,
-                &NativeBackend,
+                &NativeBackend::default(),
                 &mut clock,
             )
             .unwrap();

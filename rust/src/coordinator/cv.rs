@@ -50,11 +50,13 @@ pub fn cross_validate(
     cv: &CvConfig,
 ) -> anyhow::Result<CvResult> {
     let mut clock = StageClock::new();
+    let threads = cfg.effective_threads();
+    let stage1 = cfg.stage1.with_thread_fallback(threads);
     let factor = LowRankFactor::compute(
         &data.x,
         cfg.kernel,
-        &cfg.stage1,
-        &crate::lowrank::factor::NativeBackend,
+        &stage1,
+        &crate::lowrank::factor::NativeBackend::with_threads(threads),
         &mut clock,
     )?;
     let folds = Folds::stratified(&data.labels, cv.folds, &mut Rng::new(cv.seed));

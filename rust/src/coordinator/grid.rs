@@ -90,12 +90,17 @@ pub fn grid_search(
     let mut n_problems = 0usize;
     let mut stage1_secs = 0.0f64;
 
+    // The grid's thread budget drives the stage-1 backbone too.
+    let threads = base.effective_threads();
+    let stage1_cfg = base.stage1.with_thread_fallback(threads);
+    let backend = NativeBackend::with_threads(threads);
+
     for &gamma in &grid.gamma_values {
         // Stage 1: once per γ, shared by all C values and folds.
         let kernel = base.kernel.with_gamma(gamma);
         let mut clock = StageClock::new();
         let factor =
-            LowRankFactor::compute(&data.x, kernel, &base.stage1, &NativeBackend, &mut clock)?;
+            LowRankFactor::compute(&data.x, kernel, &stage1_cfg, &backend, &mut clock)?;
         stage1_secs += clock.total().as_secs_f64();
 
         let mut warm: Option<Vec<WarmStore>> = None;

@@ -127,7 +127,7 @@ mod tests {
                 budget: 48,
                 ..Default::default()
             },
-            &NativeBackend,
+            &NativeBackend::default(),
             &mut clock,
         )
         .unwrap();

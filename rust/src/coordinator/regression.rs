@@ -37,7 +37,7 @@ pub struct SvrModel {
 impl SvrModel {
     /// Predict targets for new inputs.
     pub fn predict(&self, x: &SparseMatrix) -> anyhow::Result<Vec<f32>> {
-        self.predict_with_backend(x, &NativeBackend)
+        self.predict_with_backend(x, &NativeBackend::default())
     }
 
     pub fn predict_with_backend(
@@ -71,7 +71,8 @@ pub fn train_svr(
     anyhow::ensure!(x.rows == y.len(), "targets/rows mismatch");
     anyhow::ensure!(x.rows > 0, "empty dataset");
     let mut clock = StageClock::new();
-    let factor = LowRankFactor::compute(x, cfg.kernel, &cfg.stage1, &NativeBackend, &mut clock)?;
+    let backend = NativeBackend::with_threads(cfg.stage1.effective_threads());
+    let factor = LowRankFactor::compute(x, cfg.kernel, &cfg.stage1, &backend, &mut clock)?;
     let solution = solve_svr(&factor.g, y, &cfg.svr);
     Ok(SvrModel {
         w: solution.w.clone(),

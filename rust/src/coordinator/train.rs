@@ -16,7 +16,10 @@ pub struct TrainConfig {
     pub kernel: Kernel,
     pub stage1: Stage1Config,
     pub solver: SolverOptions,
-    /// Worker threads for pair-parallel training (0 = auto).
+    /// Worker threads, honored end to end: pair-parallel training, the
+    /// stage-1 compute backbone (unless `stage1.threads` pins its own
+    /// count), and the native backend's row-banded GEMM/kernel blocks.
+    /// 0 = auto (`LPDSVM_THREADS` or all cores).
     pub threads: usize,
     /// Copy each OVO pair's rows into a contiguous matrix before solving
     /// (cache locality; see `coordinator::ovo`).
@@ -45,10 +48,12 @@ impl TrainConfig {
     }
 }
 
-/// Train with the native (pure-Rust) stage-1 backend.
+/// Train with the native (pure-Rust) stage-1 backend, its row-band
+/// parallelism sized from [`TrainConfig::effective_threads`].
 pub fn train(data: &Dataset, cfg: &TrainConfig) -> anyhow::Result<MulticlassModel> {
     let mut clock = StageClock::new();
-    train_with_backend(data, cfg, &NativeBackend, &mut clock)
+    let backend = NativeBackend::with_threads(cfg.effective_threads());
+    train_with_backend(data, cfg, &backend, &mut clock)
 }
 
 /// Train with an explicit stage-1 backend (native or PJRT accelerator),
@@ -62,13 +67,16 @@ pub fn train_with_backend(
 ) -> anyhow::Result<MulticlassModel> {
     anyhow::ensure!(!data.is_empty(), "empty dataset");
     anyhow::ensure!(data.n_classes >= 2, "need at least two classes");
+    let threads = cfg.effective_threads();
 
-    // Stage 1 (times itself into "preparation" + "matrix_g").
-    let factor = LowRankFactor::compute(&data.x, cfg.kernel, &cfg.stage1, backend, clock)?;
+    // Stage 1 (times itself into "preparation" + "matrix_g"). The
+    // coordinator-level thread budget flows into the stage-1 backbone
+    // unless the stage-1 config pins its own count.
+    let stage1 = cfg.stage1.with_thread_fallback(threads);
+    let factor = LowRankFactor::compute(&data.x, cfg.kernel, &stage1, backend, clock)?;
 
     // Stage 2.
     let subset: Vec<usize> = (0..data.len()).collect();
-    let threads = cfg.effective_threads();
     let (heads, kind) = clock.time("linear_train", || {
         if data.n_classes == 2 {
             let (head, _) = super::ovo::train_pair(
@@ -171,7 +179,7 @@ mod tests {
         let data = spec.synth.generate();
         let cfg = TrainConfig::default();
         let mut clock = StageClock::new();
-        train_with_backend(&data, &cfg, &NativeBackend, &mut clock).unwrap();
+        train_with_backend(&data, &cfg, &NativeBackend::default(), &mut clock).unwrap();
         for stage in ["preparation", "matrix_g", "linear_train"] {
             assert!(clock.secs(stage) > 0.0, "missing stage {stage}");
         }

@@ -63,9 +63,8 @@ impl Kernel {
     }
 
     /// Batch kernel block `K[r, c] = k(x[rows[r]], landmarks[c])` where
-    /// `landmarks` is dense `B×p` with precomputed squared norms.
-    /// This is the stage-1 workhorse (native backend); the accelerator
-    /// backend computes the same block through the AOT Pallas artifact.
+    /// `landmarks` is dense `B×p` with precomputed squared norms — serial
+    /// entry point, identical to [`Kernel::block_threads`] with one thread.
     pub fn block(
         &self,
         x: &SparseMatrix,
@@ -73,34 +72,131 @@ impl Kernel {
         landmarks: &Mat,
         landmark_sq: &[f32],
     ) -> Mat {
-        assert_eq!(landmarks.rows, landmark_sq.len());
-        // Inner products via sparse × denseᵀ GEMM.
-        let mut dots = x.select_matmul_dense_t(rows, landmarks);
-        // Elementwise kernel map.
-        match *self {
-            Kernel::Linear => dots,
-            _ => {
-                for (r, &i) in rows.iter().enumerate() {
+        self.block_threads(x, rows, landmarks, landmark_sq, 1)
+    }
+
+    /// Parallel batch kernel block — the stage-1 workhorse (native
+    /// backend); the accelerator backend computes the same block through
+    /// the AOT Pallas artifact. The selected rows are partitioned into
+    /// contiguous bands over `threads` workers; each band computes the
+    /// sparse×denseᵀ inner products and applies the elementwise kernel map
+    /// in one fused pass per row, so a row's dots never leave cache before
+    /// being mapped. Banding only partitions rows, so results are
+    /// bit-identical for every thread count.
+    pub fn block_threads(
+        &self,
+        x: &SparseMatrix,
+        rows: &[usize],
+        landmarks: &Mat,
+        landmark_sq: &[f32],
+        threads: usize,
+    ) -> Mat {
+        assert!(
+            landmarks.rows == landmark_sq.len(),
+            "kernel block: {} landmarks but {} squared norms",
+            landmarks.rows,
+            landmark_sq.len()
+        );
+        assert!(
+            landmarks.cols == x.cols,
+            "kernel block: data has {} features but landmarks have {}",
+            x.cols,
+            landmarks.cols
+        );
+        if let Some(&bad) = rows.iter().find(|&&i| i >= x.rows) {
+            panic!(
+                "kernel block: row index {bad} out of bounds ({} data rows)",
+                x.rows
+            );
+        }
+        let nl = landmarks.rows;
+        let mut out = Mat::zeros(rows.len(), nl);
+        if nl == 0 {
+            return out;
+        }
+        crate::util::threads::parallel_chunks(&mut out.data, nl, threads, |band_rows, band| {
+            // Dense scratch row shared across the band, allocated lazily
+            // on the first dense-ish row (uniformly sparse data — huge p,
+            // tiny nnz — never pays for it) and re-zeroed after each use
+            // so only the touched entries are cleared.
+            let mut scratch: Vec<f32> = Vec::new();
+            for (bi, r) in band_rows.enumerate() {
+                let i = rows[r];
+                let (ci, vi) = x.row(i);
+                let orow = &mut band[bi * nl..(bi + 1) * nl];
+                // Dense-ish rows: scatter once, then SIMD dots reuse the
+                // scratch row across all landmarks. Sparse rows: per-
+                // landmark index gather. The cutover depends only on the
+                // row itself, so it is stable across thread counts.
+                if vi.len() * 8 >= x.cols {
+                    if scratch.is_empty() {
+                        scratch = vec![0.0f32; x.cols];
+                    }
+                    for (&c, &v) in ci.iter().zip(vi) {
+                        scratch[c as usize] = v;
+                    }
+                    for (j, o) in orow.iter_mut().enumerate() {
+                        *o = crate::linalg::dense::dot(&scratch, landmarks.row(j));
+                    }
+                    for &c in ci {
+                        scratch[c as usize] = 0.0;
+                    }
+                } else {
+                    for (j, o) in orow.iter_mut().enumerate() {
+                        let drow = landmarks.row(j);
+                        let mut s = 0.0f32;
+                        for (&c, &v) in ci.iter().zip(vi) {
+                            s += v * drow[c as usize];
+                        }
+                        *o = s;
+                    }
+                }
+                // Fused elementwise kernel map.
+                if !matches!(self, Kernel::Linear) {
                     let sq_x = x.row_sq_norm(i);
-                    let row = dots.row_mut(r);
-                    for (c, v) in row.iter_mut().enumerate() {
+                    for (c, v) in orow.iter_mut().enumerate() {
                         *v = self.from_products(*v, sq_x, landmark_sq[c]);
                     }
                 }
-                dots
             }
-        }
+        });
+        out
     }
 
     /// Full symmetric kernel matrix of a (small) landmark set — the `K_BB`
-    /// that stage 1 eigendecomposes.
+    /// that stage 1 eigendecomposes. Serial entry point.
     pub fn symmetric_matrix(&self, landmarks: &Mat, landmark_sq: &[f32]) -> Mat {
+        self.symmetric_matrix_threads(landmarks, landmark_sq, 1)
+    }
+
+    /// Parallel `K_BB`: triangular rows are scheduled dynamically over the
+    /// pool (row `i` costs `i + 1` dots, so static bands would starve the
+    /// workers holding early rows); the mirror copy is a cheap serial
+    /// pass. Bit-identical to the serial path for every thread count.
+    pub fn symmetric_matrix_threads(
+        &self,
+        landmarks: &Mat,
+        landmark_sq: &[f32],
+        threads: usize,
+    ) -> Mat {
+        assert!(
+            landmarks.rows == landmark_sq.len(),
+            "symmetric_matrix: {} landmarks but {} squared norms",
+            landmarks.rows,
+            landmark_sq.len()
+        );
         let b = landmarks.rows;
+        let tri = crate::util::threads::parallel_map(b, threads, |i| {
+            (0..=i)
+                .map(|j| {
+                    let dot = crate::linalg::dense::dot(landmarks.row(i), landmarks.row(j));
+                    self.from_products(dot, landmark_sq[i], landmark_sq[j])
+                })
+                .collect::<Vec<f32>>()
+        });
         let mut k = Mat::zeros(b, b);
-        for i in 0..b {
-            for j in 0..=i {
-                let dot = crate::linalg::dense::dot(landmarks.row(i), landmarks.row(j));
-                let v = self.from_products(dot, landmark_sq[i], landmark_sq[j]);
+        for (i, row) in tri.iter().enumerate() {
+            for (j, &v) in row.iter().enumerate() {
                 k.set(i, j, v);
                 k.set(j, i, v);
             }
@@ -246,6 +342,76 @@ mod tests {
         // PSD check via eigensolver.
         let e = crate::linalg::eigen::sym_eig(&m, 50, 1e-12);
         assert!(e.values.iter().all(|&l| l > -1e-4), "{:?}", e.values);
+    }
+
+    #[test]
+    fn block_threads_bitwise_matches_serial() {
+        // Mixed densities so both the scatter+SIMD and the gather inner
+        // paths run; every kernel; thread counts past the row count.
+        let mut rng = crate::util::rng::Rng::new(11);
+        let mut rows_raw: Vec<Vec<(u32, f32)>> = Vec::new();
+        for r in 0..14 {
+            let density = if r % 2 == 0 { 0.9 } else { 0.05 };
+            let mut row = Vec::new();
+            for c in 0..40u32 {
+                if rng.bool(density) {
+                    row.push((c, rng.normal() as f32));
+                }
+            }
+            rows_raw.push(row);
+        }
+        let x = SparseMatrix::from_rows(40, &rows_raw);
+        let landmarks = random_sparse(6, 40, 12).to_dense();
+        let lm_sq = landmarks.row_sq_norms();
+        let sel: Vec<usize> = vec![0, 1, 5, 9, 13, 2];
+        for k in [
+            Kernel::gaussian(0.5),
+            Kernel::Polynomial {
+                gamma: 0.3,
+                coef0: 1.0,
+                degree: 3,
+            },
+            Kernel::Tanh {
+                gamma: 0.1,
+                coef0: -0.2,
+            },
+            Kernel::Linear,
+        ] {
+            let serial = k.block_threads(&x, &sel, &landmarks, &lm_sq, 1);
+            for t in [2usize, 3, 8] {
+                let par = k.block_threads(&x, &sel, &landmarks, &lm_sq, t);
+                assert_eq!(serial, par, "{} t={t}", k.name());
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_matrix_threads_bitwise_matches_serial() {
+        let landmarks = random_sparse(9, 7, 13).to_dense();
+        let sq = landmarks.row_sq_norms();
+        let k = Kernel::gaussian(0.4);
+        let serial = k.symmetric_matrix_threads(&landmarks, &sq, 1);
+        for t in [2usize, 3, 8] {
+            assert_eq!(serial, k.symmetric_matrix_threads(&landmarks, &sq, t), "t={t}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "features")]
+    fn block_rejects_feature_dim_mismatch() {
+        let x = random_sparse(4, 6, 14);
+        let landmarks = random_sparse(3, 5, 15).to_dense(); // 5 ≠ 6 features
+        let sq = landmarks.row_sq_norms();
+        let _ = Kernel::gaussian(0.2).block(&x, &[0, 1], &landmarks, &sq);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn block_rejects_row_index_out_of_bounds() {
+        let x = random_sparse(4, 6, 16);
+        let landmarks = random_sparse(3, 6, 17).to_dense();
+        let sq = landmarks.row_sq_norms();
+        let _ = Kernel::gaussian(0.2).block(&x, &[0, 9], &landmarks, &sq);
     }
 
     #[test]

@@ -73,7 +73,7 @@ pub mod prelude {
     pub use crate::model::multiclass::MulticlassModel;
     pub use crate::model::ModelKind;
     pub use crate::serve::{
-        ModelRegistry, PredictResult, Prediction, ServeConfig, ServeEngine,
+        ModelRegistry, PredictResult, Prediction, ServeConfig, ServeEngine, ServingModel,
     };
     pub use crate::solver::{solve, Solution, SolverOptions};
     pub use crate::util::rng::Rng;

@@ -1,6 +1,26 @@
 //! Row-major dense `f32` matrix with the operations the solver needs:
-//! blocked GEMM, transposed products, row views, and a few vector
-//! primitives (`dot`, `axpy`) shared with the CD hot loop.
+//! tiled multithreaded GEMM, transposed products, row views, and a few
+//! vector primitives (`dot`, `axpy`, `axpy2`, `dot4`) shared with the CD
+//! hot loop.
+//!
+//! The GEMM is the stage-1 compute backbone: output rows are partitioned
+//! into contiguous bands over a scoped thread pool
+//! ([`crate::util::threads::parallel_chunks`]), and each band runs a
+//! KC×NC cache-tiled i-k-j loop whose inner microkernels (`axpy2`,
+//! `dot4`) are written for FMA autovectorisation with AVX2 fast paths.
+//! Banding only partitions rows, so every thread count produces
+//! bit-identical results — the `threads == 1` case *is* the serial
+//! reference path used by the differential property tests.
+
+use crate::util::threads::parallel_chunks;
+use std::ops::Range;
+
+/// Depth (reduction) block: a KC-span of `B` rows stays hot in L1/L2
+/// while a band's rows stream against it.
+const GEMM_KC: usize = 256;
+/// Column block: an NC-wide panel of `B`/`C` columns bounds the working
+/// set when `n` is large.
+const GEMM_NC: usize = 512;
 
 /// Row-major dense matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -70,45 +90,83 @@ impl Mat {
         t
     }
 
-    /// `self @ other` — cache-blocked i-k-j GEMM. Row-major friendly: the
-    /// inner loop is a contiguous axpy over the output row, which the
-    /// compiler auto-vectorises.
+    /// `self @ other` — serial entry point; identical to
+    /// [`Mat::matmul_threads`] with one thread.
     pub fn matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(m, n);
-        const BK: usize = 64;
-        for kb in (0..k).step_by(BK) {
-            let kend = (kb + BK).min(k);
-            for i in 0..m {
-                let arow = &self.data[i * k..(i + 1) * k];
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for kk in kb..kend {
-                    let a = arow[kk];
-                    if a == 0.0 {
-                        continue;
-                    }
-                    let brow = &other.data[kk * n..(kk + 1) * n];
-                    axpy(a, brow, orow);
-                }
-            }
+        self.matmul_threads(other, 1)
+    }
+
+    /// `self @ other` — cache-tiled i-k-j GEMM with output rows banded
+    /// over `threads` workers. Row-major friendly: the microkernel is a
+    /// fused two-row axpy over a contiguous NC-wide slice of the output
+    /// row. Results are bit-identical for every thread count.
+    pub fn matmul_threads(&self, other: &Mat, threads: usize) -> Mat {
+        assert!(
+            self.cols == other.rows,
+            "matmul: lhs is {}x{} but rhs is {}x{} (lhs.cols must equal rhs.rows)",
+            self.rows,
+            self.cols,
+            other.rows,
+            other.cols
+        );
+        let (k, n) = (self.cols, other.cols);
+        let mut out = Mat::zeros(self.rows, n);
+        if k == 0 || n == 0 {
+            return out;
         }
+        parallel_chunks(&mut out.data, n, threads, |rows, band| {
+            gemm_band(&self.data, &other.data, k, n, rows, band);
+        });
         out
     }
 
-    /// `self @ otherᵀ` — rows of both operands are contiguous, so each
-    /// output entry is a straight dot product. Used for Gram blocks.
+    /// `self @ otherᵀ` — serial entry point; identical to
+    /// [`Mat::matmul_nt_threads`] with one thread.
     pub fn matmul_nt(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
-        let (m, n) = (self.rows, other.rows);
-        let mut out = Mat::zeros(m, n);
-        for i in 0..m {
-            let a = self.row(i);
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for (j, o) in orow.iter_mut().enumerate() {
-                *o = dot(a, other.row(j));
-            }
+        self.matmul_nt_threads(other, 1)
+    }
+
+    /// `self @ otherᵀ` with output rows banded over `threads` workers.
+    /// Both operands are row-major, so the kernel reads `other`'s rows
+    /// directly — no transposed temporary is ever materialised — and
+    /// amortises each lhs-row load over four rhs rows via [`dot4`].
+    /// Used for Gram blocks and the serve scoring path.
+    pub fn matmul_nt_threads(&self, other: &Mat, threads: usize) -> Mat {
+        assert!(
+            self.cols == other.cols,
+            "matmul_nt: lhs is {}x{} but rhs is {}x{} (column counts must match)",
+            self.rows,
+            self.cols,
+            other.rows,
+            other.cols
+        );
+        let n = other.rows;
+        let mut out = Mat::zeros(self.rows, n);
+        if n == 0 {
+            return out;
         }
+        parallel_chunks(&mut out.data, n, threads, |rows, band| {
+            for (bi, i) in rows.enumerate() {
+                let arow = self.row(i);
+                let crow = &mut band[bi * n..(bi + 1) * n];
+                let mut j = 0usize;
+                while j + 4 <= n {
+                    let d = dot4(
+                        arow,
+                        other.row(j),
+                        other.row(j + 1),
+                        other.row(j + 2),
+                        other.row(j + 3),
+                    );
+                    crow[j..j + 4].copy_from_slice(&d);
+                    j += 4;
+                }
+                while j < n {
+                    crow[j] = dot(arow, other.row(j));
+                    j += 1;
+                }
+            }
+        });
         out
     }
 
@@ -153,6 +211,46 @@ impl Mat {
             .zip(&other.data)
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max)
+    }
+}
+
+/// One output-row band of `C += A·B`: KC×NC cache tiling around a fused
+/// two-row axpy microkernel. For any fixed element `C[i][j]` the k-updates
+/// arrive in ascending order on the fixed KC grid regardless of how rows
+/// were banded, which is what makes the parallel product bit-identical to
+/// the serial one.
+fn gemm_band(a: &[f32], b: &[f32], k: usize, n: usize, rows: Range<usize>, band: &mut [f32]) {
+    for jc in (0..n).step_by(GEMM_NC) {
+        let jw = GEMM_NC.min(n - jc);
+        for kc in (0..k).step_by(GEMM_KC) {
+            let kend = (kc + GEMM_KC).min(k);
+            for (bi, i) in rows.clone().enumerate() {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut band[bi * n + jc..bi * n + jc + jw];
+                let mut kk = kc;
+                while kk + 2 <= kend {
+                    let (a0, a1) = (arow[kk], arow[kk + 1]);
+                    let b0 = &b[kk * n + jc..kk * n + jc + jw];
+                    let b1 = &b[(kk + 1) * n + jc..(kk + 1) * n + jc + jw];
+                    // Zero-skip mirrors the sparse-ish G rows the solver
+                    // feeds through here; the branch choice depends only
+                    // on A, never on the banding.
+                    match (a0 != 0.0, a1 != 0.0) {
+                        (true, true) => axpy2(a0, b0, a1, b1, crow),
+                        (true, false) => axpy(a0, b0, crow),
+                        (false, true) => axpy(a1, b1, crow),
+                        (false, false) => {}
+                    }
+                    kk += 2;
+                }
+                if kk < kend {
+                    let a0 = arow[kk];
+                    if a0 != 0.0 {
+                        axpy(a0, &b[kk * n + jc..kk * n + jc + jw], crow);
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -249,17 +347,85 @@ unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
         i += 8;
     }
     let acc = _mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3));
-    let hi = _mm256_extractf128_ps(acc, 1);
-    let lo = _mm256_castps256_ps128(acc);
-    let sum4 = _mm_add_ps(hi, lo);
-    let sum2 = _mm_add_ps(sum4, _mm_movehl_ps(sum4, sum4));
-    let sum1 = _mm_add_ss(sum2, _mm_shuffle_ps(sum2, sum2, 0b01));
-    let mut s = _mm_cvtss_f32(sum1);
+    let mut s = hsum256(acc);
     while i < n {
         s += a[i] * b[i];
         i += 1;
     }
     s
+}
+
+/// Horizontal sum of an 8-lane f32 vector.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn hsum256(acc: core::arch::x86_64::__m256) -> f32 {
+    use core::arch::x86_64::*;
+    let hi = _mm256_extractf128_ps(acc, 1);
+    let lo = _mm256_castps256_ps128(acc);
+    let sum4 = _mm_add_ps(hi, lo);
+    let sum2 = _mm_add_ps(sum4, _mm_movehl_ps(sum4, sum4));
+    let sum1 = _mm_add_ss(sum2, _mm_shuffle_ps(sum2, sum2, 0b01));
+    _mm_cvtss_f32(sum1)
+}
+
+/// Four dot products sharing one pass over `a` — the matmul_nt
+/// microkernel. Reusing the `a` load across four `b` rows quarters the
+/// memory traffic on the lhs operand.
+#[inline]
+pub fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
+    // Hard assert: the AVX2 path reads all four rows up to a.len(), so a
+    // short slice from a caller would be an out-of-bounds read, not just a
+    // wrong answer. One branch amortised over 4 dot products is free.
+    assert!(
+        a.len() == b0.len() && a.len() == b1.len() && a.len() == b2.len() && a.len() == b3.len(),
+        "dot4: slice lengths differ"
+    );
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_available() {
+            // SAFETY: feature presence checked above.
+            return unsafe { dot4_avx2(a, b0, b1, b2, b3) };
+        }
+    }
+    [
+        dot_scalar(a, b0),
+        dot_scalar(a, b1),
+        dot_scalar(a, b2),
+        dot_scalar(a, b3),
+    ]
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot4_avx2(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
+    use core::arch::x86_64::*;
+    let n = a.len();
+    let ap = a.as_ptr();
+    let (p0, p1, p2, p3) = (b0.as_ptr(), b1.as_ptr(), b2.as_ptr(), b3.as_ptr());
+    let mut c0 = _mm256_setzero_ps();
+    let mut c1 = _mm256_setzero_ps();
+    let mut c2 = _mm256_setzero_ps();
+    let mut c3 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let av = _mm256_loadu_ps(ap.add(i));
+        c0 = _mm256_fmadd_ps(av, _mm256_loadu_ps(p0.add(i)), c0);
+        c1 = _mm256_fmadd_ps(av, _mm256_loadu_ps(p1.add(i)), c1);
+        c2 = _mm256_fmadd_ps(av, _mm256_loadu_ps(p2.add(i)), c2);
+        c3 = _mm256_fmadd_ps(av, _mm256_loadu_ps(p3.add(i)), c3);
+        i += 8;
+    }
+    let mut out = [hsum256(c0), hsum256(c1), hsum256(c2), hsum256(c3)];
+    while i < n {
+        let av = a[i];
+        out[0] += av * b0[i];
+        out[1] += av * b1[i];
+        out[2] += av * b2[i];
+        out[3] += av * b3[i];
+        i += 1;
+    }
+    out
 }
 
 /// `y += a * x` over contiguous slices — the CD step's weight update.
@@ -306,6 +472,67 @@ unsafe fn axpy_avx2(a: f32, x: &[f32], y: &mut [f32]) {
     }
     while i < n {
         *y.get_unchecked_mut(i) += a * x.get_unchecked(i);
+        i += 1;
+    }
+}
+
+/// `y += a0·x0 + a1·x1` — the fused two-row GEMM microkernel: one pass
+/// over `y` retires two k-steps, halving output-row traffic versus two
+/// `axpy` calls.
+#[inline]
+pub fn axpy2(a0: f32, x0: &[f32], a1: f32, x1: &[f32], y: &mut [f32]) {
+    // Hard assert: the AVX2 path reads both x rows up to y.len() (see
+    // `dot4` for the rationale).
+    assert!(
+        x0.len() == y.len() && x1.len() == y.len(),
+        "axpy2: slice lengths differ"
+    );
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_available() {
+            // SAFETY: feature presence checked above.
+            unsafe { axpy2_avx2(a0, x0, a1, x1, y) };
+            return;
+        }
+    }
+    for ((yi, xi0), xi1) in y.iter_mut().zip(x0).zip(x1) {
+        *yi += a0 * xi0;
+        *yi += a1 * xi1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy2_avx2(a0: f32, x0: &[f32], a1: f32, x1: &[f32], y: &mut [f32]) {
+    use core::arch::x86_64::*;
+    let n = y.len();
+    let av0 = _mm256_set1_ps(a0);
+    let av1 = _mm256_set1_ps(a1);
+    let x0p = x0.as_ptr();
+    let x1p = x1.as_ptr();
+    let yp = y.as_mut_ptr();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let mut y0 = _mm256_loadu_ps(yp.add(i));
+        let mut y1 = _mm256_loadu_ps(yp.add(i + 8));
+        y0 = _mm256_fmadd_ps(av0, _mm256_loadu_ps(x0p.add(i)), y0);
+        y1 = _mm256_fmadd_ps(av0, _mm256_loadu_ps(x0p.add(i + 8)), y1);
+        y0 = _mm256_fmadd_ps(av1, _mm256_loadu_ps(x1p.add(i)), y0);
+        y1 = _mm256_fmadd_ps(av1, _mm256_loadu_ps(x1p.add(i + 8)), y1);
+        _mm256_storeu_ps(yp.add(i), y0);
+        _mm256_storeu_ps(yp.add(i + 8), y1);
+        i += 16;
+    }
+    while i + 8 <= n {
+        let mut y0 = _mm256_loadu_ps(yp.add(i));
+        y0 = _mm256_fmadd_ps(av0, _mm256_loadu_ps(x0p.add(i)), y0);
+        y0 = _mm256_fmadd_ps(av1, _mm256_loadu_ps(x1p.add(i)), y0);
+        _mm256_storeu_ps(yp.add(i), y0);
+        i += 8;
+    }
+    while i < n {
+        let v = *y.get_unchecked(i) + a0 * *x0.get_unchecked(i) + a1 * *x1.get_unchecked(i);
+        *y.get_unchecked_mut(i) = v;
         i += 1;
     }
 }
@@ -415,10 +642,87 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
+    #[should_panic(expected = "lhs.cols must equal rhs.rows")]
     fn matmul_shape_mismatch_panics() {
         let a = Mat::zeros(2, 3);
         let b = Mat::zeros(4, 2);
         let _ = a.matmul(&b);
+    }
+
+    #[test]
+    #[should_panic(expected = "column counts must match")]
+    fn matmul_nt_shape_mismatch_panics() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(4, 2);
+        let _ = a.matmul_nt(&b);
+    }
+
+    #[test]
+    fn axpy2_matches_two_axpys() {
+        for n in [0usize, 1, 7, 8, 15, 16, 17, 33] {
+            let x0: Vec<f32> = (0..n).map(|i| i as f32 * 0.3 - 1.0).collect();
+            let x1: Vec<f32> = (0..n).map(|i| 0.5 - i as f32 * 0.2).collect();
+            let mut y = vec![0.25f32; n];
+            let mut want = y.clone();
+            axpy2(1.5, &x0, -0.75, &x1, &mut y);
+            axpy(1.5, &x0, &mut want);
+            axpy(-0.75, &x1, &mut want);
+            for i in 0..n {
+                assert!((y[i] - want[i]).abs() < 1e-5, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot4_matches_four_dots() {
+        for n in [0usize, 3, 8, 9, 31, 64] {
+            let a: Vec<f32> = (0..n).map(|i| (i as f32 * 0.7).sin()).collect();
+            let bs: Vec<Vec<f32>> = (0..4)
+                .map(|r| (0..n).map(|i| ((i + r) as f32 * 0.3).cos()).collect())
+                .collect();
+            let got = dot4(&a, &bs[0], &bs[1], &bs[2], &bs[3]);
+            for r in 0..4 {
+                let want = dot(&a, &bs[r]);
+                assert!((got[r] - want).abs() < 1e-4, "n={n} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_threads_bitwise_matches_serial() {
+        // Shapes straddle the KC (256) and NC (512) tile boundaries and
+        // the axpy2 pairing, so every code path in the band kernel runs.
+        for (m, k, n) in [(5usize, 3usize, 4usize), (9, 257, 17), (3, 64, 513), (1, 1, 1)] {
+            let a = Mat::from_fn(m, k, |i, j| ((i * 31 + j * 7) % 11) as f32 * 0.25 - 1.0);
+            let b = Mat::from_fn(k, n, |i, j| ((i * 13 + j * 3) % 7) as f32 * 0.5 - 1.5);
+            let serial = a.matmul_threads(&b, 1);
+            for t in [2usize, 3, 8] {
+                let par = a.matmul_threads(&b, t);
+                assert_eq!(serial, par, "m={m} k={k} n={n} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_nt_threads_bitwise_matches_serial() {
+        let a = Mat::from_fn(7, 33, |i, j| ((i * 5 + j) % 9) as f32 * 0.3 - 1.2);
+        let b = Mat::from_fn(13, 33, |i, j| ((i + j * 11) % 6) as f32 * 0.4 - 1.0);
+        let serial = a.matmul_nt_threads(&b, 1);
+        for t in [2usize, 3, 8] {
+            assert_eq!(serial, a.matmul_nt_threads(&b, t), "t={t}");
+        }
+        // And it agrees with the transpose formulation.
+        assert!(serial.max_abs_diff(&a.matmul(&b.transpose())) < 1e-4);
+    }
+
+    #[test]
+    fn matmul_zero_dims_are_empty() {
+        let a = Mat::zeros(3, 0);
+        let b = Mat::zeros(0, 4);
+        let c = a.matmul(&b);
+        assert_eq!((c.rows, c.cols), (3, 4));
+        assert!(c.data.iter().all(|&x| x == 0.0));
+        let d = Mat::zeros(2, 5).matmul(&Mat::zeros(5, 0));
+        assert_eq!((d.rows, d.cols), (2, 0));
     }
 }

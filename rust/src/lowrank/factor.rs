@@ -32,6 +32,11 @@ pub struct Stage1Config {
     pub chunk: usize,
     pub strategy: LandmarkStrategy,
     pub seed: u64,
+    /// Worker threads for the stage-1 compute backbone (landmark densify,
+    /// `K_BB` assembly; the per-chunk kernel block and GEMM are governed
+    /// by the backend's own thread count). 0 = auto (`LPDSVM_THREADS` or
+    /// all cores). The parallel path is bit-identical to `threads == 1`.
+    pub threads: usize,
 }
 
 impl Default for Stage1Config {
@@ -42,7 +47,30 @@ impl Default for Stage1Config {
             chunk: 256,
             strategy: LandmarkStrategy::Uniform,
             seed: 0x5eed,
+            threads: 0,
         }
+    }
+}
+
+impl Stage1Config {
+    /// Resolve `threads == 0` to the environment default.
+    pub fn effective_threads(&self) -> usize {
+        if self.threads == 0 {
+            crate::util::threads::default_threads()
+        } else {
+            self.threads
+        }
+    }
+
+    /// Copy of this config with `threads == 0` replaced by `fallback` —
+    /// how coordinators flow their resolved thread budget into stage 1
+    /// without overriding an explicitly pinned count.
+    pub fn with_thread_fallback(&self, fallback: usize) -> Stage1Config {
+        let mut cfg = self.clone();
+        if cfg.threads == 0 {
+            cfg.threads = fallback;
+        }
+        cfg
     }
 }
 
@@ -50,8 +78,10 @@ impl Default for Stage1Config {
 /// Rust GEMM path; implementations in `runtime::accel` run the AOT
 /// JAX+Pallas artifact on the PJRT client (the paper's "GPU path").
 // NOTE: deliberately NOT `Sync` — the PJRT-backed implementation wraps raw
-// C pointers. Stage-1 chunks are processed sequentially per factor; pair-
-// level parallelism happens above this layer on plain `Mat` data.
+// C pointers. Stage-1 chunks are processed sequentially per factor; the
+// native backend parallelises *inside* each chunk (row-banded kernel
+// block + GEMM), and pair-level parallelism happens above this layer on
+// plain `Mat` data.
 pub trait Stage1Backend {
     /// Compute `K(X[rows], L) @ W` for one chunk.
     /// `x_sq[r]` are the squared norms of the selected rows.
@@ -69,8 +99,36 @@ pub trait Stage1Backend {
 }
 
 /// Pure-Rust backend (the paper's CPU path: Eigen + OpenMP there, our
-/// blocked GEMM + thread pool here).
-pub struct NativeBackend;
+/// tiled GEMM + scoped thread pool here). `threads` controls the row-band
+/// parallelism of the per-chunk kernel block and the `K·W` product:
+/// 0 = auto (`LPDSVM_THREADS` or all cores), 1 = the serial reference
+/// path. Any thread count produces bit-identical chunks.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeBackend {
+    pub threads: usize,
+}
+
+impl NativeBackend {
+    /// Single-threaded backend — the differential-testing reference, and
+    /// the right choice inside an outer worker pool (e.g. serve workers,
+    /// which already saturate the cores at one backend per worker).
+    pub fn serial() -> NativeBackend {
+        NativeBackend { threads: 1 }
+    }
+
+    /// Backend with an explicit thread count (0 = auto).
+    pub fn with_threads(threads: usize) -> NativeBackend {
+        NativeBackend { threads }
+    }
+
+    fn effective_threads(&self) -> usize {
+        if self.threads == 0 {
+            crate::util::threads::default_threads()
+        } else {
+            self.threads
+        }
+    }
+}
 
 impl Stage1Backend for NativeBackend {
     fn g_chunk(
@@ -82,8 +140,9 @@ impl Stage1Backend for NativeBackend {
         whiten: &Mat,
         kernel: &Kernel,
     ) -> anyhow::Result<Mat> {
-        let k_block = kernel.block(x, rows, landmarks, landmark_sq);
-        Ok(k_block.matmul(whiten))
+        let threads = self.effective_threads();
+        let k_block = kernel.block_threads(x, rows, landmarks, landmark_sq, threads);
+        Ok(k_block.matmul_threads(whiten, threads))
     }
 
     fn name(&self) -> &'static str {
@@ -124,12 +183,13 @@ impl LowRankFactor {
     ) -> anyhow::Result<LowRankFactor> {
         anyhow::ensure!(x.rows > 0, "empty dataset");
         let mut rng = Rng::new(cfg.seed);
+        let threads = cfg.effective_threads();
 
         // --- preparation: landmarks, K_BB, eigendecomposition ---
         let (landmark_idx, lm, lm_sq, eig, rank, whiten) = clock.time("preparation", || {
             let landmark_idx = landmarks::select(x, cfg.budget, cfg.strategy, &kernel, &mut rng);
-            let (lm, lm_sq) = landmarks::densify(x, &landmark_idx);
-            let k_bb = kernel.symmetric_matrix(&lm, &lm_sq);
+            let (lm, lm_sq) = landmarks::densify_threads(x, &landmark_idx, threads);
+            let k_bb = kernel.symmetric_matrix_threads(&lm, &lm_sq, threads);
             let eig = sym_eig(&k_bb, 40, 1e-12);
             let rank = eig.effective_rank(cfg.eps_rank).max(1);
             let whiten = eig.whitening_map(rank);
@@ -229,7 +289,7 @@ mod tests {
             ..Default::default()
         };
         let mut clock = StageClock::new();
-        LowRankFactor::compute(x, Kernel::gaussian(0.2), &cfg, &NativeBackend, &mut clock)
+        LowRankFactor::compute(x, Kernel::gaussian(0.2), &cfg, &NativeBackend::default(), &mut clock)
             .unwrap()
     }
 
@@ -290,7 +350,7 @@ mod tests {
         // Transforming the training data again must reproduce G.
         let x = dataset(80, 6, 4);
         let f = compute(&x, 24);
-        let g2 = f.transform(&x, &NativeBackend, 23).unwrap();
+        let g2 = f.transform(&x, &NativeBackend::default(), 23).unwrap();
         assert!(f.g.max_abs_diff(&g2) < 1e-5);
     }
 
@@ -311,7 +371,7 @@ mod tests {
             &x,
             Kernel::gaussian(0.001), // nearly linear regime
             &cfg,
-            &NativeBackend,
+            &NativeBackend::default(),
             &mut clock,
         )
         .unwrap();
@@ -326,10 +386,39 @@ mod tests {
             ..Default::default()
         };
         let mut clock = StageClock::new();
-        LowRankFactor::compute(&x, Kernel::gaussian(0.3), &cfg, &NativeBackend, &mut clock)
+        LowRankFactor::compute(&x, Kernel::gaussian(0.3), &cfg, &NativeBackend::default(), &mut clock)
             .unwrap();
         assert!(clock.secs("preparation") > 0.0);
         assert!(clock.secs("matrix_g") > 0.0);
+    }
+
+    #[test]
+    fn parallel_stage1_bitwise_matches_serial() {
+        let x = dataset(90, 8, 8);
+        let run = |threads: usize| {
+            let cfg = Stage1Config {
+                budget: 24,
+                chunk: 17,
+                threads,
+                ..Default::default()
+            };
+            let mut clock = StageClock::new();
+            LowRankFactor::compute(
+                &x,
+                Kernel::gaussian(0.25),
+                &cfg,
+                &NativeBackend::with_threads(threads),
+                &mut clock,
+            )
+            .unwrap()
+        };
+        let serial = run(1);
+        for t in [2usize, 3, 8] {
+            let par = run(t);
+            assert_eq!(serial.g, par.g, "G differs at t={t}");
+            assert_eq!(serial.whiten, par.whiten, "whiten differs at t={t}");
+            assert_eq!(serial.rank, par.rank, "rank differs at t={t}");
+        }
     }
 
     #[test]

@@ -100,15 +100,25 @@ fn kmeanspp(x: &SparseMatrix, b: usize, kernel: &Kernel, rng: &mut Rng) -> Vec<u
 
 /// Densify the selected landmark rows into a `B×p` matrix with
 /// precomputed squared norms — the representation both backends consume.
+/// Serial entry point, identical to [`densify_threads`] with one thread.
 pub fn densify(x: &SparseMatrix, idx: &[usize]) -> (Mat, Vec<f32>) {
-    let mut m = Mat::zeros(idx.len(), x.cols);
-    for (r, &i) in idx.iter().enumerate() {
-        let (c, v) = x.row(i);
-        let row = m.row_mut(r);
-        for (&ci, &vi) in c.iter().zip(v) {
-            row[ci as usize] = vi;
+    densify_threads(x, idx, 1)
+}
+
+/// Parallel densify: landmark rows are scattered into disjoint row bands
+/// of the output matrix (bit-identical for every thread count).
+pub fn densify_threads(x: &SparseMatrix, idx: &[usize], threads: usize) -> (Mat, Vec<f32>) {
+    let cols = x.cols;
+    let mut m = Mat::zeros(idx.len(), cols);
+    crate::util::threads::parallel_chunks(&mut m.data, cols, threads, |rows, band| {
+        for (bi, r) in rows.enumerate() {
+            let (c, v) = x.row(idx[r]);
+            let row = &mut band[bi * cols..(bi + 1) * cols];
+            for (&ci, &vi) in c.iter().zip(v) {
+                row[ci as usize] = vi;
+            }
         }
-    }
+    });
     let sq = m.row_sq_norms();
     (m, sq)
 }

@@ -99,7 +99,7 @@ fn with_backend<T>(
     f: impl FnOnce(&dyn Stage1Backend) -> anyhow::Result<T>,
 ) -> anyhow::Result<T> {
     match name {
-        "native" => f(&NativeBackend),
+        "native" => f(&NativeBackend::default()),
         "pjrt" => {
             let rt = Runtime::load(&Runtime::default_dir())?;
             let backend = AccelBackend::new(&rt);

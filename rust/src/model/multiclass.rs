@@ -47,7 +47,7 @@ impl MulticlassModel {
 
     /// Predict class labels with the native backend.
     pub fn predict(&self, x: &SparseMatrix) -> anyhow::Result<Vec<u32>> {
-        self.predict_with_backend(x, &NativeBackend)
+        self.predict_with_backend(x, &NativeBackend::default())
     }
 
     /// Predict class labels; `backend` controls how features are computed
@@ -61,7 +61,11 @@ impl MulticlassModel {
         Ok(self.predict_from_features(&g))
     }
 
-    /// Predict from precomputed G-space features (e.g. shared across folds).
+    /// Predict from precomputed G-space features (e.g. shared across
+    /// folds). Rebuilds the stacked weight matrix per call; hot paths that
+    /// score the same model repeatedly (the serve registry) should cache
+    /// [`MulticlassModel::weight_matrix`] once and use
+    /// [`MulticlassModel::predict_with_weights`].
     pub fn predict_from_features(&self, g: &Mat) -> Vec<u32> {
         match self.kind {
             ModelKind::Binary => {
@@ -71,11 +75,34 @@ impl MulticlassModel {
                     .map(|s| if s > 0.0 { 1 } else { 0 })
                     .collect()
             }
+            ModelKind::OneVsOne { .. } => self.predict_with_weights(g, &self.weight_matrix()),
+        }
+    }
+
+    /// Predict from precomputed features *and* a precomputed stacked
+    /// weight matrix (see [`MulticlassModel::weight_matrix`]) — the serve
+    /// hot path, where the registry builds the stack once at insert time
+    /// instead of once per batch.
+    pub fn predict_with_weights(&self, g: &Mat, w_mat: &Mat) -> Vec<u32> {
+        assert!(
+            w_mat.rows == self.heads.len() && w_mat.cols == self.factor.rank,
+            "weight matrix is {}x{} but the model has {} heads of rank {}",
+            w_mat.rows,
+            w_mat.cols,
+            self.heads.len(),
+            self.factor.rank
+        );
+        match self.kind {
+            ModelKind::Binary => {
+                g.matvec(&self.heads[0].w)
+                    .into_iter()
+                    .map(|s| if s > 0.0 { 1 } else { 0 })
+                    .collect()
+            }
             ModelKind::OneVsOne { n_classes } => {
                 // Batch decision values: scores = G · W_pairsᵀ (n × pairs) —
                 // one dense matmul, the GPU-friendly prediction path.
-                let w_mat = self.weight_matrix();
-                let scores = g.matmul_nt(&w_mat);
+                let scores = g.matmul_nt(w_mat);
                 (0..g.rows)
                     .map(|i| {
                         let mut votes = vec![0u32; n_classes];

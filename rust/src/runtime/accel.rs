@@ -243,7 +243,7 @@ mod tests {
         let kernel = Kernel::gaussian(0.1);
         let mut clock = StageClock::new();
         let f_native =
-            LowRankFactor::compute(&x, kernel, &cfg, &NativeBackend, &mut clock).unwrap();
+            LowRankFactor::compute(&x, kernel, &cfg, &NativeBackend::default(), &mut clock).unwrap();
         let accel = AccelBackend::new(&rt);
         let mut clock2 = StageClock::new();
         let f_accel = LowRankFactor::compute(&x, kernel, &cfg, &accel, &mut clock2).unwrap();
@@ -294,7 +294,7 @@ mod tests {
         let f = LowRankFactor::compute(&x, kernel, &cfg, &accel, &mut clock).unwrap();
         let mut clock2 = StageClock::new();
         let f_native =
-            LowRankFactor::compute(&x, kernel, &cfg, &NativeBackend, &mut clock2).unwrap();
+            LowRankFactor::compute(&x, kernel, &cfg, &NativeBackend::default(), &mut clock2).unwrap();
         assert!(f.g.max_abs_diff(&f_native.g) < 1e-3);
     }
 }

@@ -4,7 +4,8 @@
 //! batches under a latency/size policy (dispatch when `max_batch` rows are
 //! waiting, or when the oldest request has waited `max_wait`) and score
 //! each batch with one stage-1 transform (`G_batch = K(X_batch, L)·W`)
-//! plus one blocked GEMM against the stacked head weights — the same
+//! plus one blocked GEMM against the stacked head weights (prebuilt once
+//! at registry insert time, not per batch) — the same
 //! amortization that wins at training time (paper §4; Tyree et al. make
 //! the identical observation for inference). Each worker owns its own
 //! [`Stage1Backend`] instance (the trait is deliberately `!Sync`: the PJRT
@@ -56,12 +57,14 @@ pub trait BackendProvider: Send + Sync {
     fn backend(&self) -> anyhow::Result<Box<dyn Stage1Backend + '_>>;
 }
 
-/// Provider for the pure-Rust GEMM path — the default.
+/// Provider for the pure-Rust GEMM path — the default. Each worker gets a
+/// *serial* backend: the pool already runs one worker per core, so nested
+/// row-band parallelism inside a batch would only oversubscribe.
 pub struct NativeProvider;
 
 impl BackendProvider for NativeProvider {
     fn backend(&self) -> anyhow::Result<Box<dyn Stage1Backend + '_>> {
-        Ok(Box::new(NativeBackend))
+        Ok(Box::new(NativeBackend::serial()))
     }
 }
 

@@ -38,5 +38,5 @@ pub mod session;
 
 pub use engine::{BackendProvider, NativeProvider, PjrtProvider, ServeConfig, ServeEngine};
 pub use metrics::{Histogram, ServeMetrics};
-pub use registry::ModelRegistry;
+pub use registry::{ModelRegistry, ServingModel};
 pub use session::{PredictResult, Prediction, ServeError, Ticket};

@@ -4,17 +4,80 @@
 //! serving path's point of view: batches formed before a swap finish on
 //! the old model (their `Arc` keeps it alive), batches formed after see
 //! the new one — zero downtime, no draining required.
+//!
+//! Each registered model is wrapped in a [`ServingModel`] that carries
+//! whatever the scoring hot path wants precomputed — today the stacked
+//! OVO head-weight matrix, built **once at insert time** instead of once
+//! per batch (`MulticlassModel::predict_from_features` rebuilds it every
+//! call).
 
+use crate::linalg::Mat;
 use crate::model::io as model_io;
 use crate::model::multiclass::MulticlassModel;
 use std::collections::HashMap;
+use std::ops::Deref;
 use std::path::Path;
 use std::sync::{Arc, RwLock};
 
-/// Thread-safe map of serving name → trained model.
+/// A registered model plus its insert-time precomputations. Derefs to the
+/// inner [`MulticlassModel`], so factor access and feature transforms read
+/// straight through; only `predict_from_features` is shadowed to use the
+/// cached weight stack.
+pub struct ServingModel {
+    model: Arc<MulticlassModel>,
+    /// Stacked `pairs × rank` head weights
+    /// ([`MulticlassModel::weight_matrix`]), cached at insert time. `None`
+    /// when the head shapes are inconsistent with the factor rank — then
+    /// scoring falls back to the per-batch path, whose panic a serve
+    /// worker catches per batch (see the poisoned-model integration test)
+    /// instead of taking down the thread that called `insert`.
+    weights: Option<Mat>,
+}
+
+impl ServingModel {
+    pub fn new(model: Arc<MulticlassModel>) -> ServingModel {
+        let rank = model.factor.rank;
+        let consistent = model.heads.iter().all(|h| h.w.len() == rank);
+        let weights = if consistent {
+            Some(model.weight_matrix())
+        } else {
+            None
+        };
+        ServingModel { model, weights }
+    }
+
+    /// The shared inner model.
+    pub fn model(&self) -> &Arc<MulticlassModel> {
+        &self.model
+    }
+
+    /// Whether the stacked weight matrix was cached at insert time.
+    pub fn has_cached_weights(&self) -> bool {
+        self.weights.is_some()
+    }
+
+    /// Score precomputed G-space features through the cached weight stack
+    /// — the engine's per-batch scoring path.
+    pub fn predict_from_features(&self, g: &Mat) -> Vec<u32> {
+        match &self.weights {
+            Some(w) => self.model.predict_with_weights(g, w),
+            None => self.model.predict_from_features(g),
+        }
+    }
+}
+
+impl Deref for ServingModel {
+    type Target = MulticlassModel;
+
+    fn deref(&self) -> &MulticlassModel {
+        &self.model
+    }
+}
+
+/// Thread-safe map of serving name → trained model (+ scoring cache).
 #[derive(Default)]
 pub struct ModelRegistry {
-    models: RwLock<HashMap<String, Arc<MulticlassModel>>>,
+    models: RwLock<HashMap<String, Arc<ServingModel>>>,
 }
 
 impl ModelRegistry {
@@ -23,7 +86,7 @@ impl ModelRegistry {
     }
 
     /// Register (or hot-swap) `name`. Returns the replaced model, if any.
-    pub fn insert(&self, name: &str, model: MulticlassModel) -> Option<Arc<MulticlassModel>> {
+    pub fn insert(&self, name: &str, model: MulticlassModel) -> Option<Arc<ServingModel>> {
         self.insert_arc(name, Arc::new(model))
     }
 
@@ -32,11 +95,12 @@ impl ModelRegistry {
         &self,
         name: &str,
         model: Arc<MulticlassModel>,
-    ) -> Option<Arc<MulticlassModel>> {
-        self.models
-            .write()
-            .unwrap()
-            .insert(name.to_string(), model)
+    ) -> Option<Arc<ServingModel>> {
+        // Build the serving wrapper (weight-stack allocation + copy)
+        // *before* taking the write lock so concurrent `get()`s on the
+        // scoring path never wait on a large model's precomputation.
+        let serving = Arc::new(ServingModel::new(model));
+        self.models.write().unwrap().insert(name.to_string(), serving)
     }
 
     /// Load a model file via [`crate::model::io`] and register it under
@@ -46,18 +110,18 @@ impl ModelRegistry {
         &self,
         name: &str,
         path: &Path,
-    ) -> anyhow::Result<Option<Arc<MulticlassModel>>> {
+    ) -> anyhow::Result<Option<Arc<ServingModel>>> {
         let model = model_io::load(path)?;
         Ok(self.insert(name, model))
     }
 
     /// Fetch a model for scoring. Cheap: one read-lock + `Arc` clone.
-    pub fn get(&self, name: &str) -> Option<Arc<MulticlassModel>> {
+    pub fn get(&self, name: &str) -> Option<Arc<ServingModel>> {
         self.models.read().unwrap().get(name).cloned()
     }
 
     /// Unregister `name`; in-flight batches holding the `Arc` still finish.
-    pub fn remove(&self, name: &str) -> Option<Arc<MulticlassModel>> {
+    pub fn remove(&self, name: &str) -> Option<Arc<ServingModel>> {
         self.models.write().unwrap().remove(name)
     }
 
@@ -119,6 +183,52 @@ mod tests {
         assert!(Arc::ptr_eq(&before, &replaced));
         let after = reg.get("m").unwrap();
         assert!(!Arc::ptr_eq(&before, &after));
+    }
+
+    #[test]
+    fn insert_caches_weight_matrix() {
+        let reg = ModelRegistry::new();
+        reg.insert("m", tiny_model(6));
+        let sm = reg.get("m").unwrap();
+        assert!(sm.has_cached_weights());
+        // Cached-path predictions agree with the per-batch rebuild path.
+        let g = sm.factor.g.select_rows(&[0, 1, 2, 3]);
+        let via_cache = sm.predict_from_features(&g);
+        let via_rebuild = sm.model().predict_from_features(&g);
+        assert_eq!(via_cache, via_rebuild);
+    }
+
+    #[test]
+    fn inconsistent_model_skips_weight_cache() {
+        use crate::kernel::Kernel;
+        use crate::model::multiclass::BinaryHead;
+        use crate::model::ModelKind;
+        let broken = MulticlassModel {
+            factor: crate::lowrank::LowRankFactor {
+                g: crate::linalg::Mat::from_vec(1, 1, vec![1.0]),
+                landmarks: crate::linalg::Mat::from_vec(1, 1, vec![1.0]),
+                landmark_sq: vec![1.0],
+                whiten: crate::linalg::Mat::from_vec(1, 1, vec![1.0]),
+                rank: 1,
+                eigenvalues: vec![1.0],
+                kernel: Kernel::Linear,
+                landmark_idx: vec![0],
+            },
+            heads: vec![BinaryHead {
+                pair: (0, 1),
+                w: vec![1.0, 2.0], // wrong length vs rank 1
+                objective: 0.0,
+                converged: true,
+                sv_count: 0,
+                steps: 0,
+            }],
+            kind: ModelKind::Binary,
+        };
+        let reg = ModelRegistry::new();
+        // Must not panic at insert time — the scoring path owns the
+        // failure so serve workers can catch it per batch.
+        reg.insert("broken", broken);
+        assert!(!reg.get("broken").unwrap().has_cached_weights());
     }
 
     #[test]

@@ -275,7 +275,7 @@ mod tests {
                 budget: 50,
                 ..Default::default()
             },
-            &NativeBackend,
+            &NativeBackend::default(),
             &mut clock,
         )
         .unwrap();

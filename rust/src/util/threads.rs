@@ -3,11 +3,16 @@
 //! binary SVM problems (OVO pairs × folds × grid points) over this pool,
 //! mirroring the paper's OpenMP/multi-GPU job farm.
 //!
-//! The pool is work-stealing-free by design: jobs are pulled from a shared
-//! atomic counter over an indexed job list, which is both simpler and
-//! contention-free for the coarse-grained jobs we schedule (each job is an
-//! entire SVM training run).
+//! Two primitives cover both ends of the granularity spectrum:
+//! * [`parallel_map`] — dynamic scheduling over an indexed job list via a
+//!   shared atomic counter; right for coarse, uneven jobs (each job is an
+//!   entire SVM training run, or one triangular Gram row).
+//! * [`parallel_chunks`] — static contiguous row bands over a mutable
+//!   buffer; right for the regular, GEMM-shaped inner loops of the stage-1
+//!   compute backbone, where each band writes a disjoint slice of the
+//!   output and per-row work is uniform.
 
+use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Number of worker threads to use: respects `LPDSVM_THREADS`, defaults to
@@ -63,6 +68,44 @@ where
     out.into_iter().map(|v| v.expect("job not run")).collect()
 }
 
+/// Split `data` — a row-major buffer of `row_len`-element rows — into at
+/// most `threads` contiguous row bands and run `f(rows, band)` on each
+/// band in parallel. `rows` is the half-open range of row indices the band
+/// covers and `band` is the mutable slice holding exactly those rows, so
+/// every worker writes a disjoint region with no synchronisation. This is
+/// the row-band backbone under the tiled GEMM and the batch kernel blocks;
+/// because banding only partitions *rows*, each output row is computed by
+/// exactly one worker in exactly the order the serial path would use, and
+/// results are bit-identical for every thread count.
+///
+/// Degenerate inputs are handled without spawning: an empty buffer (or
+/// `row_len == 0`) is a no-op, and `threads` is clamped to the row count.
+pub fn parallel_chunks<T, F>(data: &mut [T], row_len: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(Range<usize>, &mut [T]) + Sync,
+{
+    if row_len == 0 || data.is_empty() {
+        return;
+    }
+    let rows = data.len() / row_len;
+    debug_assert_eq!(rows * row_len, data.len(), "buffer is not whole rows");
+    let threads = threads.clamp(1, rows.max(1));
+    if threads <= 1 {
+        f(0..rows, data);
+        return;
+    }
+    let band = rows.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (t, chunk) in data.chunks_mut(band * row_len).enumerate() {
+            let f = &f;
+            let start = t * band;
+            let end = start + chunk.len() / row_len;
+            scope.spawn(move || f(start..end, chunk));
+        }
+    });
+}
+
 /// Covariant raw pointer wrapper so slots can be shared across the scope.
 struct SlotPtr<T>(*mut Option<T>);
 // SAFETY: disjoint writes enforced by the atomic job counter (see above).
@@ -104,5 +147,58 @@ mod tests {
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, (0..i).sum::<usize>());
         }
+    }
+
+    #[test]
+    fn chunks_cover_all_rows_once() {
+        // 13 rows of 5 elements over 4 threads: bands must tile the buffer.
+        let mut data = vec![0u32; 13 * 5];
+        parallel_chunks(&mut data, 5, 4, |rows, band| {
+            assert_eq!(band.len(), rows.len() * 5);
+            for (bi, r) in rows.enumerate() {
+                for x in &mut band[bi * 5..(bi + 1) * 5] {
+                    *x += 1 + r as u32;
+                }
+            }
+        });
+        for r in 0..13 {
+            for c in 0..5 {
+                // Each element written exactly once, by its own row's band.
+                assert_eq!(data[r * 5 + c], 1 + r as u32, "row {r} col {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunks_empty_input_is_noop() {
+        let mut empty: Vec<f32> = Vec::new();
+        parallel_chunks(&mut empty, 8, 4, |_, _| panic!("must not be called"));
+        // row_len == 0 is equally degenerate.
+        let mut data = vec![1.0f32; 4];
+        parallel_chunks(&mut data, 0, 4, |_, _| panic!("must not be called"));
+        assert_eq!(data, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn chunks_more_threads_than_rows() {
+        let mut data = vec![0usize; 3 * 2];
+        parallel_chunks(&mut data, 2, 64, |rows, band| {
+            for (bi, r) in rows.enumerate() {
+                band[bi * 2] = r;
+                band[bi * 2 + 1] = r * 10;
+            }
+        });
+        assert_eq!(data, vec![0, 0, 1, 10, 2, 20]);
+    }
+
+    #[test]
+    fn chunks_single_thread_runs_inline() {
+        let mut data = vec![0i32; 6];
+        parallel_chunks(&mut data, 3, 1, |rows, band| {
+            assert_eq!(rows, 0..2);
+            assert_eq!(band.len(), 6);
+            band[0] = 7;
+        });
+        assert_eq!(data[0], 7);
     }
 }

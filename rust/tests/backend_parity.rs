@@ -40,7 +40,7 @@ fn full_training_agrees_across_backends() {
             ..Default::default()
         };
         let mut c1 = StageClock::new();
-        let m_native = train_with_backend(&data, &cfg, &NativeBackend, &mut c1).unwrap();
+        let m_native = train_with_backend(&data, &cfg, &NativeBackend::default(), &mut c1).unwrap();
         let accel = AccelBackend::new(&rt);
         let mut c2 = StageClock::new();
         let m_accel = train_with_backend(&data, &cfg, &accel, &mut c2).unwrap();
@@ -77,13 +77,13 @@ fn transform_matches_for_fresh_data() {
         &data.x,
         kernel,
         &cfg,
-        &NativeBackend,
+        &NativeBackend::default(),
         &mut clock,
     )
     .unwrap();
     // Fresh data through both transform paths.
     let fresh = PaperDataset::Epsilon.spec(0.0003, 99).synth.generate();
-    let g_native = factor.transform(&fresh.x, &NativeBackend, 256).unwrap();
+    let g_native = factor.transform(&fresh.x, &NativeBackend::default(), 256).unwrap();
     let accel = AccelBackend::new(&rt);
     let g_accel = factor.transform(&fresh.x, &accel, 256).unwrap();
     let diff = g_native.max_abs_diff(&g_accel);

@@ -256,7 +256,7 @@ fn prop_nystrom_psd_and_exact_on_landmarks() {
                 budget: n / 2,
                 ..Default::default()
             },
-            &NativeBackend,
+            &NativeBackend::default(),
             &mut clock,
         )
         .map_err(|e| e.to_string())?;

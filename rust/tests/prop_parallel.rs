@@ -1,0 +1,275 @@
+//! Differential properties of the parallel compute backbone: for every
+//! thread count, the row-banded tiled GEMM, the batch kernel blocks, the
+//! stage-1 factor and full training must be *bit-identical* to the serial
+//! (`threads == 1`) path. Banding only partitions output rows, so each row
+//! is computed by exactly one worker in exactly the serial order — these
+//! tests pin that contract down across shapes and all four kernels.
+
+use lpdsvm::coordinator::train::{train, TrainConfig};
+use lpdsvm::data::sparse::SparseMatrix;
+use lpdsvm::data::synth::{FeatureStyle, SynthSpec};
+use lpdsvm::kernel::Kernel;
+use lpdsvm::linalg::Mat;
+use lpdsvm::lowrank::factor::{LowRankFactor, NativeBackend};
+use lpdsvm::lowrank::Stage1Config;
+use lpdsvm::testing::prop::{forall, Gen};
+use lpdsvm::util::rng::Rng;
+use lpdsvm::util::timer::StageClock;
+
+const THREADS: [usize; 4] = [1, 2, 3, 8];
+
+fn all_kernels() -> [Kernel; 4] {
+    [
+        Kernel::gaussian(0.4),
+        Kernel::Polynomial {
+            gamma: 0.3,
+            coef0: 1.0,
+            degree: 3,
+        },
+        Kernel::Tanh {
+            gamma: 0.2,
+            coef0: -0.1,
+        },
+        Kernel::Linear,
+    ]
+}
+
+/// Random GEMM shape, shrinking toward minimal dimensions.
+#[derive(Clone, Debug)]
+struct GemmShape {
+    m: usize,
+    k: usize,
+    n: usize,
+    seed: u64,
+}
+
+fn shape_gen() -> Gen<GemmShape> {
+    Gen::new(
+        |rng: &mut Rng| GemmShape {
+            m: 1 + rng.usize(24),
+            // Occasionally straddle the KC = 256 tile boundary.
+            k: 1 + if rng.bool(0.2) { 250 + rng.usize(20) } else { rng.usize(40) },
+            n: 1 + rng.usize(24),
+            seed: rng.next_u64(),
+        },
+        |p| {
+            let mut out = Vec::new();
+            if p.m > 1 {
+                out.push(GemmShape { m: 1 + (p.m - 1) / 2, ..p.clone() });
+            }
+            if p.k > 1 {
+                out.push(GemmShape { k: 1 + (p.k - 1) / 2, ..p.clone() });
+            }
+            if p.n > 1 {
+                out.push(GemmShape { n: 1 + (p.n - 1) / 2, ..p.clone() });
+            }
+            out
+        },
+    )
+}
+
+fn random_mat(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+    Mat::from_fn(rows, cols, |_, _| rng.normal() as f32)
+}
+
+#[test]
+fn prop_parallel_gemm_bitwise_matches_serial() {
+    forall("parallel-gemm", 25, &shape_gen(), |p| {
+        let mut rng = Rng::new(p.seed);
+        let a = random_mat(p.m, p.k, &mut rng);
+        let b = random_mat(p.k, p.n, &mut rng);
+        let serial = a.matmul_threads(&b, 1);
+        for &t in &THREADS {
+            let par = a.matmul_threads(&b, t);
+            if serial != par {
+                return Err(format!("matmul differs at t={t}"));
+            }
+        }
+        // Cross-check against the naive triple loop (FMA reassociation
+        // allows tiny rounding differences, never large ones).
+        for i in 0..p.m {
+            for j in 0..p.n {
+                let mut want = 0.0f64;
+                for kk in 0..p.k {
+                    want += a.at(i, kk) as f64 * b.at(kk, j) as f64;
+                }
+                let got = serial.at(i, j) as f64;
+                let tol = 5e-4 * (1.0 + want.abs());
+                if (got - want).abs() > tol {
+                    return Err(format!("({i},{j}): {got} vs naive {want}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_matmul_nt_bitwise_matches_serial() {
+    forall("parallel-matmul-nt", 25, &shape_gen(), |p| {
+        let mut rng = Rng::new(p.seed);
+        let a = random_mat(p.m, p.k, &mut rng);
+        let b = random_mat(p.n, p.k, &mut rng);
+        let serial = a.matmul_nt_threads(&b, 1);
+        for &t in &THREADS {
+            if serial != a.matmul_nt_threads(&b, t) {
+                return Err(format!("matmul_nt differs at t={t}"));
+            }
+        }
+        let via_t = a.matmul(&b.transpose());
+        let diff = serial.max_abs_diff(&via_t);
+        if diff > 1e-3 {
+            return Err(format!("matmul_nt vs transpose formulation: diff {diff}"));
+        }
+        Ok(())
+    });
+}
+
+/// Random sparse dataset with mixed row densities (exercises both the
+/// scatter+SIMD and the gather inner paths of the kernel block).
+fn random_sparse(n: usize, p: usize, seed: u64) -> SparseMatrix {
+    let mut rng = Rng::new(seed);
+    let mut rows: Vec<Vec<(u32, f32)>> = Vec::with_capacity(n);
+    for r in 0..n {
+        let density = if r % 3 == 0 { 0.05 } else { 0.8 };
+        let mut row = Vec::new();
+        for c in 0..p as u32 {
+            if rng.bool(density) {
+                row.push((c, rng.normal() as f32));
+            }
+        }
+        rows.push(row);
+    }
+    SparseMatrix::from_rows(p, &rows)
+}
+
+#[test]
+fn prop_kernel_block_bitwise_matches_serial_all_kernels() {
+    forall("parallel-kernel-block", 12, &shape_gen(), |p| {
+        let n = 2 + p.m;
+        let feats = 1 + p.k.min(48);
+        let x = random_sparse(n, feats, p.seed);
+        let landmarks = random_sparse(1 + p.n.min(12), feats, p.seed ^ 0xABCD).to_dense();
+        let lm_sq = landmarks.row_sq_norms();
+        let sel: Vec<usize> = (0..n).step_by(2).collect();
+        for kernel in all_kernels() {
+            let serial = kernel.block_threads(&x, &sel, &landmarks, &lm_sq, 1);
+            for &t in &THREADS {
+                let par = kernel.block_threads(&x, &sel, &landmarks, &lm_sq, t);
+                if serial != par {
+                    return Err(format!("{} block differs at t={t}", kernel.name()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_symmetric_matrix_bitwise_matches_serial() {
+    forall("parallel-symmetric-matrix", 12, &shape_gen(), |p| {
+        let b = 1 + p.m.min(16);
+        let feats = 1 + p.k.min(24);
+        let landmarks = random_sparse(b, feats, p.seed).to_dense();
+        let sq = landmarks.row_sq_norms();
+        for kernel in all_kernels() {
+            let serial = kernel.symmetric_matrix_threads(&landmarks, &sq, 1);
+            for &t in &THREADS {
+                if serial != kernel.symmetric_matrix_threads(&landmarks, &sq, t) {
+                    return Err(format!("{} K_BB differs at t={t}", kernel.name()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+fn stage1_dataset(n: usize, p: usize, classes: usize, seed: u64) -> lpdsvm::prelude::Dataset {
+    SynthSpec {
+        name: "prop-parallel".into(),
+        n,
+        p,
+        n_classes: classes,
+        sep: 4.0,
+        latent: 4,
+        noise: 1.0,
+        style: FeatureStyle::Dense,
+        seed,
+    }
+    .generate()
+}
+
+#[test]
+fn stage1_factor_bitwise_identical_across_threads_all_kernels() {
+    let data = stage1_dataset(110, 9, 2, 31);
+    for kernel in all_kernels() {
+        let run = |threads: usize| {
+            let cfg = Stage1Config {
+                budget: 28,
+                chunk: 23, // deliberately not dividing n evenly
+                threads,
+                seed: 77,
+                ..Default::default()
+            };
+            let mut clock = StageClock::new();
+            LowRankFactor::compute(
+                &data.x,
+                kernel,
+                &cfg,
+                &NativeBackend::with_threads(threads),
+                &mut clock,
+            )
+            .unwrap()
+        };
+        let serial = run(1);
+        for &t in &THREADS[1..] {
+            let par = run(t);
+            assert_eq!(serial.g, par.g, "{}: G differs at t={t}", kernel.name());
+            assert_eq!(
+                serial.whiten,
+                par.whiten,
+                "{}: whiten differs at t={t}",
+                kernel.name()
+            );
+            assert_eq!(serial.rank, par.rank, "{}: rank differs at t={t}", kernel.name());
+            assert_eq!(
+                serial.landmark_idx,
+                par.landmark_idx,
+                "{}: landmarks differ at t={t}",
+                kernel.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn full_training_identical_models_across_threads() {
+    // The acceptance contract: parallel and serial training produce
+    // *identical* models — same head weights, same predictions.
+    let data = stage1_dataset(240, 10, 4, 33);
+    let run = |threads: usize| {
+        let cfg = TrainConfig {
+            kernel: Kernel::gaussian(0.08),
+            stage1: Stage1Config {
+                budget: 48,
+                seed: 5,
+                ..Default::default()
+            },
+            threads,
+            ..Default::default()
+        };
+        train(&data, &cfg).unwrap()
+    };
+    let serial = run(1);
+    for t in [2usize, 3, 8] {
+        let par = run(t);
+        assert_eq!(serial.heads.len(), par.heads.len());
+        for (hs, hp) in serial.heads.iter().zip(&par.heads) {
+            assert_eq!(hs.pair, hp.pair, "t={t}");
+            assert_eq!(hs.w, hp.w, "head {:?} weights differ at t={t}", hs.pair);
+        }
+        let ps = serial.predict(&data.x).unwrap();
+        let pp = par.predict(&data.x).unwrap();
+        assert_eq!(ps, pp, "predictions differ at t={t}");
+    }
+}
