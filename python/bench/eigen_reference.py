@@ -1,0 +1,224 @@
+#!/usr/bin/env python3
+"""NumPy reference mirror of `rust/benches/eigen_sweep.rs`.
+
+Implements both Jacobi orderings the Rust crate ships — the serial cyclic
+sweep and the round-robin tournament ordering behind `sym_eig_threads` —
+on the same Gaussian `K_BB` workload. It validates the tournament
+ordering (spectrum parity with the cyclic ordering, determinism across
+thread counts) and records serial-vs-tournament seconds; by default the
+tournament runs single-threaded because CPython's GIL serialises the
+rotation bookkeeping and turns the per-round fan-out into a slowdown —
+`--sweep-threads` opts into that (honest but misleading) sweep, which
+dispatches each round's disjoint column/row groups onto one *persistent*
+`ThreadPoolExecutor` (mirroring the Rust worker pool; spawning fresh
+threads per phase measured another 2× worse, the exact pathology the
+persistent pool removes). Treat the Rust bench as authoritative for
+thread scaling. BLAS threading is pinned to 1.
+
+This exists for environments that can run Python but not `cargo bench`
+(e.g. the container this repo is grown in): it produces a
+`BENCH_eigen.json` with the same schema so the perf trajectory file can be
+seeded/checked anywhere. The Rust bench overwrites it with native numbers
+whenever it runs — treat those as authoritative.
+
+    python3 python/bench/eigen_reference.py [--smoke] [--out PATH]
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+for var in ("OMP_NUM_THREADS", "OPENBLAS_NUM_THREADS", "MKL_NUM_THREADS"):
+    os.environ.setdefault(var, "1")
+
+import numpy as np  # noqa: E402
+
+
+def gaussian_kbb(rng, b, p, gamma):
+    x = rng.standard_normal((b, p)).astype(np.float32)
+    sq = (x * x).sum(axis=1)
+    d2 = np.maximum(sq[:, None] + sq[None, :] - 2.0 * (x @ x.T), 0.0)
+    k = np.exp(-gamma * d2).astype(np.float64)
+    return (k + k.T) / 2.0
+
+
+def rotations(m, pairs, thresh):
+    """Rotation params for the round's disjoint pairs (Golub & Van Loan)."""
+    n = m.shape[0]
+    rots = []
+    for p, q in pairs:
+        apq = m[p, q]
+        if abs(apq) <= thresh / n:
+            continue
+        theta = (m[q, q] - m[p, p]) / (2.0 * apq)
+        t = 1.0 / (theta + np.sqrt(1.0 + theta * theta)) if theta >= 0 else -1.0 / (
+            -theta + np.sqrt(1.0 + theta * theta)
+        )
+        c = 1.0 / np.sqrt(1.0 + t * t)
+        rots.append((p, q, c, t * c))
+    return rots
+
+
+def round_pairs(players, r):
+    wheel = players - 1
+    pairs = [(min(r % wheel, players - 1), players - 1)]
+    for i in range(1, players // 2):
+        x, y = (r + i) % wheel, (r + wheel - i) % wheel
+        pairs.append((min(x, y), max(x, y)))
+    return pairs
+
+
+def apply_cols(m, rots):
+    ps = [r[0] for r in rots]
+    qs = [r[1] for r in rots]
+    c = np.array([r[2] for r in rots])
+    s = np.array([r[3] for r in rots])
+    colp, colq = m[:, ps].copy(), m[:, qs].copy()
+    m[:, ps] = c * colp - s * colq
+    m[:, qs] = s * colp + c * colq
+
+
+def apply_rows(m, rots):
+    ps = [r[0] for r in rots]
+    qs = [r[1] for r in rots]
+    c = np.array([r[2] for r in rots])[:, None]
+    s = np.array([r[3] for r in rots])[:, None]
+    rowp, rowq = m[ps, :].copy(), m[qs, :].copy()
+    m[ps, :] = c * rowp - s * rowq
+    m[qs, :] = s * rowp + c * rowq
+
+
+def split(rots, t):
+    bs = -(-len(rots) // t)
+    return [rots[i * bs : (i + 1) * bs] for i in range(t) if i * bs < len(rots)]
+
+
+def phase(fn, m, rots, t, pool):
+    groups = split(rots, t)
+    if pool is None or len(groups) <= 1:
+        for g in groups:
+            fn(m, g)
+        return
+    list(pool.map(lambda g: fn(m, g), groups))
+
+
+def tournament_jacobi(a, max_sweeps, tol, t, pool):
+    n = a.shape[0]
+    m = a.copy()
+    v = np.eye(n)
+    thresh = tol * max(np.sqrt((m * m).sum()), np.finfo(np.float64).tiny)
+    players = n + (n % 2)
+    for _ in range(max_sweeps):
+        off = np.sqrt(2.0 * (np.triu(m, 1) ** 2).sum())
+        if off <= thresh:
+            break
+        for r in range(players - 1):
+            pairs = [(p, q) for p, q in round_pairs(players, r) if q < n]
+            rots = rotations(m, pairs, thresh)
+            if not rots:
+                continue
+            phase(apply_cols, m, rots, t, pool)
+            phase(apply_rows, m, rots, t, pool)
+            phase(apply_cols, v, rots, t, pool)
+    return np.sort(np.diag(m))[::-1], v
+
+
+def cyclic_jacobi(a, max_sweeps, tol):
+    n = a.shape[0]
+    m = a.copy()
+    thresh = tol * max(np.sqrt((m * m).sum()), np.finfo(np.float64).tiny)
+    for _ in range(max_sweeps):
+        off = np.sqrt(2.0 * (np.triu(m, 1) ** 2).sum())
+        if off <= thresh:
+            break
+        for p in range(n):
+            for q in range(p + 1, n):
+                rots = rotations(m, [(p, q)], thresh)
+                if not rots:
+                    continue
+                apply_cols(m, rots)
+                apply_rows(m, rots)
+    return np.sort(np.diag(m))[::-1]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--sweep-threads", action="store_true")
+    ap.add_argument("--out", default="BENCH_eigen.json")
+    ap.add_argument("--seed", type=int, default=42)
+    args = ap.parse_args()
+
+    b, p = (160, 32) if args.smoke else (640, 64)
+    cores = os.cpu_count() or 1
+    kbb = gaussian_kbb(np.random.default_rng(args.seed), b, p, 0.5 / p)
+
+    t0 = time.perf_counter()
+    serial_vals = cyclic_jacobi(kbb, 40, 1e-12)
+    serial_secs = time.perf_counter() - t0
+    lmax = max(serial_vals[0], 1e-30)
+    print(f"serial cyclic: {serial_secs:.3f}s (B={b})")
+
+    results = [
+        {
+            "solver": "sym_eig",
+            "threads": 1,
+            "secs": round(serial_secs, 6),
+            "speedup_vs_serial": 1.0,
+        }
+    ]
+    best = 1.0
+    reference = None
+    sweep = sorted(set([1, 2, 4, 8, cores])) if args.sweep_threads else [1]
+    for t in sweep:
+        pool = ThreadPoolExecutor(max_workers=t) if t > 1 else None
+        t0 = time.perf_counter()
+        vals, _ = tournament_jacobi(kbb, 40, 1e-12, t, pool)
+        secs = time.perf_counter() - t0
+        if pool is not None:
+            pool.shutdown()
+        dl = float(np.abs(vals - serial_vals).max())
+        if dl > 1e-6 * lmax:
+            print(f"FATAL: t={t} spectrum drift {dl}", file=sys.stderr)
+            return 1
+        if reference is None:
+            reference = vals
+        elif not np.array_equal(reference, vals):
+            print(f"FATAL: t={t} nondeterministic", file=sys.stderr)
+            return 1
+        speedup = serial_secs / max(secs, 1e-12)
+        best = max(best, speedup)
+        results.append(
+            {
+                "solver": "sym_eig_threads",
+                "threads": t,
+                "secs": round(secs, 6),
+                "speedup_vs_serial": round(speedup, 3),
+                "max_abs_dlambda_rel": float(dl / lmax),
+            }
+        )
+        print(f"tournament t={t}: {secs:.3f}s  {speedup:.2f}x  |Δλ|/λmax={dl / lmax:.2e}")
+
+    doc = {
+        "bench": "eigen_sweep",
+        "source": "python/bench/eigen_reference.py (NumPy mirror; no Rust "
+        "toolchain in the build container — `cargo bench --bench eigen_sweep` "
+        "overwrites this with native numbers)",
+        "smoke": args.smoke,
+        "matrix": {"b": b, "p": p, "kernel": "gaussian", "seed": args.seed},
+        "host_cores": cores,
+        "results": results,
+        "best_speedup_vs_serial": round(best, 3),
+    }
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

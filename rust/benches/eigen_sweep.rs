@@ -1,0 +1,152 @@
+//! Eigensolver sweep: serial cyclic Jacobi (`sym_eig`) vs the
+//! pool-parallel tournament ordering (`sym_eig_threads`) on a Gaussian
+//! landmark matrix `K_BB` — the "preparation" slice of the paper's Fig. 3
+//! breakdown, which dominates stage 1 at large landmark budgets B.
+//!
+//! Reports seconds per solve and the speedup of every thread count over
+//! the serial path, checks the parallel spectrum against the serial one
+//! (max |Δλ| must stay below 1e-6·λ_max) and that each thread count is
+//! deterministic, then writes `BENCH_eigen.json` (override with
+//! `LPDSVM_BENCH_EIGEN_OUT`) so the perf trajectory is tracked in-repo.
+//!
+//!     cargo bench --bench eigen_sweep              # full workload
+//!     cargo bench --bench eigen_sweep -- --smoke   # CI fast mode
+
+mod harness;
+
+use lpdsvm::data::synth::{FeatureStyle, SynthSpec};
+use lpdsvm::kernel::Kernel;
+use lpdsvm::linalg::eigen::{sym_eig, sym_eig_threads};
+use lpdsvm::lowrank::landmarks;
+use lpdsvm::report::Table;
+use lpdsvm::util::json::{arr, num, obj, s, Json};
+use lpdsvm::util::threads;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let seed = harness::bench_seed();
+    let cores = threads::default_threads();
+
+    // A realistic K_BB: Gaussian kernel over dense synthetic landmarks.
+    // B is the whole workload (Jacobi is O(B³) per sweep).
+    let (b, p) = if smoke { (160usize, 32usize) } else { (640, 64) };
+    let data = SynthSpec {
+        name: "eigen-bench".into(),
+        n: b,
+        p,
+        n_classes: 4,
+        sep: 3.0,
+        latent: 8,
+        noise: 1.0,
+        style: FeatureStyle::Dense,
+        seed,
+    }
+    .generate();
+    let idx: Vec<usize> = (0..b).collect();
+    let (lm, lm_sq) = landmarks::densify(&data.x, &idx);
+    let kernel = Kernel::gaussian(0.5 / p as f64);
+    let k_bb = kernel.symmetric_matrix_threads(&lm, &lm_sq, cores);
+    println!(
+        "eigen_sweep{}: B={b} p={p} cores={cores}\n",
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let (serial, serial_secs) = harness::time_once(|| sym_eig(&k_bb, 40, 1e-12));
+    let lmax = serial.values.first().copied().unwrap_or(0.0).max(1e-30);
+
+    let mut sweep = vec![1usize, 2, 4, 8, cores];
+    sweep.sort_unstable();
+    sweep.dedup();
+
+    let mut table = Table::new(
+        "sym_eig sweep (serial cyclic vs pool tournament Jacobi)",
+        &["solver", "threads", "secs", "speedup vs serial", "max |Δλ|/λmax"],
+    );
+    table.row(&[
+        "sym_eig".into(),
+        "1".into(),
+        Table::secs(serial_secs),
+        "1.00x".into(),
+        "0".into(),
+    ]);
+
+    let mut rows_json: Vec<Json> = vec![obj(vec![
+        ("solver", s("sym_eig")),
+        ("threads", num(1.0)),
+        ("secs", num(serial_secs)),
+        ("speedup_vs_serial", num(1.0)),
+    ])];
+    let mut best_speedup = 1.0f64;
+    let mut reference: Option<Vec<f64>> = None;
+
+    for &t in &sweep {
+        let (eig, secs) = harness::time_once(|| sym_eig_threads(&k_bb, 40, 1e-12, t));
+
+        // Accuracy gate: the tournament ordering must land on the same
+        // spectrum as the serial ordering (both converge to the same
+        // off-diagonal bound).
+        let max_dl = eig
+            .values
+            .iter()
+            .zip(&serial.values)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(
+            max_dl <= 1e-6 * lmax,
+            "threads={t}: spectrum drifted by {max_dl} (λmax {lmax})"
+        );
+        // Determinism gate: every thread count must reproduce the same
+        // decomposition (the phases are scheduling-independent).
+        if reference.is_none() {
+            reference = Some(eig.values.clone());
+        }
+        assert_eq!(
+            reference.as_deref(),
+            Some(eig.values.as_slice()),
+            "threads={t} nondeterministic"
+        );
+
+        let speedup = serial_secs / secs.max(1e-12);
+        best_speedup = best_speedup.max(speedup);
+        table.row(&[
+            "sym_eig_threads".into(),
+            t.to_string(),
+            Table::secs(secs),
+            format!("{speedup:.2}x"),
+            format!("{:.2e}", max_dl / lmax),
+        ]);
+        rows_json.push(obj(vec![
+            ("solver", s("sym_eig_threads")),
+            ("threads", num(t as f64)),
+            ("secs", num(secs)),
+            ("speedup_vs_serial", num(speedup)),
+            ("max_abs_dlambda_rel", num(max_dl / lmax)),
+        ]));
+    }
+
+    table.print();
+    table.write_tsv(&harness::report_dir().join("eigen_sweep.tsv")).ok();
+    println!("\nbest sym_eig speedup over serial: {best_speedup:.2}x on {cores} cores");
+
+    let out_path = std::env::var("LPDSVM_BENCH_EIGEN_OUT")
+        .unwrap_or_else(|_| "BENCH_eigen.json".to_string());
+    let doc = obj(vec![
+        ("bench", s("eigen_sweep")),
+        ("source", s("cargo bench --bench eigen_sweep")),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "matrix",
+            obj(vec![
+                ("b", num(b as f64)),
+                ("p", num(p as f64)),
+                ("kernel", s(kernel.name())),
+                ("seed", num(seed as f64)),
+            ]),
+        ),
+        ("host_cores", num(cores as f64)),
+        ("results", arr(rows_json)),
+        ("best_speedup_vs_serial", num(best_speedup)),
+    ]);
+    std::fs::write(&out_path, doc.to_string() + "\n").expect("write bench json");
+    println!("wrote {out_path}");
+}

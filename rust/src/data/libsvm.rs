@@ -35,10 +35,26 @@ pub fn parse<R: BufRead>(reader: R, name: &str) -> Result<Dataset> {
         }
         let mut parts = line.split_ascii_whitespace();
         let label_txt = parts.next().unwrap();
-        let label: i64 = label_txt
+        let label_f: f64 = label_txt
             .parse::<f64>()
-            .map(|f| f as i64)
             .with_context(|| format!("line {}: bad label '{label_txt}'", lineno + 1))?;
+        // Labels must be integral class ids (`1.0`/`-1.0` spellings are
+        // fine). A plain `as i64` truncation here silently collapsed
+        // fractional labels (0.5 and 0.7 both became class 0), mapped
+        // NaN/Inf to arbitrary ids, and saturated anything ≥ 2⁶³ — all
+        // of which merge distinct labels into one class.
+        if !label_f.is_finite()
+            || label_f.fract() != 0.0
+            || label_f.abs() >= i64::MAX as f64
+        {
+            bail!(
+                "line {}: non-integral label '{label_txt}' (labels must be \
+                 i64-range integer class ids or ±1; fractional, non-finite \
+                 or oversized values would be silently collapsed)",
+                lineno + 1
+            );
+        }
+        let label = label_f as i64;
         let mut entries = Vec::new();
         for tok in parts {
             let (idx_txt, val_txt) = tok
@@ -151,6 +167,55 @@ mod tests {
     fn rejects_malformed_feature() {
         assert!(parse(Cursor::new("+1 1=3\n"), "t").is_err());
         assert!(parse(Cursor::new("x 1:1\n"), "t").is_err());
+    }
+
+    #[test]
+    fn rejects_fractional_labels_with_line_number() {
+        // 0.5 and 0.7 used to truncate into the same class id 0.
+        let err = parse(Cursor::new("0.5 1:1.0\n0.7 1:2.0\n"), "t").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 1"), "{msg}");
+        assert!(msg.contains("non-integral label '0.5'"), "{msg}");
+        // The line number points at the offender, not at line 1 blindly.
+        let err2 = parse(Cursor::new("1 1:1.0\n0.7 1:2.0\n"), "t").unwrap_err();
+        assert!(format!("{err2:#}").contains("line 2"), "{err2:#}");
+    }
+
+    #[test]
+    fn rejects_non_finite_labels() {
+        for bad in ["nan", "NaN", "inf", "-inf"] {
+            let text = format!("{bad} 1:1.0\n");
+            let err = parse(Cursor::new(text), "t").unwrap_err();
+            assert!(
+                format!("{err:#}").contains("non-integral label"),
+                "{bad}: {err:#}"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_labels_beyond_i64_range() {
+        // 1e19 and 9.3e18 would both saturate to i64::MAX and merge.
+        for bad in ["1e19", "9.3e18", "-1e300"] {
+            let text = format!("{bad} 1:1.0\n");
+            let err = parse(Cursor::new(text), "t").unwrap_err();
+            assert!(
+                format!("{err:#}").contains("non-integral label"),
+                "{bad}: {err:#}"
+            );
+        }
+        // The largest exactly-representable i64-range whole floats pass.
+        let ds = parse(Cursor::new("9e18 1:1.0\n-9e18 1:1.0\n"), "t").unwrap();
+        assert_eq!(ds.n_classes, 2);
+    }
+
+    #[test]
+    fn accepts_float_spelled_integral_labels() {
+        // `1.0` / `-1.0` are the common tool output for ±1 and must keep
+        // parsing (as must exponent forms of whole numbers).
+        let ds = parse(Cursor::new("1.0 1:0.5\n-1.0 2:1.5\n1e1 1:1.0\n"), "t").unwrap();
+        assert_eq!(ds.n_classes, 3); // −1, 1, 10 → three classes
+        assert_eq!(ds.labels, vec![1, 0, 2]);
     }
 
     #[test]

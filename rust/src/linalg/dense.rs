@@ -4,7 +4,7 @@
 //! hot loop.
 //!
 //! The GEMM is the stage-1 compute backbone: output rows are partitioned
-//! into contiguous bands over a scoped thread pool
+//! into contiguous bands over the persistent worker pool
 //! ([`crate::util::threads::parallel_chunks`]), and each band runs a
 //! KC×NC cache-tiled i-k-j loop whose inner microkernels (`axpy2`,
 //! `dot4`) are written for FMA autovectorisation with AVX2 fast paths.

@@ -1,4 +1,5 @@
-//! Symmetric eigendecomposition via the cyclic Jacobi method.
+//! Symmetric eigendecomposition via the cyclic Jacobi method — serial
+//! ([`sym_eig`]) and pool-parallel ([`sym_eig_threads`]).
 //!
 //! The paper (§4, footnote 3) rejects Cholesky for the landmark matrix
 //! `K_BB` because kernel matrices are routinely *near*-singular and
@@ -6,11 +7,19 @@
 //! (cuSOLVER `syevd` on GPU) and then drops eigenvalues below
 //! `ε·λ_max`. Our substitute is cyclic Jacobi in `f64`: O(B³) per sweep,
 //! unconditionally stable on symmetric matrices, and accurate for the small
-//! eigenvalues we must threshold. It runs once per kernel parameter, on a
-//! B×B matrix, so it is never the bottleneck (matching the paper's own
-//! breakdown where eigh is part of "preparation").
+//! eigenvalues we must threshold. At small landmark budgets it is never the
+//! bottleneck, but at large B the paper's "preparation" stage (its Fig. 3
+//! breakdown) becomes eigh-bound — [`sym_eig_threads`] parallelises the
+//! sweeps over the persistent worker pool using the classic round-robin
+//! tournament ordering (Brent–Luk): each round rotates a set of *disjoint*
+//! `(p, q)` pairs, so rotation parameters are computed from one snapshot
+//! and the row/column updates write non-overlapping data. Values depend
+//! only on the round structure, never on which worker runs an update, so
+//! the result is deterministic for any fixed thread count (in fact
+//! bit-identical across thread counts).
 
 use crate::linalg::Mat;
+use crate::util::threads::parallel_for_each;
 
 /// Result of a symmetric eigendecomposition: `A = V diag(λ) Vᵀ`,
 /// eigenvalues sorted in DESCENDING order, `V` column-orthonormal
@@ -19,6 +28,29 @@ use crate::linalg::Mat;
 pub struct SymEig {
     pub values: Vec<f64>,
     pub vectors: Mat,
+}
+
+/// One Jacobi rotation: zero `A[p][q]` with the Givens pair `(c, s)`.
+#[derive(Clone, Copy)]
+struct Rotation {
+    p: usize,
+    q: usize,
+    c: f64,
+    s: f64,
+}
+
+/// Stable rotation parameters for the pivot `(p, q)`
+/// (Golub & Van Loan 8.4).
+#[inline]
+fn rotation(app: f64, aqq: f64, apq: f64) -> (f64, f64) {
+    let theta = (aqq - app) / (2.0 * apq);
+    let t = if theta >= 0.0 {
+        1.0 / (theta + (1.0 + theta * theta).sqrt())
+    } else {
+        -1.0 / (-theta + (1.0 + theta * theta).sqrt())
+    };
+    let c = 1.0 / (1.0 + t * t).sqrt();
+    (c, t * c)
 }
 
 /// Cyclic Jacobi eigensolver for a symmetric matrix given as `Mat` (f32
@@ -34,17 +66,10 @@ pub fn sym_eig(a: &Mat, max_sweeps: usize, tol: f64) -> SymEig {
     for i in 0..n {
         v[i * n + i] = 1.0;
     }
-    let fro: f64 = m.iter().map(|x| x * x).sum::<f64>().sqrt();
-    let thresh = tol * fro.max(f64::MIN_POSITIVE);
+    let thresh = off_threshold(&m, tol);
 
     for _sweep in 0..max_sweeps {
-        let mut off = 0.0f64;
-        for p in 0..n {
-            for q in (p + 1)..n {
-                off += m[p * n + q] * m[p * n + q];
-            }
-        }
-        if (2.0 * off).sqrt() <= thresh {
+        if off_norm(&m, n) <= thresh {
             break;
         }
         for p in 0..n {
@@ -53,17 +78,7 @@ pub fn sym_eig(a: &Mat, max_sweeps: usize, tol: f64) -> SymEig {
                 if apq.abs() <= thresh / (n as f64) {
                     continue;
                 }
-                let app = m[p * n + p];
-                let aqq = m[q * n + q];
-                // Stable rotation computation (Golub & Van Loan 8.4).
-                let theta = (aqq - app) / (2.0 * apq);
-                let t = if theta >= 0.0 {
-                    1.0 / (theta + (1.0 + theta * theta).sqrt())
-                } else {
-                    -1.0 / (-theta + (1.0 + theta * theta).sqrt())
-                };
-                let c = 1.0 / (1.0 + t * t).sqrt();
-                let s = t * c;
+                let (c, s) = rotation(m[p * n + p], m[q * n + q], apq);
                 // Apply rotation to rows/cols p and q of A.
                 for k in 0..n {
                     let akp = m[k * n + p];
@@ -88,10 +103,190 @@ pub fn sym_eig(a: &Mat, max_sweeps: usize, tol: f64) -> SymEig {
         }
     }
 
-    // Extract diagonal, sort descending, permute eigenvector columns.
+    extract(&m, &v, n)
+}
+
+/// Below this dimension [`sym_eig_threads`] runs the serial cyclic path:
+/// a tournament round's phase slot is only O(n) multiply-adds, so for
+/// small matrices the per-round pool dispatches would cost more than the
+/// rotations themselves. The cutover depends only on `n` — never on
+/// `threads` — so a stage-1 factor stays bit-identical across thread
+/// counts on either side of it.
+const TOURNAMENT_MIN_DIM: usize = 128;
+
+/// Pool-parallel eigensolver: round-robin tournament Jacobi
+/// ([`sym_eig_tournament`]) for matrices of at least
+/// [`TOURNAMENT_MIN_DIM`] rows — the eigh-bound "preparation" regime at
+/// large landmark budgets — and the serial cyclic path below that, where
+/// pool dispatch overhead would dominate the O(n) phase slots. The
+/// cutover depends only on the matrix size, so the result is
+/// deterministic for every fixed thread count (bit-identical across
+/// thread counts, in fact).
+pub fn sym_eig_threads(a: &Mat, max_sweeps: usize, tol: f64, threads: usize) -> SymEig {
+    assert_eq!(a.rows, a.cols, "sym_eig needs a square matrix");
+    if a.rows < TOURNAMENT_MIN_DIM {
+        sym_eig(a, max_sweeps, tol)
+    } else {
+        sym_eig_tournament(a, max_sweeps, tol, threads)
+    }
+}
+
+/// Cyclic Jacobi with round-robin tournament ordering, parallelised over
+/// the persistent pool (no size cutover — [`sym_eig_threads`] adds that).
+///
+/// Each sweep visits every `(p, q)` pair exactly once, grouped into
+/// rounds of mutually disjoint pairs (the circle method used for
+/// round-robin tournaments). Per round: rotation parameters for all
+/// pairs are computed from the round-start snapshot, then two barrier
+/// phases apply the column updates (`A ← A·Q` and `V ← V·Q`) and the row
+/// updates (`A ← Qᵀ·A`) in parallel over the pairs — each pair owns its
+/// two columns (resp. rows), so writes are disjoint and the result does
+/// not depend on scheduling. Convergence criterion, pivot threshold and
+/// rotation formulas match [`sym_eig`]; the two orderings agree on the
+/// decomposition up to the usual Jacobi accuracy (the same `tol`-driven
+/// off-diagonal bound), not bit for bit.
+///
+/// `threads` caps the pool fan-out (1 runs the rounds inline). The
+/// output is deterministic for every fixed thread count.
+pub fn sym_eig_tournament(a: &Mat, max_sweeps: usize, tol: f64, threads: usize) -> SymEig {
+    assert_eq!(a.rows, a.cols, "sym_eig needs a square matrix");
+    let n = a.rows;
+    if n <= 2 {
+        // 0, 1 or a single pair: the tournament degenerates to the cyclic
+        // order; run the serial path.
+        return sym_eig(a, max_sweeps, tol);
+    }
+    let mut m: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let thresh = off_threshold(&m, tol);
+
+    // Tournament over `players` seats (n padded to even with a phantom).
+    let players = n + (n % 2);
+    let rounds = players - 1;
+    let mut rots: Vec<Rotation> = Vec::with_capacity(players / 2);
+    for _sweep in 0..max_sweeps {
+        if off_norm(&m, n) <= thresh {
+            break;
+        }
+        for r in 0..rounds {
+            rots.clear();
+            for (p, q) in round_pairs(players, r) {
+                if p >= n || q >= n {
+                    continue; // phantom seat (odd n sits one index out)
+                }
+                let apq = m[p * n + q];
+                if apq.abs() <= thresh / (n as f64) {
+                    continue;
+                }
+                let (c, s) = rotation(m[p * n + p], m[q * n + q], apq);
+                rots.push(Rotation { p, q, c, s });
+            }
+            if !rots.is_empty() {
+                apply_round(&mut m, &mut v, n, &rots, threads);
+            }
+        }
+    }
+
+    extract(&m, &v, n)
+}
+
+/// Pairs of round `r` in a `players`-seat round-robin tournament
+/// (`players` even): seat `players−1` is fixed, the rest rotate. Every
+/// pair of seats meets exactly once across `players − 1` rounds, and the
+/// pairs within one round are mutually disjoint.
+fn round_pairs(players: usize, r: usize) -> Vec<(usize, usize)> {
+    let wheel = players - 1;
+    let mut pairs = Vec::with_capacity(players / 2);
+    let a = r % wheel;
+    pairs.push((a.min(players - 1), a.max(players - 1)));
+    for i in 1..players / 2 {
+        let x = (r + i) % wheel;
+        let y = (r + wheel - i) % wheel;
+        pairs.push((x.min(y), x.max(y)));
+    }
+    pairs
+}
+
+/// Shared mutable base pointer for the disjoint rotation updates.
+#[derive(Clone, Copy)]
+struct MatPtr(*mut f64);
+// SAFETY: every parallel phase writes only the rows or columns owned by
+// its (disjoint) pair — see `apply_round`.
+unsafe impl Send for MatPtr {}
+unsafe impl Sync for MatPtr {}
+
+/// Apply one round of disjoint rotations: `A ← Qᵀ·A·Q`, `V ← V·Q` where
+/// `Q` is the product of the round's (commuting) Givens rotations. Two
+/// barrier phases keep reads and writes disjoint: the first does all
+/// column updates (`A·Q` for slots below `rots.len()`, `V·Q` above —
+/// `V`'s update only needs the rotation parameters, so it shares the
+/// column phase instead of paying a third dispatch), the second does the
+/// row updates; each pair owns its two columns (resp. rows).
+fn apply_round(m: &mut [f64], v: &mut [f64], n: usize, rots: &[Rotation], threads: usize) {
+    let mp = MatPtr(m.as_mut_ptr());
+    let vp = MatPtr(v.as_mut_ptr());
+    // Phase 1: A ← A·Q and V ← V·Q (disjoint column pairs of either
+    // matrix — 2·rots.len() independent slots).
+    parallel_for_each(2 * rots.len(), threads, |slot| {
+        let Rotation { p, q, c, s } = rots[slot % rots.len()];
+        let base = if slot < rots.len() { mp.0 } else { vp.0 };
+        for k in 0..n {
+            // SAFETY: this job reads and writes only columns p and q of
+            // its own matrix, which no other slot in the phase touches;
+            // the barrier between phases orders cross-pair visibility.
+            unsafe {
+                let akp = *base.add(k * n + p);
+                let akq = *base.add(k * n + q);
+                *base.add(k * n + p) = c * akp - s * akq;
+                *base.add(k * n + q) = s * akp + c * akq;
+            }
+        }
+    });
+    // Phase 2: A ← Qᵀ·A (disjoint row pairs).
+    parallel_for_each(rots.len(), threads, |ri| {
+        let Rotation { p, q, c, s } = rots[ri];
+        let base = mp.0;
+        for k in 0..n {
+            // SAFETY: rows p and q belong to this pair alone.
+            unsafe {
+                let apk = *base.add(p * n + k);
+                let aqk = *base.add(q * n + k);
+                *base.add(p * n + k) = c * apk - s * aqk;
+                *base.add(q * n + k) = s * apk + c * aqk;
+            }
+        }
+    });
+}
+
+/// Convergence threshold `tol · ||A||_F` (floored away from zero).
+fn off_threshold(m: &[f64], tol: f64) -> f64 {
+    let fro: f64 = m.iter().map(|x| x * x).sum::<f64>().sqrt();
+    tol * fro.max(f64::MIN_POSITIVE)
+}
+
+/// Frobenius norm of the strict upper triangle, mirrored (`√(2·Σ a²_pq)`).
+fn off_norm(m: &[f64], n: usize) -> f64 {
+    let mut off = 0.0f64;
+    for p in 0..n {
+        for q in (p + 1)..n {
+            off += m[p * n + q] * m[p * n + q];
+        }
+    }
+    (2.0 * off).sqrt()
+}
+
+/// Extract the diagonal, sort descending, permute eigenvector columns.
+fn extract(m: &[f64], v: &[f64], n: usize) -> SymEig {
     let mut order: Vec<usize> = (0..n).collect();
     let diag: Vec<f64> = (0..n).map(|i| m[i * n + i]).collect();
-    order.sort_by(|&i, &j| diag[j].partial_cmp(&diag[i]).unwrap());
+    // `total_cmp`, not `partial_cmp(..).unwrap()`: an Inf-contaminated
+    // Gram matrix turns the diagonal into NaNs, and sorting must degrade
+    // to a deterministic (garbage-valued) decomposition instead of
+    // panicking mid-training.
+    order.sort_by(|&i, &j| diag[j].total_cmp(&diag[i]));
     let values: Vec<f64> = order.iter().map(|&i| diag[i]).collect();
     let mut vectors = Mat::zeros(n, n);
     for (newk, &oldk) in order.iter().enumerate() {
@@ -119,12 +314,24 @@ impl SymEig {
 
     /// Whitening map `W = V_r Λ_r^{-1/2}` (n×r) such that
     /// `(K_nB W)(K_nB W)ᵀ ≈ K_nB K_BB⁺ K_Bn` — the Nyström factor map.
+    ///
+    /// The rank is clamped to the *positive* spectrum: a non-positive
+    /// eigenvalue has no real inverse square root, and the old clamp to
+    /// `f64::MIN_POSITIVE` manufactured a ~1e154 column scale that
+    /// poisoned the whole factor on indefinite (noise-perturbed) inputs.
+    /// Columns with `λ ≤ 0` are dropped instead, so the returned matrix
+    /// may have fewer than `rank` columns.
     pub fn whitening_map(&self, rank: usize) -> Mat {
         let n = self.vectors.rows;
-        let r = rank.min(self.values.len());
+        let r = self
+            .values
+            .iter()
+            .take(rank.min(self.values.len()))
+            .take_while(|&&l| l > 0.0)
+            .count();
         let mut w = Mat::zeros(n, r);
         for k in 0..r {
-            let scale = 1.0 / self.values[k].max(f64::MIN_POSITIVE).sqrt();
+            let scale = 1.0 / self.values[k].sqrt();
             for i in 0..n {
                 w.data[i * r + k] = (self.vectors.at(i, k) as f64 * scale) as f32;
             }
@@ -254,5 +461,146 @@ mod tests {
         let e = sym_eig(&a, 10, 1e-14);
         assert_eq!(e.values.len(), 1);
         assert!((e.values[0] - 4.0).abs() < 1e-12);
+    }
+
+    // --- regression: NaN-contaminated input must not panic the sort ---
+
+    #[test]
+    fn nan_contaminated_input_does_not_panic() {
+        // An Inf entry turns rotations into NaNs; the eigenvalue sort
+        // previously hit `partial_cmp(..).unwrap()` and panicked.
+        let a = Mat::from_vec(
+            3,
+            3,
+            vec![f32::INFINITY, 1.0, 0.0, 1.0, 2.0, 0.5, 0.0, 0.5, -1.0],
+        );
+        let e = sym_eig(&a, 30, 1e-12);
+        assert_eq!(e.values.len(), 3);
+        let ep = sym_eig_tournament(&a, 30, 1e-12, 4);
+        assert_eq!(ep.values.len(), 3);
+        // Degenerate results are garbage but deterministic; rank 0 so no
+        // downstream stage consumes the NaNs.
+        let nan = Mat::from_vec(2, 2, vec![f32::NAN, 0.0, 0.0, 1.0]);
+        let en = sym_eig(&nan, 30, 1e-12);
+        assert_eq!(en.values.len(), 2);
+    }
+
+    // --- regression: indefinite spectra must not poison the whitening ---
+
+    #[test]
+    fn whitening_map_drops_nonpositive_eigenvalues() {
+        // Indefinite "Gram" matrix (noise pushed one eigenvalue negative):
+        // the old clamp to f64::MIN_POSITIVE emitted a ~1e154 column.
+        let e = SymEig {
+            values: vec![4.0, 0.0, -1.0],
+            vectors: Mat::eye(3),
+        };
+        let w = e.whitening_map(3);
+        assert_eq!(w.rows, 3);
+        assert_eq!(w.cols, 1, "non-positive eigenvalues must be dropped");
+        assert!((w.at(0, 0) - 0.5).abs() < 1e-6);
+        assert!(w.data.iter().all(|x| x.is_finite() && x.abs() < 1e3));
+        // An all-non-positive spectrum yields an empty map, not a huge one.
+        let e0 = SymEig {
+            values: vec![-2.0, -3.0],
+            vectors: Mat::eye(2),
+        };
+        assert_eq!(e0.whitening_map(2).cols, 0);
+    }
+
+    // --- parallel tournament Jacobi ---
+
+    #[test]
+    fn round_pairs_cover_every_pair_once_disjointly() {
+        for players in [4usize, 6, 8, 14] {
+            let mut seen = std::collections::HashSet::new();
+            for r in 0..players - 1 {
+                let pairs = round_pairs(players, r);
+                assert_eq!(pairs.len(), players / 2, "round {r}");
+                let mut used = vec![false; players];
+                for &(p, q) in &pairs {
+                    assert!(p < q, "round {r}: pair ({p},{q}) not ordered");
+                    assert!(!used[p] && !used[q], "round {r}: seat reused");
+                    used[p] = true;
+                    used[q] = true;
+                    assert!(seen.insert((p, q)), "pair ({p},{q}) repeated");
+                }
+            }
+            assert_eq!(seen.len(), players * (players - 1) / 2);
+        }
+    }
+
+    #[test]
+    fn tournament_matches_serial_accuracy() {
+        // Same suite, same tolerances as the serial tests above.
+        let a = random_symmetric(24, 7);
+        let e = sym_eig_tournament(&a, 50, 1e-13, 4);
+        let r = reconstruct(&e);
+        assert!(a.max_abs_diff(&r) < 1e-4, "diff {}", a.max_abs_diff(&r));
+        let vt_v = e.vectors.transpose().matmul(&e.vectors);
+        assert!(vt_v.max_abs_diff(&Mat::eye(24)) < 1e-5);
+        // Eigenvalues agree with the serial ordering's.
+        let es = sym_eig(&a, 50, 1e-13);
+        for (l_par, l_ser) in e.values.iter().zip(&es.values) {
+            assert!((l_par - l_ser).abs() < 1e-6, "{l_par} vs {l_ser}");
+        }
+    }
+
+    #[test]
+    fn tournament_eigen_equation_holds() {
+        let a = random_symmetric(13, 11); // odd n exercises the phantom seat
+        let e = sym_eig_tournament(&a, 50, 1e-13, 3);
+        for k in 0..13 {
+            let v: Vec<f32> = (0..13).map(|i| e.vectors.at(i, k)).collect();
+            let av = a.matvec(&v);
+            for i in 0..13 {
+                let want = e.values[k] as f32 * v[i];
+                assert!(
+                    (av[i] - want).abs() < 1e-4,
+                    "k={k} i={i}: {} vs {want}",
+                    av[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tournament_deterministic_per_thread_count() {
+        let a = random_symmetric(18, 29);
+        let reference = sym_eig_tournament(&a, 50, 1e-13, 1);
+        for t in [1usize, 2, 3, 8] {
+            for _rep in 0..2 {
+                let e = sym_eig_tournament(&a, 50, 1e-13, t);
+                assert_eq!(e.values, reference.values, "values differ at t={t}");
+                assert_eq!(
+                    e.vectors, reference.vectors,
+                    "vectors differ at t={t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn threads_entry_point_cuts_over_on_size_only() {
+        // Below the cutover: identical to the serial cyclic path for
+        // every thread count (dispatch overhead would dominate there).
+        for n in [1usize, 2, 24, TOURNAMENT_MIN_DIM - 1] {
+            let a = random_symmetric(n, 41);
+            let s = sym_eig(&a, 30, 1e-13);
+            for t in [1usize, 4] {
+                let e = sym_eig_threads(&a, 30, 1e-13, t);
+                assert_eq!(e.values, s.values, "n={n} t={t}");
+                assert_eq!(e.vectors, s.vectors, "n={n} t={t}");
+            }
+        }
+        // At the cutover: identical to the tournament path, again for
+        // every thread count (the switch depends only on n).
+        let a = random_symmetric(TOURNAMENT_MIN_DIM, 43);
+        let tour = sym_eig_tournament(&a, 40, 1e-12, 1);
+        for t in [1usize, 4] {
+            let e = sym_eig_threads(&a, 40, 1e-12, t);
+            assert_eq!(e.values, tour.values, "t={t}");
+            assert_eq!(e.vectors, tour.vectors, "t={t}");
+        }
     }
 }

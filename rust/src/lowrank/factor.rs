@@ -13,7 +13,7 @@
 
 use crate::data::sparse::SparseMatrix;
 use crate::kernel::Kernel;
-use crate::linalg::eigen::sym_eig;
+use crate::linalg::eigen::sym_eig_threads;
 use crate::linalg::Mat;
 use crate::lowrank::landmarks::{self, LandmarkStrategy};
 use crate::util::rng::Rng;
@@ -33,9 +33,11 @@ pub struct Stage1Config {
     pub strategy: LandmarkStrategy,
     pub seed: u64,
     /// Worker threads for the stage-1 compute backbone (landmark densify,
-    /// `K_BB` assembly; the per-chunk kernel block and GEMM are governed
-    /// by the backend's own thread count). 0 = auto (`LPDSVM_THREADS` or
-    /// all cores). The parallel path is bit-identical to `threads == 1`.
+    /// `K_BB` assembly, the parallel Jacobi eigensolver; the per-chunk
+    /// kernel block and GEMM are governed by the backend's own thread
+    /// count). All of it runs on the shared persistent pool
+    /// (`util::threads::global`). 0 = auto (`LPDSVM_THREADS` or all
+    /// cores). The parallel path is bit-identical to `threads == 1`.
     pub threads: usize,
 }
 
@@ -99,19 +101,23 @@ pub trait Stage1Backend {
 }
 
 /// Pure-Rust backend (the paper's CPU path: Eigen + OpenMP there, our
-/// tiled GEMM + scoped thread pool here). `threads` controls the row-band
-/// parallelism of the per-chunk kernel block and the `K·W` product:
-/// 0 = auto (`LPDSVM_THREADS` or all cores), 1 = the serial reference
-/// path. Any thread count produces bit-identical chunks.
+/// tiled GEMM over the shared persistent worker pool here — every
+/// `NativeBackend` submits to the same lazily-spawned
+/// [`crate::util::threads::global`] pool, so pool-side compute threads
+/// stay fixed no matter how many backends are live). `threads` caps the
+/// row-band parallelism of the per-chunk kernel block and the `K·W`
+/// product: 0 = auto (`LPDSVM_THREADS` or all cores), 1 = the serial
+/// reference path. Any thread count produces bit-identical chunks.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct NativeBackend {
     pub threads: usize,
 }
 
 impl NativeBackend {
-    /// Single-threaded backend — the differential-testing reference, and
-    /// the right choice inside an outer worker pool (e.g. serve workers,
-    /// which already saturate the cores at one backend per worker).
+    /// Single-threaded backend — the differential-testing reference.
+    /// Outer job farms no longer need this to avoid oversubscription:
+    /// pooled backends share the process-wide worker pool, which bounds
+    /// total compute threads by itself.
     pub fn serial() -> NativeBackend {
         NativeBackend { threads: 1 }
     }
@@ -190,9 +196,14 @@ impl LowRankFactor {
             let landmark_idx = landmarks::select(x, cfg.budget, cfg.strategy, &kernel, &mut rng);
             let (lm, lm_sq) = landmarks::densify_threads(x, &landmark_idx, threads);
             let k_bb = kernel.symmetric_matrix_threads(&lm, &lm_sq, threads);
-            let eig = sym_eig(&k_bb, 40, 1e-12);
-            let rank = eig.effective_rank(cfg.eps_rank).max(1);
-            let whiten = eig.whitening_map(rank);
+            // Parallel tournament Jacobi: same result for every thread
+            // count, so the factor stays bit-identical across `threads`.
+            let eig = sym_eig_threads(&k_bb, 40, 1e-12, threads);
+            let whiten = eig.whitening_map(eig.effective_rank(cfg.eps_rank));
+            // `whitening_map` clamps to the positive spectrum, so on a
+            // degenerate (all non-positive) K_BB the factor honestly has
+            // rank 0 instead of one 1e154-scaled poison column.
+            let rank = whiten.cols;
             (landmark_idx, lm, lm_sq, eig, rank, whiten)
         });
 

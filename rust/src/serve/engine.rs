@@ -58,13 +58,19 @@ pub trait BackendProvider: Send + Sync {
 }
 
 /// Provider for the pure-Rust GEMM path — the default. Each worker gets a
-/// *serial* backend: the pool already runs one worker per core, so nested
-/// row-band parallelism inside a batch would only oversubscribe.
+/// handle onto the shared persistent worker pool (a pooled
+/// [`NativeBackend`], `threads = 0` = pool-wide), so a large batch fans
+/// its row bands across the pool instead of scoring on one core. Because
+/// every serve worker submits to the *same* pool, compute concurrency is
+/// bounded by pool size + submitting workers (a submitter executes slots
+/// of its own batch while it waits) — a worst case of ~2× cores under
+/// full saturation, versus the unbounded spawn storms that made the
+/// scoped-spawn era require per-worker `NativeBackend::serial()`.
 pub struct NativeProvider;
 
 impl BackendProvider for NativeProvider {
     fn backend(&self) -> anyhow::Result<Box<dyn Stage1Backend + '_>> {
-        Ok(Box::new(NativeBackend::serial()))
+        Ok(Box::new(NativeBackend::default()))
     }
 }
 

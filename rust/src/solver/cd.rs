@@ -119,6 +119,19 @@ fn violation(grad: f32, alpha: f32, c: f32) -> f32 {
 /// machinery around the O(B) hot step.
 pub fn solve(problem: &ProblemView, opts: &SolverOptions) -> Solution {
     let n = problem.len();
+    // Validate the warm start up front: a mismatched α used to fail deep
+    // inside `DualState` with a bare length assert, long after the caller
+    // context (which pair, which fold) was gone.
+    if let Some(a) = &opts.warm_alpha {
+        assert!(
+            a.len() == n,
+            "SolverOptions::warm_alpha has {} entries but the problem has {} \
+             variables — warm starts must be aligned with the problem's local \
+             indices (same subset, same order)",
+            a.len(),
+            n
+        );
+    }
     let c = opts.c as f32;
     let t_start = Instant::now();
 
@@ -437,6 +450,20 @@ mod tests {
         );
         // Warm start should take no more epochs than cold start.
         assert!(warm.epochs <= cold.epochs, "{} > {}", warm.epochs, cold.epochs);
+    }
+
+    #[test]
+    #[should_panic(expected = "warm_alpha has 3 entries but the problem has 100")]
+    fn mismatched_warm_start_fails_fast_with_context() {
+        // Regression: this used to fail deep inside DualState with a bare
+        // "warm-start size mismatch", losing which solve was at fault.
+        let (g, rows, y) = separable(100, 9);
+        let p = ProblemView::new(&g, &rows, &y);
+        let opts = SolverOptions {
+            warm_alpha: Some(vec![0.1, 0.2, 0.3]),
+            ..Default::default()
+        };
+        let _ = solve(&p, &opts);
     }
 
     #[test]

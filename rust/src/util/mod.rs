@@ -1,5 +1,7 @@
 //! Self-contained substitutes for crates unavailable in this offline
-//! environment (clap, rand, tokio, serde, criterion). See DESIGN.md §2.
+//! environment (clap, rand, tokio/rayon, serde, criterion). See
+//! DESIGN.md §2. `threads` hosts the persistent worker pool every
+//! parallel primitive in the crate submits to.
 
 pub mod cli;
 pub mod json;

@@ -1,19 +1,46 @@
-//! Scoped worker pool built on `std::thread::scope` — the offline registry
-//! has neither rayon nor tokio. The coordinator schedules many independent
-//! binary SVM problems (OVO pairs × folds × grid points) over this pool,
-//! mirroring the paper's OpenMP/multi-GPU job farm.
+//! Persistent worker pool — the offline registry has neither rayon nor
+//! tokio. The coordinator schedules many independent binary SVM problems
+//! (OVO pairs × folds × grid points) over this pool, mirroring the paper's
+//! OpenMP/multi-GPU job farm; the stage-1 compute backbone (tiled GEMM,
+//! kernel blocks, parallel Jacobi sweeps) submits its row bands to the
+//! same pool.
 //!
-//! Two primitives cover both ends of the granularity spectrum:
-//! * [`parallel_map`] — dynamic scheduling over an indexed job list via a
-//!   shared atomic counter; right for coarse, uneven jobs (each job is an
-//!   entire SVM training run, or one triangular Gram row).
-//! * [`parallel_chunks`] — static contiguous row bands over a mutable
-//!   buffer; right for the regular, GEMM-shaped inner loops of the stage-1
-//!   compute backbone, where each band writes a disjoint slice of the
-//!   output and per-row work is uniform.
+//! Until PR 3 every parallel section spawned fresh scoped threads
+//! (`std::thread::scope`-per-call). That is fine at stage-1 granularity
+//! but wasteful for the many small products of a CV/grid run, where
+//! spawn/join cost rivals the work itself. [`ThreadPool`] keeps a fixed
+//! set of long-lived workers behind a job queue instead; a process-wide
+//! pool is spawned lazily on first use and shared by every call site
+//! (including every [`crate::lowrank::factor::NativeBackend`]).
+//!
+//! Three primitives cover the granularity spectrum:
+//! * [`parallel_map`] / [`ThreadPool::map`] — dynamic scheduling over an
+//!   indexed job list via a shared atomic counter; right for coarse,
+//!   uneven jobs (each job is an entire SVM training run, or one
+//!   triangular Gram row).
+//! * [`parallel_chunks`] / [`ThreadPool::chunks`] — static contiguous row
+//!   bands over a mutable buffer; right for the regular, GEMM-shaped
+//!   inner loops of the stage-1 compute backbone, where each band writes
+//!   a disjoint slice of the output and per-row work is uniform.
+//! * [`parallel_for_each`] / [`ThreadPool::for_each`] — fire-and-wait
+//!   over an index range with no collected results; the building block
+//!   for in-place updates with caller-proven disjointness (the parallel
+//!   Jacobi rotation phases in `linalg::eigen`).
+//!
+//! Scheduling model: a submitted task is a set of `n` slots claimed from
+//! an atomic counter. The *submitting thread always participates*, so a
+//! task makes progress even when every pool worker is busy — which is
+//! what makes nested submissions (a CV fold job whose stage-1 GEMM bands
+//! hit the same pool) deadlock-free by construction. Work distribution
+//! only decides *who* runs a slot, never *what* the slot computes, so
+//! every pool-backed primitive keeps the bit-identity contract of
+//! `tests/prop_parallel.rs`.
 
+use std::any::Any;
 use std::ops::Range;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Number of worker threads to use: respects `LPDSVM_THREADS`, defaults to
 /// available parallelism.
@@ -28,9 +55,329 @@ pub fn default_threads() -> usize {
         .unwrap_or(1)
 }
 
-/// Run `f(i)` for every `i in 0..n` across `threads` workers and collect the
-/// results in index order. `f` must be `Sync` (shared) — per-job state should
-/// be created inside the closure.
+/// One submitted job set: `n` slots claimed from `claimed`, executed via
+/// the type-erased `call(data, slot)` shim, completion tracked in
+/// `completed`. `limit` caps how many pool workers may join (the caller
+/// always participates on top of that).
+struct Task {
+    n: usize,
+    limit: usize,
+    claimed: AtomicUsize,
+    completed: AtomicUsize,
+    joined: AtomicUsize,
+    /// Pointer to the submitting call's closure. Only dereferenced for
+    /// claims `< n`, all of which finish before `ThreadPool::run`
+    /// returns, so the borrow never outlives the referent.
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+    /// First panic payload from any slot, re-raised by the submitter.
+    panic: Mutex<Option<Box<dyn Any + Send + 'static>>>,
+}
+
+// SAFETY: `data` points at a `Sync` closure (enforced by the bounds on
+// `ThreadPool::run`) that the submitting call keeps alive until every
+// claimed slot completes; all other fields are atomics/locks.
+unsafe impl Send for Task {}
+unsafe impl Sync for Task {}
+
+impl Task {
+    /// Whether a scanning worker may still join this task. Checked (and
+    /// `joined` bumped) only under the queue lock, so check-then-join is
+    /// race-free.
+    fn joinable(&self) -> bool {
+        self.claimed.load(Ordering::Relaxed) < self.n
+            && self.joined.load(Ordering::Relaxed) < self.limit
+    }
+}
+
+struct PoolShared {
+    /// Pending tasks in submission order; workers join the first
+    /// joinable entry, so earlier (outer) submissions drain first.
+    queue: Mutex<Vec<Arc<Task>>>,
+    /// Signals workers that the queue changed (new task or shutdown).
+    work_cv: Condvar,
+    /// Completion signalling: submitters sleep here until their task's
+    /// `completed` counter reaches `n`.
+    done_mx: Mutex<()>,
+    done_cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Persistent worker pool: long-lived workers behind a job queue.
+/// Construct with [`ThreadPool::new`], or share the lazily-spawned
+/// process-wide instance via [`global`].
+pub struct ThreadPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `workers` long-lived threads (clamped to ≥ 1).
+    pub fn new(workers: usize) -> ThreadPool {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(Vec::new()),
+            work_cv: Condvar::new(),
+            done_mx: Mutex::new(()),
+            done_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..workers.max(1))
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("lpdsvm-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        ThreadPool { shared, handles }
+    }
+
+    /// Number of long-lived workers (excluding submitting threads, which
+    /// also execute slots of their own tasks).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `f(i)` for every `i in 0..n` across the pool and collect the
+    /// results in index order — the pool-backed equivalent of
+    /// [`parallel_map`]. `threads` caps total parallelism (submitter
+    /// plus joined workers); results are identical for every cap.
+    pub fn map<T, F>(&self, n: usize, threads: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let threads = threads.clamp(1, n.max(1));
+        if threads <= 1 || n <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let slots: Vec<SlotPtr<T>> = out
+            .iter_mut()
+            .map(|s| SlotPtr(s as *mut Option<T>))
+            .collect();
+        let job = |i: usize| {
+            let v = f(i);
+            // SAFETY: each slot index is claimed by exactly one
+            // participant via the task's atomic counter, so each slot is
+            // written once with no aliasing; `run` does not return until
+            // every claimed slot has finished executing.
+            let slot: *mut Option<T> = slots[i].0;
+            unsafe { *slot = Some(v) };
+        };
+        self.run(n, threads, &job);
+        out.into_iter().map(|v| v.expect("job not run")).collect()
+    }
+
+    /// Split `data` — a row-major buffer of `row_len`-element rows — into
+    /// at most `threads` contiguous row bands and run `f(rows, band)` on
+    /// each band across the pool — the pool-backed equivalent of
+    /// [`parallel_chunks`]. Band boundaries depend only on `threads`
+    /// (never on which worker runs a band), preserving bit-identity.
+    pub fn chunks<T, F>(&self, data: &mut [T], row_len: usize, threads: usize, f: F)
+    where
+        T: Send,
+        F: Fn(Range<usize>, &mut [T]) + Sync,
+    {
+        if row_len == 0 || data.is_empty() {
+            return;
+        }
+        let rows = checked_rows(data.len(), row_len);
+        let threads = threads.clamp(1, rows);
+        if threads <= 1 {
+            f(0..rows, data);
+            return;
+        }
+        let band = rows.div_ceil(threads);
+        let bands: Vec<BandPtr<T>> = data
+            .chunks_mut(band * row_len)
+            .enumerate()
+            .map(|(t, chunk)| BandPtr {
+                start: t * band,
+                ptr: chunk.as_mut_ptr(),
+                len: chunk.len(),
+            })
+            .collect();
+        let job = |t: usize| {
+            let b = &bands[t];
+            // SAFETY: the bands partition `data` into disjoint slices,
+            // each band index is claimed exactly once, and `run` waits
+            // for every claimed slot before returning — no aliasing and
+            // no use after the borrow ends.
+            let slice = unsafe { std::slice::from_raw_parts_mut(b.ptr, b.len) };
+            f(b.start..b.start + b.len / row_len, slice);
+        };
+        self.run(bands.len(), threads, &job);
+    }
+
+    /// Run `f(i)` for every `i in 0..n` across the pool without
+    /// collecting results — for in-place updates whose disjointness the
+    /// caller proves (e.g. Jacobi rotations touching disjoint row/column
+    /// pairs). `threads` caps total parallelism as in [`ThreadPool::map`].
+    pub fn for_each<F>(&self, n: usize, threads: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let threads = threads.clamp(1, n.max(1));
+        if threads <= 1 || n <= 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        self.run(n, threads, &f);
+    }
+
+    /// Submit `n` slots and block until all have executed. The calling
+    /// thread participates (so progress never depends on a free worker);
+    /// at most `threads - 1` pool workers join it. Panics from slots are
+    /// re-raised here after the task completes, mirroring the scoped-
+    /// thread semantics this pool replaced.
+    fn run<F>(&self, n: usize, threads: usize, f: &F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let limit = threads.saturating_sub(1).min(self.handles.len());
+        if limit == 0 || n == 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let task = Arc::new(Task {
+            n,
+            limit,
+            claimed: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            joined: AtomicUsize::new(0),
+            data: f as *const F as *const (),
+            call: call_shim::<F>,
+            panic: Mutex::new(None),
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push(Arc::clone(&task));
+        }
+        self.shared.work_cv.notify_all();
+        // Participate until the claim counter is exhausted.
+        run_slots(&self.shared, &task);
+        // De-list the task so late-waking workers skip it; any worker
+        // already executing a claimed slot finishes independently.
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if let Some(pos) = q.iter().position(|t| Arc::ptr_eq(t, &task)) {
+                q.remove(pos);
+            }
+        }
+        // Wait for slots claimed by pool workers to finish executing.
+        {
+            let mut guard = self.shared.done_mx.lock().unwrap();
+            while task.completed.load(Ordering::Acquire) < task.n {
+                guard = self.shared.done_cv.wait(guard).unwrap();
+            }
+        }
+        let payload = task.panic.lock().unwrap().take();
+        if let Some(p) = payload {
+            panic::resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            // Publish the shutdown under the queue lock: a worker between
+            // its shutdown check and its wait still holds that lock, so
+            // the store-and-notify cannot slip into the gap and leave it
+            // parked forever (a lost wakeup would hang the join below).
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::Release);
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Type-erasure shim: recover the concrete closure and run one slot.
+///
+/// # Safety
+/// `data` must point to a live `F` — guaranteed by `ThreadPool::run`,
+/// which keeps the closure borrowed until every claimed slot completes.
+unsafe fn call_shim<F: Fn(usize) + Sync>(data: *const (), i: usize) {
+    let f = &*(data as *const F);
+    f(i);
+}
+
+/// Claim and execute slots until the task's counter is exhausted. Shared
+/// by pool workers and the submitting thread.
+fn run_slots(shared: &PoolShared, task: &Task) {
+    loop {
+        let i = task.claimed.fetch_add(1, Ordering::Relaxed);
+        if i >= task.n {
+            return;
+        }
+        let result = panic::catch_unwind(AssertUnwindSafe(|| {
+            // SAFETY: i < n, so the closure is still alive (see `Task`).
+            unsafe { (task.call)(task.data, i) };
+        }));
+        if let Err(payload) = result {
+            let mut slot = task.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+        let done = task.completed.fetch_add(1, Ordering::Release) + 1;
+        if done == task.n {
+            // Lock-then-notify so the submitter cannot miss the wakeup
+            // between its predicate check and its wait.
+            let _guard = shared.done_mx.lock().unwrap();
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                let found = q.iter().find(|t| t.joinable()).map(Arc::clone);
+                if let Some(t) = found {
+                    t.joined.fetch_add(1, Ordering::Relaxed);
+                    break t;
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        run_slots(shared, &task);
+    }
+}
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+
+/// The process-wide pool, spawned lazily on first use with
+/// [`default_threads`] workers (`LPDSVM_THREADS` caps it). Every parallel
+/// primitive in the crate funnels through this instance, so pool-side
+/// compute threads stay fixed no matter how many subsystems (coordinator
+/// job farm, serve workers, stage-1 backbone) submit concurrently —
+/// total runnable threads are bounded by the pool plus the submitters,
+/// each of which executes slots of its own task while it waits.
+pub fn global() -> &'static ThreadPool {
+    GLOBAL.get_or_init(|| ThreadPool::new(default_threads()))
+}
+
+/// Run `f(i)` for every `i in 0..n` across `threads` workers of the
+/// global pool and collect the results in index order. `f` must be `Sync`
+/// (shared) — per-job state should be created inside the closure.
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -38,48 +385,28 @@ where
 {
     let threads = threads.clamp(1, n.max(1));
     if threads <= 1 || n <= 1 {
+        // Serial path without touching (or lazily spawning) the pool.
         return (0..n).map(f).collect();
     }
-    let next = AtomicUsize::new(0);
-    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    let slots: Vec<SlotPtr<T>> = out
-        .iter_mut()
-        .map(|s| SlotPtr(s as *mut Option<T>))
-        .collect();
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            let next = &next;
-            let f = &f;
-            let slots = &slots;
-            scope.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let v = f(i);
-                // SAFETY: each index i is claimed by exactly one worker via
-                // the atomic counter, so each slot is written once with no
-                // aliasing; the scope guarantees the borrow outlives workers.
-                let slot: *mut Option<T> = slots[i].0;
-                unsafe { *slot = Some(v) };
-            });
-        }
-    });
-    out.into_iter().map(|v| v.expect("job not run")).collect()
+    global().map(n, threads, f)
 }
 
 /// Split `data` — a row-major buffer of `row_len`-element rows — into at
 /// most `threads` contiguous row bands and run `f(rows, band)` on each
-/// band in parallel. `rows` is the half-open range of row indices the band
-/// covers and `band` is the mutable slice holding exactly those rows, so
-/// every worker writes a disjoint region with no synchronisation. This is
-/// the row-band backbone under the tiled GEMM and the batch kernel blocks;
-/// because banding only partitions *rows*, each output row is computed by
-/// exactly one worker in exactly the order the serial path would use, and
-/// results are bit-identical for every thread count.
+/// band in parallel over the global pool. `rows` is the half-open range
+/// of row indices the band covers and `band` is the mutable slice holding
+/// exactly those rows, so every worker writes a disjoint region with no
+/// synchronisation. This is the row-band backbone under the tiled GEMM
+/// and the batch kernel blocks; because banding only partitions *rows*,
+/// each output row is computed by exactly one worker in exactly the order
+/// the serial path would use, and results are bit-identical for every
+/// thread count.
 ///
-/// Degenerate inputs are handled without spawning: an empty buffer (or
+/// Degenerate inputs are handled without scheduling: an empty buffer (or
 /// `row_len == 0`) is a no-op, and `threads` is clamped to the row count.
+/// A buffer that is not a whole number of rows is a hard error (a silent
+/// `debug_assert!` here once dropped a trailing partial row in release
+/// builds).
 pub fn parallel_chunks<T, F>(data: &mut [T], row_len: usize, threads: usize, f: F)
 where
     T: Send,
@@ -88,29 +415,61 @@ where
     if row_len == 0 || data.is_empty() {
         return;
     }
-    let rows = data.len() / row_len;
-    debug_assert_eq!(rows * row_len, data.len(), "buffer is not whole rows");
-    let threads = threads.clamp(1, rows.max(1));
-    if threads <= 1 {
+    let rows = checked_rows(data.len(), row_len);
+    if threads.clamp(1, rows) <= 1 {
         f(0..rows, data);
         return;
     }
-    let band = rows.div_ceil(threads);
-    std::thread::scope(|scope| {
-        for (t, chunk) in data.chunks_mut(band * row_len).enumerate() {
-            let f = &f;
-            let start = t * band;
-            let end = start + chunk.len() / row_len;
-            scope.spawn(move || f(start..end, chunk));
-        }
-    });
+    global().chunks(data, row_len, threads, f)
 }
 
-/// Covariant raw pointer wrapper so slots can be shared across the scope.
+/// Run `f(i)` for every `i in 0..n` across `threads` workers of the
+/// global pool without collecting results — see [`ThreadPool::for_each`].
+pub fn parallel_for_each<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 || n <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    global().for_each(n, threads, f)
+}
+
+/// Hard shape check shared by the chunk primitives: a ragged buffer must
+/// never be silently truncated to whole rows (the old `debug_assert!`
+/// dropped a trailing partial row in release builds).
+fn checked_rows(len: usize, row_len: usize) -> usize {
+    let rows = len / row_len;
+    assert!(
+        rows * row_len == len,
+        "parallel chunks: buffer of {len} elements is not a whole number of \
+         {row_len}-element rows ({rows} full rows leave {} elements over)",
+        len - rows * row_len
+    );
+    rows
+}
+
+/// Covariant raw pointer wrapper so result slots can be shared across the
+/// pool workers.
 struct SlotPtr<T>(*mut Option<T>);
-// SAFETY: disjoint writes enforced by the atomic job counter (see above).
+// SAFETY: disjoint writes enforced by the task's atomic claim counter.
 unsafe impl<T: Send> Sync for SlotPtr<T> {}
 unsafe impl<T: Send> Send for SlotPtr<T> {}
+
+/// Raw parts of one disjoint row band of a chunked buffer.
+struct BandPtr<T> {
+    start: usize,
+    ptr: *mut T,
+    len: usize,
+}
+// SAFETY: bands are disjoint slices of one buffer; each band is executed
+// by exactly one claimant (see `ThreadPool::chunks`).
+unsafe impl<T: Send> Sync for BandPtr<T> {}
+unsafe impl<T: Send> Send for BandPtr<T> {}
 
 #[cfg(test)]
 mod tests {
@@ -200,5 +559,136 @@ mod tests {
             band[0] = 7;
         });
         assert_eq!(data[0], 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a whole number")]
+    fn chunks_ragged_buffer_is_a_hard_error() {
+        // 7 elements cannot be rows of 3 — must panic even in release
+        // builds (a debug_assert here once silently dropped the tail).
+        let mut data = vec![0f32; 7];
+        parallel_chunks(&mut data, 3, 2, |_, _| {});
+    }
+
+    #[test]
+    #[should_panic(expected = "not a whole number")]
+    fn pool_chunks_ragged_buffer_is_a_hard_error() {
+        let pool = ThreadPool::new(2);
+        let mut data = vec![0f32; 10];
+        pool.chunks(&mut data, 4, 2, |_, _| {});
+    }
+
+    #[test]
+    fn pool_map_matches_serial() {
+        let pool = ThreadPool::new(3);
+        let want: Vec<usize> = (0..200).map(|i| i * i).collect();
+        for t in [1usize, 2, 3, 8] {
+            assert_eq!(pool.map(200, t, |i| i * i), want, "t={t}");
+        }
+    }
+
+    #[test]
+    fn pool_chunks_matches_serial() {
+        let pool = ThreadPool::new(3);
+        let mut want = vec![0u64; 17 * 3];
+        pool.chunks(&mut want, 3, 1, |rows, band| {
+            for (bi, r) in rows.enumerate() {
+                for (c, x) in band[bi * 3..(bi + 1) * 3].iter_mut().enumerate() {
+                    *x = (r * 100 + c) as u64;
+                }
+            }
+        });
+        for t in [2usize, 3, 8, 64] {
+            let mut got = vec![0u64; 17 * 3];
+            pool.chunks(&mut got, 3, t, |rows, band| {
+                for (bi, r) in rows.enumerate() {
+                    for (c, x) in band[bi * 3..(bi + 1) * 3].iter_mut().enumerate() {
+                        *x = (r * 100 + c) as u64;
+                    }
+                }
+            });
+            assert_eq!(got, want, "t={t}");
+        }
+    }
+
+    #[test]
+    fn pool_for_each_runs_every_index_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        pool.for_each(64, 4, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn pool_survives_reuse_across_many_submissions() {
+        // The whole point of the persistent pool: many small tasks reuse
+        // the same workers instead of respawning threads.
+        let pool = ThreadPool::new(2);
+        for round in 0..50 {
+            let out = pool.map(8, 3, move |i| i + round);
+            assert_eq!(out, (round..round + 8).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn nested_submission_does_not_deadlock() {
+        // An outer job running on a pool worker submits its own task to
+        // the same pool; caller participation guarantees progress even
+        // with every worker busy.
+        let pool = Arc::new(ThreadPool::new(2));
+        let p2 = Arc::clone(&pool);
+        let out = pool.map(4, 4, move |i| {
+            let inner = p2.map(6, 4, |j| j * 10);
+            inner.iter().sum::<usize>() + i
+        });
+        assert_eq!(out, vec![150, 151, 152, 153]);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom from slot")]
+    fn pool_repropagates_job_panics() {
+        let pool = ThreadPool::new(2);
+        pool.for_each(8, 4, |i| {
+            if i == 5 {
+                panic!("boom from slot {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_usable_after_a_panicked_task() {
+        let pool = ThreadPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.for_each(8, 4, |i| {
+                if i == 2 {
+                    panic!("transient");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // Workers survived the unwound job and keep serving.
+        assert_eq!(pool.map(5, 3, |i| i * 3), vec![0, 3, 6, 9, 12]);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_sized() {
+        assert!(
+            std::ptr::eq(global(), global()),
+            "global() must hand back one shared pool"
+        );
+        assert!(global().workers() >= 1);
+    }
+
+    #[test]
+    fn parallel_for_each_serial_path() {
+        let hits: Vec<AtomicUsize> = (0..5).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for_each(5, 1, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
     }
 }

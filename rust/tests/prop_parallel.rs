@@ -4,16 +4,27 @@
 //! (`threads == 1`) path. Banding only partitions output rows, so each row
 //! is computed by exactly one worker in exactly the serial order — these
 //! tests pin that contract down across shapes and all four kernels.
+//!
+//! Since PR 3 every one of these paths runs on the persistent worker pool
+//! (`util::threads::ThreadPool`) instead of scoped per-call spawns, so
+//! the same assertions now also pin down the pool's scheduling: dynamic
+//! slot claiming decides *who* computes a band, never *what* it computes.
+//! The pool-parallel tournament Jacobi (`sym_eig_threads`) has a weaker
+//! but sufficient contract, tested below: deterministic for every fixed
+//! thread count (bit-identical across counts, in fact) and within the
+//! serial solver's accuracy envelope at unchanged tolerances.
 
 use lpdsvm::coordinator::train::{train, TrainConfig};
 use lpdsvm::data::sparse::SparseMatrix;
 use lpdsvm::data::synth::{FeatureStyle, SynthSpec};
 use lpdsvm::kernel::Kernel;
+use lpdsvm::linalg::eigen::{sym_eig, sym_eig_threads, sym_eig_tournament};
 use lpdsvm::linalg::Mat;
 use lpdsvm::lowrank::factor::{LowRankFactor, NativeBackend};
 use lpdsvm::lowrank::Stage1Config;
 use lpdsvm::testing::prop::{forall, Gen};
 use lpdsvm::util::rng::Rng;
+use lpdsvm::util::threads::ThreadPool;
 use lpdsvm::util::timer::StageClock;
 
 const THREADS: [usize; 4] = [1, 2, 3, 8];
@@ -239,6 +250,148 @@ fn stage1_factor_bitwise_identical_across_threads_all_kernels() {
                 kernel.name()
             );
         }
+    }
+}
+
+#[test]
+fn prop_private_pool_gemm_bitwise_matches_global_pool() {
+    // The pool API itself (not just the global-pool free functions):
+    // explicit `ThreadPool::chunks` banding must reproduce the library
+    // GEMM bit for bit, for private pools of any size.
+    let pool = ThreadPool::new(3);
+    forall("private-pool-gemm", 10, &shape_gen(), |p| {
+        let mut rng = Rng::new(p.seed);
+        let a = random_mat(p.m, p.k, &mut rng);
+        let b = random_mat(p.k, p.n, &mut rng);
+        let serial = a.matmul_threads(&b, 1);
+        for &t in &THREADS {
+            let mut out = Mat::zeros(p.m, p.n);
+            pool.chunks(&mut out.data, p.n, t, |rows, band| {
+                for (bi, i) in rows.enumerate() {
+                    for j in 0..p.n {
+                        let mut s = 0.0f32;
+                        for kk in 0..p.k {
+                            s += a.at(i, kk) * b.at(kk, j);
+                        }
+                        band[bi * p.n + j] = s;
+                    }
+                }
+            });
+            // Same banding, same per-row arithmetic → same floats as a
+            // naive row loop; compare against the naive serial loop.
+            let mut naive = Mat::zeros(p.m, p.n);
+            for i in 0..p.m {
+                for j in 0..p.n {
+                    let mut s = 0.0f32;
+                    for kk in 0..p.k {
+                        s += a.at(i, kk) * b.at(kk, j);
+                    }
+                    naive.set(i, j, s);
+                }
+            }
+            if out != naive {
+                return Err(format!("pool naive GEMM differs at t={t}"));
+            }
+            // And the tiled library kernel stays within FMA rounding.
+            let diff = out.max_abs_diff(&serial);
+            if diff > 1e-3 {
+                return Err(format!("pool vs tiled GEMM diff {diff} at t={t}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pool_map_results_independent_of_scheduling() {
+    // parallel_map order contract on the shared pool: results collected
+    // in index order whatever the interleaving; repeated runs identical.
+    let jobs: Vec<u64> = (0..300).map(|i| (i as u64) * 17 % 101).collect();
+    let reference: Vec<u64> = jobs.iter().map(|&x| x * x + 1).collect();
+    for &t in &THREADS {
+        for _rep in 0..3 {
+            let got = lpdsvm::util::threads::parallel_map(jobs.len(), t, |i| {
+                jobs[i] * jobs[i] + 1
+            });
+            assert_eq!(got, reference, "t={t}");
+        }
+    }
+}
+
+#[test]
+fn sym_eig_threads_deterministic_and_accurate_per_thread_count() {
+    // Acceptance contract for the parallel Jacobi: per-thread-count
+    // determinism plus the serial suite's tolerances, on both an even and
+    // an odd dimension (the odd case exercises the phantom seat). The
+    // tournament variant is exercised directly — `sym_eig_threads` would
+    // route these small matrices to the serial path (its size-only
+    // cutover is pinned down by `threads_entry_point_cuts_over_on_size_
+    // only` in linalg::eigen and by the 160-dim case below).
+    for (n, seed) in [(20usize, 51u64), (17, 52)] {
+        let mut rng = Rng::new(seed);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.normal() as f32;
+                a.set(i, j, v);
+                a.set(j, i, v);
+            }
+        }
+        let serial = sym_eig(&a, 50, 1e-13);
+        let reference = sym_eig_tournament(&a, 50, 1e-13, 1);
+        for &t in &THREADS {
+            let once = sym_eig_tournament(&a, 50, 1e-13, t);
+            let twice = sym_eig_tournament(&a, 50, 1e-13, t);
+            assert_eq!(once.values, twice.values, "n={n} t={t} nondeterministic");
+            assert_eq!(once.vectors, twice.vectors, "n={n} t={t} nondeterministic");
+            // The tournament ordering is scheduling-independent, so every
+            // thread count reproduces t=1 exactly.
+            assert_eq!(once.values, reference.values, "n={n} t={t} vs t=1");
+            assert_eq!(once.vectors, reference.vectors, "n={n} t={t} vs t=1");
+
+            // Accuracy at the serial suite's unchanged tolerances.
+            for (lp, ls) in once.values.iter().zip(&serial.values) {
+                assert!((lp - ls).abs() < 1e-6, "n={n} t={t}: {lp} vs {ls}");
+            }
+            let vt_v = once.vectors.transpose().matmul(&once.vectors);
+            assert!(
+                vt_v.max_abs_diff(&Mat::eye(n)) < 1e-5,
+                "n={n} t={t}: eigenvectors not orthonormal"
+            );
+            let recon = Mat::from_fn(n, n, |i, j| {
+                (0..n)
+                    .map(|k| {
+                        once.vectors.at(i, k) as f64
+                            * once.values[k]
+                            * once.vectors.at(j, k) as f64
+                    })
+                    .sum::<f64>() as f32
+            });
+            assert!(
+                a.max_abs_diff(&recon) < 1e-4,
+                "n={n} t={t}: reconstruction off by {}",
+                a.max_abs_diff(&recon)
+            );
+        }
+    }
+
+    // Above the size cutover the public entry point itself runs the
+    // pooled tournament; it must be deterministic per thread count too.
+    let n = 160;
+    let mut rng = Rng::new(53);
+    let mut a = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let v = rng.normal() as f32;
+            a.set(i, j, v);
+            a.set(j, i, v);
+        }
+    }
+    let reference = sym_eig_threads(&a, 40, 1e-12, 1);
+    for &t in &THREADS {
+        let e = sym_eig_threads(&a, 40, 1e-12, t);
+        assert_eq!(e.values, reference.values, "entry point differs at t={t}");
+        assert_eq!(e.vectors, reference.vectors, "entry point differs at t={t}");
     }
 }
 
