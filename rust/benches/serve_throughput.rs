@@ -1,4 +1,5 @@
-//! Serving throughput: micro-batched engine vs naive per-request loop.
+//! Serving throughput: micro-batched engine vs naive per-request loop,
+//! plus admission control under open-loop overload.
 //!
 //! The acceptance workload for the `serve` subsystem: a synthetic OVO
 //! problem, ≥ 10k single-row requests, engine batch caps swept over
@@ -7,6 +8,10 @@
 //! thread. The engine should clear 4× at the larger batch sizes: one
 //! stage-1 GEMM per batch amortizes the landmark/whitening traffic that
 //! the naive loop re-reads per row, and scoring fans across all cores.
+//! The final section saturates a deliberately under-provisioned engine
+//! (one worker, bounded queue) and asserts the queue never exceeds its
+//! cap and the excess is shed explicitly, reporting accepted-request
+//! p50/p99.
 //!
 //!     cargo bench --bench serve_throughput
 //!     LPDSVM_SERVE_REQUESTS=50000 cargo bench --bench serve_throughput
@@ -100,6 +105,7 @@ fn main() {
                 max_batch,
                 max_wait: Duration::from_micros(200),
                 workers: 0, // one per core
+                ..ServeConfig::default()
             },
         );
         let t0 = Instant::now();
@@ -135,6 +141,66 @@ fn main() {
         .ok();
     println!(
         "best speedup over the naive loop: {best_speedup:.1}x (acceptance target: ≥ 4x at \
-         batch 64–256 on a multi-core host)"
+         batch 64–256 on a multi-core host)\n"
     );
+
+    // --- admission control under open-loop overload ---
+    // One worker, small batches, a bounded queue, unpaced arrivals: the
+    // submitter outruns scoring by construction, so without admission
+    // control the queue (and tail latency) would grow without bound. The
+    // acceptance contract: the queue never exceeds its cap, the engine
+    // sheds the excess explicitly, and the p99 of *accepted* requests
+    // stays bounded by the backlog the cap permits.
+    let max_queue = 256usize;
+    let engine = ServeEngine::start(
+        Arc::clone(&registry),
+        ServeConfig {
+            max_batch: 32,
+            max_wait: Duration::from_micros(200),
+            workers: 1,
+            max_queue,
+            ..ServeConfig::default()
+        },
+    );
+    let n_sat = n_requests.max(20_000);
+    let t0 = Instant::now();
+    let tickets: Vec<_> = (0..n_sat)
+        .map(|i| engine.submit("m", &rows[i % rows.len()]))
+        .collect();
+    let mut accepted = 0u64;
+    let mut shed = 0u64;
+    for ticket in &tickets {
+        match ticket.wait() {
+            Ok(_) => accepted += 1,
+            Err(e) if e.is_shed() => shed += 1,
+            Err(e) => panic!("unexpected serve error under saturation: {e}"),
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let m = engine.metrics();
+    let queue_max = m.queue_depth_max.load(std::sync::atomic::Ordering::Relaxed);
+    let rejected_full = m.rejected_full.load(std::sync::atomic::Ordering::Relaxed);
+    let shed_expired = m.shed_expired.load(std::sync::atomic::Ordering::Relaxed);
+    let p99_ms = m.latency_us.quantile(0.99) as f64 / 1e3;
+    assert!(
+        queue_max <= max_queue as u64,
+        "queue grew past its cap under overload: {queue_max} > {max_queue}"
+    );
+    assert_eq!(
+        rejected_full + shed_expired,
+        shed,
+        "every shed ticket must be counted in rejected_full/shed_expired"
+    );
+    assert!(
+        shed > 0,
+        "open-loop overload with one worker should overflow a {max_queue}-slot queue"
+    );
+    println!(
+        "saturation (workers=1, max_batch=32, max_queue={max_queue}): {n_sat} submitted in \
+         {secs:.2} s — {accepted} accepted, {shed} shed (rejected_full={rejected_full}, \
+         shed_expired={shed_expired}), queue high-water {queue_max}, accepted p50 {:.3} ms, \
+         p99 {p99_ms:.3} ms",
+        m.latency_us.quantile(0.50) as f64 / 1e3
+    );
+    engine.shutdown();
 }

@@ -86,6 +86,24 @@ pub fn cross_validate_shared(
     let mut stores: Vec<WarmStore> = Vec::with_capacity(folds.k);
     for f in 0..folds.k {
         let (train_idx, val_idx) = folds.split(f);
+        // `Folds::stratified` can no longer produce an empty fold (the
+        // round-robin offset is carried across classes), but `Folds` is a
+        // plain pub struct — guard against hand-built or future
+        // assignments so the failure names the fold instead of surfacing
+        // as a NaN error rate or an empty-problem panic deep in training.
+        anyhow::ensure!(
+            !val_idx.is_empty(),
+            "cross-validation fold {f} has an empty validation set \
+             ({} folds over {} points; lower k or provide more data per class)",
+            folds.k,
+            data.len()
+        );
+        anyhow::ensure!(
+            !train_idx.is_empty(),
+            "cross-validation fold {f} has an empty training set ({} folds over {} points)",
+            folds.k,
+            data.len()
+        );
         let (heads, store) = ovo::train_all_pairs(
             &factor.g,
             &data.labels,
@@ -200,6 +218,39 @@ mod tests {
         let r = cross_validate(&data, &cfg, &cv).unwrap();
         assert_eq!(r.n_binary_problems, 3 * 6);
         assert!(r.mean_error < 0.25, "cv error {}", r.mean_error);
+    }
+
+    #[test]
+    fn empty_validation_fold_is_a_clear_error() {
+        // `Folds::stratified` can no longer produce one, so hand-build an
+        // assignment that leaves fold 2 empty and drive the shared-CV
+        // entry point directly.
+        let spec = PaperDataset::Adult.spec(0.005, 31);
+        let data = spec.synth.generate();
+        let cfg = TrainConfig {
+            stage1: Stage1Config {
+                budget: 16,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut clock = StageClock::new();
+        let factor = LowRankFactor::compute(
+            &data.x,
+            cfg.kernel,
+            &cfg.stage1,
+            &crate::lowrank::factor::NativeBackend::default(),
+            &mut clock,
+        )
+        .unwrap();
+        let assignments: Vec<u32> = (0..data.len()).map(|i| (i % 2) as u32).collect();
+        let folds = Folds { assignments, k: 3 };
+        let err = cross_validate_shared(&data, &factor, &folds, &cfg, None).unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("fold 2") && msg.contains("empty validation"),
+            "unhelpful error: {msg}"
+        );
     }
 
     #[test]

@@ -23,12 +23,22 @@ impl Folds {
         assert!(labels.len() >= k, "fewer points than folds");
         let n_classes = labels.iter().copied().max().map_or(1, |m| m as usize + 1);
         let mut assignments = vec![0u32; labels.len()];
+        // Carry the round-robin position across classes instead of
+        // restarting every class at fold 0. A fresh restart piles each
+        // class's remainder points (count % k) onto the low-numbered
+        // folds, and once several classes are smaller than k the high
+        // folds can end up empty — which meant empty validation sets in
+        // `coordinator::cv`. With the carried offset all n points land on
+        // consecutive folds mod k, so total fold sizes differ by at most
+        // one and every fold is nonempty whenever n ≥ k.
+        let mut start = 0usize;
         for c in 0..n_classes as u32 {
             let mut idx: Vec<usize> = (0..labels.len()).filter(|&i| labels[i] == c).collect();
             rng.shuffle(&mut idx);
             for (pos, &i) in idx.iter().enumerate() {
-                assignments[i] = (pos % k) as u32;
+                assignments[i] = ((start + pos) % k) as u32;
             }
+            start = (start + idx.len()) % k;
         }
         Folds { assignments, k }
     }
@@ -87,6 +97,43 @@ mod tests {
             assert_eq!(c1, 6);
             assert_eq!(c2, 2);
         }
+    }
+
+    #[test]
+    fn small_classes_spread_across_all_folds() {
+        // Regression: 3 classes × 2 points with k = 5. Restarting every
+        // class at fold 0 put all six points on folds {0, 1}, leaving
+        // folds 2–4 empty (empty validation sets downstream). The carried
+        // offset must fill every fold.
+        let labels = vec![0u32, 0, 1, 1, 2, 2];
+        let folds = Folds::stratified(&labels, 5, &mut Rng::new(3));
+        let mut counts = vec![0usize; 5];
+        for &a in &folds.assignments {
+            counts[a as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c >= 1), "empty fold: {counts:?}");
+        for f in 0..5 {
+            let (train, val) = folds.split(f);
+            assert!(!val.is_empty(), "fold {f} has an empty validation set");
+            assert_eq!(train.len() + val.len(), labels.len());
+        }
+    }
+
+    #[test]
+    fn remainders_do_not_pile_onto_low_folds() {
+        // Regression: 4 classes of 5 points with k = 4 leaves remainder 1
+        // per class; fresh restarts sent all four spares to fold 0
+        // (8 points vs 4 elsewhere). Carried offsets deal one per fold.
+        let mut labels: Vec<u32> = Vec::new();
+        for c in 0..4u32 {
+            labels.extend([c; 5]);
+        }
+        let folds = Folds::stratified(&labels, 4, &mut Rng::new(5));
+        let mut counts = vec![0usize; 4];
+        for &a in &folds.assignments {
+            counts[a as usize] += 1;
+        }
+        assert_eq!(counts, vec![5, 5, 5, 5], "unbalanced folds: {counts:?}");
     }
 
     #[test]

@@ -17,10 +17,12 @@
 //!   (LIBSVM/ThunderSVM-style) and an LLSVM-style chunked solver for the
 //!   paper's table 2 comparison.
 //! * **Serving** ([`serve`]): a micro-batching inference engine over
-//!   trained models — request coalescing under a latency/size policy, a
-//!   hot-swappable model registry, per-request tickets, and
-//!   latency/throughput metrics, reusing the same `Stage1Backend`
-//!   abstraction so batches score through native GEMM or the PJRT path.
+//!   trained models — request coalescing under a latency/size policy,
+//!   admission control with explicit load shedding under saturation, a
+//!   hot-swappable model registry, per-request tickets,
+//!   latency/throughput metrics, and a dependency-free HTTP/1.1
+//!   front-end, reusing the same `Stage1Backend` abstraction so batches
+//!   score through native GEMM or the PJRT path.
 //!
 //! Quickstart:
 //!
@@ -73,7 +75,8 @@ pub mod prelude {
     pub use crate::model::multiclass::MulticlassModel;
     pub use crate::model::ModelKind;
     pub use crate::serve::{
-        ModelRegistry, PredictResult, Prediction, ServeConfig, ServeEngine, ServingModel,
+        HttpServer, ModelRegistry, PredictResult, Prediction, ServeConfig, ServeEngine,
+        ServeError, ServingModel, ShedPolicy,
     };
     pub use crate::solver::{solve, Solution, SolverOptions};
     pub use crate::util::rng::Rng;

@@ -6,7 +6,7 @@
 //!   predict    predict with a saved model, report error if labels given
 //!   cv         k-fold cross validation (stage 1 shared across folds)
 //!   grid       (C, γ) grid search with CV, warm starts, G-reuse
-//!   serve      micro-batching inference engine + open-loop load generator
+//!   serve      micro-batching inference engine, HTTP front-end, load generator
 //!   info       show artifact / runtime information
 
 use lpdsvm::coordinator::cv::{cross_validate, CvConfig};
@@ -23,7 +23,8 @@ use lpdsvm::model::multiclass::error_rate;
 use lpdsvm::report::Table;
 use lpdsvm::runtime::{AccelBackend, Runtime};
 use lpdsvm::serve::{
-    BackendProvider, ModelRegistry, NativeProvider, PjrtProvider, ServeConfig, ServeEngine,
+    BackendProvider, HttpServer, ModelRegistry, NativeProvider, PjrtProvider, ServeConfig,
+    ServeEngine, ShedPolicy,
 };
 use lpdsvm::solver::SolverOptions;
 use lpdsvm::util::cli::{parse, ArgSpec};
@@ -75,7 +76,7 @@ fn print_usage() {
            predict    predict with a saved model\n\
            cv         k-fold cross-validation\n\
            grid       (C, gamma) grid search with CV + warm starts\n\
-           serve      batched inference engine + open-loop load generator\n\
+           serve      batched inference engine (optional HTTP front-end) + load generator\n\
            info       artifact/runtime information"
     );
 }
@@ -348,17 +349,36 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         ArgSpec::opt("scale", "0.005", "synthetic workload scale (fraction of paper n)"),
         ArgSpec::opt("budget", "128", "landmark budget B for the synthetic model"),
         ArgSpec::opt("seed", "42", "RNG seed"),
-        ArgSpec::opt("requests", "10000", "requests submitted by the load generator"),
+        ArgSpec::opt(
+            "requests",
+            "10000",
+            "requests submitted by the load generator (0 = none; needs --listen)",
+        ),
         ArgSpec::opt("rate", "0", "open-loop arrival rate, req/s (0 = as fast as possible)"),
         ArgSpec::opt("max-batch", "256", "dispatch a batch at this many queued requests"),
         ArgSpec::opt("max-wait-us", "2000", "dispatch a partial batch after this wait (µs)"),
         ArgSpec::opt("workers", "0", "scoring worker threads (0 = auto)"),
+        ArgSpec::opt(
+            "max-queue",
+            "0",
+            "admission control: bound the request queue (0 = unbounded)",
+        ),
+        ArgSpec::opt(
+            "shed-policy",
+            "reject-newest",
+            "full-queue policy: reject-newest | drop-expired",
+        ),
+        ArgSpec::opt("listen", "", "serve over HTTP on this address (e.g. 127.0.0.1:8080)"),
+        ArgSpec::flag(
+            "saturate",
+            "overload mode: unpaced arrivals against a bounded queue; fails unless the engine shed load",
+        ),
         ArgSpec::flag("compare", "also time a naive per-request predict() loop"),
     ];
     specs.extend(backend_args());
     let p = parse(
         "serve",
-        "Serve a model through the micro-batching engine under synthetic load",
+        "Serve a model through the micro-batching engine (optionally over HTTP) under synthetic load",
         &specs,
         args,
     )?;
@@ -410,27 +430,82 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         data.dim()
     );
 
+    let saturate = p.flag("saturate");
+    let shed_policy = match p.str("shed-policy") {
+        "reject-newest" => ShedPolicy::RejectNewest,
+        "drop-expired" => ShedPolicy::DropExpired,
+        other => anyhow::bail!("unknown --shed-policy '{other}' (reject-newest | drop-expired)"),
+    };
+    let mut max_queue = p.usize("max-queue")?;
+    let workers = p.usize("workers")?;
+    if saturate && max_queue == 0 {
+        // Saturation needs a traffic boundary to push against; default to
+        // one full batch per worker of headroom.
+        let effective_workers = if workers == 0 {
+            lpdsvm::util::threads::default_threads().max(1)
+        } else {
+            workers
+        };
+        max_queue = (p.usize("max-batch")?.max(1) * effective_workers).max(1);
+        println!("--saturate without --max-queue: bounding the queue at {max_queue}");
+    }
     let cfg = ServeConfig {
         max_batch: p.usize("max-batch")?,
         max_wait: Duration::from_micros(p.u64("max-wait-us")?),
-        workers: p.usize("workers")?,
+        workers,
+        max_queue,
+        shed_policy,
     };
     let provider = provider_for(p.str("backend"))?;
-    let engine = ServeEngine::start_with_provider(Arc::clone(&registry), cfg, provider);
+    let engine = Arc::new(ServeEngine::start_with_provider(
+        Arc::clone(&registry),
+        cfg,
+        provider,
+    ));
     println!(
-        "engine up: max_batch={} max_wait={}µs workers={} backend={}",
+        "engine up: max_batch={} max_wait={}µs workers={} max_queue={} shed_policy={:?} backend={}",
         engine.config().max_batch,
         engine.config().max_wait.as_micros(),
         engine.config().workers,
+        engine.config().max_queue,
+        engine.config().shed_policy,
         p.str("backend"),
     );
+
+    let http = if p.str("listen").is_empty() {
+        None
+    } else {
+        let server = HttpServer::bind(Arc::clone(&engine), p.str("listen"))?;
+        println!(
+            "http front-end on {} — POST /v1/models/default:predict, GET /v1/models /metrics /healthz",
+            server.addr()
+        );
+        Some(server)
+    };
 
     // Open-loop generator: arrival times are scheduled up front and never
     // depend on completions, so queueing delay shows up as latency (the
     // honest way to load-test a service) rather than throttling arrivals.
     let n_requests = p.usize("requests")?;
-    anyhow::ensure!(n_requests > 0, "--requests must be at least 1");
-    let rate = p.f64("rate")?;
+    if n_requests == 0 {
+        anyhow::ensure!(
+            http.is_some(),
+            "--requests 0 disables the load generator; combine it with --listen"
+        );
+        anyhow::ensure!(!saturate, "--saturate needs the load generator (--requests > 0)");
+        println!("no load generator (--requests 0); serving until killed");
+        loop {
+            std::thread::park();
+        }
+    }
+    let rate = if saturate {
+        if p.f64("rate")? > 0.0 {
+            println!("--saturate ignores --rate: arrivals are unpaced to outrun the workers");
+        }
+        0.0
+    } else {
+        p.f64("rate")?
+    };
     let rows: Vec<Vec<(u32, f32)>> = (0..data.len()).map(|i| data.x.row_entries(i)).collect();
     let t0 = Instant::now();
     let mut tickets = Vec::with_capacity(n_requests);
@@ -467,9 +542,36 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         // Error rate over the requests that actually got a prediction.
         Table::pct(mismatches as f64 / served.max(1) as f64)
     );
+    if saturate {
+        use std::sync::atomic::Ordering;
+        let m = engine.metrics();
+        let rejected_full = m.rejected_full.load(Ordering::Relaxed);
+        let shed_expired = m.shed_expired.load(Ordering::Relaxed);
+        let queue_max = m.queue_depth_max.load(Ordering::Relaxed);
+        println!(
+            "saturation: rejected_full={rejected_full} shed_expired={shed_expired} \
+             queue_depth_max={queue_max} (cap {max_queue})"
+        );
+        anyhow::ensure!(
+            queue_max <= max_queue as u64,
+            "queue grew past its cap: {queue_max} > {max_queue}"
+        );
+        // The CI smoke relies on this: a clean exit from --saturate means
+        // the shedding path actually ran.
+        anyhow::ensure!(
+            rejected_full + shed_expired > 0,
+            "saturate mode never overflowed the {max_queue}-slot queue — \
+             raise --requests or lower --max-queue/--workers"
+        );
+    }
+    if let Some(server) = http {
+        server.shutdown();
+    }
     engine.shutdown();
 
-    if p.flag("compare") && rate > 0.0 {
+    if p.flag("compare") && saturate {
+        println!("--compare is meaningless under --saturate (most requests shed); skipping");
+    } else if p.flag("compare") && rate > 0.0 {
         // With paced arrivals the elapsed window measures the arrival
         // rate, not engine capacity — a speedup number would be noise.
         println!("--compare needs unpaced arrivals (--rate 0); skipping the naive comparison");

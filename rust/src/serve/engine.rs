@@ -27,7 +27,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// Batching/parallelism policy for one engine instance.
+/// Batching/parallelism/admission policy for one engine instance.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     /// Dispatch a batch as soon as this many requests are queued.
@@ -37,6 +37,14 @@ pub struct ServeConfig {
     pub max_wait: Duration,
     /// Scoring worker threads (0 = one per available core).
     pub workers: usize,
+    /// Admission control: maximum accepted-but-undispatched requests.
+    /// Once the queue holds this many, a submit is resolved by
+    /// [`ShedPolicy`] instead of growing the queue — under open-loop
+    /// overload the engine sheds instead of accumulating unbounded
+    /// latency. `0` = unbounded (the pre-admission-control behaviour).
+    pub max_queue: usize,
+    /// What a submit does when it finds the queue full.
+    pub shed_policy: ShedPolicy,
 }
 
 impl Default for ServeConfig {
@@ -45,8 +53,29 @@ impl Default for ServeConfig {
             max_batch: 256,
             max_wait: Duration::from_millis(2),
             workers: 0,
+            max_queue: 0,
+            shed_policy: ShedPolicy::RejectNewest,
         }
     }
+}
+
+/// Load-shedding policy applied when a submit finds the bounded queue
+/// full (only consulted when `max_queue > 0`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Fast-fail the incoming request with [`ServeError::QueueFull`];
+    /// queued requests are untouched. FIFO-fair: traffic already accepted
+    /// keeps its place.
+    RejectNewest,
+    /// First drop queued requests whose `max_wait`-derived deadline has
+    /// already passed (they have waited longer than `max_wait`, i.e. the
+    /// latency trigger should long since have dispatched them — whoever
+    /// submitted them is likely no longer waiting at full attention), then
+    /// admit the new request into the freed space. Falls back to
+    /// reject-newest when nothing has expired. Freshness-fair: under
+    /// sustained overload the engine serves recent traffic instead of a
+    /// stale backlog.
+    DropExpired,
 }
 
 /// Constructs one [`Stage1Backend`] per worker thread. The trait is
@@ -161,7 +190,9 @@ struct Shared {
 /// resolved before the workers exit.
 pub struct ServeEngine {
     shared: Arc<Shared>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Behind a `Mutex` so [`ServeEngine::shutdown`] can join through a
+    /// shared reference — the HTTP front-end holds the engine in an `Arc`.
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     started: Instant,
 }
 
@@ -225,7 +256,7 @@ impl ServeEngine {
             .collect();
         ServeEngine {
             shared,
-            workers,
+            workers: Mutex::new(workers),
             started: Instant::now(),
         }
     }
@@ -233,36 +264,89 @@ impl ServeEngine {
     /// Enqueue one prediction request against the named model. `features`
     /// are sparse `(column, value)` pairs in any order; duplicate columns
     /// are summed. Never blocks on scoring — returns a [`Ticket`] that
-    /// resolves when the request's batch completes.
+    /// resolves when the request's batch completes. A request the engine
+    /// refuses to admit (shutdown, bounded queue full) yields a ticket
+    /// that is *already resolved* with the rejection, so `try_get` sees
+    /// the fast-fail without ever blocking; callers that want the
+    /// rejection as a plain `Err` use [`ServeEngine::try_submit`].
     pub fn submit(&self, model: &str, features: &[(u32, f32)]) -> Ticket {
+        match self.try_submit(model, features) {
+            Ok(ticket) => ticket,
+            Err(e) => {
+                let (ticket, fulfiller) = session::channel();
+                fulfiller.fulfill(Err(e));
+                ticket
+            }
+        }
+    }
+
+    /// [`ServeEngine::submit`] with admission control surfaced as an
+    /// explicit fast-fail: `Err` means the request never entered the
+    /// queue (engine shut down, or the bounded queue was full and the
+    /// shed policy could not make room). Rejections are counted in the
+    /// metrics (`rejected_full`, and as submitted+failed) on this path.
+    pub fn try_submit(&self, model: &str, features: &[(u32, f32)]) -> Result<Ticket, ServeError> {
+        // Canonicalise (and allocate the owned model name) outside the
+        // queue lock — per-request CPU and allocator work must not extend
+        // the critical section every other submitter serialises on.
+        let mut entries = features.to_vec();
+        normalize_entries(&mut entries);
+        let model = model.to_string();
+
+        let mut st = self.shared.state.lock().unwrap();
+        if st.shutdown {
+            drop(st);
+            self.shared.metrics.note_rejected_at_submit();
+            return Err(ServeError::ShuttingDown);
+        }
+        let cap = self.shared.cfg.max_queue;
+        let mut shed: Vec<PendingRequest> = Vec::new();
+        if cap > 0 && st.queue.len() >= cap {
+            self.shared.metrics.note_queue_full();
+            if self.shared.cfg.shed_policy == ShedPolicy::DropExpired {
+                shed = drain_expired(&mut st.queue, self.shared.cfg.max_wait);
+                // Account the departures (depth + failed + shed) while
+                // the lock still serialises against other submitters and
+                // metrics scrapes: deferring the depth decrement would
+                // let this submit push `queue_depth_max` past the cap,
+                // and deferring the failure counts would open a window
+                // where `submitted > completed + failed + in-flight`.
+                self.shared.metrics.note_shed_expired(shed.len() as u64);
+            }
+            if st.queue.len() >= cap {
+                // Nothing expired (or the policy keeps the backlog):
+                // fast-fail the newcomer without touching the queue.
+                drop(st);
+                self.shared.metrics.note_rejected_full();
+                return Err(ServeError::QueueFull { max_queue: cap });
+            }
+        }
         let (ticket, mut fulfiller) = session::channel();
         // If the engine ever abandons this request (panic unwinding the
         // batch), it still counts as failed — the metrics invariant
         // `submitted == completed + failed + in-flight` must hold.
         let metrics = Arc::clone(&self.shared.metrics);
         fulfiller.on_abandon(move || metrics.note_failed());
-        let mut entries = features.to_vec();
-        normalize_entries(&mut entries);
-        let mut st = self.shared.state.lock().unwrap();
-        if st.shutdown {
-            drop(st);
-            self.shared.metrics.note_rejected_at_submit();
-            fulfiller.fulfill(Err(ServeError("engine is shut down".to_string())));
-            return ticket;
-        }
         self.shared.metrics.note_submitted();
         st.queue.push_back(PendingRequest {
-            model: model.to_string(),
+            model,
             entries,
             fulfiller,
             enqueued: Instant::now(),
         });
         drop(st);
+        // Resolve shed requests outside the queue lock (their counters
+        // were already settled under it): fulfilment takes each ticket's
+        // own slot lock and may wake a waiting client.
+        for r in shed {
+            let waited_us = r.enqueued.elapsed().as_micros() as u64;
+            r.fulfiller.fulfill(Err(ServeError::DeadlineExceeded { waited_us }));
+        }
         // One waiter is enough: the woken worker re-evaluates the batch
         // trigger, and busy workers re-check the queue when they finish.
         // (notify_all here would stampede every idle worker per request.)
         self.shared.cv.notify_one();
-        ticket
+        Ok(ticket)
     }
 
     pub fn metrics(&self) -> &ServeMetrics {
@@ -282,18 +366,30 @@ impl ServeEngine {
         self.started.elapsed()
     }
 
-    /// Stop accepting requests, drain the queue, and join the workers.
-    pub fn shutdown(mut self) {
-        self.do_shutdown();
+    /// Workers whose backend initialised successfully — the `/healthz`
+    /// signal. Zero means the engine is rejecting all traffic.
+    ///
+    /// Optimistic during startup: the count starts at the configured
+    /// worker count and is decremented as backend inits *fail*, so an
+    /// engine whose inits are still in flight (e.g. slow PJRT device
+    /// opens) reports full health until they resolve. Readiness gates
+    /// that must not admit a zero-capacity engine should also score one
+    /// request.
+    pub fn healthy_workers(&self) -> usize {
+        self.shared.healthy_workers.load(Ordering::Acquire)
     }
 
-    fn do_shutdown(&mut self) {
+    /// Stop accepting requests, drain the queue, and join the workers.
+    /// Idempotent, and callable through a shared reference so an
+    /// `Arc<ServeEngine>` (the HTTP front-end's handle) can shut down too.
+    pub fn shutdown(&self) {
         {
             let mut st = self.shared.state.lock().unwrap();
             st.shutdown = true;
         }
         self.shared.cv.notify_all();
-        for h in self.workers.drain(..) {
+        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        for h in handles {
             let _ = h.join();
         }
     }
@@ -301,7 +397,7 @@ impl ServeEngine {
 
 impl Drop for ServeEngine {
     fn drop(&mut self) {
-        self.do_shutdown();
+        self.shutdown();
     }
 }
 
@@ -354,9 +450,27 @@ fn next_batch(shared: &Shared) -> Option<Vec<PendingRequest>> {
     }
 }
 
+/// Pop queued requests (oldest first) whose `max_wait`-derived deadline
+/// has passed. Enqueue times are monotone along the FIFO queue, so the
+/// expired requests form a prefix and the scan stops at the first fresh
+/// one. Callers resolve the returned requests *after* releasing the queue
+/// lock and account them via `note_shed_expired`.
+fn drain_expired(queue: &mut VecDeque<PendingRequest>, max_wait: Duration) -> Vec<PendingRequest> {
+    let now = Instant::now();
+    let mut expired = Vec::new();
+    while let Some(front) = queue.front() {
+        if now.duration_since(front.enqueued) > max_wait {
+            expired.push(queue.pop_front().unwrap());
+        } else {
+            break;
+        }
+    }
+    expired
+}
+
 fn fail(shared: &Shared, fulfiller: Fulfiller, msg: String) {
     shared.metrics.note_failed();
-    fulfiller.fulfill(Err(ServeError(msg)));
+    fulfiller.fulfill(Err(ServeError::Failed(msg)));
 }
 
 fn worker_loop(shared: &Shared, backend: &dyn Stage1Backend) {
@@ -452,6 +566,7 @@ mod tests {
                 max_batch,
                 max_wait: Duration::from_millis(max_wait_ms),
                 workers,
+                ..ServeConfig::default()
             },
         )
     }
@@ -460,9 +575,74 @@ mod tests {
     fn unknown_model_rejected() {
         let e = engine(8, 1, 2);
         let err = predict_one(&e, "nope", &[(0, 1.0)]).unwrap_err();
-        assert!(err.0.contains("not registered"));
+        assert!(err.to_string().contains("not registered"));
         assert_eq!(e.metrics().failed.load(std::sync::atomic::Ordering::Relaxed), 1);
         e.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_fast_fails() {
+        let e = engine(8, 1, 1);
+        e.shutdown();
+        assert_eq!(e.try_submit("m", &[(0, 1.0)]).unwrap_err(), ServeError::ShuttingDown);
+        // The Ticket path resolves immediately with the same rejection.
+        let t = e.submit("m", &[(0, 1.0)]);
+        assert_eq!(t.try_get().expect("fast fail"), Err(ServeError::ShuttingDown));
+    }
+
+    #[test]
+    fn bounded_queue_fast_fails_at_cap() {
+        // max_wait far in the future and max_batch above the cap: nothing
+        // dispatches, so the queue deterministically fills to max_queue.
+        let e = ServeEngine::start(
+            Arc::new(ModelRegistry::new()),
+            ServeConfig {
+                max_batch: 64,
+                max_wait: Duration::from_secs(600),
+                workers: 1,
+                max_queue: 2,
+                shed_policy: ShedPolicy::RejectNewest,
+            },
+        );
+        let queued: Vec<_> = (0..2).map(|_| e.submit("m", &[(0, 1.0)])).collect();
+        assert!(queued.iter().all(|t| t.try_get().is_none()), "still queued");
+        let err = e.try_submit("m", &[(0, 1.0)]).unwrap_err();
+        assert_eq!(err, ServeError::QueueFull { max_queue: 2 });
+        assert!(err.is_shed());
+        let m = e.metrics();
+        assert_eq!(m.rejected_full.load(Ordering::Relaxed), 1);
+        assert_eq!(m.queue_full_events.load(Ordering::Relaxed), 1);
+        assert_eq!(m.queue_depth.load(Ordering::Relaxed), 2);
+        e.shutdown();
+    }
+
+    #[test]
+    fn drain_expired_pops_only_the_overdue_prefix() {
+        let max_wait = Duration::from_millis(10);
+        let old = Instant::now()
+            .checked_sub(Duration::from_millis(250))
+            .expect("monotonic clock far enough past start");
+        let mut queue: VecDeque<PendingRequest> = VecDeque::new();
+        let mut tickets = Vec::new();
+        for enqueued in [old, old, Instant::now()] {
+            let (ticket, fulfiller) = session::channel();
+            tickets.push(ticket);
+            queue.push_back(PendingRequest {
+                model: "m".into(),
+                entries: vec![(0, 1.0)],
+                fulfiller,
+                enqueued,
+            });
+        }
+        let expired = drain_expired(&mut queue, max_wait);
+        assert_eq!(expired.len(), 2, "both backdated requests expire");
+        assert_eq!(queue.len(), 1, "the fresh request stays queued");
+        for r in expired {
+            r.fulfiller.fulfill(Err(ServeError::DeadlineExceeded { waited_us: 250_000 }));
+        }
+        assert!(tickets[0].try_get().unwrap().unwrap_err().is_shed());
+        assert!(tickets[1].try_get().unwrap().unwrap_err().is_shed());
+        assert!(tickets[2].try_get().is_none());
     }
 
     #[test]

@@ -1,0 +1,606 @@
+//! Dependency-free HTTP/1.1 front-end for the serving engine.
+//!
+//! The engine itself is in-process; this module puts a network boundary in
+//! front of it using nothing but `std::net` — a blocking `TcpListener`
+//! accept loop and one thread per connection with keep-alive (the same
+//! no-external-crates constraint as the rest of the repo; no tokio, no
+//! hyper). Request bodies are the repo's own JSON ([`crate::util::json`]).
+//!
+//! Endpoints:
+//!
+//! * `POST /v1/models/{name}:predict` — score sparse rows. Body:
+//!   `{"row": [[col, val], ...]}` for a single row or
+//!   `{"rows": [[[col, val], ...], ...]}` for a batch. Every row becomes
+//!   one engine submit, so a batch POST coalesces into the same
+//!   micro-batches as in-process traffic and returns predictions
+//!   identical to [`crate::serve::ServeEngine::submit`]. Response:
+//!   `{"model": ..., "predictions": [{"label", "batch_size", "queue_us",
+//!   "total_us"} | {"error", "shed"}]}` with status 200 (all scored),
+//!   503 (some rows hit a retryable server-side condition: admission
+//!   control, shutdown, a worker panic — back off and retry), or 400
+//!   (malformed input or permanently unservable rows).
+//! * `GET /v1/models` — registry listing.
+//! * `GET /metrics` — [`crate::serve::ServeMetrics::to_json`]; append
+//!   `?format=table` for the human-readable table the CLI prints.
+//! * `GET /healthz` — 200 with the healthy-worker count, 503 when no
+//!   worker survived backend init.
+
+use crate::serve::engine::ServeEngine;
+use crate::serve::session::ServeError;
+use crate::util::json::{self, Json};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Upper bound on request bodies: far above any sane predict batch, far
+/// below what a misbehaving client could use to exhaust memory.
+const MAX_BODY: usize = 16 << 20;
+/// Upper bound on the request line and each header line; reads stop at
+/// this many bytes, so a newline-free byte stream cannot grow a String
+/// without limit.
+const MAX_HEADER_LINE: u64 = 8 << 10;
+/// Upper bound on the number of header lines per request.
+const MAX_HEADERS: usize = 128;
+/// Idle keep-alive connections are dropped after this long.
+const IDLE_TIMEOUT: Duration = Duration::from_secs(30);
+/// Poll interval of the non-blocking accept loop — the worst-case added
+/// latency for establishing a brand-new connection (keep-alive traffic
+/// never pays it), and the bound on shutdown latency.
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+
+/// A running HTTP front-end. Binding spawns the accept loop; dropping (or
+/// [`HttpServer::shutdown`]) stops accepting. Connection threads are
+/// detached — they notice shutdown at their next request boundary, and
+/// in-flight requests on them still resolve because the engine outlives
+/// the server (the server holds an `Arc<ServeEngine>`).
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:8080"`, or port 0 for an ephemeral
+    /// port — read the chosen one back via [`HttpServer::addr`]) and
+    /// start serving `engine`.
+    pub fn bind(engine: Arc<ServeEngine>, addr: &str) -> anyhow::Result<HttpServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("binding HTTP listener on {addr}: {e}"))?;
+        let addr = listener.local_addr()?;
+        // Non-blocking accept + a short poll: shutdown is then bounded by
+        // one poll interval for ANY bind address. (The alternative — a
+        // blocking accept woken by a throwaway self-connection — hangs
+        // forever on wildcard or externally-routed binds the local host
+        // cannot connect back to.)
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_stop = Arc::clone(&stop);
+        let accept_thread = std::thread::Builder::new()
+            .name("lpdsvm-http-accept".to_string())
+            .spawn(move || {
+                while !accept_stop.load(Ordering::Acquire) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            // The connection itself is served blocking.
+                            if stream.set_nonblocking(false).is_err() {
+                                continue;
+                            }
+                            let engine = Arc::clone(&engine);
+                            let stop = Arc::clone(&accept_stop);
+                            let _ = std::thread::Builder::new()
+                                .name("lpdsvm-http-conn".to_string())
+                                .spawn(move || {
+                                    let _ = serve_connection(stream, &engine, &stop);
+                                });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(ACCEPT_POLL);
+                        }
+                        // Transient accept failure (e.g. the peer reset
+                        // before we got to it): keep listening.
+                        Err(_) => {}
+                    }
+                }
+            })?;
+        Ok(HttpServer {
+            addr,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    /// The bound address (resolves port 0 to the actual ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting connections and join the accept loop. Idempotent.
+    pub fn shutdown(mut self) {
+        self.do_shutdown();
+    }
+
+    fn do_shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        // The poll-based accept loop observes the flag within ACCEPT_POLL.
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.do_shutdown();
+    }
+}
+
+/// Typed marker for an over-limit body so the connection loop can answer
+/// 413 (a size problem the client can fix by splitting the batch) instead
+/// of a generic 400.
+#[derive(Debug)]
+struct PayloadTooLarge(usize);
+
+impl std::fmt::Display for PayloadTooLarge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "body of {} bytes exceeds the {MAX_BODY}-byte limit", self.0)
+    }
+}
+
+impl std::error::Error for PayloadTooLarge {}
+
+/// One parsed HTTP request.
+struct Request {
+    method: String,
+    path: String,
+    query: String,
+    body: Vec<u8>,
+    keep_alive: bool,
+}
+
+/// Read one line, refusing to buffer more than [`MAX_HEADER_LINE`] bytes
+/// — the cap that keeps a newline-free byte stream from exhausting
+/// memory. `Ok(None)` = clean end of stream before any byte.
+fn read_limited_line<R: BufRead>(r: &mut R) -> anyhow::Result<Option<String>> {
+    let mut line = String::new();
+    let n = r.by_ref().take(MAX_HEADER_LINE).read_line(&mut line)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if n as u64 == MAX_HEADER_LINE && !line.ends_with('\n') {
+        anyhow::bail!("request/header line exceeds the {MAX_HEADER_LINE}-byte limit");
+    }
+    Ok(Some(line))
+}
+
+/// Read one request off a keep-alive connection. `Ok(None)` = the peer
+/// closed cleanly between requests; `Err` = malformed request, oversized
+/// line/body, or a read failure (including the idle timeout). `writer`
+/// is where the interim `100 Continue` goes when the client sent
+/// `Expect: 100-continue` — without it, curl-style clients stall ~1 s
+/// before every POST body waiting for a go-ahead this server would never
+/// send.
+fn read_request<R: BufRead>(
+    r: &mut R,
+    mut writer: Option<&mut TcpStream>,
+) -> anyhow::Result<Option<Request>> {
+    let Some(line) = read_limited_line(r)? else {
+        return Ok(None);
+    };
+    let start = line.trim_end();
+    let mut parts = start.split_whitespace();
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v)) => (m.to_string(), t.to_string(), v.to_string()),
+        _ => anyhow::bail!("malformed request line {start:?}"),
+    };
+    let mut content_length = 0usize;
+    let mut connection = String::new();
+    let mut expect_continue = false;
+    for n_headers in 0.. {
+        anyhow::ensure!(n_headers < MAX_HEADERS, "more than {MAX_HEADERS} header lines");
+        let header = read_limited_line(r)?
+            .ok_or_else(|| anyhow::anyhow!("connection closed mid-headers"))?;
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            let value = value.trim();
+            match name.trim().to_ascii_lowercase().as_str() {
+                "content-length" => {
+                    content_length = value
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("bad content-length {value:?}: {e}"))?;
+                }
+                "connection" => connection = value.to_ascii_lowercase(),
+                "expect" => expect_continue = value.eq_ignore_ascii_case("100-continue"),
+                // The parser is length-framed only; chunked bodies would
+                // silently desync the keep-alive stream, so refuse them.
+                "transfer-encoding" => {
+                    anyhow::bail!("transfer-encoding is not supported; send content-length")
+                }
+                _ => {}
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        return Err(PayloadTooLarge(content_length).into());
+    }
+    if expect_continue && content_length > 0 {
+        if let Some(w) = writer.as_deref_mut() {
+            w.write_all(b"HTTP/1.1 100 Continue\r\n\r\n")?;
+            w.flush()?;
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    r.read_exact(&mut body)?;
+    let keep_alive = if version.eq_ignore_ascii_case("HTTP/1.0") {
+        connection == "keep-alive"
+    } else {
+        connection != "close"
+    };
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target, String::new()),
+    };
+    Ok(Some(Request {
+        method,
+        path,
+        query,
+        body,
+        keep_alive,
+    }))
+}
+
+fn serve_connection(
+    stream: TcpStream,
+    engine: &ServeEngine,
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(IDLE_TIMEOUT))?;
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    loop {
+        if stop.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        let req = match read_request(&mut reader, Some(&mut writer)) {
+            Ok(Some(req)) => req,
+            Ok(None) => return Ok(()),
+            Err(e) => {
+                // Idle timeout: the peer just went quiet — close without
+                // a response. Anything else is a malformed request:
+                // best-effort 400, then close (framing is untrustable).
+                let timed_out = e.downcast_ref::<std::io::Error>().is_some_and(|io| {
+                    matches!(
+                        io.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    )
+                });
+                if !timed_out {
+                    let status = if e.downcast_ref::<PayloadTooLarge>().is_some() {
+                        413
+                    } else {
+                        400
+                    };
+                    let body = error_json(&format!("bad request: {e}"));
+                    let _ = write_response(
+                        &mut writer,
+                        status,
+                        "application/json",
+                        body.as_bytes(),
+                        false,
+                    );
+                }
+                return Ok(());
+            }
+        };
+        let (status, content_type, body) = route(engine, &req);
+        write_response(&mut writer, status, content_type, body.as_bytes(), req.keep_alive)?;
+        if !req.keep_alive {
+            return Ok(());
+        }
+    }
+}
+
+fn route(engine: &ServeEngine, req: &Request) -> (u16, &'static str, String) {
+    const PREDICT_PREFIX: &str = "/v1/models/";
+    const PREDICT_SUFFIX: &str = ":predict";
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => healthz(engine),
+        ("GET", "/metrics") => metrics(engine, &req.query),
+        ("GET", "/v1/models") => models(engine),
+        ("POST", p) if p.starts_with(PREDICT_PREFIX) && p.ends_with(PREDICT_SUFFIX) => {
+            let name = &p[PREDICT_PREFIX.len()..p.len() - PREDICT_SUFFIX.len()];
+            if name.is_empty() {
+                (400, "application/json", error_json("empty model name"))
+            } else {
+                predict(engine, name, &req.body)
+            }
+        }
+        ("GET" | "POST", _) => (404, "application/json", error_json("no such endpoint")),
+        _ => (405, "application/json", error_json("method not allowed")),
+    }
+}
+
+fn predict(engine: &ServeEngine, model: &str, body: &[u8]) -> (u16, &'static str, String) {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return (400, "application/json", error_json("body is not UTF-8")),
+    };
+    let parsed = match Json::parse(text) {
+        Ok(v) => v,
+        Err(e) => {
+            return (400, "application/json", error_json(&format!("invalid JSON: {e}")))
+        }
+    };
+    let rows = match parse_rows(&parsed) {
+        Ok(rows) => rows,
+        Err(msg) => return (400, "application/json", error_json(&msg)),
+    };
+
+    // Submit every row before waiting on any, so one POST coalesces into
+    // the same micro-batches as in-process traffic instead of serialising
+    // row by row.
+    let tickets: Vec<_> = rows.iter().map(|r| engine.try_submit(model, r)).collect();
+    let mut any_unavailable = false;
+    let mut any_failed = false;
+    let mut predictions = Vec::with_capacity(tickets.len());
+    for ticket in tickets {
+        let result = match ticket {
+            Ok(t) => t.wait(),
+            Err(e) => Err(e),
+        };
+        match result {
+            Ok(p) => predictions.push(json::obj(vec![
+                ("label", json::unum(p.label as u64)),
+                ("batch_size", json::unum(p.batch_size as u64)),
+                ("queue_us", json::unum(p.queue_us)),
+                ("total_us", json::unum(p.total_us)),
+            ])),
+            Err(e) => {
+                // Shed, shutdown, and abandoned (worker panic) are all
+                // server-side conditions a retry can outlive → 503. Only
+                // permanently unservable rows (bad feature index, unknown
+                // model, …) blame the request with a 400.
+                if e.is_shed() || matches!(e, ServeError::ShuttingDown | ServeError::Abandoned(_)) {
+                    any_unavailable = true;
+                } else {
+                    any_failed = true;
+                }
+                predictions.push(json::obj(vec![
+                    ("error", json::s(&e.to_string())),
+                    ("shed", Json::Bool(e.is_shed())),
+                ]));
+            }
+        }
+    }
+    let body = json::obj(vec![
+        ("model", json::s(model)),
+        ("predictions", Json::Arr(predictions)),
+    ])
+    .to_string();
+    let status = if any_unavailable {
+        503
+    } else if any_failed {
+        400
+    } else {
+        200
+    };
+    (status, "application/json", body)
+}
+
+/// Decode the predict body into sparse rows. Accepts `"row"` (one row) or
+/// `"rows"` (a batch); each row is a list of `[column, value]` pairs.
+fn parse_rows(v: &Json) -> Result<Vec<Vec<(u32, f32)>>, String> {
+    let row_list: Vec<&Json> = if let Some(row) = v.get("row") {
+        vec![row]
+    } else if let Some(rows) = v.get("rows").and_then(|r| r.as_arr()) {
+        rows.iter().collect()
+    } else {
+        return Err("expected a \"row\" (single) or \"rows\" (batch) field".to_string());
+    };
+    if row_list.is_empty() {
+        return Err("\"rows\" is empty".to_string());
+    }
+    let mut out = Vec::with_capacity(row_list.len());
+    for (ri, row) in row_list.iter().enumerate() {
+        let entries = row
+            .as_arr()
+            .ok_or_else(|| format!("row {ri} is not an array of [column, value] pairs"))?;
+        let mut parsed = Vec::with_capacity(entries.len());
+        for e in entries {
+            let pair = e
+                .as_arr()
+                .filter(|p| p.len() == 2)
+                .ok_or_else(|| format!("row {ri}: each feature must be a [column, value] pair"))?;
+            let col = pair[0]
+                .as_f64()
+                .filter(|c| *c >= 0.0 && c.fract() == 0.0 && *c <= u32::MAX as f64)
+                .ok_or_else(|| format!("row {ri}: column must be a non-negative integer"))?;
+            let val = pair[1]
+                .as_f64()
+                .ok_or_else(|| format!("row {ri}: value must be a number"))?;
+            parsed.push((col as u32, val as f32));
+        }
+        out.push(parsed);
+    }
+    Ok(out)
+}
+
+fn healthz(engine: &ServeEngine) -> (u16, &'static str, String) {
+    let healthy = engine.healthy_workers();
+    let body = json::obj(vec![
+        ("status", json::s(if healthy > 0 { "ok" } else { "unhealthy" })),
+        ("healthy_workers", json::unum(healthy as u64)),
+        ("configured_workers", json::unum(engine.config().workers as u64)),
+        ("models", json::unum(engine.registry().len() as u64)),
+    ])
+    .to_string();
+    (if healthy > 0 { 200 } else { 503 }, "application/json", body)
+}
+
+fn metrics(engine: &ServeEngine, query: &str) -> (u16, &'static str, String) {
+    if query.split('&').any(|kv| kv == "format=table") {
+        let table = engine.metrics().table(engine.elapsed()).render();
+        (200, "text/plain; charset=utf-8", table)
+    } else {
+        let json = engine.metrics().to_json(engine.elapsed()).to_string();
+        (200, "application/json", json)
+    }
+}
+
+fn models(engine: &ServeEngine) -> (u16, &'static str, String) {
+    let names = engine.registry().names();
+    let body = json::obj(vec![
+        ("count", json::unum(names.len() as u64)),
+        ("models", Json::Arr(names.iter().map(|n| json::s(n)).collect())),
+    ])
+    .to_string();
+    (200, "application/json", body)
+}
+
+fn error_json(msg: &str) -> String {
+    json::obj(vec![("error", json::s(msg))]).to_string()
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        503 => "Service Unavailable",
+        _ => "Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\ncontent-type: {content_type}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" }
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    /// Parse with no interim-response writer (tests never expect `100
+    /// Continue` on the wire).
+    fn read_request_none<R: BufRead>(r: &mut R) -> anyhow::Result<Option<Request>> {
+        read_request(r, None)
+    }
+
+    #[test]
+    fn parses_request_with_body_query_and_close() {
+        let raw =
+            b"POST /v1/models/m:predict?format=json HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\nConnection: close\r\n\r\nabcd";
+        let mut cur = Cursor::new(&raw[..]);
+        let req = read_request(&mut cur, None).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/models/m:predict");
+        assert_eq!(req.query, "format=json");
+        assert_eq!(req.body, b"abcd");
+        assert!(!req.keep_alive);
+        // Nothing further on the wire → clean end of connection.
+        assert!(read_request(&mut cur, None).unwrap().is_none());
+    }
+
+    #[test]
+    fn keep_alive_defaults_per_http_version() {
+        let raw = b"GET /healthz HTTP/1.1\r\n\r\n";
+        let req = read_request_none(&mut Cursor::new(&raw[..])).unwrap().unwrap();
+        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
+        assert!(req.body.is_empty());
+        let raw = b"GET /healthz HTTP/1.0\r\n\r\n";
+        let req = read_request_none(&mut Cursor::new(&raw[..])).unwrap().unwrap();
+        assert!(!req.keep_alive, "HTTP/1.0 defaults to close");
+    }
+
+    #[test]
+    fn malformed_requests_are_errors() {
+        assert!(read_request_none(&mut Cursor::new(&b"nonsense\r\n\r\n"[..])).is_err());
+        assert!(read_request_none(&mut Cursor::new(
+            &b"GET / HTTP/1.1\r\ncontent-length: banana\r\n\r\n"[..]
+        ))
+        .is_err());
+        assert!(read_request_none(&mut Cursor::new(
+            &b"POST / HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n"[..]
+        ))
+        .is_err());
+        // Declared body longer than the wire contents.
+        assert!(read_request_none(&mut Cursor::new(
+            &b"POST / HTTP/1.1\r\ncontent-length: 10\r\n\r\nabc"[..]
+        ))
+        .is_err());
+        // Over-limit body is the typed error the connection loop turns
+        // into a 413 (not a generic 400).
+        let raw = format!("POST / HTTP/1.1\r\ncontent-length: {}\r\n\r\n", MAX_BODY + 1);
+        let err = read_request_none(&mut Cursor::new(raw.as_bytes())).unwrap_err();
+        assert!(err.downcast_ref::<PayloadTooLarge>().is_some(), "{err}");
+    }
+
+    #[test]
+    fn unbounded_lines_and_header_floods_are_rejected() {
+        // A newline-free byte stream must not buffer past the line cap.
+        let mut raw = vec![b'A'; 2 * MAX_HEADER_LINE as usize];
+        let err = read_request_none(&mut Cursor::new(&raw[..])).unwrap_err();
+        assert!(err.to_string().contains("byte limit"), "{err}");
+        // Same cap applies to an oversized header line after a sane start.
+        raw = b"GET / HTTP/1.1\r\nx-flood: ".to_vec();
+        raw.extend(vec![b'B'; 2 * MAX_HEADER_LINE as usize]);
+        assert!(read_request_none(&mut Cursor::new(&raw[..])).is_err());
+        // And a request cannot carry unlimited header lines.
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..2 * MAX_HEADERS {
+            raw.extend(format!("x-{i}: v\r\n").into_bytes());
+        }
+        raw.extend(b"\r\n");
+        let err = read_request_none(&mut Cursor::new(&raw[..])).unwrap_err();
+        assert!(err.to_string().contains("header lines"), "{err}");
+    }
+
+    #[test]
+    fn parse_rows_single_and_batch() {
+        let single = Json::parse(r#"{"row": [[0, 1.5], [7, -2]]}"#).unwrap();
+        assert_eq!(
+            parse_rows(&single).unwrap(),
+            vec![vec![(0u32, 1.5f32), (7, -2.0)]]
+        );
+        let batch = Json::parse(r#"{"rows": [[[1, 1]], [], [[2, 0.25], [3, 4]]]}"#).unwrap();
+        let rows = parse_rows(&batch).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert!(rows[1].is_empty(), "an all-zero row is legal");
+        assert_eq!(rows[2], vec![(2u32, 0.25f32), (3, 4.0)]);
+    }
+
+    #[test]
+    fn parse_rows_rejects_malformed_shapes() {
+        for bad in [
+            r#"{}"#,
+            r#"{"rows": []}"#,
+            r#"{"rows": 3}"#,
+            r#"{"row": [[1]]}"#,
+            r#"{"row": [[1, 2, 3]]}"#,
+            r#"{"row": [["a", 2]]}"#,
+            r#"{"row": [[-1, 2]]}"#,
+            r#"{"row": [[1.5, 2]]}"#,
+            r#"{"row": [[0, "x"]]}"#,
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(parse_rows(&v).is_err(), "should reject {bad}");
+        }
+    }
+}

@@ -7,6 +7,7 @@
 //! concurrent writers, which is fine for operational telemetry.
 
 use crate::report::Table;
+use crate::util::json::{self, Json};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
@@ -83,10 +84,32 @@ impl Histogram {
         for (i, b) in self.buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
             if seen >= target {
-                return if i == 0 { 0 } else { 1u64 << i };
+                return match i {
+                    0 => 0,
+                    // The top bucket is clamped — it holds every value ≥
+                    // 2^(BUCKETS-2), so its nominal power-of-two edge can
+                    // under-report by orders of magnitude. The tracked max
+                    // is a true upper bound for anything landing here (the
+                    // overall max always lives in the highest occupied
+                    // bucket).
+                    i if i == BUCKETS - 1 => self.max(),
+                    i => 1u64 << i,
+                };
             }
         }
         self.max()
+    }
+
+    /// Machine-readable summary (count / mean / tail quantiles / max).
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("count", json::unum(self.count())),
+            ("mean", json::num(self.mean())),
+            ("p50", json::unum(self.quantile(0.50))),
+            ("p90", json::unum(self.quantile(0.90))),
+            ("p99", json::unum(self.quantile(0.99))),
+            ("max", json::unum(self.max())),
+        ])
     }
 }
 
@@ -99,6 +122,14 @@ pub struct ServeMetrics {
     pub completed: AtomicU64,
     /// Requests fulfilled with an error.
     pub failed: AtomicU64,
+    /// Requests fast-failed at submit because the bounded queue was full
+    /// (counted in `submitted` and `failed` too).
+    pub rejected_full: AtomicU64,
+    /// Queued requests dropped by the deadline shed policy (counted in
+    /// `submitted` and `failed` too).
+    pub shed_expired: AtomicU64,
+    /// Times a submit found the queue at its `max_queue` high-water mark.
+    pub queue_full_events: AtomicU64,
     /// Batches dispatched to workers.
     pub batches: AtomicU64,
     /// Batches whose scoring panicked (their requests were rejected).
@@ -157,6 +188,34 @@ impl ServeMetrics {
         self.failed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A request rejected by admission control (bounded queue full): like
+    /// a shutdown-time rejection it counts as submitted *and* failed —
+    /// the invariant `submitted == completed + failed + in-flight` covers
+    /// rejected traffic — and never touches `queue_depth`.
+    pub(crate) fn note_rejected_full(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.failed.fetch_add(1, Ordering::Relaxed);
+        self.rejected_full.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` queued requests left the queue via deadline shedding. Called
+    /// under the queue lock, *before* the triggering submit is counted:
+    /// depth, failure, and shed counts move in one lock-held step, so
+    /// `queue_depth`/`queue_depth_max` can never overshoot the cap and a
+    /// concurrent scrape never catches `submitted` ahead of
+    /// `completed + failed + in-flight`. Only ticket fulfilment happens
+    /// outside the lock.
+    pub(crate) fn note_shed_expired(&self, n: u64) {
+        self.shed_expired.fetch_add(n, Ordering::Relaxed);
+        self.failed.fetch_add(n, Ordering::Relaxed);
+        self.queue_depth.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    /// A submit observed the queue at its cap (before any shedding).
+    pub(crate) fn note_queue_full(&self) {
+        self.queue_full_events.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub(crate) fn note_service(&self, service: Duration) {
         self.service_us.record(service.as_micros() as u64);
     }
@@ -179,6 +238,9 @@ impl ServeMetrics {
         t.row(&["requests submitted".into(), c(&self.submitted)]);
         t.row(&["requests completed".into(), c(&self.completed)]);
         t.row(&["requests failed".into(), c(&self.failed)]);
+        t.row(&["rejected (queue full)".into(), c(&self.rejected_full)]);
+        t.row(&["shed (deadline passed)".into(), c(&self.shed_expired)]);
+        t.row(&["queue-full events".into(), c(&self.queue_full_events)]);
         t.row(&["batches dispatched".into(), c(&self.batches)]);
         t.row(&["batch panics".into(), c(&self.batch_panics)]);
         t.row(&["mean batch size".into(), format!("{:.1}", self.batch_size.mean())]);
@@ -194,6 +256,32 @@ impl ServeMetrics {
             format!("{:.0}", self.throughput(elapsed)),
         ]);
         t
+    }
+
+    /// Machine-readable counterpart of [`ServeMetrics::table`] — the
+    /// payload of the HTTP front-end's `GET /metrics`. Counters ride as
+    /// JSON numbers (f64), which is exact below 2⁵³ — plenty for
+    /// operational telemetry.
+    pub fn to_json(&self, elapsed: Duration) -> Json {
+        let c = |a: &AtomicU64| json::unum(a.load(Ordering::Relaxed));
+        json::obj(vec![
+            ("submitted", c(&self.submitted)),
+            ("completed", c(&self.completed)),
+            ("failed", c(&self.failed)),
+            ("rejected_full", c(&self.rejected_full)),
+            ("shed_expired", c(&self.shed_expired)),
+            ("queue_full_events", c(&self.queue_full_events)),
+            ("batches", c(&self.batches)),
+            ("batch_panics", c(&self.batch_panics)),
+            ("queue_depth", c(&self.queue_depth)),
+            ("queue_depth_max", c(&self.queue_depth_max)),
+            ("elapsed_secs", json::num(elapsed.as_secs_f64())),
+            ("throughput_rps", json::num(self.throughput(elapsed))),
+            ("latency_us", self.latency_us.to_json()),
+            ("queue_wait_us", self.queue_wait_us.to_json()),
+            ("service_us", self.service_us.to_json()),
+            ("batch_size", self.batch_size.to_json()),
+        ])
     }
 }
 
@@ -228,10 +316,24 @@ mod tests {
 
     #[test]
     fn histogram_huge_values_clamp() {
+        // Regression: values ≥ 2^39 clamp into the top bucket, whose
+        // nominal edge (1 << 39) used to be reported even when the
+        // recorded max was far larger. The top bucket must report the
+        // tracked max instead.
         let h = Histogram::new();
         h.record(u64::MAX);
         assert_eq!(h.count(), 1);
-        assert!(h.quantile(0.5) > 0);
+        assert_eq!(h.quantile(0.5), u64::MAX);
+        assert_eq!(h.quantile(1.0), u64::MAX);
+        assert_eq!(h.max(), u64::MAX);
+        // Any quantile landing in the clamped bucket reports the max (an
+        // upper bound, consistent with the bucket-edge semantics).
+        h.record(1u64 << 45);
+        assert_eq!(h.quantile(0.01), u64::MAX);
+        // Values below the top bucket keep their power-of-two upper edge.
+        let h2 = Histogram::new();
+        h2.record(1000);
+        assert_eq!(h2.quantile(0.5), 1024);
     }
 
     #[test]
@@ -253,5 +355,51 @@ mod tests {
         assert!(m.throughput(Duration::from_secs(1)) > 2.9);
         let table = m.table(Duration::from_secs(1));
         assert!(table.render().contains("requests submitted"));
+        assert!(table.render().contains("rejected (queue full)"));
+    }
+
+    #[test]
+    fn shed_and_rejection_accounting() {
+        let m = ServeMetrics::new();
+        // Two admitted requests, then a full-queue submit that gets
+        // rejected, then one of the queued two shed on deadline.
+        m.note_submitted();
+        m.note_submitted();
+        m.note_queue_full();
+        m.note_rejected_full();
+        m.note_shed_expired(1);
+        assert_eq!(m.submitted.load(Ordering::Relaxed), 3);
+        assert_eq!(m.failed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.rejected_full.load(Ordering::Relaxed), 1);
+        assert_eq!(m.shed_expired.load(Ordering::Relaxed), 1);
+        assert_eq!(m.queue_full_events.load(Ordering::Relaxed), 1);
+        // The shed request left the queue; the rejected one never entered.
+        assert_eq!(m.queue_depth.load(Ordering::Relaxed), 1);
+        // Invariant: submitted == completed + failed + in-flight.
+        assert_eq!(
+            m.submitted.load(Ordering::Relaxed),
+            m.completed.load(Ordering::Relaxed)
+                + m.failed.load(Ordering::Relaxed)
+                + m.queue_depth.load(Ordering::Relaxed)
+        );
+    }
+
+    #[test]
+    fn metrics_json_is_complete_and_parseable() {
+        let m = ServeMetrics::new();
+        m.note_submitted();
+        m.note_batch(1);
+        m.note_completed(Duration::from_micros(700), Duration::from_micros(150));
+        let j = m.to_json(Duration::from_secs(2));
+        assert_eq!(j.get("submitted").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(j.get("completed").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(j.get("rejected_full").unwrap().as_u64().unwrap(), 0);
+        assert!(j.get("throughput_rps").unwrap().as_f64().unwrap() > 0.0);
+        let lat = j.get("latency_us").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_u64().unwrap(), 1);
+        assert!(lat.get("p99").unwrap().as_u64().unwrap() >= 700);
+        // Emission round-trips through the in-tree parser.
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("submitted").unwrap().as_u64().unwrap(), 1);
     }
 }

@@ -8,14 +8,24 @@
 //! transform per batch, and scored with one dense GEMM against the stacked
 //! OVO head weights, fanned across a worker pool.
 //!
+//! Under saturating open-loop load the queue is the failure point: when
+//! submitters outrun the workers, an unbounded queue converts overload
+//! into unbounded latency. `ServeConfig::max_queue` bounds it, and a
+//! [`ShedPolicy`] decides what a full-queue submit does (fast-fail the
+//! newcomer, or drop queued requests whose deadline already passed) —
+//! the engine sheds load explicitly instead of degrading silently.
+//!
 //! Components:
 //!
-//! * [`engine`] — request queue, micro-batcher, worker pool, shutdown.
+//! * [`engine`] — request queue, micro-batcher, admission control /
+//!   load shedding, worker pool, shutdown.
 //! * [`registry`] — named models behind `Arc`, hot-swappable with zero
 //!   downtime, loadable from [`crate::model::io`] files.
-//! * [`metrics`] — latency histograms, queue depth, batch-size
-//!   distribution, throughput counters.
+//! * [`metrics`] — latency histograms, queue depth, shed/rejection
+//!   counters, batch-size distribution, throughput.
 //! * [`session`] — per-request tickets (futures-style result delivery).
+//! * [`http`] — dependency-free HTTP/1.1 front-end (`:predict`,
+//!   `/v1/models`, `/metrics`, `/healthz`) over the same engine.
 //!
 //! ```no_run
 //! use lpdsvm::prelude::*;
@@ -32,11 +42,15 @@
 //! ```
 
 pub mod engine;
+pub mod http;
 pub mod metrics;
 pub mod registry;
 pub mod session;
 
-pub use engine::{BackendProvider, NativeProvider, PjrtProvider, ServeConfig, ServeEngine};
+pub use engine::{
+    BackendProvider, NativeProvider, PjrtProvider, ServeConfig, ServeEngine, ShedPolicy,
+};
+pub use http::HttpServer;
 pub use metrics::{Histogram, ServeMetrics};
 pub use registry::{ModelRegistry, ServingModel};
 pub use session::{PredictResult, Prediction, ServeError, Ticket};

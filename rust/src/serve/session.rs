@@ -20,12 +20,60 @@ pub struct Prediction {
 }
 
 /// Serving-side failure, delivered through the ticket instead of a label.
+///
+/// The kinds matter operationally: [`ServeError::QueueFull`] and
+/// [`ServeError::DeadlineExceeded`] are *load-shedding* rejections — the
+/// request was fine, the engine was saturated, and the client should back
+/// off and retry — while the other kinds describe requests the engine
+/// could not serve at all. The HTTP front-end maps every retryable
+/// server-side condition — shed, [`ServeError::ShuttingDown`], and
+/// [`ServeError::Abandoned`] (worker panic) — to `503 Service
+/// Unavailable`, and only permanently unservable requests
+/// ([`ServeError::Failed`]) to `400`.
 #[derive(Clone, Debug, PartialEq, Eq)]
-pub struct ServeError(pub String);
+pub enum ServeError {
+    /// Admission control fast-fail: the bounded queue
+    /// (`ServeConfig::max_queue`) was full at submit time.
+    QueueFull { max_queue: usize },
+    /// Load shedding: the request sat in a full queue past its
+    /// `max_wait`-derived deadline and was dropped to admit newer traffic
+    /// (`ShedPolicy::DropExpired`).
+    DeadlineExceeded { waited_us: u64 },
+    /// The engine was already shut down at submit time.
+    ShuttingDown,
+    /// The engine dropped the request without resolving it (a worker
+    /// panic unwinding a batch, or a shutdown race).
+    Abandoned(String),
+    /// Any other serving-side failure: unknown model, out-of-range
+    /// feature index, stage-1 transform error, backend init failure.
+    Failed(String),
+}
+
+impl ServeError {
+    /// Whether this is a load-shedding rejection (retry with backoff)
+    /// rather than a permanently failed request.
+    pub fn is_shed(&self) -> bool {
+        matches!(
+            self,
+            ServeError::QueueFull { .. } | ServeError::DeadlineExceeded { .. }
+        )
+    }
+}
 
 impl std::fmt::Display for ServeError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "{}", self.0)
+        match self {
+            ServeError::QueueFull { max_queue } => write!(
+                f,
+                "queue full: admission control rejected the request (max_queue = {max_queue})"
+            ),
+            ServeError::DeadlineExceeded { waited_us } => write!(
+                f,
+                "deadline exceeded: request shed after {waited_us}µs in a saturated queue"
+            ),
+            ServeError::ShuttingDown => write!(f, "engine is shut down"),
+            ServeError::Abandoned(msg) | ServeError::Failed(msg) => write!(f, "{msg}"),
+        }
     }
 }
 
@@ -120,7 +168,7 @@ impl Fulfiller {
 impl Drop for Fulfiller {
     fn drop(&mut self) {
         if !self.done {
-            self.resolve(Err(ServeError(
+            self.resolve(Err(ServeError::Abandoned(
                 "request dropped before completion (worker panic or engine shutdown)".into(),
             )));
             if let Some(f) = self.on_abandon.take() {
@@ -186,7 +234,8 @@ mod tests {
         let (ticket, fulfiller) = channel();
         drop(fulfiller);
         let err = ticket.wait().unwrap_err();
-        assert!(err.0.contains("dropped"));
+        assert!(err.to_string().contains("dropped"));
+        assert!(!err.is_shed(), "abandonment is not load shedding");
     }
 
     #[test]

@@ -239,16 +239,19 @@ pub fn solve(problem: &ProblemView, opts: &SolverOptions) -> Solution {
             active.reactivate_all(&violators);
 
             if active_converged {
-                final_violation = max_viol.max(max_inactive_viol) as f64;
                 if violators.is_empty() {
+                    final_violation = max_viol.max(max_inactive_viol) as f64;
                     converged = true;
                     break;
                 }
+                // Violators were re-activated: the next epoch will move
+                // them, so the violation measured just now is stale the
+                // moment we continue. Reset it so a later `max_epochs`
+                // exit recomputes over the final iterate instead of
+                // reporting this epoch's value (which could even sit
+                // below `eps` while `converged` stays false).
+                final_violation = f64::MAX;
             }
-        } else if active_converged {
-            final_violation = max_viol as f64;
-            converged = true;
-            break;
         }
         if active.n_active() == 0 {
             // Everything shrunk; force a verification sweep next epoch by
@@ -464,6 +467,58 @@ mod tests {
             ..Default::default()
         };
         let _ = solve(&p, &opts);
+    }
+
+    #[test]
+    fn violation_is_fresh_when_terminating_on_epoch_cap() {
+        // Regression: when an epoch passed the active-set convergence
+        // check but the re-activation sweep found violators,
+        // `final_violation` kept that epoch's value; terminating on
+        // `max_epochs` then skipped the fresh recomputation and reported
+        // a stale violation (possibly < eps with converged == false).
+        // Sweep tiny epoch caps on a noisy problem with aggressive
+        // shrinking and frequent re-activation sweeps to force the path.
+        let (g, rows, mut y) = separable(250, 21);
+        let mut rng = Rng::new(77);
+        for yi in y.iter_mut() {
+            if rng.bool(0.25) {
+                *yi = -*yi;
+            }
+        }
+        let p = ProblemView::new(&g, &rows, &y);
+        for max_epochs in 1..=12 {
+            let opts = SolverOptions {
+                c: 4.0,
+                eps: 0.05,
+                max_epochs,
+                shrink_k: 1,
+                reactivate_frac: 0.9,
+                ..Default::default()
+            };
+            let sol = solve(&p, &opts);
+            // The stale-value symptom: a sub-eps violation reported on a
+            // run that claims it did NOT converge.
+            assert!(
+                sol.converged || sol.violation >= opts.eps,
+                "max_epochs={max_epochs}: converged=false but violation {} < eps {}",
+                sol.violation,
+                opts.eps
+            );
+            if !sol.converged {
+                // Epoch-cap exits must report the violation of the final
+                // iterate — identical to an independent recomputation.
+                let mut true_viol = 0.0f32;
+                for i in 0..p.len() {
+                    let grad = y[i] * dot(p.feature_row(i), &sol.w) - 1.0;
+                    true_viol = true_viol.max(super::violation(grad, sol.alpha[i], opts.c as f32));
+                }
+                assert!(
+                    (sol.violation - true_viol as f64).abs() <= 1e-6 * (1.0 + true_viol as f64),
+                    "max_epochs={max_epochs}: reported {} vs recomputed {true_viol}",
+                    sol.violation
+                );
+            }
+        }
     }
 
     #[test]

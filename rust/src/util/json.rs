@@ -28,6 +28,17 @@ impl Json {
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
+    /// Non-negative integer view of a number (counters, ids). `None` for
+    /// negative numbers and non-numbers.
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().filter(|x| *x >= 0.0).map(|x| x as u64)
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -119,6 +130,11 @@ pub fn arr(items: Vec<Json>) -> Json {
 }
 pub fn num(x: f64) -> Json {
     Json::Num(x)
+}
+/// `u64` counter as a JSON number. The f64 payload is exact below 2⁵³;
+/// larger counters round, which telemetry consumers tolerate.
+pub fn unum(x: u64) -> Json {
+    Json::Num(x as f64)
 }
 pub fn s(x: &str) -> Json {
     Json::Str(x.to_string())
@@ -351,6 +367,16 @@ mod tests {
     fn integers_print_without_fraction() {
         assert_eq!(num(3.0).to_string(), "3");
         assert_eq!(num(3.5).to_string(), "3.5");
+    }
+
+    #[test]
+    fn u64_builder_and_accessors() {
+        assert_eq!(unum(42).to_string(), "42");
+        assert_eq!(Json::parse("42").unwrap().as_u64(), Some(42));
+        assert_eq!(Json::parse("-1").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("\"x\"").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("true").unwrap().as_bool(), Some(true));
+        assert_eq!(Json::parse("1").unwrap().as_bool(), None);
     }
 
     #[test]

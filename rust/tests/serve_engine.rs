@@ -1,20 +1,25 @@
 //! Integration tests for the serving subsystem: submit → batch → result
 //! delivery, agreement with the blocking predict path, hot model swap
-//! through the registry, and the model-file → registry → engine pipeline.
+//! through the registry, the model-file → registry → engine pipeline, and
+//! admission control / load shedding under saturation.
 
 use lpdsvm::coordinator::train::{train, TrainConfig};
 use lpdsvm::data::dataset::Dataset;
+use lpdsvm::data::sparse::SparseMatrix;
 use lpdsvm::data::synth::{FeatureStyle, PaperDataset, SynthSpec};
 use lpdsvm::kernel::Kernel;
 use lpdsvm::linalg::Mat;
-use lpdsvm::lowrank::{LowRankFactor, Stage1Config};
+use lpdsvm::lowrank::factor::NativeBackend;
+use lpdsvm::lowrank::{LowRankFactor, Stage1Backend, Stage1Config};
 use lpdsvm::model::io as model_io;
 use lpdsvm::model::multiclass::{BinaryHead, MulticlassModel};
 use lpdsvm::model::ModelKind;
-use lpdsvm::serve::{ModelRegistry, ServeConfig, ServeEngine};
+use lpdsvm::serve::{
+    BackendProvider, ModelRegistry, ServeConfig, ServeEngine, ServeError, ShedPolicy,
+};
 use std::sync::atomic::Ordering;
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 fn binary_dataset(seed: u64) -> Dataset {
     PaperDataset::Adult.spec(0.005, seed).synth.generate()
@@ -55,6 +60,7 @@ fn engine_cfg(max_batch: usize, max_wait: Duration, workers: usize) -> ServeConf
         max_batch,
         max_wait,
         workers,
+        ..ServeConfig::default()
     }
 }
 
@@ -244,7 +250,7 @@ fn scoring_panic_rejects_tickets_and_worker_survives() {
         engine_cfg(4, Duration::from_millis(2), 1),
     );
     let err = engine.submit("m", &[(0, 1.0)]).wait().unwrap_err();
-    assert!(err.0.contains("dropped"), "got: {err}");
+    assert!(err.to_string().contains("dropped"), "got: {err}");
     assert_eq!(engine.metrics().batch_panics.load(Ordering::Relaxed), 1);
     // The abandoned request still counts as failed (metrics invariant).
     assert_eq!(engine.metrics().failed.load(Ordering::Relaxed), 1);
@@ -282,9 +288,186 @@ fn per_request_errors_do_not_poison_the_batch() {
     let good_after = engine.submit("m", &rows[1]);
     assert!(good_before.wait().is_ok());
     let err = bad.wait().unwrap_err();
-    assert!(err.0.contains("out of range"), "got: {err}");
+    assert!(err.to_string().contains("out of range"), "got: {err}");
     assert!(good_after.wait().is_ok());
     assert_eq!(engine.metrics().failed.load(Ordering::Relaxed), 1);
     assert_eq!(engine.metrics().completed.load(Ordering::Relaxed), 2);
+    engine.shutdown();
+}
+
+#[test]
+fn bounded_queue_rejects_once_full_and_invariant_holds() {
+    // max_wait far beyond the test horizon and max_batch above the cap:
+    // nothing can dispatch, so the queue deterministically fills to
+    // max_queue and every further submit is shed.
+    let registry = Arc::new(ModelRegistry::new());
+    let engine = ServeEngine::start(
+        Arc::clone(&registry),
+        ServeConfig {
+            max_batch: 64,
+            max_wait: Duration::from_secs(600),
+            workers: 1,
+            max_queue: 3,
+            shed_policy: ShedPolicy::RejectNewest,
+        },
+    );
+    let queued: Vec<_> = (0..3).map(|_| engine.submit("m", &[(0, 1.0)])).collect();
+    assert!(queued.iter().all(|t| t.try_get().is_none()), "still queued");
+
+    // Explicit fast-fail on the Result path…
+    let err = engine.try_submit("m", &[(0, 1.0)]).unwrap_err();
+    assert_eq!(err, ServeError::QueueFull { max_queue: 3 });
+    assert!(err.is_shed());
+    // …and an immediately-resolved ticket on the Ticket path.
+    let rejected = engine.submit("m", &[(0, 1.0)]);
+    let fast_fail = rejected.try_get().expect("queue-full resolves instantly");
+    assert_eq!(fast_fail.unwrap_err(), ServeError::QueueFull { max_queue: 3 });
+
+    let m = engine.metrics();
+    assert_eq!(m.rejected_full.load(Ordering::Relaxed), 2);
+    assert!(m.queue_full_events.load(Ordering::Relaxed) >= 2);
+    assert_eq!(m.queue_depth.load(Ordering::Relaxed), 3);
+    assert!(m.queue_depth_max.load(Ordering::Relaxed) <= 3);
+
+    // Invariant mid-flight: submitted == completed + failed + in-flight.
+    assert_eq!(
+        m.submitted.load(Ordering::Relaxed),
+        m.completed.load(Ordering::Relaxed)
+            + m.failed.load(Ordering::Relaxed)
+            + m.queue_depth.load(Ordering::Relaxed)
+    );
+
+    // Shutdown drains the queued three (they fail: model never
+    // registered) and the invariant closes with nothing in flight.
+    engine.shutdown();
+    for t in &queued {
+        assert!(t.try_get().expect("drained at shutdown").is_err());
+    }
+    assert_eq!(m.submitted.load(Ordering::Relaxed), 5);
+    assert_eq!(m.completed.load(Ordering::Relaxed) + m.failed.load(Ordering::Relaxed), 5);
+    assert_eq!(m.queue_depth.load(Ordering::Relaxed), 0);
+}
+
+/// A [`Stage1Backend`] that blocks every scoring call on a shared gate —
+/// the deterministic way to hold a worker busy while the queue fills.
+struct GatedBackend {
+    inner: NativeBackend,
+    gate: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl Stage1Backend for GatedBackend {
+    fn g_chunk(
+        &self,
+        x: &SparseMatrix,
+        rows: &[usize],
+        landmarks: &Mat,
+        landmark_sq: &[f32],
+        whiten: &Mat,
+        kernel: &Kernel,
+    ) -> anyhow::Result<Mat> {
+        let (lock, cv) = &*self.gate;
+        let mut open = lock.lock().unwrap();
+        while !*open {
+            open = cv.wait(open).unwrap();
+        }
+        drop(open);
+        self.inner.g_chunk(x, rows, landmarks, landmark_sq, whiten, kernel)
+    }
+
+    fn name(&self) -> &'static str {
+        "gated-native"
+    }
+}
+
+struct GatedProvider {
+    gate: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl BackendProvider for GatedProvider {
+    fn backend(&self) -> anyhow::Result<Box<dyn Stage1Backend + '_>> {
+        Ok(Box::new(GatedBackend {
+            inner: NativeBackend::default(),
+            gate: Arc::clone(&self.gate),
+        }))
+    }
+}
+
+#[test]
+fn drop_expired_sheds_overdue_requests_to_admit_new_traffic() {
+    let data = binary_dataset(21);
+    let model = quick_train(&data);
+    let expected = model.predict(&data.x).unwrap();
+    let registry = Arc::new(ModelRegistry::new());
+    registry.insert("m", model);
+
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    // max_wait = 0: every queued request is instantly past its deadline,
+    // and the (sole) worker dispatches singleton batches immediately.
+    let engine = ServeEngine::start_with_provider(
+        Arc::clone(&registry),
+        ServeConfig {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            workers: 1,
+            max_queue: 2,
+            shed_policy: ShedPolicy::DropExpired,
+        },
+        Arc::new(GatedProvider {
+            gate: Arc::clone(&gate),
+        }),
+    );
+    let rows = request_rows(&data);
+
+    // r1 dispatches to the worker, which blocks on the gate. Wait until
+    // it actually left the queue so the fill below is deterministic.
+    let r1 = engine.submit("m", &rows[0]);
+    let t0 = Instant::now();
+    while engine.metrics().batches.load(Ordering::Relaxed) < 1 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "worker never picked up r1");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    // Fill the 2-slot queue behind the blocked worker…
+    let r2 = engine.submit("m", &rows[1]);
+    let r3 = engine.submit("m", &rows[2]);
+    assert!(r2.try_get().is_none() && r3.try_get().is_none(), "queued");
+    // Let measurable time pass so both queued requests are unambiguously
+    // past the (zero) deadline, then submit one more: the full queue
+    // sheds the overdue r2 and r3 and admits r4 instead of rejecting it.
+    std::thread::sleep(Duration::from_millis(5));
+    let r4 = engine.submit("m", &rows[3]);
+    for overdue in [&r2, &r3] {
+        let err = overdue.try_get().expect("shed synchronously").unwrap_err();
+        assert!(
+            matches!(err, ServeError::DeadlineExceeded { .. }),
+            "expected a deadline shed, got: {err}"
+        );
+        assert!(err.is_shed());
+    }
+    assert!(r4.try_get().is_none(), "r4 was admitted, not rejected");
+
+    let m = engine.metrics();
+    assert_eq!(m.shed_expired.load(Ordering::Relaxed), 2);
+    assert_eq!(m.rejected_full.load(Ordering::Relaxed), 0);
+    assert_eq!(m.queue_full_events.load(Ordering::Relaxed), 1);
+    assert_eq!(m.queue_depth.load(Ordering::Relaxed), 1);
+    // Shedding must make room *before* the newcomer is counted: the
+    // high-water mark stays at the cap even on the overflow submit.
+    assert!(m.queue_depth_max.load(Ordering::Relaxed) <= 2);
+
+    // Open the gate: the surviving requests score correctly.
+    {
+        let (lock, cv) = &*gate;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+    assert_eq!(r1.wait().unwrap().label, expected[0]);
+    assert_eq!(r4.wait().unwrap().label, expected[3]);
+
+    // Invariant after the dust settles: 4 submitted = 2 completed + 2 shed.
+    assert_eq!(m.submitted.load(Ordering::Relaxed), 4);
+    assert_eq!(m.completed.load(Ordering::Relaxed), 2);
+    assert_eq!(m.failed.load(Ordering::Relaxed), 2);
+    assert_eq!(m.queue_depth.load(Ordering::Relaxed), 0);
     engine.shutdown();
 }

@@ -1,0 +1,306 @@
+//! Integration tests for the HTTP front-end: a listener on an ephemeral
+//! port, predictions identical to the in-process engine path, health and
+//! metrics endpoints, keep-alive, and error/unavailability mapping.
+
+use lpdsvm::coordinator::train::{train, TrainConfig};
+use lpdsvm::data::dataset::Dataset;
+use lpdsvm::data::synth::{FeatureStyle, SynthSpec};
+use lpdsvm::lowrank::Stage1Config;
+use lpdsvm::serve::{HttpServer, ModelRegistry, ServeConfig, ServeEngine};
+use lpdsvm::util::json::{self, Json};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn dataset(seed: u64) -> Dataset {
+    SynthSpec {
+        name: "serve-http".into(),
+        n: 180,
+        p: 10,
+        n_classes: 3,
+        sep: 5.0,
+        latent: 4,
+        noise: 1.0,
+        style: FeatureStyle::Dense,
+        seed,
+    }
+    .generate()
+}
+
+fn served_engine(seed: u64) -> (Dataset, Vec<u32>, Arc<ServeEngine>, HttpServer) {
+    let data = dataset(seed);
+    let cfg = TrainConfig {
+        stage1: Stage1Config {
+            budget: 24,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let model = train(&data, &cfg).unwrap();
+    let expected = model.predict(&data.x).unwrap();
+    let registry = Arc::new(ModelRegistry::new());
+    registry.insert("m", model);
+    let engine = Arc::new(ServeEngine::start(
+        registry,
+        ServeConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            workers: 2,
+            ..ServeConfig::default()
+        },
+    ));
+    // Port 0: the OS picks a free ephemeral port; read it back via addr().
+    let server = HttpServer::bind(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+    (data, expected, engine, server)
+}
+
+/// Minimal HTTP/1.1 client: one request per connection (`connection:
+/// close`), returns (status, body).
+fn http_call(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let body = body.unwrap_or("");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nhost: {addr}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut reader = BufReader::new(stream);
+    read_response(&mut reader)
+}
+
+/// Read one length-framed response off a (possibly keep-alive) stream.
+fn read_response<R: BufRead>(reader: &mut R) -> (u16, String) {
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).unwrap();
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .expect("status line")
+        .parse()
+        .unwrap();
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        reader.read_line(&mut header).unwrap();
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().unwrap();
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).unwrap();
+    (status, String::from_utf8(body).unwrap())
+}
+
+/// Encode sparse rows as the predict-endpoint batch body.
+fn rows_body(rows: &[Vec<(u32, f32)>]) -> String {
+    let rows_json: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::Arr(
+                r.iter()
+                    .map(|&(c, v)| json::arr(vec![json::unum(c as u64), json::num(v as f64)]))
+                    .collect(),
+            )
+        })
+        .collect();
+    json::obj(vec![("rows", Json::Arr(rows_json))]).to_string()
+}
+
+fn labels_of(response_body: &str) -> Vec<u32> {
+    let v = Json::parse(response_body).unwrap();
+    v.get("predictions")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|p| p.get("label").expect("prediction, not error").as_u64().unwrap() as u32)
+        .collect()
+}
+
+#[test]
+fn http_predictions_match_in_process_engine() {
+    let (data, expected, engine, server) = served_engine(41);
+    let rows: Vec<Vec<(u32, f32)>> = (0..data.len()).map(|i| data.x.row_entries(i)).collect();
+
+    // In-process path.
+    let in_process: Vec<u32> = rows
+        .iter()
+        .map(|r| engine.submit("m", r).wait().unwrap().label)
+        .collect();
+    assert_eq!(in_process, expected);
+
+    // Same workload over HTTP, in batch POSTs of 60 rows.
+    let mut over_http = Vec::with_capacity(rows.len());
+    for chunk in rows.chunks(60) {
+        let (status, body) =
+            http_call(server.addr(), "POST", "/v1/models/m:predict", Some(&rows_body(chunk)));
+        assert_eq!(status, 200, "body: {body}");
+        over_http.extend(labels_of(&body));
+    }
+    assert_eq!(over_http, expected, "HTTP must be byte-identical to in-process");
+
+    // Single-row form.
+    let single = json::obj(vec![(
+        "row",
+        Json::Arr(
+            rows[0]
+                .iter()
+                .map(|&(c, v)| json::arr(vec![json::unum(c as u64), json::num(v as f64)]))
+                .collect(),
+        ),
+    )])
+    .to_string();
+    let (status, body) = http_call(server.addr(), "POST", "/v1/models/m:predict", Some(&single));
+    assert_eq!(status, 200);
+    assert_eq!(labels_of(&body), vec![expected[0]]);
+
+    server.shutdown();
+    engine.shutdown();
+}
+
+#[test]
+fn healthz_metrics_and_model_listing() {
+    let (data, _expected, engine, server) = served_engine(42);
+    let addr = server.addr();
+
+    let (status, body) = http_call(addr, "GET", "/healthz", None);
+    assert_eq!(status, 200, "body: {body}");
+    let health = Json::parse(&body).unwrap();
+    assert_eq!(health.get("status").unwrap().as_str().unwrap(), "ok");
+    assert!(health.get("healthy_workers").unwrap().as_u64().unwrap() >= 1);
+    assert_eq!(health.get("models").unwrap().as_u64().unwrap(), 1);
+
+    let (status, body) = http_call(addr, "GET", "/v1/models", None);
+    assert_eq!(status, 200);
+    let listing = Json::parse(&body).unwrap();
+    assert_eq!(listing.get("count").unwrap().as_u64().unwrap(), 1);
+    assert_eq!(
+        listing.get("models").unwrap().as_arr().unwrap()[0]
+            .as_str()
+            .unwrap(),
+        "m"
+    );
+
+    // Score one row so the counters move, then check both metric formats.
+    let row = data.x.row_entries(0);
+    let (status, _) = http_call(addr, "POST", "/v1/models/m:predict", Some(&rows_body(&[row])));
+    assert_eq!(status, 200);
+    let (status, body) = http_call(addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    let metrics = Json::parse(&body).unwrap();
+    let submitted = metrics.get("submitted").unwrap().as_u64().unwrap();
+    assert!(submitted >= 1);
+    // Quiesced (every response arrived) ⇒ nothing in flight.
+    assert_eq!(
+        submitted,
+        metrics.get("completed").unwrap().as_u64().unwrap()
+            + metrics.get("failed").unwrap().as_u64().unwrap()
+            + metrics.get("queue_depth").unwrap().as_u64().unwrap()
+    );
+    assert!(metrics.get("latency_us").unwrap().get("p99").is_some());
+    let (status, body) = http_call(addr, "GET", "/metrics?format=table", None);
+    assert_eq!(status, 200);
+    assert!(body.contains("requests submitted"), "table body: {body}");
+
+    server.shutdown();
+    engine.shutdown();
+}
+
+#[test]
+fn keep_alive_serves_sequential_requests_on_one_connection() {
+    let (_data, _expected, engine, server) = served_engine(43);
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+
+    for (i, connection) in ["keep-alive", "close"].iter().enumerate() {
+        let req = format!(
+            "GET /healthz HTTP/1.1\r\nhost: t\r\nconnection: {connection}\r\n\r\n"
+        );
+        writer.write_all(req.as_bytes()).unwrap();
+        let (status, body) = read_response(&mut reader);
+        assert_eq!(status, 200, "request {i}: {body}");
+    }
+    // Server honoured `connection: close` — the stream now yields EOF.
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty());
+
+    server.shutdown();
+    engine.shutdown();
+}
+
+#[test]
+fn expect_100_continue_gets_interim_response() {
+    let (data, expected, engine, server) = served_engine(45);
+    let row = data.x.row_entries(0);
+    let body = rows_body(&[row]);
+
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let req = format!(
+        "POST /v1/models/m:predict HTTP/1.1\r\nhost: t\r\nexpect: 100-continue\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut reader = BufReader::new(stream);
+    // Interim go-ahead first (curl stalls ~1 s per request without it)…
+    let (interim, _) = read_response(&mut reader);
+    assert_eq!(interim, 100);
+    // …then the real response.
+    let (status, resp) = read_response(&mut reader);
+    assert_eq!(status, 200, "body: {resp}");
+    assert_eq!(labels_of(&resp), vec![expected[0]]);
+
+    server.shutdown();
+    engine.shutdown();
+}
+
+#[test]
+fn error_mapping_bad_input_unknown_model_and_shutdown() {
+    let (data, _expected, engine, server) = served_engine(44);
+    let addr = server.addr();
+    let row = data.x.row_entries(0);
+
+    let (status, body) = http_call(addr, "GET", "/nope", None);
+    assert_eq!(status, 404, "body: {body}");
+    let (status, body) = http_call(addr, "POST", "/v1/models/m:predict", Some("{not json"));
+    assert_eq!(status, 400, "body: {body}");
+    assert!(body.contains("invalid JSON"));
+    let (status, body) = http_call(addr, "POST", "/v1/models/m:predict", Some(r#"{"x": 1}"#));
+    assert_eq!(status, 400, "body: {body}");
+    let (status, body) = http_call(
+        addr,
+        "POST",
+        "/v1/models/ghost:predict",
+        Some(&rows_body(&[row.clone()])),
+    );
+    assert_eq!(status, 400, "unknown model is a client error; body: {body}");
+    assert!(body.contains("not registered"));
+
+    // Engine gone, front-end still up: predicts become 503 (retryable),
+    // introspection endpoints keep answering.
+    engine.shutdown();
+    let (status, body) = http_call(addr, "POST", "/v1/models/m:predict", Some(&rows_body(&[row])));
+    assert_eq!(status, 503, "body: {body}");
+    assert!(body.contains("shut down"));
+    let (status, _) = http_call(addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+
+    server.shutdown();
+}
