@@ -8,10 +8,19 @@
 //! thread. The engine should clear 4× at the larger batch sizes: one
 //! stage-1 GEMM per batch amortizes the landmark/whitening traffic that
 //! the naive loop re-reads per row, and scoring fans across all cores.
-//! The final section saturates a deliberately under-provisioned engine
+//! The third section saturates a deliberately under-provisioned engine
 //! (one worker, bounded queue) and asserts the queue never exceeds its
 //! cap and the excess is shed explicitly, reporting accepted-request
 //! p50/p99.
+//!
+//! The final section is the **two-tenant overload**: one tenant saturates
+//! the engine with unpaced traffic while a closed-loop probe plays the
+//! cold tenant. Run once with both through a *shared* queue (the cold
+//! probe rides the hot tenant's sub-queue — the PR 4 single-FIFO
+//! behaviour) and once with per-model queues, recording the cold probe's
+//! completions, sheds, and p99 in both. The fairness contract asserted:
+//! with its own sub-queue the cold tenant completes requests and sheds
+//! nothing while the hot tenant sheds.
 //!
 //!     cargo bench --bench serve_throughput
 //!     LPDSVM_SERVE_REQUESTS=50000 cargo bench --bench serve_throughput
@@ -24,6 +33,7 @@ use lpdsvm::data::synth::{FeatureStyle, SynthSpec};
 use lpdsvm::lowrank::Stage1Config;
 use lpdsvm::report::Table;
 use lpdsvm::serve::{ModelRegistry, ServeConfig, ServeEngine};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -203,4 +213,97 @@ fn main() {
         m.latency_us.quantile(0.50) as f64 / 1e3
     );
     engine.shutdown();
+
+    // --- two-tenant overload: shared queue vs per-model fairness ---
+    // The hot tenant saturates an under-provisioned engine open-loop; a
+    // closed-loop probe (≤ 1 request in flight) plays the cold tenant.
+    // "shared" routes the probe through the hot tenant's own sub-queue —
+    // exactly the PR 4 single-FIFO topology, where the probe competes
+    // with the hot backlog for queue slots. "fair" gives the probe its
+    // own sub-queue under the DRR scheduler.
+    println!("\ntwo-tenant overload (workers=1, max_batch=32, max_queue=256 per model):");
+    let model_arc = Arc::clone(registry.get("m").expect("registered above").model());
+    let registry2 = Arc::new(ModelRegistry::new());
+    registry2.insert_arc("hot", Arc::clone(&model_arc));
+    registry2.insert_arc("cold", model_arc);
+    let mut t = Table::new(
+        "cold tenant under hot-tenant saturation",
+        &["scenario", "cold done", "cold shed", "cold p99 ms", "hot shed"],
+    );
+    for (scenario, probe_target) in [("shared queue", "hot"), ("per-model DRR", "cold")] {
+        let engine = Arc::new(ServeEngine::start(
+            Arc::clone(&registry2),
+            ServeConfig {
+                max_batch: 32,
+                max_wait: Duration::from_micros(200),
+                workers: 1,
+                max_queue: 256,
+                ..ServeConfig::default()
+            },
+        ));
+        let hot_done = Arc::new(AtomicBool::new(false));
+        let hot_engine = Arc::clone(&engine);
+        let hot_rows = rows.clone();
+        let hot_flag = Arc::clone(&hot_done);
+        let hot = std::thread::spawn(move || {
+            let tickets: Vec<_> = (0..n_sat)
+                .map(|i| hot_engine.submit("hot", &hot_rows[i % hot_rows.len()]))
+                .collect();
+            let mut shed = 0u64;
+            for t in &tickets {
+                if matches!(t.wait(), Err(e) if e.is_shed()) {
+                    shed += 1;
+                }
+            }
+            hot_flag.store(true, Ordering::Release);
+            shed
+        });
+        let mut cold_done = 0u64;
+        let mut cold_shed = 0u64;
+        let mut cold_lat_us: Vec<u64> = Vec::new();
+        while !hot_done.load(Ordering::Acquire) {
+            match engine.submit(probe_target, &rows[0]).wait() {
+                Ok(p) => {
+                    cold_done += 1;
+                    cold_lat_us.push(p.total_us);
+                }
+                Err(e) if e.is_shed() => {
+                    // Back off like a real client so the rejected probe
+                    // does not spin on the queue lock.
+                    cold_shed += 1;
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                Err(e) => panic!("unexpected cold-probe error: {e}"),
+            }
+        }
+        let hot_shed = hot.join().expect("hot generator");
+        cold_lat_us.sort_unstable();
+        let p99 = cold_lat_us
+            .get((cold_lat_us.len().saturating_sub(1)) * 99 / 100)
+            .copied()
+            .unwrap_or(0);
+        t.row(&[
+            scenario.into(),
+            cold_done.to_string(),
+            cold_shed.to_string(),
+            format!("{:.3}", p99 as f64 / 1e3),
+            hot_shed.to_string(),
+        ]);
+        if probe_target == "cold" {
+            // The fairness contract this PR exists for.
+            assert_eq!(
+                cold_shed, 0,
+                "cold tenant shed behind its own sub-queue — isolation broken"
+            );
+            assert!(cold_done > 0, "cold tenant starved under per-model DRR");
+            assert!(
+                hot_shed > 0,
+                "hot tenant never shed — the overload did not saturate"
+            );
+        }
+        engine.shutdown();
+    }
+    t.print();
+    t.write_tsv(&harness::report_dir().join("serve_fairness.tsv"))
+        .ok();
 }

@@ -13,6 +13,10 @@
 //!   few landmarks (default 50), training in chunks of 50k points, exactly
 //!   30 epochs per chunk, one pass over the data, **no convergence check**
 //!   — reproducing both its speed and its failure mode.
+//!
+//! Invariant: baselines share the main pipeline's kernels and data
+//! structures but none of its solver shortcuts — a table-2 comparison
+//! measures the algorithms, not differing linear algebra.
 
 pub mod exact_smo;
 pub mod kernel_cache;

@@ -11,6 +11,12 @@
 //! * the resulting pool of independent solves is embarrassingly parallel —
 //!   scheduled here over a thread pool (the paper's OpenMP cores / multiple
 //!   GPUs).
+//!
+//! Invariants: results are independent of how solves are scheduled
+//! (every job reads shared immutable state and owns its output slot);
+//! fold assignment is seed-deterministic and never yields an empty
+//! fold; warm starts only ever change iteration counts, not the
+//! solution a run converges to.
 
 pub mod cv;
 pub mod grid;

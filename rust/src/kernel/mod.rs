@@ -6,11 +6,21 @@
 //! kernel block `K(X_sel, L)` is implemented the same way the paper's CUDA
 //! kernels do it — inner-product matrix via (sparse×dense) GEMM, then
 //! row/column norms and an elementwise map:
-//!     gaussian:  exp(-γ(‖x‖² + ‖z‖² − 2⟨x,z⟩))
-//!     poly:      (γ⟨x,z⟩ + c₀)^d
-//!     tanh:      tanh(γ⟨x,z⟩ + c₀)
+//!
+//! ```text
+//! gaussian:  exp(-γ(‖x‖² + ‖z‖² − 2⟨x,z⟩))
+//! poly:      (γ⟨x,z⟩ + c₀)^d
+//! tanh:      tanh(γ⟨x,z⟩ + c₀)
+//! ```
+//!
 //! This is exactly the computation the L1 Pallas kernel performs on the
 //! accelerator path (python/compile/kernels/rbf_gram.py).
+//!
+//! Invariants: batch evaluation ([`Kernel::block`], and its parallel
+//! twin [`Kernel::block_threads`]) agrees with the scalar
+//! [`Kernel::eval_sparse`] path row by row, and the parallel path is
+//! bit-identical to the serial one for every thread count
+//! (`tests/prop_parallel.rs`).
 
 use crate::data::sparse::SparseMatrix;
 use crate::linalg::Mat;

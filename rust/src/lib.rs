@@ -18,11 +18,14 @@
 //!   paper's table 2 comparison.
 //! * **Serving** ([`serve`]): a micro-batching inference engine over
 //!   trained models — request coalescing under a latency/size policy,
-//!   admission control with explicit load shedding under saturation, a
-//!   hot-swappable model registry, per-request tickets,
-//!   latency/throughput metrics, and a dependency-free HTTP/1.1
-//!   front-end, reusing the same `Stage1Backend` abstraction so batches
-//!   score through native GEMM or the PJRT path.
+//!   per-model bounded queues scheduled by weighted deficit-round-robin
+//!   (multi-tenant fairness: a hot model sheds only its own traffic and
+//!   cannot starve a cold one), admission control with explicit load
+//!   shedding under saturation, a hot-swappable model registry,
+//!   per-request tickets, latency/throughput metrics with per-model
+//!   rollups, and a dependency-free HTTP/1.1 front-end with a bounded
+//!   connection pool, reusing the same `Stage1Backend` abstraction so
+//!   batches score through native GEMM or the PJRT path.
 //!
 //! Quickstart:
 //!
@@ -75,8 +78,8 @@ pub mod prelude {
     pub use crate::model::multiclass::MulticlassModel;
     pub use crate::model::ModelKind;
     pub use crate::serve::{
-        HttpServer, ModelRegistry, PredictResult, Prediction, ServeConfig, ServeEngine,
-        ServeError, ServingModel, ShedPolicy,
+        HttpServer, ModelMetrics, ModelRegistry, ModelServeConfig, PredictResult, Prediction,
+        ServeConfig, ServeEngine, ServeError, ServingModel, ShedPolicy,
     };
     pub use crate::solver::{solve, Solution, SolverOptions};
     pub use crate::util::rng::Rng;

@@ -116,7 +116,7 @@ const TOURNAMENT_MIN_DIM: usize = 128;
 
 /// Pool-parallel eigensolver: round-robin tournament Jacobi
 /// ([`sym_eig_tournament`]) for matrices of at least
-/// [`TOURNAMENT_MIN_DIM`] rows — the eigh-bound "preparation" regime at
+/// `TOURNAMENT_MIN_DIM` (128) rows — the eigh-bound "preparation" regime at
 /// large landmark budgets — and the serial cyclic path below that, where
 /// pool dispatch overhead would dominate the O(n) phase slots. The
 /// cutover depends only on the matrix size, so the result is

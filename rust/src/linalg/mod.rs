@@ -8,6 +8,12 @@
 //! the near-singular kernel matrices the paper §4 warns about — Jacobi
 //! degrades gracefully, and the paper itself rejects Cholesky for the same
 //! reason; we still ship Cholesky for tests and comparison).
+//!
+//! Invariants: the `_threads` GEMM variants are bit-identical to serial
+//! for every thread count (row banding never reassociates a row's
+//! arithmetic); the tournament eigensolver is deterministic per thread
+//! count and cut over by matrix size only; eigenvalue ordering is total
+//! even in the presence of NaN inputs (`total_cmp`).
 
 pub mod chol;
 pub mod dense;

@@ -2,7 +2,14 @@
 //!
 //! Pipeline (paper figure 1): sample `B` landmarks → compute `K_BB` →
 //! eigendecompose → drop eigenvalues below `ε·λ_max` → whitening map
-//! `W = V_r Λ_r^{-1/2}` → fully precompute `G = K_nB W` (n×r) held in RAM.
+//! `W = V_r Λ_r^{-1/2}` → fully precompute `G = K_nB W` (n×r) held in RAM
+//! — the paper's "more RAM" ingredient ([`memory`] plans the budget).
+//!
+//! Invariants: the factor depends only on the kernel parameter and seed
+//! (so CV/grid share it); the whitening map keeps only the positive
+//! spectrum (rank follows `whiten.cols`, no near-singular blowups); the
+//! chunked computation is bit-identical across chunk sizes, thread
+//! counts, and backends' serial paths (`tests/prop_parallel.rs`).
 
 pub mod factor;
 pub mod landmarks;

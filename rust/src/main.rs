@@ -23,8 +23,8 @@ use lpdsvm::model::multiclass::error_rate;
 use lpdsvm::report::Table;
 use lpdsvm::runtime::{AccelBackend, Runtime};
 use lpdsvm::serve::{
-    BackendProvider, HttpServer, ModelRegistry, NativeProvider, PjrtProvider, ServeConfig,
-    ServeEngine, ShedPolicy,
+    BackendProvider, HttpServer, ModelRegistry, ModelServeConfig, NativeProvider, PjrtProvider,
+    ServeConfig, ServeEngine, ShedPolicy,
 };
 use lpdsvm::solver::SolverOptions;
 use lpdsvm::util::cli::{parse, ArgSpec};
@@ -368,7 +368,23 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             "reject-newest",
             "full-queue policy: reject-newest | drop-expired",
         ),
+        ArgSpec::opt(
+            "tenants",
+            "1",
+            "serve the model under this many names; with --saturate, tenants beyond \
+             'default' run closed-loop cold probes proving cross-model isolation",
+        ),
+        ArgSpec::opt(
+            "model-weight",
+            "",
+            "comma-separated NAME=W scheduler weights (e.g. default=4,tenant1=1)",
+        ),
         ArgSpec::opt("listen", "", "serve over HTTP on this address (e.g. 127.0.0.1:8080)"),
+        ArgSpec::opt(
+            "max-connections",
+            "1024",
+            "HTTP connection cap; over-limit accepts get 503 (0 = unbounded)",
+        ),
         ArgSpec::flag(
             "saturate",
             "overload mode: unpaced arrivals against a bounded queue; fails unless the engine shed load",
@@ -431,6 +447,37 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     );
 
     let saturate = p.flag("saturate");
+    // Multi-tenant mode: register the same model under extra names, so
+    // the fair scheduler has real tenants to arbitrate between. Only
+    // meaningful under --saturate (the isolation drill); the single-
+    // tenant path below is untouched.
+    let tenants = p.usize("tenants")?;
+    anyhow::ensure!(tenants >= 1, "--tenants must be >= 1");
+    anyhow::ensure!(
+        tenants == 1 || saturate,
+        "--tenants > 1 is the cross-model isolation drill; combine it with --saturate"
+    );
+    let tenant_names: Vec<String> = (1..tenants).map(|i| format!("tenant{i}")).collect();
+    for name in &tenant_names {
+        registry.insert_arc(name, Arc::clone(model.model()));
+    }
+    for spec in p.str("model-weight").split(',').filter(|s| !s.is_empty()) {
+        let (name, w) = spec
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--model-weight entries are NAME=W, got '{spec}'"))?;
+        let (name, w) = (name.trim(), w.trim());
+        let weight: u64 = w
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--model-weight {name}: bad weight '{w}': {e}"))?;
+        anyhow::ensure!(weight >= 1, "--model-weight {name}: weight must be >= 1");
+        anyhow::ensure!(
+            registry.contains(name),
+            "--model-weight names an unregistered model '{name}'"
+        );
+        let mut cfg: ModelServeConfig = registry.serve_config(name);
+        cfg.weight = weight;
+        registry.set_serve_config(name, cfg);
+    }
     let shed_policy = match p.str("shed-policy") {
         "reject-newest" => ShedPolicy::RejectNewest,
         "drop-expired" => ShedPolicy::DropExpired,
@@ -475,7 +522,11 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     let http = if p.str("listen").is_empty() {
         None
     } else {
-        let server = HttpServer::bind(Arc::clone(&engine), p.str("listen"))?;
+        let server = HttpServer::bind_with_limit(
+            Arc::clone(&engine),
+            p.str("listen"),
+            p.usize("max-connections")?,
+        )?;
         println!(
             "http front-end on {} — POST /v1/models/default:predict, GET /v1/models /metrics /healthz",
             server.addr()
@@ -507,6 +558,34 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         p.f64("rate")?
     };
     let rows: Vec<Vec<(u32, f32)>> = (0..data.len()).map(|i| data.x.row_entries(i)).collect();
+
+    // Cold-tenant probes (multi-tenant saturate only): one closed-loop
+    // submitter per extra tenant — at most one request in flight, so the
+    // tenant's own sub-queue never fills and any shed it suffers can only
+    // come from the hot tenant leaking into it. Starvation-freedom shows
+    // up as completed probes; a fairness bug shows up as probe sheds.
+    use std::sync::atomic::{AtomicBool, Ordering};
+    let stop_probes = Arc::new(AtomicBool::new(false));
+    let probes: Vec<_> = tenant_names
+        .iter()
+        .map(|name| {
+            let engine = Arc::clone(&engine);
+            let stop = Arc::clone(&stop_probes);
+            let name = name.clone();
+            let row = rows[0].clone();
+            std::thread::spawn(move || {
+                let (mut completed, mut failed) = (0u64, 0u64);
+                while !stop.load(Ordering::Acquire) {
+                    match engine.submit(&name, &row).wait() {
+                        Ok(_) => completed += 1,
+                        Err(_) => failed += 1,
+                    }
+                }
+                (name, completed, failed)
+            })
+        })
+        .collect();
+
     let t0 = Instant::now();
     let mut tickets = Vec::with_capacity(n_requests);
     for i in 0..n_requests {
@@ -532,6 +611,11 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         }
     }
     let elapsed = t0.elapsed();
+    stop_probes.store(true, Ordering::Release);
+    let probe_results: Vec<(String, u64, u64)> = probes
+        .into_iter()
+        .map(|h| h.join().expect("probe thread"))
+        .collect();
     let served = n_requests - errors;
     engine.metrics().table(elapsed).print();
     println!(
@@ -543,7 +627,6 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         Table::pct(mismatches as f64 / served.max(1) as f64)
     );
     if saturate {
-        use std::sync::atomic::Ordering;
         let m = engine.metrics();
         let rejected_full = m.rejected_full.load(Ordering::Relaxed);
         let shed_expired = m.shed_expired.load(Ordering::Relaxed);
@@ -552,9 +635,12 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             "saturation: rejected_full={rejected_full} shed_expired={shed_expired} \
              queue_depth_max={queue_max} (cap {max_queue})"
         );
+        // `max_queue` bounds each tenant's sub-queue individually, so the
+        // aggregate depth across tenants can reach `tenants × max_queue`.
+        let depth_bound = (max_queue * tenants) as u64;
         anyhow::ensure!(
-            queue_max <= max_queue as u64,
-            "queue grew past its cap: {queue_max} > {max_queue}"
+            queue_max <= depth_bound,
+            "queue grew past its bound: {queue_max} > {depth_bound}"
         );
         // The CI smoke relies on this: a clean exit from --saturate means
         // the shedding path actually ran.
@@ -563,6 +649,40 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             "saturate mode never overflowed the {max_queue}-slot queue — \
              raise --requests or lower --max-queue/--workers"
         );
+        // Cross-model isolation: the saturating hot tenant must be the
+        // only one shedding. Every cold probe ran closed-loop, so its
+        // sub-queue could never fill on its own — a nonzero shed count
+        // here means the scheduler let the hot backlog spill over.
+        for (name, completed, failed) in &probe_results {
+            let bucket = m.model(name);
+            let shed = bucket.shed();
+            println!(
+                "tenant '{name}': completed={completed} failed={failed} shed={shed} \
+                 p99={:.3}ms",
+                bucket.latency_us.quantile(0.99) as f64 / 1e3
+            );
+            anyhow::ensure!(
+                shed == 0,
+                "cold tenant '{name}' was shed {shed} times while 'default' saturated — \
+                 per-model isolation violated"
+            );
+            anyhow::ensure!(
+                *completed > 0,
+                "cold tenant '{name}' starved: no probe completed while 'default' saturated"
+            );
+        }
+        if !probe_results.is_empty() {
+            let hot = m.model("default");
+            anyhow::ensure!(
+                hot.shed() > 0,
+                "the hot tenant never shed — the overload did not saturate its sub-queue"
+            );
+            println!(
+                "cross-model isolation: hot tenant shed {}, {} cold tenant(s) shed 0",
+                hot.shed(),
+                probe_results.len()
+            );
+        }
     }
     if let Some(server) = http {
         server.shutdown();

@@ -6,6 +6,11 @@
 //! Prediction is `G_new = K(X_new, L)·W` followed by a dense matmul and
 //! (for multiclass) pairwise voting — the batch-friendly step the paper
 //! runs on the GPU.
+//!
+//! Invariants: OVO vote ties break toward the lower class id
+//! (deterministic predictions); persistence round-trips exactly (save →
+//! load reproduces every weight bit); prediction through any backend
+//! agrees with the native serial path.
 
 pub mod io;
 pub mod multiclass;

@@ -1,4 +1,13 @@
 //! Paper-style tables and figure data emission for the bench harness.
+//!
+//! Paper role: the paper reports its results as tables (table 1–3) and
+//! stage-breakdown figures (figure 3); [`table`] renders the in-repo
+//! equivalents for the CLI and benches (plus TSV export for artifacts),
+//! and [`fig`] emits the data series the figure benches record.
+//!
+//! Invariant: rendering is purely a view — nothing in this module
+//! computes or mutates results, so a table/figure can be regenerated
+//! from the same run without perturbing it.
 
 pub mod fig;
 pub mod table;

@@ -7,6 +7,12 @@
 //! [`crate::lowrank::Stage1Backend`] so the rest of the system is
 //! backend-agnostic. Python never runs at request time; the artifacts are
 //! self-contained HLO.
+//!
+//! Invariants: artifact lookup is shape-exact (a missing `(m, b, p)`
+//! variant is a clear error, never a silent recompile); each executable
+//! is compiled once per process and reused; without the `xla` feature
+//! the stub keeps `cargo build` green and fails at *runtime* with an
+//! actionable message.
 
 pub mod accel;
 pub mod client;

@@ -1,16 +1,32 @@
-//! The micro-batching inference engine.
+//! The micro-batching inference engine with a per-model fair scheduler.
 //!
-//! Single-row requests enter a shared queue; workers coalesce them into
-//! batches under a latency/size policy (dispatch when `max_batch` rows are
-//! waiting, or when the oldest request has waited `max_wait`) and score
-//! each batch with one stage-1 transform (`G_batch = K(X_batch, L)·W`)
-//! plus one blocked GEMM against the stacked head weights (prebuilt once
-//! at registry insert time, not per batch) — the same
-//! amortization that wins at training time (paper §4; Tyree et al. make
-//! the identical observation for inference). Each worker owns its own
-//! [`Stage1Backend`] instance (the trait is deliberately `!Sync`: the PJRT
-//! implementation wraps raw device handles), so native GEMM and the
-//! AOT-Pallas path both serve without code changes.
+//! Single-row requests enter a **per-model sub-queue**; workers pick the
+//! next batch with **weighted deficit-round-robin** over the backlogged
+//! models and coalesce up to `max_batch` requests of that model under the
+//! usual latency/size policy (dispatch when `max_batch` rows are waiting,
+//! or when the oldest request has waited `max_wait`). Each batch is
+//! scored with one stage-1 transform (`G_batch = K(X_batch, L)·W`) plus
+//! one blocked GEMM against the stacked head weights (prebuilt once at
+//! registry insert time, not per batch) — the same amortization that wins
+//! at training time (paper §4; Tyree et al. make the identical
+//! observation for inference).
+//!
+//! The scheduler exists for multi-tenancy: with the single global FIFO
+//! this engine used through PR 4, one hot model under open-loop overload
+//! filled the queue and starved (or shed) every other tenant. Now each
+//! model owns a bounded sub-queue — admission control and shedding are
+//! per model, so a saturating tenant sheds only its own traffic — and
+//! dispatch rotates over the backlogged models, giving a model `weight`
+//! batches per round (see [`ModelServeConfig`]). The rotation only ever
+//! skips models with nothing queued, so an idle tenant costs nothing and
+//! its capacity flows to the busy ones (work-conserving). With a single
+//! model the scheduler degenerates to exactly the PR 4 FIFO: same
+//! batches, same admission decisions, same metrics.
+//!
+//! Each worker owns its own [`Stage1Backend`] instance (the trait is
+//! deliberately `!Sync`: the PJRT implementation wraps raw device
+//! handles), so native GEMM and the AOT-Pallas path both serve without
+//! code changes.
 
 use crate::data::sparse::SparseMatrix;
 use crate::kernel::Kernel;
@@ -18,14 +34,30 @@ use crate::linalg::Mat;
 use crate::lowrank::factor::NativeBackend;
 use crate::lowrank::Stage1Backend;
 use crate::runtime::{AccelBackend, Runtime};
-use crate::serve::metrics::ServeMetrics;
-use crate::serve::registry::ModelRegistry;
+use crate::serve::metrics::{ModelMetrics, ServeMetrics};
+use crate::serve::registry::{ModelRegistry, ModelServeConfig, ServingModel};
 use crate::serve::session::{self, Fulfiller, Prediction, PredictResult, ServeError, Ticket};
 use crate::util::threads;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Metrics bucket shared by every model name that was not registered at
+/// submit time — junk names must not grow the metrics map without bound.
+pub const UNREGISTERED_BUCKET: &str = "(unregistered)";
+
+/// Cap on concurrently live sub-queues for *unregistered* model names.
+/// Registered tenants always get a queue; unregistered names (whose
+/// requests can only fail at dispatch) share this fixed budget, so a
+/// stream of unique junk names can hold at most
+/// `MAX_UNREGISTERED_QUEUES × max_queue` requests and occupy at most this
+/// many weight-1 scheduler slots — without it, per-model admission caps
+/// would bound each name but not the aggregate, reopening the unbounded
+/// backlog that `max_queue` exists to prevent. Over-budget submits for a
+/// brand-new unregistered name fast-fail at admission with the same
+/// "not registered" error they would get at dispatch.
+pub const MAX_UNREGISTERED_QUEUES: usize = 32;
 
 /// Batching/parallelism/admission policy for one engine instance.
 #[derive(Clone, Debug)]
@@ -37,13 +69,15 @@ pub struct ServeConfig {
     pub max_wait: Duration,
     /// Scoring worker threads (0 = one per available core).
     pub workers: usize,
-    /// Admission control: maximum accepted-but-undispatched requests.
-    /// Once the queue holds this many, a submit is resolved by
-    /// [`ShedPolicy`] instead of growing the queue — under open-loop
-    /// overload the engine sheds instead of accumulating unbounded
-    /// latency. `0` = unbounded (the pre-admission-control behaviour).
+    /// Admission control: maximum accepted-but-undispatched requests *per
+    /// model*. Once a model's sub-queue holds this many, a submit for
+    /// that model is resolved by [`ShedPolicy`] instead of growing the
+    /// queue — under open-loop overload the engine sheds the hot tenant
+    /// instead of accumulating unbounded latency (and other tenants'
+    /// queues are untouched). `0` = unbounded. A model can override this
+    /// via [`ModelServeConfig::max_queue`].
     pub max_queue: usize,
-    /// What a submit does when it finds the queue full.
+    /// What a submit does when it finds its model's sub-queue full.
     pub shed_policy: ShedPolicy,
 }
 
@@ -59,22 +93,23 @@ impl Default for ServeConfig {
     }
 }
 
-/// Load-shedding policy applied when a submit finds the bounded queue
-/// full (only consulted when `max_queue > 0`).
+/// Load-shedding policy applied when a submit finds its model's bounded
+/// sub-queue full (only consulted when the effective cap is > 0).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ShedPolicy {
     /// Fast-fail the incoming request with [`ServeError::QueueFull`];
     /// queued requests are untouched. FIFO-fair: traffic already accepted
     /// keeps its place.
     RejectNewest,
-    /// First drop queued requests whose `max_wait`-derived deadline has
-    /// already passed (they have waited longer than `max_wait`, i.e. the
-    /// latency trigger should long since have dispatched them — whoever
-    /// submitted them is likely no longer waiting at full attention), then
-    /// admit the new request into the freed space. Falls back to
-    /// reject-newest when nothing has expired. Freshness-fair: under
-    /// sustained overload the engine serves recent traffic instead of a
-    /// stale backlog.
+    /// First drop queued requests *of the same model* whose
+    /// `max_wait`-derived deadline has already passed (they have waited
+    /// longer than `max_wait`, i.e. the latency trigger should long since
+    /// have dispatched them — whoever submitted them is likely no longer
+    /// waiting at full attention), then admit the new request into the
+    /// freed space. Falls back to reject-newest when nothing has expired.
+    /// Freshness-fair: under sustained overload the engine serves recent
+    /// traffic instead of a stale backlog. Never touches another model's
+    /// queue.
     DropExpired,
 }
 
@@ -157,16 +192,75 @@ impl BackendProvider for PjrtProvider {
     }
 }
 
-/// One queued request.
+/// One queued request. The metrics bucket is resolved at submit time and
+/// travels with the request, so its lifecycle counters (submit, dispatch,
+/// completion, shedding, abandonment) all land in the same per-model
+/// bucket even if the name's registration changes mid-flight.
 struct PendingRequest {
-    model: String,
     entries: Vec<(u32, f32)>,
     fulfiller: Fulfiller,
     enqueued: Instant,
+    metrics: Arc<ModelMetrics>,
+}
+
+/// One model's sub-queue plus its scheduler state.
+struct ModelQueue {
+    queue: VecDeque<PendingRequest>,
+    /// DRR weight (≥ 1). Seeded from the registry's [`ModelServeConfig`]
+    /// when the queue is created (under the queue lock) and from then on
+    /// written only by `ServeEngine::update_model_config` — submits never
+    /// refresh it, so a submit racing a live config update cannot revert
+    /// the update with a stale registry snapshot.
+    weight: u64,
+    /// Per-model cap override (`None` = inherit `ServeConfig::max_queue`).
+    /// Same ownership rule as `weight`.
+    max_queue: Option<usize>,
+    /// Deficit counter in *requests*. Refilled with
+    /// `weight × max_batch` when the scheduler selects this queue with an
+    /// empty deficit, decremented by the rows actually dispatched, and
+    /// reset to zero whenever the queue drains — an idle model accrues no
+    /// credit, which is what makes the rotation work-conserving.
+    deficit: u64,
+    /// Whether this queue occupies a slot in the
+    /// [`MAX_UNREGISTERED_QUEUES`] budget (it was created for a name that
+    /// was unregistered at the time). Cleared — and the slot released —
+    /// on the first submit after the name becomes registered.
+    counts_unregistered: bool,
+}
+
+impl ModelQueue {
+    fn new(cfg: &ModelServeConfig, counts_unregistered: bool) -> ModelQueue {
+        ModelQueue {
+            queue: VecDeque::new(),
+            weight: cfg.weight.max(1),
+            max_queue: cfg.max_queue,
+            deficit: 0,
+            counts_unregistered,
+        }
+    }
+}
+
+/// One dispatched batch: up to `max_batch` consecutive requests of one
+/// model, pulled from that model's sub-queue.
+struct Batch {
+    model: String,
+    requests: Vec<PendingRequest>,
 }
 
 struct QueueState {
-    queue: VecDeque<PendingRequest>,
+    /// Sub-queue per model name (lazily created at first submit; emptied
+    /// queues of unregistered names are garbage-collected at dispatch so
+    /// junk names cannot grow the map without bound).
+    queues: HashMap<String, ModelQueue>,
+    /// Round-robin ring: names whose sub-queue is non-empty, in rotation
+    /// order. Invariant: `ring` holds exactly the names with queued
+    /// requests, each once.
+    ring: VecDeque<String>,
+    /// Total queued requests across all sub-queues.
+    total_depth: usize,
+    /// Live sub-queues whose `counts_unregistered` flag is set — bounded
+    /// by [`MAX_UNREGISTERED_QUEUES`].
+    unregistered_queues: usize,
     shutdown: bool,
 }
 
@@ -185,9 +279,9 @@ struct Shared {
     healthy_workers: AtomicUsize,
 }
 
-/// The serving engine: queue + batcher + worker pool. Dropping (or calling
-/// [`ServeEngine::shutdown`]) drains the queue — every accepted request is
-/// resolved before the workers exit.
+/// The serving engine: per-model queues + DRR batcher + worker pool.
+/// Dropping (or calling [`ServeEngine::shutdown`]) drains every sub-queue
+/// — every accepted request is resolved before the workers exit.
 pub struct ServeEngine {
     shared: Arc<Shared>,
     /// Behind a `Mutex` so [`ServeEngine::shutdown`] can join through a
@@ -221,7 +315,10 @@ impl ServeEngine {
 
         let shared = Arc::new(Shared {
             state: Mutex::new(QueueState {
-                queue: VecDeque::new(),
+                queues: HashMap::new(),
+                ring: VecDeque::new(),
+                total_depth: 0,
+                unregistered_queues: 0,
                 shutdown: false,
             }),
             cv: Condvar::new(),
@@ -245,8 +342,8 @@ impl ServeEngine {
                             }
                             let msg = format!("worker backend init failed: {e:#}");
                             while let Some(batch) = next_batch(&shared) {
-                                for r in batch {
-                                    fail(&shared, r.fulfiller, msg.clone());
+                                for r in batch.requests {
+                                    fail(&shared, r, msg.clone());
                                 }
                             }
                         }
@@ -265,7 +362,7 @@ impl ServeEngine {
     /// are sparse `(column, value)` pairs in any order; duplicate columns
     /// are summed. Never blocks on scoring — returns a [`Ticket`] that
     /// resolves when the request's batch completes. A request the engine
-    /// refuses to admit (shutdown, bounded queue full) yields a ticket
+    /// refuses to admit (shutdown, bounded sub-queue full) yields a ticket
     /// that is *already resolved* with the rejection, so `try_get` sees
     /// the fast-fail without ever blocking; callers that want the
     /// rejection as a plain `Err` use [`ServeEngine::try_submit`].
@@ -281,69 +378,141 @@ impl ServeEngine {
     }
 
     /// [`ServeEngine::submit`] with admission control surfaced as an
-    /// explicit fast-fail: `Err` means the request never entered the
-    /// queue (engine shut down, or the bounded queue was full and the
-    /// shed policy could not make room). Rejections are counted in the
-    /// metrics (`rejected_full`, and as submitted+failed) on this path.
+    /// explicit fast-fail: `Err` means the request never entered its
+    /// model's sub-queue (engine shut down, or the bounded sub-queue was
+    /// full and the shed policy could not make room). Rejections are
+    /// counted in the metrics (`rejected_full`, and as submitted+failed,
+    /// globally and in the model's bucket) on this path.
     pub fn try_submit(&self, model: &str, features: &[(u32, f32)]) -> Result<Ticket, ServeError> {
         // Canonicalise (and allocate the owned model name) outside the
         // queue lock — per-request CPU and allocator work must not extend
-        // the critical section every other submitter serialises on.
+        // the critical section every other submitter serialises on. The
+        // registry lookups (serve config + metrics bucket) also happen
+        // here; they take the registry's own locks, never the queue's.
         let mut entries = features.to_vec();
         normalize_entries(&mut entries);
+        let registered = self.shared.registry.contains(model);
+        let bucket = if registered { model } else { UNREGISTERED_BUCKET };
+        let mm = self.shared.metrics.model(bucket);
         let model = model.to_string();
 
         let mut st = self.shared.state.lock().unwrap();
         if st.shutdown {
             drop(st);
             self.shared.metrics.note_rejected_at_submit();
+            mm.note_rejected_at_submit();
             return Err(ServeError::ShuttingDown);
         }
-        let cap = self.shared.cfg.max_queue;
+        // Reborrow the guarded state once so the queue borrow below can
+        // split across fields (ring, depth) without re-hashing the model
+        // key at every step of the critical section.
+        let s = &mut *st;
+        // Create the sub-queue on first use. Unregistered names draw
+        // from a fixed queue budget — their requests can only fail at
+        // dispatch, so failing the overflow at admission loses nothing
+        // and keeps junk names from growing the state maps (and the
+        // scheduler rotation) without bound.
+        if !s.queues.contains_key(&model) {
+            if !registered && s.unregistered_queues >= MAX_UNREGISTERED_QUEUES {
+                drop(st);
+                self.shared.metrics.note_rejected_at_submit();
+                mm.note_rejected_at_submit();
+                return Err(ServeError::Failed(format!(
+                    "model '{model}' is not registered \
+                     (and the unregistered sub-queue budget is exhausted)"
+                )));
+            }
+            // Seed the scheduling parameters from the registry *under
+            // the queue lock* (state → registry is the crate's lock
+            // order, same as the dispatch-side GC): seeding from a
+            // pre-lock snapshot could revert a concurrent
+            // `update_model_config` that ran in between. After creation,
+            // `update_model_config` is the only writer of the live
+            // parameters — submits never refresh them, so a racing
+            // stale submit cannot undo a live update either.
+            let seed = self.shared.registry.serve_config(&model).normalized();
+            if !registered {
+                s.unregistered_queues += 1;
+            }
+            s.queues
+                .insert(model.clone(), ModelQueue::new(&seed, !registered));
+        }
+        let q = s.queues.get_mut(&model).unwrap();
+        if registered {
+            mm.set_weight(q.weight);
+        }
+        if q.counts_unregistered && registered {
+            // The name was registered after its queue formed: release
+            // its slot in the unregistered budget.
+            q.counts_unregistered = false;
+            s.unregistered_queues -= 1;
+        }
+        let cap = q.max_queue.unwrap_or(self.shared.cfg.max_queue);
         let mut shed: Vec<PendingRequest> = Vec::new();
-        if cap > 0 && st.queue.len() >= cap {
+        if cap > 0 && q.queue.len() >= cap {
             self.shared.metrics.note_queue_full();
             if self.shared.cfg.shed_policy == ShedPolicy::DropExpired {
-                shed = drain_expired(&mut st.queue, self.shared.cfg.max_wait);
+                shed = drain_expired(&mut q.queue, self.shared.cfg.max_wait);
                 // Account the departures (depth + failed + shed) while
                 // the lock still serialises against other submitters and
                 // metrics scrapes: deferring the depth decrement would
                 // let this submit push `queue_depth_max` past the cap,
                 // and deferring the failure counts would open a window
                 // where `submitted > completed + failed + in-flight`.
+                s.total_depth -= shed.len();
                 self.shared.metrics.note_shed_expired(shed.len() as u64);
+                for r in &shed {
+                    r.metrics.note_shed_expired();
+                }
+                if q.queue.is_empty() {
+                    remove_from_ring(&mut s.ring, &model);
+                }
             }
-            if st.queue.len() >= cap {
-                // Nothing expired (or the policy keeps the backlog):
-                // fast-fail the newcomer without touching the queue.
+            if q.queue.len() >= cap {
+                // Nothing expired, or not enough expired to make room
+                // (e.g. the cap was lowered live): fast-fail the newcomer
+                // without touching the queue. Any requests the drain DID
+                // shed must still be resolved as deadline sheds — dropped
+                // unfulfilled they would resolve as `Abandoned` and fire
+                // `on_abandon`, double-counting `failed`.
                 drop(st);
                 self.shared.metrics.note_rejected_full();
+                mm.note_rejected_full();
+                resolve_shed(shed);
                 return Err(ServeError::QueueFull { max_queue: cap });
             }
         }
         let (ticket, mut fulfiller) = session::channel();
         // If the engine ever abandons this request (panic unwinding the
         // batch), it still counts as failed — the metrics invariant
-        // `submitted == completed + failed + in-flight` must hold.
+        // `submitted == completed + failed + in-flight` must hold, both
+        // globally and in the model's bucket.
         let metrics = Arc::clone(&self.shared.metrics);
-        fulfiller.on_abandon(move || metrics.note_failed());
+        let bucket_metrics = Arc::clone(&mm);
+        fulfiller.on_abandon(move || {
+            metrics.note_failed();
+            bucket_metrics.note_failed();
+        });
         self.shared.metrics.note_submitted();
-        st.queue.push_back(PendingRequest {
-            model,
+        mm.note_submitted();
+        let was_empty = q.queue.is_empty();
+        q.queue.push_back(PendingRequest {
             entries,
             fulfiller,
             enqueued: Instant::now(),
+            metrics: mm,
         });
+        if was_empty {
+            s.ring.push_back(model);
+        }
+        s.total_depth += 1;
         drop(st);
         // Resolve shed requests outside the queue lock (their counters
         // were already settled under it): fulfilment takes each ticket's
         // own slot lock and may wake a waiting client.
-        for r in shed {
-            let waited_us = r.enqueued.elapsed().as_micros() as u64;
-            r.fulfiller.fulfill(Err(ServeError::DeadlineExceeded { waited_us }));
-        }
+        resolve_shed(shed);
         // One waiter is enough: the woken worker re-evaluates the batch
-        // trigger, and busy workers re-check the queue when they finish.
+        // trigger, and busy workers re-check the queues when they finish.
         // (notify_all here would stampede every idle worker per request.)
         self.shared.cv.notify_one();
         Ok(ticket)
@@ -359,6 +528,76 @@ impl ServeEngine {
 
     pub fn config(&self) -> &ServeConfig {
         &self.shared.cfg
+    }
+
+    /// Set the per-model scheduling policy (DRR weight, sub-queue bound)
+    /// for a *registered* model: stores it in the registry (so it
+    /// survives hot swaps) and applies it to the live sub-queue
+    /// immediately. Errors on unregistered names — an open endpoint that
+    /// accepted arbitrary names could be used to grow the config and
+    /// metrics maps without bound.
+    pub fn set_model_config(&self, name: &str, cfg: ModelServeConfig) -> anyhow::Result<()> {
+        self.update_model_config(name, |c| *c = cfg).map(|_| ())
+    }
+
+    /// [`ServeEngine::set_model_config`] as an atomic read-modify-write:
+    /// `update` runs under the registry's config lock, so concurrent
+    /// partial updates (one caller patching the weight, another the queue
+    /// bound) cannot lose each other's fields. Returns the resulting
+    /// config after normalization.
+    pub fn update_model_config(
+        &self,
+        name: &str,
+        update: impl FnOnce(&mut ModelServeConfig),
+    ) -> anyhow::Result<ModelServeConfig> {
+        anyhow::ensure!(
+            self.shared.registry.contains(name),
+            "model '{name}' is not registered"
+        );
+        let cfg = self.shared.registry.update_serve_config(name, update);
+        self.shared.metrics.model(name).set_weight(cfg.weight);
+        let mut st = self.shared.state.lock().unwrap();
+        if let Some(q) = st.queues.get_mut(name) {
+            q.weight = cfg.weight;
+            q.max_queue = cfg.max_queue;
+        }
+        drop(st);
+        Ok(cfg)
+    }
+
+    /// Unregister `name` and fail everything still queued for it with a
+    /// clear error (the requests could only ever fail at dispatch once
+    /// the model is gone, and a dead tenant must not keep a scheduler
+    /// slot). In-flight batches holding the model's `Arc` still finish —
+    /// removal is graceful for work already dispatched. Returns the
+    /// removed model, if any.
+    pub fn remove_model(&self, name: &str) -> Option<Arc<ServingModel>> {
+        let removed = self.shared.registry.remove(name);
+        let drained: VecDeque<PendingRequest> = {
+            let mut st = self.shared.state.lock().unwrap();
+            let (drained, counts_unregistered) = match st.queues.remove(name) {
+                Some(q) => (q.queue, q.counts_unregistered),
+                None => (VecDeque::new(), false),
+            };
+            if counts_unregistered {
+                st.unregistered_queues -= 1;
+            }
+            st.total_depth -= drained.len();
+            remove_from_ring(&mut st.ring, name);
+            // Settle the counters under the lock (same discipline as
+            // shedding): depth and failure move together so a concurrent
+            // scrape never sees the invariant broken.
+            self.shared.metrics.note_drained(drained.len() as u64);
+            for r in &drained {
+                r.metrics.note_drained();
+            }
+            drained
+        };
+        let msg = format!("model '{name}' was removed");
+        for r in drained {
+            r.fulfiller.fulfill(Err(ServeError::Failed(msg.clone())));
+        }
+        removed
     }
 
     /// Wall time since the engine started (denominator for throughput).
@@ -379,8 +618,8 @@ impl ServeEngine {
         self.shared.healthy_workers.load(Ordering::Acquire)
     }
 
-    /// Stop accepting requests, drain the queue, and join the workers.
-    /// Idempotent, and callable through a shared reference so an
+    /// Stop accepting requests, drain every sub-queue, and join the
+    /// workers. Idempotent, and callable through a shared reference so an
     /// `Arc<ServeEngine>` (the HTTP front-end's handle) can shut down too.
     pub fn shutdown(&self) {
         {
@@ -416,45 +655,136 @@ fn normalize_entries(entries: &mut Vec<(u32, f32)>) {
     });
 }
 
-/// Pull the next batch: up to `max_batch` consecutive requests for the
-/// same model (FIFO — a model change in the stream closes the batch).
-/// Blocks until the size or latency trigger fires; `None` means shutdown
-/// with an empty queue, i.e. the worker should exit.
-fn next_batch(shared: &Shared) -> Option<Vec<PendingRequest>> {
+/// Fulfil deadline-shed requests with [`ServeError::DeadlineExceeded`].
+/// Their counters were already settled under the queue lock; every exit
+/// path that drained them MUST route through here — dropping them
+/// unfulfilled would resolve the tickets as `Abandoned` and fire their
+/// `on_abandon` hooks, double-counting `failed`.
+fn resolve_shed(shed: Vec<PendingRequest>) {
+    for r in shed {
+        let waited_us = r.enqueued.elapsed().as_micros() as u64;
+        r.fulfiller.fulfill(Err(ServeError::DeadlineExceeded { waited_us }));
+    }
+}
+
+/// Drop `name` from the rotation ring, wherever it is.
+fn remove_from_ring(ring: &mut VecDeque<String>, name: &str) {
+    if let Some(pos) = ring.iter().position(|n| n == name) {
+        ring.remove(pos);
+    }
+}
+
+/// Whether a sub-queue's batch trigger has fired: full batch queued, the
+/// oldest request past the latency bound, or the engine draining.
+fn trigger_fired(q: &ModelQueue, now: Instant, cfg: &ServeConfig, shutdown: bool) -> bool {
+    if shutdown || q.queue.len() >= cfg.max_batch {
+        return true;
+    }
+    let front = q.queue.front().expect("ring holds only non-empty queues");
+    now.saturating_duration_since(front.enqueued) >= cfg.max_wait
+}
+
+/// Pull the next batch under weighted deficit-round-robin.
+///
+/// The ring orders the backlogged models; the scheduler scans it from the
+/// front for the first model whose batch trigger fired and takes up to
+/// `min(max_batch, deficit)` of its requests. A queue arriving at its
+/// scheduling turn with an empty deficit is refilled with
+/// `weight × max_batch` credit, so a weight-`w` model is offered `w` full
+/// batches before the rotation moves on; a drained queue leaves the ring
+/// and forfeits its remaining credit (no banked bursts, work-conserving).
+/// Models whose trigger has not fired are *skipped without losing their
+/// turn* — a cold tenant waiting out `max_wait` keeps its place at the
+/// head of the rotation while hot tenants use the capacity.
+///
+/// Blocks until some sub-queue's size or latency trigger fires; `None`
+/// means shutdown with every queue empty, i.e. the worker should exit.
+fn next_batch(shared: &Shared) -> Option<Batch> {
     let mut st = shared.state.lock().unwrap();
     loop {
-        if st.queue.is_empty() {
+        if st.total_depth == 0 {
             if st.shutdown {
                 return None;
             }
             st = shared.cv.wait(st).unwrap();
             continue;
         }
-        let waited = st.queue.front().unwrap().enqueued.elapsed();
-        if st.queue.len() >= shared.cfg.max_batch || waited >= shared.cfg.max_wait || st.shutdown
-        {
-            let model = st.queue.front().unwrap().model.clone();
-            let mut batch = Vec::new();
-            while batch.len() < shared.cfg.max_batch {
-                match st.queue.front() {
-                    Some(r) if r.model == model => batch.push(st.queue.pop_front().unwrap()),
-                    _ => break,
+        let now = Instant::now();
+        let shutdown = st.shutdown;
+        let mut chosen = None;
+        let mut earliest_deadline: Option<Duration> = None;
+        for i in 0..st.ring.len() {
+            let q = &st.queues[&st.ring[i]];
+            if trigger_fired(q, now, &shared.cfg, shutdown) {
+                chosen = Some(i);
+                break;
+            }
+            let waited = now.saturating_duration_since(q.queue.front().unwrap().enqueued);
+            let until = shared.cfg.max_wait.saturating_sub(waited);
+            earliest_deadline = Some(match earliest_deadline {
+                Some(e) if e < until => e,
+                _ => until,
+            });
+        }
+        let Some(i) = chosen else {
+            // No trigger fired: sleep until the earliest latency deadline
+            // (or a submit/shutdown notification, whichever is first).
+            let wait = earliest_deadline.unwrap_or(shared.cfg.max_wait);
+            let (guard, _) = shared.cv.wait_timeout(st, wait).unwrap();
+            st = guard;
+            continue;
+        };
+        let name = st.ring[i].clone();
+        let q = st.queues.get_mut(&name).unwrap();
+        if q.deficit == 0 {
+            q.deficit = q.weight.saturating_mul(shared.cfg.max_batch as u64);
+        }
+        let take = (shared.cfg.max_batch as u64)
+            .min(q.queue.len() as u64)
+            .min(q.deficit) as usize;
+        let mut requests = Vec::with_capacity(take);
+        for _ in 0..take {
+            requests.push(q.queue.pop_front().unwrap());
+        }
+        q.deficit -= take as u64;
+        let emptied = q.queue.is_empty();
+        if emptied {
+            q.deficit = 0;
+            st.ring.remove(i);
+        } else if q.deficit == 0 {
+            // Credit spent: rotate to the back of the ring.
+            let n = st.ring.remove(i).unwrap();
+            st.ring.push_back(n);
+        }
+        // else: credit remains — the model keeps its turn for the next
+        // dispatch (a weight-w model gets w consecutive batches).
+        st.total_depth -= requests.len();
+        // GC: an emptied sub-queue whose name is not registered holds no
+        // state worth keeping — dropping it bounds the map under a
+        // stream of junk model names and releases its budget slot.
+        if emptied && !shared.registry.contains(&name) {
+            if let Some(q) = st.queues.remove(&name) {
+                if q.counts_unregistered {
+                    st.unregistered_queues -= 1;
                 }
             }
-            shared.metrics.note_batch(batch.len());
-            return Some(batch);
         }
-        let remaining = shared.cfg.max_wait.saturating_sub(waited);
-        let (guard, _) = shared.cv.wait_timeout(st, remaining).unwrap();
-        st = guard;
+        shared.metrics.note_batch(requests.len());
+        for r in &requests {
+            r.metrics.note_dispatched();
+        }
+        return Some(Batch {
+            model: name,
+            requests,
+        });
     }
 }
 
 /// Pop queued requests (oldest first) whose `max_wait`-derived deadline
-/// has passed. Enqueue times are monotone along the FIFO queue, so the
-/// expired requests form a prefix and the scan stops at the first fresh
-/// one. Callers resolve the returned requests *after* releasing the queue
-/// lock and account them via `note_shed_expired`.
+/// has passed. Enqueue times are monotone along one model's FIFO
+/// sub-queue, so the expired requests form a prefix and the scan stops at
+/// the first fresh one. Callers resolve the returned requests *after*
+/// releasing the queue lock and account them via `note_shed_expired`.
 fn drain_expired(queue: &mut VecDeque<PendingRequest>, max_wait: Duration) -> Vec<PendingRequest> {
     let now = Instant::now();
     let mut expired = Vec::new();
@@ -468,9 +798,10 @@ fn drain_expired(queue: &mut VecDeque<PendingRequest>, max_wait: Duration) -> Ve
     expired
 }
 
-fn fail(shared: &Shared, fulfiller: Fulfiller, msg: String) {
+fn fail(shared: &Shared, r: PendingRequest, msg: String) {
     shared.metrics.note_failed();
-    fulfiller.fulfill(Err(ServeError::Failed(msg)));
+    r.metrics.note_failed();
+    r.fulfiller.fulfill(Err(ServeError::Failed(msg)));
 }
 
 fn worker_loop(shared: &Shared, backend: &dyn Stage1Backend) {
@@ -488,13 +819,13 @@ fn worker_loop(shared: &Shared, backend: &dyn Stage1Backend) {
     }
 }
 
-fn process_batch(shared: &Shared, backend: &dyn Stage1Backend, batch: Vec<PendingRequest>) {
+fn process_batch(shared: &Shared, backend: &dyn Stage1Backend, batch: Batch) {
     let t0 = Instant::now();
-    let name = batch[0].model.clone();
+    let name = batch.model;
     let Some(model) = shared.registry.get(&name) else {
         let msg = format!("model '{name}' is not registered");
-        for r in batch {
-            fail(shared, r.fulfiller, msg.clone());
+        for r in batch.requests {
+            fail(shared, r, msg.clone());
         }
         shared.metrics.note_service(t0.elapsed());
         return;
@@ -502,14 +833,14 @@ fn process_batch(shared: &Shared, backend: &dyn Stage1Backend, batch: Vec<Pendin
     let dim = model.factor.landmarks.cols;
 
     // Reject rows the model cannot consume; score the rest as one batch.
-    let mut scorable = Vec::with_capacity(batch.len());
-    let mut rows = Vec::with_capacity(batch.len());
-    for mut r in batch {
+    let mut scorable = Vec::with_capacity(batch.requests.len());
+    let mut rows = Vec::with_capacity(batch.requests.len());
+    for mut r in batch.requests {
         match r.entries.last() {
             Some(&(c, _)) if c as usize >= dim => {
                 let msg =
                     format!("feature index {c} out of range for model '{name}' (dim {dim})");
-                fail(shared, r.fulfiller, msg);
+                fail(shared, r, msg);
             }
             _ => {
                 rows.push(std::mem::take(&mut r.entries));
@@ -532,6 +863,7 @@ fn process_batch(shared: &Shared, backend: &dyn Stage1Backend, batch: Vec<Pendin
                 let queue_wait = t0.saturating_duration_since(r.enqueued);
                 let total = r.enqueued.elapsed();
                 shared.metrics.note_completed(total, queue_wait);
+                r.metrics.note_completed(total);
                 r.fulfiller.fulfill(Ok(Prediction {
                     label,
                     batch_size,
@@ -543,7 +875,7 @@ fn process_batch(shared: &Shared, backend: &dyn Stage1Backend, batch: Vec<Pendin
         Err(e) => {
             let msg = format!("stage-1 transform failed: {e:#}");
             for r in scorable {
-                fail(shared, r.fulfiller, msg.clone());
+                fail(shared, r, msg.clone());
             }
         }
     }
@@ -577,6 +909,10 @@ mod tests {
         let err = predict_one(&e, "nope", &[(0, 1.0)]).unwrap_err();
         assert!(err.to_string().contains("not registered"));
         assert_eq!(e.metrics().failed.load(std::sync::atomic::Ordering::Relaxed), 1);
+        // Unregistered names share one metrics bucket.
+        let bucket = e.metrics().get_model(UNREGISTERED_BUCKET).unwrap();
+        assert_eq!(bucket.failed.load(Ordering::Relaxed), 1);
+        assert!(e.metrics().get_model("nope").is_none());
         e.shutdown();
     }
 
@@ -617,7 +953,82 @@ mod tests {
     }
 
     #[test]
+    fn per_model_cap_override_beats_engine_default() {
+        // Engine-wide cap 2, but "wide" overrides to 4: the third "wide"
+        // submit is still admitted while a default-config model sheds.
+        let registry = Arc::new(ModelRegistry::new());
+        registry.set_serve_config(
+            "wide",
+            ModelServeConfig {
+                weight: 1,
+                max_queue: Some(4),
+            },
+        );
+        let e = ServeEngine::start(
+            Arc::clone(&registry),
+            ServeConfig {
+                max_batch: 64,
+                max_wait: Duration::from_secs(600),
+                workers: 1,
+                max_queue: 2,
+                shed_policy: ShedPolicy::RejectNewest,
+            },
+        );
+        for _ in 0..4 {
+            assert!(e.try_submit("wide", &[(0, 1.0)]).is_ok());
+        }
+        assert_eq!(
+            e.try_submit("wide", &[(0, 1.0)]).unwrap_err(),
+            ServeError::QueueFull { max_queue: 4 }
+        );
+        for _ in 0..2 {
+            assert!(e.try_submit("narrow", &[(0, 1.0)]).is_ok());
+        }
+        assert_eq!(
+            e.try_submit("narrow", &[(0, 1.0)]).unwrap_err(),
+            ServeError::QueueFull { max_queue: 2 }
+        );
+        e.shutdown();
+    }
+
+    #[test]
+    fn unregistered_queue_budget_bounds_junk_names() {
+        // Nothing dispatches (huge max_wait, max_batch above any fill):
+        // each junk name claims one slot of the unregistered budget.
+        let e = ServeEngine::start(
+            Arc::new(ModelRegistry::new()),
+            ServeConfig {
+                max_batch: 64,
+                max_wait: Duration::from_secs(600),
+                workers: 1,
+                max_queue: 2,
+                shed_policy: ShedPolicy::RejectNewest,
+            },
+        );
+        for i in 0..MAX_UNREGISTERED_QUEUES {
+            assert!(e.try_submit(&format!("junk{i}"), &[(0, 1.0)]).is_ok());
+        }
+        // The budget is spent: a brand-new junk name fast-fails with the
+        // same error it would get at dispatch...
+        let err = e.try_submit("one-too-many", &[(0, 1.0)]).unwrap_err();
+        assert!(err.to_string().contains("not registered"), "got: {err}");
+        assert!(!err.is_shed());
+        // ...while existing junk queues still accept up to their own cap.
+        assert!(e.try_submit("junk0", &[(0, 1.0)]).is_ok());
+        // The rejection is fully accounted: invariant holds mid-flight.
+        let m = e.metrics();
+        assert_eq!(
+            m.submitted.load(Ordering::Relaxed),
+            m.completed.load(Ordering::Relaxed)
+                + m.failed.load(Ordering::Relaxed)
+                + m.queue_depth.load(Ordering::Relaxed)
+        );
+        e.shutdown();
+    }
+
+    #[test]
     fn drain_expired_pops_only_the_overdue_prefix() {
+        let metrics = ServeMetrics::new();
         let max_wait = Duration::from_millis(10);
         let old = Instant::now()
             .checked_sub(Duration::from_millis(250))
@@ -628,10 +1039,10 @@ mod tests {
             let (ticket, fulfiller) = session::channel();
             tickets.push(ticket);
             queue.push_back(PendingRequest {
-                model: "m".into(),
                 entries: vec![(0, 1.0)],
                 fulfiller,
                 enqueued,
+                metrics: metrics.model("m"),
             });
         }
         let expired = drain_expired(&mut queue, max_wait);
@@ -672,5 +1083,88 @@ mod tests {
         assert!(e.config().max_batch >= 1);
         assert!(e.config().workers >= 1);
         e.shutdown();
+    }
+
+    /// Build a worker-less `Shared` with pre-filled sub-queues and
+    /// `shutdown = true` (every trigger fired, no blocking), then drain it
+    /// through `next_batch` to observe the scheduler's dispatch order.
+    fn drain_order(
+        max_batch: usize,
+        tenants: &[(&str, u64, usize)], // (name, weight, queued requests)
+    ) -> Vec<(String, usize)> {
+        let mut queues = HashMap::new();
+        let mut ring = VecDeque::new();
+        let mut total_depth = 0;
+        let metrics = Arc::new(ServeMetrics::new());
+        for &(name, weight, n) in tenants {
+            let cfg = ModelServeConfig {
+                weight,
+                max_queue: None,
+            };
+            let mut q = ModelQueue::new(&cfg, false);
+            for _ in 0..n {
+                let (_ticket, fulfiller) = session::channel();
+                q.queue.push_back(PendingRequest {
+                    entries: vec![(0, 1.0)],
+                    fulfiller,
+                    enqueued: Instant::now(),
+                    metrics: metrics.model(name),
+                });
+            }
+            queues.insert(name.to_string(), q);
+            ring.push_back(name.to_string());
+            total_depth += n;
+        }
+        let shared = Shared {
+            state: Mutex::new(QueueState {
+                queues,
+                ring,
+                total_depth,
+                unregistered_queues: 0,
+                shutdown: true,
+            }),
+            cv: Condvar::new(),
+            registry: Arc::new(ModelRegistry::new()),
+            metrics,
+            cfg: ServeConfig {
+                max_batch,
+                max_wait: Duration::from_secs(600),
+                workers: 1,
+                ..ServeConfig::default()
+            },
+            healthy_workers: AtomicUsize::new(1),
+        };
+        let mut order = Vec::new();
+        while let Some(batch) = next_batch(&shared) {
+            order.push((batch.model, batch.requests.len()));
+        }
+        order
+    }
+
+    #[test]
+    fn drr_gives_weighted_consecutive_batches_then_rotates() {
+        // Weight 2 vs 1 at max_batch 1: A gets two singleton batches per
+        // rotation, B one — and A's drained queue leaves the ring early.
+        let order = drain_order(1, &[("a", 2, 4), ("b", 1, 4)]);
+        let names: Vec<&str> = order.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["a", "a", "b", "a", "a", "b", "b", "b"]);
+        assert!(order.iter().all(|(_, n)| *n == 1));
+    }
+
+    #[test]
+    fn drr_equal_weights_alternate() {
+        let order = drain_order(2, &[("a", 1, 4), ("b", 1, 4)]);
+        let names: Vec<&str> = order.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["a", "b", "a", "b"]);
+        assert!(order.iter().all(|(_, n)| *n == 2), "full batches of 2");
+    }
+
+    #[test]
+    fn drr_single_model_is_plain_fifo() {
+        // One tenant: consecutive full batches, remainder last — exactly
+        // the PR 4 single-queue dispatch.
+        let order = drain_order(4, &[("only", 3, 10)]);
+        let full = ("only".to_string(), 4);
+        assert_eq!(order, vec![full.clone(), full, ("only".to_string(), 2)]);
     }
 }

@@ -19,18 +19,32 @@
 //!   503 (some rows hit a retryable server-side condition: admission
 //!   control, shutdown, a worker panic — back off and retry), or 400
 //!   (malformed input or permanently unservable rows).
+//! * `PUT /v1/models/{name}:config` — set a registered model's serve
+//!   policy. Body: `{"weight": W}` and/or `{"max_queue": N}` (`null`
+//!   clears the per-model override back to the engine default); omitted
+//!   fields keep their current value. Responds with the resulting config,
+//!   404 for unregistered names, 400 for invalid values.
 //! * `GET /v1/models` — registry listing.
-//! * `GET /metrics` — [`crate::serve::ServeMetrics::to_json`]; append
-//!   `?format=table` for the human-readable table the CLI prints.
+//! * `GET /metrics` — [`crate::serve::ServeMetrics::to_json`], including
+//!   the `per_model` section (per-tenant counters, weights, and latency
+//!   histograms); append `?format=table` for the human-readable table the
+//!   CLI prints.
 //! * `GET /healthz` — 200 with the healthy-worker count, 503 when no
 //!   worker survived backend init.
+//!
+//! Connection threads are *bounded*: at most `max_connections` (default
+//! [`DEFAULT_MAX_CONNECTIONS`], configurable via
+//! [`HttpServer::bind_with_limit`]) connections are served concurrently,
+//! and over-limit accepts are answered `503` and closed immediately —
+//! an accept storm degrades into fast retryable rejections instead of
+//! unbounded thread growth.
 
 use crate::serve::engine::ServeEngine;
 use crate::serve::session::ServeError;
 use crate::util::json::{self, Json};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -49,12 +63,36 @@ const IDLE_TIMEOUT: Duration = Duration::from_secs(30);
 /// latency for establishing a brand-new connection (keep-alive traffic
 /// never pays it), and the bound on shutdown latency.
 const ACCEPT_POLL: Duration = Duration::from_millis(10);
+/// Default cap on concurrently served connections ([`HttpServer::bind`]);
+/// far above any sane keep-alive client pool, far below what an accept
+/// storm would need to exhaust memory with connection threads.
+pub const DEFAULT_MAX_CONNECTIONS: usize = 1024;
+
+/// Decrements the live-connection count when a connection ends for any
+/// reason — clean close, idle timeout, handler error, or a failed thread
+/// spawn (the guard is created before the spawn and travels into it).
+struct ConnGuard {
+    active: Arc<AtomicUsize>,
+}
+
+impl ConnGuard {
+    fn new(active: Arc<AtomicUsize>) -> ConnGuard {
+        active.fetch_add(1, Ordering::AcqRel);
+        ConnGuard { active }
+    }
+}
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.active.fetch_sub(1, Ordering::AcqRel);
+    }
+}
 
 /// A running HTTP front-end. Binding spawns the accept loop; dropping (or
-/// [`HttpServer::shutdown`]) stops accepting. Connection threads are
-/// detached — they notice shutdown at their next request boundary, and
-/// in-flight requests on them still resolve because the engine outlives
-/// the server (the server holds an `Arc<ServeEngine>`).
+/// [`HttpServer::shutdown`]) stops accepting. Connection threads notice
+/// shutdown at their next request boundary, and in-flight requests on
+/// them still resolve because the engine outlives the server (the server
+/// holds an `Arc<ServeEngine>`).
 pub struct HttpServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
@@ -64,8 +102,20 @@ pub struct HttpServer {
 impl HttpServer {
     /// Bind `addr` (e.g. `"127.0.0.1:8080"`, or port 0 for an ephemeral
     /// port — read the chosen one back via [`HttpServer::addr`]) and
-    /// start serving `engine`.
+    /// start serving `engine`, with the default connection cap.
     pub fn bind(engine: Arc<ServeEngine>, addr: &str) -> anyhow::Result<HttpServer> {
+        Self::bind_with_limit(engine, addr, DEFAULT_MAX_CONNECTIONS)
+    }
+
+    /// [`HttpServer::bind`] with an explicit cap on concurrently served
+    /// connections. Accepts beyond the cap are answered `503` (retryable)
+    /// and closed without spawning a thread; `0` means unbounded (the
+    /// pre-cap behaviour, for trusted closed-loop clients only).
+    pub fn bind_with_limit(
+        engine: Arc<ServeEngine>,
+        addr: &str,
+        max_connections: usize,
+    ) -> anyhow::Result<HttpServer> {
         let listener = TcpListener::bind(addr)
             .map_err(|e| anyhow::anyhow!("binding HTTP listener on {addr}: {e}"))?;
         let addr = listener.local_addr()?;
@@ -77,21 +127,45 @@ impl HttpServer {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let accept_stop = Arc::clone(&stop);
+        // Only the accept thread increments the count (via ConnGuard), so
+        // the check below is race-free: the cap can never be exceeded.
+        let active = Arc::new(AtomicUsize::new(0));
         let accept_thread = std::thread::Builder::new()
             .name("lpdsvm-http-accept".to_string())
             .spawn(move || {
                 while !accept_stop.load(Ordering::Acquire) {
                     match listener.accept() {
-                        Ok((stream, _peer)) => {
+                        Ok((mut stream, _peer)) => {
                             // The connection itself is served blocking.
                             if stream.set_nonblocking(false).is_err() {
                                 continue;
                             }
+                            if max_connections > 0
+                                && active.load(Ordering::Acquire) >= max_connections
+                            {
+                                // Over the cap: fast 503 on the accept
+                                // thread, bounded by a write timeout so a
+                                // slow-reading peer cannot stall accepts.
+                                let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+                                let body = error_json(&format!(
+                                    "connection limit reached ({max_connections} open); retry"
+                                ));
+                                let _ = write_response(
+                                    &mut stream,
+                                    503,
+                                    "application/json",
+                                    body.as_bytes(),
+                                    false,
+                                );
+                                continue;
+                            }
+                            let guard = ConnGuard::new(Arc::clone(&active));
                             let engine = Arc::clone(&engine);
                             let stop = Arc::clone(&accept_stop);
                             let _ = std::thread::Builder::new()
                                 .name("lpdsvm-http-conn".to_string())
                                 .spawn(move || {
+                                    let _guard = guard;
                                     let _ = serve_connection(stream, &engine, &stop);
                                 });
                         }
@@ -306,23 +380,105 @@ fn serve_connection(
 }
 
 fn route(engine: &ServeEngine, req: &Request) -> (u16, &'static str, String) {
-    const PREDICT_PREFIX: &str = "/v1/models/";
+    const MODEL_PREFIX: &str = "/v1/models/";
     const PREDICT_SUFFIX: &str = ":predict";
+    const CONFIG_SUFFIX: &str = ":config";
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => healthz(engine),
         ("GET", "/metrics") => metrics(engine, &req.query),
         ("GET", "/v1/models") => models(engine),
-        ("POST", p) if p.starts_with(PREDICT_PREFIX) && p.ends_with(PREDICT_SUFFIX) => {
-            let name = &p[PREDICT_PREFIX.len()..p.len() - PREDICT_SUFFIX.len()];
+        ("POST", p) if p.starts_with(MODEL_PREFIX) && p.ends_with(PREDICT_SUFFIX) => {
+            let name = &p[MODEL_PREFIX.len()..p.len() - PREDICT_SUFFIX.len()];
             if name.is_empty() {
                 (400, "application/json", error_json("empty model name"))
             } else {
                 predict(engine, name, &req.body)
             }
         }
-        ("GET" | "POST", _) => (404, "application/json", error_json("no such endpoint")),
+        ("PUT", p) if p.starts_with(MODEL_PREFIX) && p.ends_with(CONFIG_SUFFIX) => {
+            let name = &p[MODEL_PREFIX.len()..p.len() - CONFIG_SUFFIX.len()];
+            if name.is_empty() {
+                (400, "application/json", error_json("empty model name"))
+            } else {
+                set_config(engine, name, &req.body)
+            }
+        }
+        ("GET" | "POST" | "PUT", _) => (404, "application/json", error_json("no such endpoint")),
         _ => (405, "application/json", error_json("method not allowed")),
     }
+}
+
+/// `PUT /v1/models/{name}:config` — update a registered model's serve
+/// policy. Fields absent from the body keep their current value;
+/// `"max_queue": null` clears the per-model override back to the engine
+/// default. Only registered names are accepted (404 otherwise): an open
+/// endpoint that created state for arbitrary names could be used to grow
+/// the config/metrics maps without bound.
+fn set_config(engine: &ServeEngine, name: &str, body: &[u8]) -> (u16, &'static str, String) {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return (400, "application/json", error_json("body is not UTF-8")),
+    };
+    let parsed = match Json::parse(text) {
+        Ok(v) => v,
+        Err(e) => {
+            return (400, "application/json", error_json(&format!("invalid JSON: {e}")))
+        }
+    };
+    // Validate the patch fully before applying anything.
+    let weight_patch = match parsed.get("weight") {
+        None => None,
+        Some(w) => match w.as_f64().filter(|x| x.fract() == 0.0 && *x >= 1.0) {
+            Some(w) => Some(w as u64),
+            None => {
+                return (400, "application/json", error_json("weight must be an integer >= 1"))
+            }
+        },
+    };
+    let max_queue_patch = match parsed.get("max_queue") {
+        None => None,
+        Some(Json::Null) => Some(None),
+        Some(mq) => match mq.as_f64().filter(|x| x.fract() == 0.0 && *x >= 0.0) {
+            Some(n) => Some(Some(n as usize)),
+            None => {
+                return (
+                    400,
+                    "application/json",
+                    error_json("max_queue must be a non-negative integer or null"),
+                )
+            }
+        },
+    };
+    // Apply as one atomic read-modify-write: concurrent PUTs patching
+    // different fields cannot lose each other's values.
+    let cfg = match engine.update_model_config(name, |c| {
+        if let Some(w) = weight_patch {
+            c.weight = w;
+        }
+        if let Some(mq) = max_queue_patch {
+            c.max_queue = mq;
+        }
+    }) {
+        Ok(cfg) => cfg,
+        Err(_) => {
+            return (
+                404,
+                "application/json",
+                error_json(&format!("model '{name}' is not registered")),
+            )
+        }
+    };
+    let max_queue_json = match cfg.max_queue {
+        Some(n) => json::unum(n as u64),
+        None => Json::Null,
+    };
+    let body = json::obj(vec![
+        ("model", json::s(name)),
+        ("weight", json::unum(cfg.weight)),
+        ("max_queue", max_queue_json),
+    ])
+    .to_string();
+    (200, "application/json", body)
 }
 
 fn predict(engine: &ServeEngine, model: &str, body: &[u8]) -> (u16, &'static str, String) {

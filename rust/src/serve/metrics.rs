@@ -5,10 +5,21 @@
 //! Everything is plain atomics so the submit path and every worker can
 //! record without contending on a lock; snapshots are approximate under
 //! concurrent writers, which is fine for operational telemetry.
+//!
+//! Counters exist at two granularities. The engine-wide [`ServeMetrics`]
+//! counters are exactly PR 4's, with the same invariant
+//! `submitted == completed + failed + in-flight` under shedding. Each
+//! tenant additionally gets a [`ModelMetrics`] bucket (reachable via
+//! [`ServeMetrics::model`], emitted as the `per_model` section of the
+//! JSON snapshot) whose counters satisfy the *same* invariant per model:
+//! every request is attributed to exactly one bucket for its whole
+//! lifetime, so the buckets sum to the global counters.
 
 use crate::report::Table;
 use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 use std::time::Duration;
 
 const BUCKETS: usize = 40;
@@ -113,6 +124,138 @@ impl Histogram {
     }
 }
 
+/// One tenant's slice of the serve metrics. Same discipline as the
+/// engine-wide counters — plain atomics, approximate under concurrent
+/// writers — and the same lifecycle invariant per model:
+/// `submitted == completed + failed + in-flight`.
+///
+/// A request is attributed to the bucket chosen at submit time and keeps
+/// it for life (completion, failure, shedding, abandonment), so the
+/// per-model counters always sum to the globals. Requests for names that
+/// were not registered at submit time share one `"(unregistered)"`
+/// bucket — a stream of junk model names must not grow the metrics map
+/// without bound.
+pub struct ModelMetrics {
+    /// Requests attributed to this model by `submit` (including ones the
+    /// admission control rejected — they count as failed too).
+    pub submitted: AtomicU64,
+    /// Requests fulfilled with a prediction.
+    pub completed: AtomicU64,
+    /// Requests fulfilled with an error (rejections and sheds included).
+    pub failed: AtomicU64,
+    /// Fast-fails because this model's bounded sub-queue was full.
+    pub rejected_full: AtomicU64,
+    /// Queued requests dropped by the deadline shed policy.
+    pub shed_expired: AtomicU64,
+    /// Current depth of this model's sub-queue.
+    pub queue_depth: AtomicU64,
+    /// High-water mark of `queue_depth`.
+    pub queue_depth_max: AtomicU64,
+    /// End-to-end latency of this model's completed requests, µs.
+    pub latency_us: Histogram,
+    /// Display copy of the scheduler weight currently applied to this
+    /// model's sub-queue (the authoritative value lives in the registry's
+    /// `ModelServeConfig`).
+    weight: AtomicU64,
+}
+
+impl Default for ModelMetrics {
+    fn default() -> Self {
+        ModelMetrics {
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            rejected_full: AtomicU64::new(0),
+            shed_expired: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            queue_depth_max: AtomicU64::new(0),
+            latency_us: Histogram::new(),
+            weight: AtomicU64::new(1),
+        }
+    }
+}
+
+impl ModelMetrics {
+    pub(crate) fn note_submitted(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        let depth = self.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.queue_depth_max.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_completed(&self, latency: Duration) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.latency_us.record(latency.as_micros() as u64);
+    }
+
+    pub(crate) fn note_failed(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Rejected at the submit boundary (shutdown): submitted + failed,
+    /// never entered the sub-queue.
+    pub(crate) fn note_rejected_at_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Rejected because this model's bounded sub-queue was full.
+    pub(crate) fn note_rejected_full(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.failed.fetch_add(1, Ordering::Relaxed);
+        self.rejected_full.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One queued request left this model's sub-queue via deadline
+    /// shedding (per-request counterpart of
+    /// [`ServeMetrics::note_shed_expired`]).
+    pub(crate) fn note_shed_expired(&self) {
+        self.shed_expired.fetch_add(1, Ordering::Relaxed);
+        self.failed.fetch_add(1, Ordering::Relaxed);
+        self.queue_depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// One queued request was pulled into a batch.
+    pub(crate) fn note_dispatched(&self) {
+        self.queue_depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// One queued request was failed without dispatch (model removal).
+    pub(crate) fn note_drained(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+        self.queue_depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn set_weight(&self, w: u64) {
+        self.weight.store(w, Ordering::Relaxed);
+    }
+
+    /// The scheduler weight last applied to this model's sub-queue.
+    pub fn weight(&self) -> u64 {
+        self.weight.load(Ordering::Relaxed)
+    }
+
+    /// Total load-shedding rejections (full-queue + deadline).
+    pub fn shed(&self) -> u64 {
+        self.rejected_full.load(Ordering::Relaxed) + self.shed_expired.load(Ordering::Relaxed)
+    }
+
+    /// Machine-readable summary — one entry of the `per_model` section.
+    pub fn to_json(&self) -> Json {
+        let c = |a: &AtomicU64| json::unum(a.load(Ordering::Relaxed));
+        json::obj(vec![
+            ("submitted", c(&self.submitted)),
+            ("completed", c(&self.completed)),
+            ("failed", c(&self.failed)),
+            ("rejected_full", c(&self.rejected_full)),
+            ("shed_expired", c(&self.shed_expired)),
+            ("queue_depth", c(&self.queue_depth)),
+            ("queue_depth_max", c(&self.queue_depth_max)),
+            ("weight", json::unum(self.weight())),
+            ("latency_us", self.latency_us.to_json()),
+        ])
+    }
+}
+
 /// All counters for one engine instance.
 #[derive(Default)]
 pub struct ServeMetrics {
@@ -146,11 +289,39 @@ pub struct ServeMetrics {
     pub service_us: Histogram,
     /// Distribution of dispatched batch sizes.
     pub batch_size: Histogram,
+    /// Per-tenant buckets, keyed by model name (unregistered names share
+    /// the `"(unregistered)"` bucket). Behind an `RwLock` only for map
+    /// growth — the buckets themselves are lock-free atomics, and the
+    /// engine caches the `Arc` per request so the hot path takes one read
+    /// lock per submit, not per counter.
+    per_model: RwLock<BTreeMap<String, Arc<ModelMetrics>>>,
 }
 
 impl ServeMetrics {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// The per-tenant bucket for `name`, created on first use. The engine
+    /// resolves the bucket once per submit and attaches it to the
+    /// request, so a bucket's counters always describe one coherent
+    /// population even across hot swaps and removals.
+    pub fn model(&self, name: &str) -> Arc<ModelMetrics> {
+        if let Some(m) = self.per_model.read().unwrap().get(name) {
+            return Arc::clone(m);
+        }
+        let mut map = self.per_model.write().unwrap();
+        Arc::clone(map.entry(name.to_string()).or_default())
+    }
+
+    /// The bucket for `name` if any traffic (or a config) ever touched it.
+    pub fn get_model(&self, name: &str) -> Option<Arc<ModelMetrics>> {
+        self.per_model.read().unwrap().get(name).cloned()
+    }
+
+    /// Names with a per-tenant bucket, sorted.
+    pub fn model_names(&self) -> Vec<String> {
+        self.per_model.read().unwrap().keys().cloned().collect()
     }
 
     pub(crate) fn note_submitted(&self) {
@@ -211,9 +382,18 @@ impl ServeMetrics {
         self.queue_depth.fetch_sub(n, Ordering::Relaxed);
     }
 
-    /// A submit observed the queue at its cap (before any shedding).
+    /// A submit observed a sub-queue at its cap (before any shedding).
     pub(crate) fn note_queue_full(&self) {
         self.queue_full_events.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` queued requests were failed without dispatch (their model was
+    /// removed through the engine). Like `note_shed_expired`, called with
+    /// the queue lock held so depth and failure move together; only
+    /// ticket fulfilment happens outside.
+    pub(crate) fn note_drained(&self, n: u64) {
+        self.failed.fetch_add(n, Ordering::Relaxed);
+        self.queue_depth.fetch_sub(n, Ordering::Relaxed);
     }
 
     pub(crate) fn note_service(&self, service: Duration) {
@@ -281,7 +461,21 @@ impl ServeMetrics {
             ("queue_wait_us", self.queue_wait_us.to_json()),
             ("service_us", self.service_us.to_json()),
             ("batch_size", self.batch_size.to_json()),
+            ("per_model", self.per_model_json()),
         ])
+    }
+
+    /// The `per_model` section: one [`ModelMetrics::to_json`] entry per
+    /// tenant bucket, keyed by model name (sorted — `BTreeMap` keeps the
+    /// emission deterministic).
+    fn per_model_json(&self) -> Json {
+        json::obj_owned(
+            self.per_model
+                .read()
+                .unwrap()
+                .iter()
+                .map(|(name, m)| (name.clone(), m.to_json())),
+        )
     }
 }
 
@@ -381,6 +575,93 @@ mod tests {
             m.completed.load(Ordering::Relaxed)
                 + m.failed.load(Ordering::Relaxed)
                 + m.queue_depth.load(Ordering::Relaxed)
+        );
+    }
+
+    #[test]
+    fn per_model_buckets_roll_up_and_hold_the_invariant() {
+        let m = ServeMetrics::new();
+        let hot = m.model("hot");
+        let cold = m.model("cold");
+        assert!(Arc::ptr_eq(&hot, &m.model("hot")), "bucket is stable");
+        hot.set_weight(4);
+
+        // Hot: two admitted (one completes, one shed on deadline), one
+        // rejected at the full queue. Cold: one admitted, completed.
+        for _ in 0..2 {
+            m.note_submitted();
+            hot.note_submitted();
+        }
+        m.note_submitted();
+        cold.note_submitted();
+        m.note_batch(1);
+        hot.note_dispatched();
+        m.note_completed(Duration::from_micros(900), Duration::from_micros(100));
+        hot.note_completed(Duration::from_micros(900));
+        m.note_shed_expired(1);
+        hot.note_shed_expired();
+        m.note_rejected_full();
+        hot.note_rejected_full();
+        m.note_batch(1);
+        cold.note_dispatched();
+        m.note_completed(Duration::from_micros(200), Duration::from_micros(50));
+        cold.note_completed(Duration::from_micros(200));
+
+        let inv = |b: &ModelMetrics| {
+            assert_eq!(
+                b.submitted.load(Ordering::Relaxed),
+                b.completed.load(Ordering::Relaxed)
+                    + b.failed.load(Ordering::Relaxed)
+                    + b.queue_depth.load(Ordering::Relaxed)
+            );
+        };
+        inv(&hot);
+        inv(&cold);
+        assert_eq!(hot.shed(), 2);
+        assert_eq!(cold.shed(), 0);
+        assert_eq!(hot.weight(), 4);
+        assert_eq!(hot.queue_depth_max.load(Ordering::Relaxed), 2);
+
+        // Buckets sum to the globals.
+        for (global, per) in [
+            (&m.submitted, [&hot.submitted, &cold.submitted]),
+            (&m.completed, [&hot.completed, &cold.completed]),
+            (&m.failed, [&hot.failed, &cold.failed]),
+            (&m.queue_depth, [&hot.queue_depth, &cold.queue_depth]),
+        ] {
+            assert_eq!(
+                global.load(Ordering::Relaxed),
+                per.iter().map(|a| a.load(Ordering::Relaxed)).sum::<u64>()
+            );
+        }
+
+        // JSON emission: sorted per_model section with the weight.
+        assert_eq!(m.model_names(), vec!["cold".to_string(), "hot".to_string()]);
+        let j = m.to_json(Duration::from_secs(1));
+        let pm = j.get("per_model").unwrap();
+        assert_eq!(pm.get("hot").unwrap().get("weight").unwrap().as_u64(), Some(4));
+        assert_eq!(pm.get("hot").unwrap().get("shed_expired").unwrap().as_u64(), Some(1));
+        assert_eq!(pm.get("cold").unwrap().get("completed").unwrap().as_u64(), Some(1));
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert!(back.get("per_model").unwrap().get("hot").is_some());
+        assert!(m.get_model("ghost").is_none());
+    }
+
+    #[test]
+    fn drained_requests_keep_the_invariant() {
+        let m = ServeMetrics::new();
+        let b = m.model("gone");
+        m.note_submitted();
+        b.note_submitted();
+        m.note_drained(1);
+        b.note_drained();
+        assert_eq!(m.queue_depth.load(Ordering::Relaxed), 0);
+        assert_eq!(b.failed.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            b.submitted.load(Ordering::Relaxed),
+            b.completed.load(Ordering::Relaxed)
+                + b.failed.load(Ordering::Relaxed)
+                + b.queue_depth.load(Ordering::Relaxed)
         );
     }
 

@@ -15,17 +15,38 @@
 //! newcomer, or drop queued requests whose deadline already passed) —
 //! the engine sheds load explicitly instead of degrading silently.
 //!
+//! Both the queue bound and the shedding are **per model**: every
+//! registered model (tenant) owns its own bounded sub-queue, and workers
+//! pick batches by weighted deficit-round-robin over the backlogged
+//! models ([`ModelServeConfig::weight`], settable at registration time or
+//! live over HTTP). One tenant saturating its queue sheds only its own
+//! traffic and cannot starve another; an idle tenant's capacity flows to
+//! the busy ones (the scheduler is work-conserving). With a single model
+//! the scheduler reduces exactly to the old global FIFO.
+//!
+//! Key invariants (enforced by `tests/serve_engine.rs`,
+//! `tests/serve_fairness.rs`, and `tests/serve_http.rs`):
+//!
+//! * `submitted == completed + failed + in-flight`, globally *and* per
+//!   model bucket, including rejected and shed traffic;
+//! * a sub-queue's depth never exceeds its cap, even on the submit that
+//!   triggers deadline shedding;
+//! * engine predictions are identical to `MulticlassModel::predict`, and
+//!   HTTP predictions are byte-identical to in-process submits.
+//!
 //! Components:
 //!
-//! * [`engine`] — request queue, micro-batcher, admission control /
-//!   load shedding, worker pool, shutdown.
+//! * [`engine`] — per-model sub-queues, DRR micro-batcher, admission
+//!   control / load shedding, worker pool, shutdown.
 //! * [`registry`] — named models behind `Arc`, hot-swappable with zero
-//!   downtime, loadable from [`crate::model::io`] files.
+//!   downtime, loadable from [`crate::model::io`] files, plus per-model
+//!   serve policy ([`ModelServeConfig`]).
 //! * [`metrics`] — latency histograms, queue depth, shed/rejection
-//!   counters, batch-size distribution, throughput.
+//!   counters, batch-size distribution, throughput; per-model rollups.
 //! * [`session`] — per-request tickets (futures-style result delivery).
 //! * [`http`] — dependency-free HTTP/1.1 front-end (`:predict`,
-//!   `/v1/models`, `/metrics`, `/healthz`) over the same engine.
+//!   `:config`, `/v1/models`, `/metrics`, `/healthz`) over the same
+//!   engine, with a bounded connection-thread pool.
 //!
 //! ```no_run
 //! use lpdsvm::prelude::*;
@@ -49,8 +70,9 @@ pub mod session;
 
 pub use engine::{
     BackendProvider, NativeProvider, PjrtProvider, ServeConfig, ServeEngine, ShedPolicy,
+    UNREGISTERED_BUCKET,
 };
 pub use http::HttpServer;
-pub use metrics::{Histogram, ServeMetrics};
-pub use registry::{ModelRegistry, ServingModel};
+pub use metrics::{Histogram, ModelMetrics, ServeMetrics};
+pub use registry::{ModelRegistry, ModelServeConfig, ServingModel};
 pub use session::{PredictResult, Prediction, ServeError, Ticket};

@@ -1,4 +1,4 @@
-//! Named-model registry with hot swap.
+//! Named-model registry with hot swap and per-model serve configuration.
 //!
 //! Models live behind `Arc`, so replacing a name is atomic from the
 //! serving path's point of view: batches formed before a swap finish on
@@ -10,6 +10,12 @@
 //! OVO head-weight matrix, built **once at insert time** instead of once
 //! per batch (`MulticlassModel::predict_from_features` rebuilds it every
 //! call).
+//!
+//! A name can additionally carry a [`ModelServeConfig`] — the scheduler
+//! weight and queue bound the serve engine's per-model scheduler reads
+//! for that tenant. Configs are stored separately from the models so they
+//! survive hot swaps (re-deploying a model keeps its weight) and can be
+//! set before the model is first registered.
 
 use crate::linalg::Mat;
 use crate::model::io as model_io;
@@ -74,10 +80,49 @@ impl Deref for ServingModel {
     }
 }
 
-/// Thread-safe map of serving name → trained model (+ scoring cache).
+/// Per-model serving policy, read by the engine's per-model scheduler.
+///
+/// Separate from [`ServingModel`] on purpose: the config belongs to the
+/// *name* (the tenant), not to one deployed model version, so a hot swap
+/// keeps it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelServeConfig {
+    /// Deficit-round-robin weight: per scheduling round, a backlogged
+    /// model is offered `weight` full batches before the scheduler moves
+    /// on to the next backlogged model. Clamped to ≥ 1 by consumers.
+    pub weight: u64,
+    /// Per-model override of `ServeConfig::max_queue`: `None` inherits
+    /// the engine-wide bound, `Some(0)` makes this model's sub-queue
+    /// unbounded, `Some(n)` caps it at `n` queued requests.
+    pub max_queue: Option<usize>,
+}
+
+impl Default for ModelServeConfig {
+    fn default() -> Self {
+        ModelServeConfig {
+            weight: 1,
+            max_queue: None,
+        }
+    }
+}
+
+impl ModelServeConfig {
+    /// Copy with the weight clamped to the scheduler's minimum of 1 (a
+    /// zero weight would let a queue starve itself).
+    pub fn normalized(&self) -> ModelServeConfig {
+        ModelServeConfig {
+            weight: self.weight.max(1),
+            max_queue: self.max_queue,
+        }
+    }
+}
+
+/// Thread-safe map of serving name → trained model (+ scoring cache),
+/// plus the per-name [`ModelServeConfig`] map.
 #[derive(Default)]
 pub struct ModelRegistry {
     models: RwLock<HashMap<String, Arc<ServingModel>>>,
+    serve_configs: RwLock<HashMap<String, ModelServeConfig>>,
 }
 
 impl ModelRegistry {
@@ -120,9 +165,56 @@ impl ModelRegistry {
         self.models.read().unwrap().get(name).cloned()
     }
 
+    /// Whether `name` is currently registered (no `Arc` clone).
+    pub fn contains(&self, name: &str) -> bool {
+        self.models.read().unwrap().contains_key(name)
+    }
+
     /// Unregister `name`; in-flight batches holding the `Arc` still finish.
+    /// The name's [`ModelServeConfig`] is kept — a re-deploy under the
+    /// same name resumes with the same weight and queue bound. Callers
+    /// that also want queued requests failed should go through
+    /// `ServeEngine::remove_model`, which drains the engine-side queue.
     pub fn remove(&self, name: &str) -> Option<Arc<ServingModel>> {
         self.models.write().unwrap().remove(name)
+    }
+
+    /// Set the per-model serve policy for `name` (registered or not —
+    /// pre-configuring a tenant before its first deploy is legal). The
+    /// weight is clamped to ≥ 1.
+    ///
+    /// An engine picks this up when it *creates* the model's sub-queue
+    /// (first submit); to also reconfigure a queue that is already live,
+    /// go through `ServeEngine::update_model_config`, which writes the
+    /// registry and the live scheduler state together.
+    pub fn set_serve_config(&self, name: &str, cfg: ModelServeConfig) {
+        self.update_serve_config(name, |c| *c = cfg);
+    }
+
+    /// Atomically read-modify-write the policy for `name` under the write
+    /// lock, so concurrent partial updates (one caller patching `weight`,
+    /// another `max_queue`) cannot lose each other's fields. Returns the
+    /// resulting (normalized) config.
+    pub fn update_serve_config(
+        &self,
+        name: &str,
+        update: impl FnOnce(&mut ModelServeConfig),
+    ) -> ModelServeConfig {
+        let mut map = self.serve_configs.write().unwrap();
+        let cfg = map.entry(name.to_string()).or_default();
+        update(cfg);
+        *cfg = cfg.normalized();
+        cfg.clone()
+    }
+
+    /// The per-model serve policy for `name` (default when never set).
+    pub fn serve_config(&self, name: &str) -> ModelServeConfig {
+        self.serve_configs
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .unwrap_or_default()
     }
 
     /// Registered names, sorted for stable display.
@@ -229,6 +321,43 @@ mod tests {
         // failure so serve workers can catch it per batch.
         reg.insert("broken", broken);
         assert!(!reg.get("broken").unwrap().has_cached_weights());
+    }
+
+    #[test]
+    fn serve_config_defaults_persists_and_survives_swap_and_remove() {
+        let reg = ModelRegistry::new();
+        // Default when never set, for registered and unregistered names.
+        assert_eq!(reg.serve_config("anything"), ModelServeConfig::default());
+        assert_eq!(reg.serve_config("anything").weight, 1);
+
+        // Pre-configure before the first deploy; weight 0 clamps to 1.
+        reg.set_serve_config(
+            "m",
+            ModelServeConfig {
+                weight: 0,
+                max_queue: Some(7),
+            },
+        );
+        assert_eq!(reg.serve_config("m").weight, 1);
+        assert_eq!(reg.serve_config("m").max_queue, Some(7));
+
+        reg.set_serve_config(
+            "m",
+            ModelServeConfig {
+                weight: 4,
+                max_queue: None,
+            },
+        );
+        reg.insert("m", tiny_model(7));
+        assert!(reg.contains("m"));
+        assert!(!reg.contains("ghost"));
+
+        // Hot swap and removal keep the tenant's config.
+        reg.insert("m", tiny_model(8));
+        assert_eq!(reg.serve_config("m").weight, 4);
+        reg.remove("m");
+        assert!(!reg.contains("m"));
+        assert_eq!(reg.serve_config("m").weight, 4);
     }
 
     #[test]

@@ -13,6 +13,13 @@
 //! plus the paper's "polishing": robust shrinking (remove after k=5
 //! unchanged visits, spend an η=5% time budget on re-activation sweeps), a
 //! LIBLINEAR-style maximum-KKT-violation stopping rule, and warm starts.
+//!
+//! Invariants: `α` stays inside `[0, C]ⁿ` and `v` always equals
+//! `Σ_j α_j y_j G_j` (maintained incrementally, never recomputed); a
+//! `converged` result means the max KKT violation over *all* points —
+//! including previously shrunk ones — is below `eps`; visit order is
+//! deterministic from the recorded seed; mismatched `warm_alpha` fails
+//! fast instead of silently mis-warming.
 
 pub mod cd;
 pub mod shrinking;

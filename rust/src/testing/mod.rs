@@ -3,8 +3,16 @@
 //! The offline registry has no `proptest`, so this module provides the
 //! subset the test suite needs: composable random generators, a `forall`
 //! runner with a fixed case budget, and greedy shrinking of failing
-//! inputs. Deterministic by construction (seeded from the property name),
-//! so failures are reproducible.
+//! inputs.
+//!
+//! Paper role: the reproduction's correctness claims (parallel ≡ serial
+//! bit-identity, solver KKT conditions, round-trip I/O) are checked as
+//! properties over randomised inputs rather than single examples —
+//! `tests/prop_parallel.rs` is the main consumer.
+//!
+//! Invariant: deterministic by construction — every case stream is
+//! seeded from the property name, so a failure reproduces exactly on
+//! re-run with no stored corpus.
 
 pub mod prop;
 

@@ -125,6 +125,12 @@ impl Json {
 pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
+/// [`obj`] for runtime-computed keys (e.g. per-model metric sections
+/// keyed by tenant name). Duplicate keys keep the last value; emission
+/// order is the `BTreeMap` key order, so output stays deterministic.
+pub fn obj_owned(pairs: impl IntoIterator<Item = (String, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().collect())
+}
 pub fn arr(items: Vec<Json>) -> Json {
     Json::Arr(items)
 }
@@ -367,6 +373,17 @@ mod tests {
     fn integers_print_without_fraction() {
         assert_eq!(num(3.0).to_string(), "3");
         assert_eq!(num(3.5).to_string(), "3.5");
+    }
+
+    #[test]
+    fn obj_owned_builds_from_dynamic_keys() {
+        let v = obj_owned(vec![
+            ("hot".to_string(), num(1.0)),
+            ("cold".to_string(), num(2.0)),
+        ]);
+        // BTreeMap ordering makes emission deterministic and sorted.
+        assert_eq!(v.to_string(), r#"{"cold":2,"hot":1}"#);
+        assert_eq!(v.get("hot").unwrap().as_u64(), Some(1));
     }
 
     #[test]

@@ -1,7 +1,21 @@
 //! Self-contained substitutes for crates unavailable in this offline
 //! environment (clap, rand, tokio/rayon, serde, criterion). See
-//! DESIGN.md §2. `threads` hosts the persistent worker pool every
-//! parallel primitive in the crate submits to.
+//! DESIGN.md §2.
+//!
+//! Paper role: [`threads`] is the paper's "parallelism" substrate — the
+//! persistent worker pool every parallel primitive in the crate submits
+//! to (GEMM row bands, kernel blocks, the OVO job farm, the tournament
+//! eigensolver, serve-worker scoring).
+//!
+//! Invariants: the global pool is spawned lazily and sized once from
+//! `LPDSVM_THREADS` (or all cores); the submitting thread always
+//! participates in its own task, so nested submissions cannot deadlock;
+//! a slot panic is re-raised on the submitter (scoped-thread semantics);
+//! band layout depends only on the requested thread cap, never on pool
+//! size, so parallel results are bit-identical to serial. [`rng`] is a
+//! seeded SplitMix/xoshiro-style generator: every randomised stage is
+//! reproducible from its recorded seed. [`json`] round-trips the subset
+//! of JSON the repo emits (numbers as f64, exact for integers < 2⁵³).
 
 pub mod cli;
 pub mod json;

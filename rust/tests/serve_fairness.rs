@@ -1,0 +1,460 @@
+//! Multi-tenant fairness regression tests: a hot model saturating its own
+//! bounded sub-queue must never shed or starve a cold model, per-model
+//! metric invariants must hold under shedding on both policies, and
+//! registry-lifecycle operations (config updates, removal) must interact
+//! cleanly with the scheduler.
+//!
+//! Determinism comes from a gated stage-1 backend: the sole worker blocks
+//! on a gate while the tests fill per-model queues to exact depths, then
+//! the gate opens and everything drains.
+
+use lpdsvm::coordinator::train::{train, TrainConfig};
+use lpdsvm::data::dataset::Dataset;
+use lpdsvm::data::sparse::SparseMatrix;
+use lpdsvm::data::synth::PaperDataset;
+use lpdsvm::kernel::Kernel;
+use lpdsvm::linalg::Mat;
+use lpdsvm::lowrank::factor::NativeBackend;
+use lpdsvm::lowrank::{Stage1Backend, Stage1Config};
+use lpdsvm::model::multiclass::MulticlassModel;
+use lpdsvm::serve::{
+    BackendProvider, ModelMetrics, ModelRegistry, ModelServeConfig, ServeConfig, ServeEngine,
+    ServeError, ServeMetrics, ShedPolicy,
+};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+fn binary_dataset(seed: u64) -> Dataset {
+    PaperDataset::Adult.spec(0.005, seed).synth.generate()
+}
+
+fn quick_train(data: &Dataset) -> MulticlassModel {
+    let cfg = TrainConfig {
+        stage1: Stage1Config {
+            budget: 24,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    train(data, &cfg).unwrap()
+}
+
+/// Registry serving the same trained model under both tenant names.
+fn two_tenant_registry(seed: u64) -> (Dataset, Arc<ModelRegistry>) {
+    let data = binary_dataset(seed);
+    let registry = Arc::new(ModelRegistry::new());
+    registry.insert("hot", quick_train(&data));
+    let shared = Arc::clone(registry.get("hot").unwrap().model());
+    registry.insert_arc("cold", shared);
+    (data, registry)
+}
+
+/// A [`Stage1Backend`] that blocks every scoring call on a shared gate —
+/// the deterministic way to hold the worker busy while queues fill.
+struct GatedBackend {
+    inner: NativeBackend,
+    gate: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl Stage1Backend for GatedBackend {
+    fn g_chunk(
+        &self,
+        x: &SparseMatrix,
+        rows: &[usize],
+        landmarks: &Mat,
+        landmark_sq: &[f32],
+        whiten: &Mat,
+        kernel: &Kernel,
+    ) -> anyhow::Result<Mat> {
+        let (lock, cv) = &*self.gate;
+        let mut open = lock.lock().unwrap();
+        while !*open {
+            open = cv.wait(open).unwrap();
+        }
+        drop(open);
+        self.inner.g_chunk(x, rows, landmarks, landmark_sq, whiten, kernel)
+    }
+
+    fn name(&self) -> &'static str {
+        "gated-native"
+    }
+}
+
+struct GatedProvider {
+    gate: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl BackendProvider for GatedProvider {
+    fn backend(&self) -> anyhow::Result<Box<dyn Stage1Backend + '_>> {
+        Ok(Box::new(GatedBackend {
+            inner: NativeBackend::default(),
+            gate: Arc::clone(&self.gate),
+        }))
+    }
+}
+
+fn gated_engine(
+    registry: Arc<ModelRegistry>,
+    cfg: ServeConfig,
+) -> (ServeEngine, Arc<(Mutex<bool>, Condvar)>) {
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let engine = ServeEngine::start_with_provider(
+        registry,
+        cfg,
+        Arc::new(GatedProvider {
+            gate: Arc::clone(&gate),
+        }),
+    );
+    (engine, gate)
+}
+
+fn open_gate(gate: &Arc<(Mutex<bool>, Condvar)>) {
+    let (lock, cv) = &**gate;
+    *lock.lock().unwrap() = true;
+    cv.notify_all();
+}
+
+/// Block until the engine has dispatched at least `n` batches (i.e. the
+/// gated worker has pulled work off the queues).
+fn wait_for_batches(metrics: &ServeMetrics, n: u64) {
+    let t0 = Instant::now();
+    while metrics.batches.load(Ordering::Relaxed) < n {
+        assert!(t0.elapsed() < Duration::from_secs(10), "worker never dispatched");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// `submitted == completed + failed + in-flight` for one tenant bucket.
+/// `queue_depth` counts only undispatched requests, so callers pass the
+/// number of dispatched-but-unresolved requests (e.g. a batch blocked on
+/// the gate) as `dispatched`; at quiescence it is 0.
+fn assert_bucket_invariant(b: &ModelMetrics, who: &str, dispatched: u64) {
+    assert_eq!(
+        b.submitted.load(Ordering::Relaxed),
+        b.completed.load(Ordering::Relaxed)
+            + b.failed.load(Ordering::Relaxed)
+            + b.queue_depth.load(Ordering::Relaxed)
+            + dispatched,
+        "per-model invariant broken for '{who}'"
+    );
+}
+
+fn assert_global_invariant(m: &ServeMetrics, dispatched: u64) {
+    assert_eq!(
+        m.submitted.load(Ordering::Relaxed),
+        m.completed.load(Ordering::Relaxed)
+            + m.failed.load(Ordering::Relaxed)
+            + m.queue_depth.load(Ordering::Relaxed)
+            + dispatched,
+        "global invariant broken"
+    );
+}
+
+#[test]
+fn hot_saturation_sheds_only_the_hot_tenant_reject_newest() {
+    let (data, registry) = two_tenant_registry(31);
+    let expected = registry.get("cold").unwrap().predict(&data.x).unwrap();
+    let (engine, gate) = gated_engine(
+        Arc::clone(&registry),
+        ServeConfig {
+            max_batch: 4,
+            max_wait: Duration::ZERO,
+            workers: 1,
+            max_queue: 4,
+            shed_policy: ShedPolicy::RejectNewest,
+        },
+    );
+    let rows: Vec<Vec<(u32, f32)>> = (0..8).map(|i| data.x.row_entries(i)).collect();
+
+    // First hot batch dispatches and blocks on the gate; the hot queue
+    // then fills to its 4-slot cap behind it.
+    let first = engine.submit("hot", &rows[0]);
+    wait_for_batches(engine.metrics(), 1);
+    let mut hot_queued = Vec::new();
+    for r in &rows[1..5] {
+        hot_queued.push(engine.submit("hot", r));
+    }
+    // Hot is saturated: further hot submits shed...
+    let err = engine.try_submit("hot", &rows[5]).unwrap_err();
+    assert_eq!(err, ServeError::QueueFull { max_queue: 4 });
+    // ...while the cold tenant's sub-queue admits its full cap untouched.
+    let cold_queued: Vec<_> = (0..4).map(|i| engine.submit("cold", &rows[i])).collect();
+    assert!(cold_queued.iter().all(|t| t.try_get().is_none()), "cold admitted");
+
+    let hot_m = engine.metrics().model("hot");
+    let cold_m = engine.metrics().model("cold");
+    assert_eq!(hot_m.rejected_full.load(Ordering::Relaxed), 1);
+    assert_eq!(cold_m.shed(), 0, "cold tenant must not shed while hot saturates");
+    // Mid-flight: invariants hold per model and globally under shedding
+    // (one hot request is dispatched and blocked on the gate).
+    assert_bucket_invariant(&hot_m, "hot", 1);
+    assert_bucket_invariant(&cold_m, "cold", 0);
+    assert_global_invariant(engine.metrics(), 1);
+
+    // Drain: every admitted request of both tenants completes correctly.
+    open_gate(&gate);
+    assert_eq!(first.wait().unwrap().label, expected[0]);
+    for (i, t) in hot_queued.iter().enumerate() {
+        assert_eq!(t.wait().unwrap().label, expected[i + 1]);
+    }
+    for (i, t) in cold_queued.iter().enumerate() {
+        assert_eq!(t.wait().unwrap().label, expected[i]);
+    }
+    assert_eq!(cold_m.completed.load(Ordering::Relaxed), 4);
+    assert_eq!(cold_m.failed.load(Ordering::Relaxed), 0);
+    assert_bucket_invariant(&hot_m, "hot", 0);
+    assert_bucket_invariant(&cold_m, "cold", 0);
+    assert_global_invariant(engine.metrics(), 0);
+    engine.shutdown();
+}
+
+#[test]
+fn deadline_shedding_stays_within_the_hot_tenant() {
+    let (data, registry) = two_tenant_registry(32);
+    let (engine, gate) = gated_engine(
+        Arc::clone(&registry),
+        ServeConfig {
+            max_batch: 1,
+            // Zero latency budget: every queued request is instantly past
+            // its deadline, so a full-queue submit sheds the whole
+            // overdue prefix of *that model's* queue.
+            max_wait: Duration::ZERO,
+            workers: 1,
+            max_queue: 4,
+            shed_policy: ShedPolicy::DropExpired,
+        },
+    );
+    let rows: Vec<Vec<(u32, f32)>> = (0..8).map(|i| data.x.row_entries(i)).collect();
+
+    let _first = engine.submit("hot", &rows[0]);
+    wait_for_batches(engine.metrics(), 1);
+    // Two cold requests sit queued below their cap — never shed.
+    let cold_queued: Vec<_> = (0..2).map(|i| engine.submit("cold", &rows[i])).collect();
+    // Fill hot to its cap, let the zero deadline lapse, then overflow it:
+    // the overdue hot prefix is dropped, the newcomer admitted.
+    let mut hot_victims = Vec::new();
+    for r in &rows[1..5] {
+        hot_victims.push(engine.submit("hot", r));
+    }
+    std::thread::sleep(Duration::from_millis(5));
+    let hot_fresh = engine.submit("hot", &rows[5]);
+    for v in &hot_victims {
+        let err = v.try_get().expect("shed synchronously").unwrap_err();
+        assert!(matches!(err, ServeError::DeadlineExceeded { .. }), "got: {err}");
+    }
+    assert!(hot_fresh.try_get().is_none(), "newcomer admitted into freed space");
+    assert!(
+        cold_queued.iter().all(|t| t.try_get().is_none()),
+        "cold requests must survive hot-tenant deadline shedding"
+    );
+
+    let hot_m = engine.metrics().model("hot");
+    let cold_m = engine.metrics().model("cold");
+    assert_eq!(hot_m.shed_expired.load(Ordering::Relaxed), 4);
+    assert!(hot_m.queue_depth_max.load(Ordering::Relaxed) <= 4, "cap never overshot");
+    assert_eq!(cold_m.shed(), 0);
+    // One hot request (the first batch) is dispatched and gate-blocked.
+    assert_bucket_invariant(&hot_m, "hot", 1);
+    assert_bucket_invariant(&cold_m, "cold", 0);
+    assert_global_invariant(engine.metrics(), 1);
+
+    open_gate(&gate);
+    for t in &cold_queued {
+        assert!(t.wait().is_ok(), "cold request completes");
+    }
+    assert!(hot_fresh.wait().is_ok());
+    // hot_fresh resolving implies the earlier dispatched hot request
+    // resolved too (single worker, per-model FIFO): quiescent now.
+    assert_bucket_invariant(&hot_m, "hot", 0);
+    assert_bucket_invariant(&cold_m, "cold", 0);
+    assert_global_invariant(engine.metrics(), 0);
+    engine.shutdown();
+}
+
+#[test]
+fn remove_model_fails_its_queue_and_leaves_other_tenants_alone() {
+    let (data, registry) = two_tenant_registry(33);
+    let (engine, gate) = gated_engine(
+        Arc::clone(&registry),
+        ServeConfig {
+            max_batch: 4,
+            max_wait: Duration::ZERO,
+            workers: 1,
+            max_queue: 0,
+            shed_policy: ShedPolicy::RejectNewest,
+        },
+    );
+    let rows: Vec<Vec<(u32, f32)>> = (0..6).map(|i| data.x.row_entries(i)).collect();
+
+    let hot_first = engine.submit("hot", &rows[0]);
+    wait_for_batches(engine.metrics(), 1);
+    let hot_queued = engine.submit("hot", &rows[1]);
+    let cold_queued: Vec<_> = (0..2).map(|i| engine.submit("cold", &rows[i])).collect();
+
+    // Remove the cold tenant: its queued requests fail with a clear
+    // error, its bucket's invariant closes, and the registry forgets it.
+    let removed = engine.remove_model("cold");
+    assert!(removed.is_some());
+    assert!(engine.registry().get("cold").is_none());
+    for t in &cold_queued {
+        let err = t.try_get().expect("failed at removal").unwrap_err();
+        assert!(err.to_string().contains("removed"), "got: {err}");
+        assert!(!err.is_shed(), "removal is not load shedding");
+    }
+    let cold_m = engine.metrics().model("cold");
+    assert_eq!(cold_m.failed.load(Ordering::Relaxed), 2);
+    assert_eq!(cold_m.queue_depth.load(Ordering::Relaxed), 0);
+    assert_bucket_invariant(&cold_m, "cold", 0);
+    assert!(engine.remove_model("cold").is_none(), "idempotent");
+
+    // The hot tenant is untouched: queued and in-flight work completes.
+    open_gate(&gate);
+    assert!(hot_first.wait().is_ok());
+    assert!(hot_queued.wait().is_ok());
+    assert_global_invariant(engine.metrics(), 0);
+    engine.shutdown();
+}
+
+#[test]
+fn shed_without_room_still_resolves_tickets_once() {
+    // Lowering a live cap can leave a queue over its bound with a mix of
+    // expired and fresh requests: the overflow submit then sheds the
+    // expired prefix AND rejects the newcomer. The shed tickets must
+    // resolve as `DeadlineExceeded` exactly once — dropped unfulfilled
+    // they would resolve as `Abandoned` and double-count `failed`.
+    let (data, registry) = two_tenant_registry(36);
+    let (engine, gate) = gated_engine(
+        Arc::clone(&registry),
+        ServeConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(100),
+            workers: 1,
+            max_queue: 6,
+            shed_policy: ShedPolicy::DropExpired,
+        },
+    );
+    let rows: Vec<Vec<(u32, f32)>> = (0..8).map(|i| data.x.row_entries(i)).collect();
+
+    let first = engine.submit("hot", &rows[0]);
+    wait_for_batches(engine.metrics(), 1);
+    // Two requests that will be overdue by overflow time...
+    let stale: Vec<_> = (0..2).map(|i| engine.submit("hot", &rows[i])).collect();
+    std::thread::sleep(Duration::from_millis(150));
+    // ...then four fresh ones, filling the queue to the original cap.
+    let mut fresh = Vec::new();
+    for r in &rows[1..5] {
+        fresh.push(engine.submit("hot", r));
+    }
+    // Lower the live cap below the fresh backlog, then overflow: the
+    // stale prefix sheds, yet the queue is still over the new cap, so
+    // the newcomer is rejected too.
+    engine
+        .update_model_config("hot", |c| c.max_queue = Some(3))
+        .unwrap();
+    let err = engine.try_submit("hot", &rows[5]).unwrap_err();
+    assert_eq!(err, ServeError::QueueFull { max_queue: 3 });
+    for t in &stale {
+        let got = t.try_get().expect("resolved synchronously").unwrap_err();
+        assert!(matches!(got, ServeError::DeadlineExceeded { .. }), "got: {got}");
+    }
+    let hot_m = engine.metrics().model("hot");
+    assert_eq!(hot_m.shed_expired.load(Ordering::Relaxed), 2);
+    // failed = 2 shed + 1 rejected newcomer, each counted exactly once.
+    assert_eq!(hot_m.failed.load(Ordering::Relaxed), 3);
+    assert_bucket_invariant(&hot_m, "hot", 1);
+    assert_global_invariant(engine.metrics(), 1);
+
+    open_gate(&gate);
+    assert!(first.wait().is_ok());
+    for t in &fresh {
+        assert!(t.wait().is_ok());
+    }
+    assert_bucket_invariant(&hot_m, "hot", 0);
+    assert_global_invariant(engine.metrics(), 0);
+    engine.shutdown();
+}
+
+#[test]
+fn set_model_config_applies_live_and_rejects_unregistered_names() {
+    let (_data, registry) = two_tenant_registry(34);
+    let engine = ServeEngine::start(
+        Arc::clone(&registry),
+        ServeConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            workers: 1,
+            ..ServeConfig::default()
+        },
+    );
+    engine
+        .set_model_config(
+            "hot",
+            ModelServeConfig {
+                weight: 5,
+                max_queue: Some(16),
+            },
+        )
+        .unwrap();
+    // Stored in the registry (survives hot swaps)...
+    assert_eq!(registry.serve_config("hot").weight, 5);
+    assert_eq!(registry.serve_config("hot").max_queue, Some(16));
+    // ...and visible in the metrics bucket for /metrics consumers.
+    assert_eq!(engine.metrics().model("hot").weight(), 5);
+    // Unregistered names are refused (no unbounded config/metrics maps).
+    assert!(engine
+        .set_model_config("ghost", ModelServeConfig::default())
+        .is_err());
+    engine.shutdown();
+}
+
+#[test]
+fn weighted_tenants_complete_under_contention() {
+    // End-to-end smoke over the DRR path with live workers: two tenants,
+    // asymmetric weights, interleaved submission — every request
+    // completes with the right prediction and both buckets close their
+    // invariants. (Exact dispatch order is pinned by the scheduler's
+    // unit tests; this exercises the full engine under real threading.)
+    let (data, registry) = two_tenant_registry(35);
+    registry.set_serve_config(
+        "hot",
+        ModelServeConfig {
+            weight: 3,
+            max_queue: None,
+        },
+    );
+    let expected = registry.get("hot").unwrap().predict(&data.x).unwrap();
+    let engine = ServeEngine::start(
+        Arc::clone(&registry),
+        ServeConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            workers: 2,
+            ..ServeConfig::default()
+        },
+    );
+    let rows: Vec<Vec<(u32, f32)>> = (0..data.len()).map(|i| data.x.row_entries(i)).collect();
+    let tickets: Vec<(usize, _)> = rows
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let name = if i % 3 == 0 { "cold" } else { "hot" };
+            (i, engine.submit(name, r))
+        })
+        .collect();
+    for (i, t) in &tickets {
+        assert_eq!(t.wait().unwrap().label, expected[*i]);
+    }
+    let hot_m = engine.metrics().model("hot");
+    let cold_m = engine.metrics().model("cold");
+    assert_eq!(hot_m.failed.load(Ordering::Relaxed), 0);
+    assert_eq!(cold_m.failed.load(Ordering::Relaxed), 0);
+    assert_eq!(
+        hot_m.completed.load(Ordering::Relaxed) + cold_m.completed.load(Ordering::Relaxed),
+        data.len() as u64
+    );
+    assert_bucket_invariant(&hot_m, "hot", 0);
+    assert_bucket_invariant(&cold_m, "cold", 0);
+    assert_global_invariant(engine.metrics(), 0);
+    engine.shutdown();
+}

@@ -101,6 +101,18 @@ fn read_response<R: BufRead>(reader: &mut R) -> (u16, String) {
     (status, String::from_utf8(body).unwrap())
 }
 
+/// One tolerant `GET /healthz` probe: `Ok(true)` iff the server answered
+/// 200. IO errors (resets from a still-capped listener) surface as `Err`
+/// for the caller to retry.
+fn healthz_ok(addr: SocketAddr) -> std::io::Result<bool> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    stream.write_all(b"GET /healthz HTTP/1.1\r\nhost: t\r\nconnection: close\r\n\r\n")?;
+    let mut status_line = String::new();
+    BufReader::new(stream).read_line(&mut status_line)?;
+    Ok(status_line.contains(" 200 "))
+}
+
 /// Encode sparse rows as the predict-endpoint batch body.
 fn rows_body(rows: &[Vec<(u32, f32)>]) -> String {
     let rows_json: Vec<Json> = rows
@@ -266,6 +278,117 @@ fn expect_100_continue_gets_interim_response() {
     let (status, resp) = read_response(&mut reader);
     assert_eq!(status, 200, "body: {resp}");
     assert_eq!(labels_of(&resp), vec![expected[0]]);
+
+    server.shutdown();
+    engine.shutdown();
+}
+
+#[test]
+fn put_config_updates_weight_and_metrics_expose_per_model() {
+    let (data, _expected, engine, server) = served_engine(46);
+    let addr = server.addr();
+
+    // Update the registered model's scheduler policy.
+    let (status, body) = http_call(
+        addr,
+        "PUT",
+        "/v1/models/m:config",
+        Some(r#"{"weight": 3, "max_queue": 8}"#),
+    );
+    assert_eq!(status, 200, "body: {body}");
+    let cfg = Json::parse(&body).unwrap();
+    assert_eq!(cfg.get("weight").unwrap().as_u64(), Some(3));
+    assert_eq!(cfg.get("max_queue").unwrap().as_u64(), Some(8));
+    assert_eq!(engine.registry().serve_config("m").weight, 3);
+
+    // Omitted fields keep their value; null clears the queue override.
+    let (status, body) =
+        http_call(addr, "PUT", "/v1/models/m:config", Some(r#"{"max_queue": null}"#));
+    assert_eq!(status, 200, "body: {body}");
+    let cfg = Json::parse(&body).unwrap();
+    assert_eq!(cfg.get("weight").unwrap().as_u64(), Some(3), "weight kept");
+    assert!(matches!(cfg.get("max_queue"), Some(Json::Null)));
+
+    // Invalid values and unknown names are rejected without side effects.
+    let (status, _) = http_call(addr, "PUT", "/v1/models/m:config", Some(r#"{"weight": 0}"#));
+    assert_eq!(status, 400);
+    let (status, _) = http_call(addr, "PUT", "/v1/models/m:config", Some(r#"{"weight": 1.5}"#));
+    assert_eq!(status, 400);
+    let (status, body) =
+        http_call(addr, "PUT", "/v1/models/ghost:config", Some(r#"{"weight": 2}"#));
+    assert_eq!(status, 404, "body: {body}");
+    assert_eq!(engine.registry().serve_config("m").weight, 3, "unchanged");
+
+    // Score one row, then check the per_model metrics section.
+    let row = data.x.row_entries(0);
+    let (status, _) = http_call(addr, "POST", "/v1/models/m:predict", Some(&rows_body(&[row])));
+    assert_eq!(status, 200);
+    let (status, body) = http_call(addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    let metrics = Json::parse(&body).unwrap();
+    let per_model = metrics.get("per_model").unwrap();
+    let m = per_model.get("m").unwrap();
+    assert_eq!(m.get("weight").unwrap().as_u64(), Some(3));
+    assert!(m.get("submitted").unwrap().as_u64().unwrap() >= 1);
+    // Per-model invariant holds at quiescence, mirroring the global one.
+    assert_eq!(
+        m.get("submitted").unwrap().as_u64().unwrap(),
+        m.get("completed").unwrap().as_u64().unwrap()
+            + m.get("failed").unwrap().as_u64().unwrap()
+            + m.get("queue_depth").unwrap().as_u64().unwrap()
+    );
+    assert!(m.get("latency_us").unwrap().get("p99").is_some());
+
+    server.shutdown();
+    engine.shutdown();
+}
+
+#[test]
+fn connection_cap_503s_excess_connections_and_recovers() {
+    let (_data, _expected, engine, _default_server) = served_engine(47);
+    // A dedicated listener with a single-connection budget.
+    let server = HttpServer::bind_with_limit(Arc::clone(&engine), "127.0.0.1:0", 1).unwrap();
+    let addr = server.addr();
+
+    // Occupy the only slot with a keep-alive connection; completing one
+    // request proves its thread is up and counted.
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writer
+        .write_all(b"GET /healthz HTTP/1.1\r\nhost: t\r\nconnection: keep-alive\r\n\r\n")
+        .unwrap();
+    let (status, _) = read_response(&mut reader);
+    assert_eq!(status, 200);
+
+    // A second connection is over the cap: the server answers 503 and
+    // closes without ever reading a request. Probe read-only — writing a
+    // request that races the server-side close could RST away the
+    // buffered response.
+    let probe = TcpStream::connect(addr).unwrap();
+    probe.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut probe_reader = BufReader::new(probe);
+    let (status, body) = read_response(&mut probe_reader);
+    assert_eq!(status, 503, "body: {body}");
+    assert!(body.contains("connection limit"), "body: {body}");
+
+    // Release the slot; the server recovers once the connection thread
+    // notices the close (poll briefly — the decrement is asynchronous,
+    // and probes that still hit the cap may see resets: tolerate them).
+    drop(reader);
+    drop(writer);
+    let t0 = std::time::Instant::now();
+    loop {
+        if healthz_ok(addr).unwrap_or(false) {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "connection slot never freed after client close"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
 
     server.shutdown();
     engine.shutdown();
