@@ -5,6 +5,10 @@
 //! Scale is controlled by `LPDSVM_BENCH_SCALE` (fraction of the paper's
 //! dataset sizes, default 0.002 so `cargo bench` completes on one core)
 //! and `LPDSVM_BENCH_SEED`.
+//!
+//! Bench `println!` output is intentional: the tables/figures ARE the
+//! result, and CI archives them from stdout alongside the JSON
+//! artifacts. Diagnostics belong in `lpdsvm::obs::log`, not here.
 
 #![allow(dead_code)]
 

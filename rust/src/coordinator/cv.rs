@@ -104,6 +104,10 @@ pub fn cross_validate_shared(
             folds.k,
             data.len()
         );
+        let mut fold_span = crate::obs::Span::new("cv.fold");
+        fold_span.arg("fold", f as f64);
+        fold_span.arg("train_rows", train_idx.len() as f64);
+        fold_span.arg("val_rows", val_idx.len() as f64);
         let (heads, store) = ovo::train_all_pairs(
             &factor.g,
             &data.labels,
@@ -115,6 +119,8 @@ pub fn cross_validate_shared(
             warm.map(|w| &w[f]),
         );
         let err = evaluate_heads(&factor.g, &heads, data, &val_idx);
+        fold_span.arg("error", err);
+        crate::log_debug!("cv", "fold={f} error={err:.4} pairs={}", pairs.len());
         fold_errors.push(err);
         stores.push(store);
     }

@@ -85,6 +85,11 @@ pub fn train_all_pairs(
 ) -> (Vec<BinaryHead>, WarmStore) {
     let results = parallel_map(pairs.len(), threads, |pi| {
         let (a, b) = pairs[pi];
+        // One span per OVO job, attributed to whichever pool thread (or
+        // the submitter) runs it.
+        let mut span = crate::obs::Span::new("ovo.pair");
+        span.arg("a", a as f64);
+        span.arg("b", b as f64);
         let warm_alpha = warm.and_then(|w| w[pi].as_deref());
         train_pair(g, labels, subset, a, b, opts, compact, warm_alpha)
     });

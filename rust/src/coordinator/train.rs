@@ -68,6 +68,20 @@ pub fn train_with_backend(
     anyhow::ensure!(!data.is_empty(), "empty dataset");
     anyhow::ensure!(data.n_classes >= 2, "need at least two classes");
     let threads = cfg.effective_threads();
+    // Root span for the whole run; stage spans nest under it (StageClock
+    // emits `stage.preparation` / `stage.matrix_g` / `stage.linear_train`).
+    let mut span = crate::obs::Span::new("train");
+    span.arg("n", data.len() as f64);
+    span.arg("classes", data.n_classes as f64);
+    span.arg("threads", threads as f64);
+    crate::log_info!(
+        "train",
+        "start n={} dim={} classes={} threads={threads} budget={}",
+        data.len(),
+        data.x.cols,
+        data.n_classes,
+        cfg.stage1.budget
+    );
 
     // Stage 1 (times itself into "preparation" + "matrix_g"). The
     // coordinator-level thread budget flows into the stage-1 backbone
@@ -111,6 +125,15 @@ pub fn train_with_backend(
         }
     });
 
+    span.arg("rank", factor.rank as f64);
+    span.arg("heads", heads.len() as f64);
+    crate::log_info!(
+        "train",
+        "done rank={} heads={} total_s={:.3}",
+        factor.rank,
+        heads.len(),
+        clock.total().as_secs_f64()
+    );
     Ok(MulticlassModel {
         factor,
         heads,

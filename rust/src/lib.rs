@@ -26,6 +26,10 @@
 //!   rollups, and a dependency-free HTTP/1.1 front-end with a bounded
 //!   connection pool, reusing the same `Stage1Backend` abstraction so
 //!   batches score through native GEMM or the PJRT path.
+//! * **Observability** ([`obs`]): dependency-free tracing spans across
+//!   train/solve/serve with Chrome-trace (Perfetto) export, a leveled
+//!   `key=value` stderr logger, a Prometheus view of the serve metrics,
+//!   and per-worker pool utilization accounting — zero cost when off.
 //!
 //! Quickstart:
 //!
@@ -51,6 +55,7 @@ pub mod kernel;
 pub mod linalg;
 pub mod lowrank;
 pub mod model;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod serve;

@@ -124,6 +124,9 @@ const TOURNAMENT_MIN_DIM: usize = 128;
 /// thread counts, in fact).
 pub fn sym_eig_threads(a: &Mat, max_sweeps: usize, tol: f64, threads: usize) -> SymEig {
     assert_eq!(a.rows, a.cols, "sym_eig needs a square matrix");
+    let mut span = crate::obs::Span::new("eigensolve");
+    span.arg("n", a.rows as f64);
+    span.arg("threads", threads as f64);
     if a.rows < TOURNAMENT_MIN_DIM {
         sym_eig(a, max_sweeps, tol)
     } else {

@@ -8,6 +8,12 @@
 //!   grid       (C, γ) grid search with CV, warm starts, G-reuse
 //!   serve      micro-batching inference engine, HTTP front-end, load generator
 //!   info       show artifact / runtime information
+//!
+//! Every workload command takes `--log-level` (leveled diagnostics on
+//! stderr) and `--trace <path>` (span recording + Chrome-trace JSON
+//! export, plus phase/pool-utilization summary tables). Result output —
+//! report tables, summary lines — intentionally stays on stdout so it
+//! pipes cleanly past the diagnostics.
 
 use lpdsvm::coordinator::cv::{cross_validate, CvConfig};
 use lpdsvm::coordinator::grid::{grid_search, GridConfig};
@@ -91,6 +97,55 @@ fn backend_args() -> Vec<ArgSpec> {
         "native",
         "stage-1 backend: native | pjrt",
     )]
+}
+
+fn obs_args() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec::opt(
+            "trace",
+            "",
+            "record spans and write a Chrome-trace JSON (Perfetto) here",
+        ),
+        ArgSpec::opt(
+            "log-level",
+            "info",
+            "stderr log level: error | warn | info | debug | trace",
+        ),
+    ]
+}
+
+/// Apply the shared observability flags: set the logger level and, when
+/// `--trace` names a file, arm span recording for the whole run.
+fn obs_setup(p: &lpdsvm::util::cli::Parsed) -> anyhow::Result<()> {
+    lpdsvm::obs::log::set_level_str(p.str("log-level"))?;
+    if !p.str("trace").is_empty() {
+        lpdsvm::obs::span::enable();
+    }
+    Ok(())
+}
+
+/// Flush the recorded spans: write the Chrome trace and print the
+/// per-phase and pool-utilization summaries. No-op without `--trace`.
+fn obs_finish(p: &lpdsvm::util::cli::Parsed) -> anyhow::Result<()> {
+    let path = p.str("trace");
+    if path.is_empty() {
+        return Ok(());
+    }
+    lpdsvm::obs::span::disable();
+    let dumps = lpdsvm::obs::span::drain();
+    lpdsvm::obs::export::write_chrome_trace(Path::new(path), &dumps)?;
+    // The summaries are results, like the report tables: stdout.
+    lpdsvm::obs::export::phase_table(&dumps).print();
+    if let Some(stats) = lpdsvm::util::threads::global_stats() {
+        lpdsvm::obs::export::utilization_table(&stats).print();
+    }
+    let events: usize = dumps.iter().map(|d| d.records.len()).sum();
+    let dropped: u64 = dumps.iter().map(|d| d.dropped).sum();
+    println!(
+        "wrote {events} trace events ({dropped} dropped) from {} threads to {path}",
+        dumps.len()
+    );
+    Ok(())
 }
 
 /// Run `f` with the requested backend (constructing the PJRT runtime on
@@ -206,6 +261,9 @@ fn train_args() -> Vec<ArgSpec> {
         ArgSpec::opt("seed", "42", "RNG seed"),
         ArgSpec::flag("no-shrinking", "disable shrinking"),
     ]
+    .into_iter()
+    .chain(obs_args())
+    .collect()
 }
 
 fn cmd_train(args: &[String]) -> anyhow::Result<()> {
@@ -213,6 +271,7 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
     specs.push(ArgSpec::req("model-out", "path to save the trained model"));
     specs.extend(backend_args());
     let p = parse("train", "Train an LPD-SVM model", &specs, args)?;
+    obs_setup(&p)?;
     let data = load_data(p.str("data"))?;
     let cfg = train_cfg_from(&p)?;
     let mut clock = StageClock::new();
@@ -233,6 +292,7 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
         Table::pct(train_err),
         p.str("model-out")
     );
+    obs_finish(&p)?;
     Ok(())
 }
 
@@ -243,7 +303,9 @@ fn cmd_predict(args: &[String]) -> anyhow::Result<()> {
         ArgSpec::opt("out", "", "write predictions to this file (one per line)"),
     ];
     specs.extend(backend_args());
+    specs.extend(obs_args());
     let p = parse("predict", "Predict with a saved model", &specs, args)?;
+    obs_setup(&p)?;
     let model = model_io::load(Path::new(p.str("model")))?;
     let data = load_data(p.str("data"))?;
     let t0 = std::time::Instant::now();
@@ -262,6 +324,7 @@ fn cmd_predict(args: &[String]) -> anyhow::Result<()> {
         let text: String = preds.iter().map(|c| format!("{c}\n")).collect();
         std::fs::write(p.str("out"), text)?;
     }
+    obs_finish(&p)?;
     Ok(())
 }
 
@@ -269,6 +332,7 @@ fn cmd_cv(args: &[String]) -> anyhow::Result<()> {
     let mut specs = train_args();
     specs.push(ArgSpec::opt("folds", "5", "number of CV folds"));
     let p = parse("cv", "k-fold cross validation (shared stage 1)", &specs, args)?;
+    obs_setup(&p)?;
     let data = load_data(p.str("data"))?;
     let cfg = train_cfg_from(&p)?;
     let cv = CvConfig {
@@ -287,6 +351,7 @@ fn cmd_cv(args: &[String]) -> anyhow::Result<()> {
         r.n_binary_problems,
         Table::secs(r.total_secs)
     );
+    obs_finish(&p)?;
     Ok(())
 }
 
@@ -305,6 +370,7 @@ fn cmd_grid(args: &[String]) -> anyhow::Result<()> {
     ));
     specs.push(ArgSpec::flag("no-warm-start", "disable warm starts along C"));
     let p = parse("grid", "Grid search with CV + warm starts", &specs, args)?;
+    obs_setup(&p)?;
     let data = load_data(p.str("data"))?;
     let base = train_cfg_from(&p)?;
     let parse_grid = |s: &str| -> anyhow::Result<Vec<f64>> {
@@ -339,6 +405,7 @@ fn cmd_grid(args: &[String]) -> anyhow::Result<()> {
         Table::secs(r.secs_per_problem()),
         Table::secs(r.stage1_secs),
     );
+    obs_finish(&p)?;
     Ok(())
 }
 
@@ -392,12 +459,14 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         ArgSpec::flag("compare", "also time a naive per-request predict() loop"),
     ];
     specs.extend(backend_args());
+    specs.extend(obs_args());
     let p = parse(
         "serve",
         "Serve a model through the micro-batching engine (optionally over HTTP) under synthetic load",
         &specs,
         args,
     )?;
+    obs_setup(&p)?;
 
     // Workload rows always come from a synthetic paper-analogue dataset;
     // the served model is either loaded from disk (it must match the
@@ -426,7 +495,8 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         let model = with_backend(p.str("backend"), |b| {
             train_with_backend(&data, &cfg, b, &mut clock)
         })?;
-        println!(
+        lpdsvm::log_info!(
+            "serve",
             "trained synthetic '{}' model: n={} rank={} heads={}",
             data.name,
             data.len(),
@@ -436,7 +506,7 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         registry.insert("default", model);
     } else {
         registry.load_file("default", Path::new(p.str("model")))?;
-        println!("loaded model from {}", p.str("model"));
+        lpdsvm::log_info!("serve", "loaded model from {}", p.str("model"));
     }
     let model = registry.get("default").expect("just registered");
     anyhow::ensure!(
@@ -494,7 +564,10 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             workers
         };
         max_queue = (p.usize("max-batch")?.max(1) * effective_workers).max(1);
-        println!("--saturate without --max-queue: bounding the queue at {max_queue}");
+        lpdsvm::log_warn!(
+            "serve",
+            "--saturate without --max-queue: bounding the queue at {max_queue}"
+        );
     }
     let cfg = ServeConfig {
         max_batch: p.usize("max-batch")?,
@@ -509,7 +582,8 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         cfg,
         provider,
     ));
-    println!(
+    lpdsvm::log_info!(
+        "serve",
         "engine up: max_batch={} max_wait={}µs workers={} max_queue={} shed_policy={:?} backend={}",
         engine.config().max_batch,
         engine.config().max_wait.as_micros(),
@@ -527,7 +601,8 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             p.str("listen"),
             p.usize("max-connections")?,
         )?;
-        println!(
+        lpdsvm::log_info!(
+            "serve",
             "http front-end on {} — POST /v1/models/default:predict, GET /v1/models /metrics /healthz",
             server.addr()
         );
@@ -544,14 +619,17 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             "--requests 0 disables the load generator; combine it with --listen"
         );
         anyhow::ensure!(!saturate, "--saturate needs the load generator (--requests > 0)");
-        println!("no load generator (--requests 0); serving until killed");
+        lpdsvm::log_info!("serve", "no load generator (--requests 0); serving until killed");
         loop {
             std::thread::park();
         }
     }
     let rate = if saturate {
         if p.f64("rate")? > 0.0 {
-            println!("--saturate ignores --rate: arrivals are unpaced to outrun the workers");
+            lpdsvm::log_warn!(
+                "serve",
+                "--saturate ignores --rate: arrivals are unpaced to outrun the workers"
+            );
         }
         0.0
     } else {
@@ -690,11 +768,17 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     engine.shutdown();
 
     if p.flag("compare") && saturate {
-        println!("--compare is meaningless under --saturate (most requests shed); skipping");
+        lpdsvm::log_warn!(
+            "serve",
+            "--compare is meaningless under --saturate (most requests shed); skipping"
+        );
     } else if p.flag("compare") && rate > 0.0 {
         // With paced arrivals the elapsed window measures the arrival
         // rate, not engine capacity — a speedup number would be noise.
-        println!("--compare needs unpaced arrivals (--rate 0); skipping the naive comparison");
+        lpdsvm::log_warn!(
+            "serve",
+            "--compare needs unpaced arrivals (--rate 0); skipping the naive comparison"
+        );
     } else if p.flag("compare") {
         // Naive baseline: one blocking predict per request, no batching,
         // no parallelism — what the repo offered before this subsystem.
@@ -717,6 +801,7 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             engine_rps / naive_rps
         );
     }
+    obs_finish(&p)?;
     Ok(())
 }
 

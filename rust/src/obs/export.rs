@@ -1,0 +1,307 @@
+//! Exporters for the recorded telemetry: Chrome-trace-event JSON (loads
+//! in Perfetto / `chrome://tracing`), Prometheus text exposition
+//! (version 0.0.4), and `report::Table` summaries for the CLI.
+//!
+//! The Chrome format uses complete (`ph: "X"`) events — one per
+//! [`SpanRecord`] — plus one `thread_name` metadata event per thread, so
+//! the viewer reconstructs the span hierarchy from per-thread timestamp
+//! containment. Everything is built on [`crate::util::json`]; no
+//! external dependency.
+
+use crate::obs::metrics::Histogram;
+use crate::obs::span::{SpanRecord, ThreadDump};
+use crate::report::Table;
+use crate::util::json::{self, Json};
+use crate::util::threads::PoolStats;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Build the Chrome trace-event document for a set of thread dumps.
+/// Timestamps and durations ride in microseconds, as the format expects.
+pub fn chrome_trace(dumps: &[ThreadDump]) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    for d in dumps {
+        if d.records.is_empty() {
+            continue;
+        }
+        events.push(json::obj(vec![
+            ("name", json::s("thread_name")),
+            ("ph", json::s("M")),
+            ("pid", json::unum(1)),
+            ("tid", json::unum(d.tid)),
+            ("args", json::obj(vec![("name", json::s(&d.thread_name))])),
+        ]));
+        for r in &d.records {
+            events.push(json::obj(vec![
+                ("name", json::s(&r.name)),
+                ("cat", json::s("lpdsvm")),
+                ("ph", json::s("X")),
+                ("pid", json::unum(1)),
+                ("tid", json::unum(d.tid)),
+                ("ts", json::unum(r.start_us)),
+                ("dur", json::unum(r.dur_us)),
+                (
+                    "args",
+                    json::obj_owned(
+                        r.args
+                            .iter()
+                            .map(|(k, v)| (k.to_string(), json::num(*v))),
+                    ),
+                ),
+            ]));
+        }
+    }
+    json::obj(vec![
+        ("traceEvents", json::arr(events)),
+        ("displayTimeUnit", json::s("ms")),
+    ])
+}
+
+/// Drop the Chrome trace to disk (the `--trace out.json` target).
+pub fn write_chrome_trace(path: &Path, dumps: &[ThreadDump]) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, chrome_trace(dumps).to_string() + "\n")?;
+    Ok(())
+}
+
+/// Aggregate the recorded spans by name into a per-phase summary table
+/// (count / total / mean), heaviest phases first.
+pub fn phase_table(dumps: &[ThreadDump]) -> Table {
+    let mut agg: BTreeMap<&str, (u64, u64)> = BTreeMap::new();
+    for d in dumps {
+        for r in &d.records {
+            let e = agg.entry(r.name.as_ref()).or_insert((0, 0));
+            e.0 += 1;
+            e.1 += r.dur_us;
+        }
+    }
+    let mut rows: Vec<(&str, u64, u64)> =
+        agg.into_iter().map(|(n, (c, t))| (n, c, t)).collect();
+    rows.sort_by(|a, b| b.2.cmp(&a.2).then(a.0.cmp(b.0)));
+    let mut t = Table::new("trace phase summary", &["span", "count", "total s", "mean ms"]);
+    for (name, count, total_us) in rows {
+        t.row(&[
+            name.to_string(),
+            count.to_string(),
+            Table::secs(total_us as f64 / 1e6),
+            format!("{:.3}", total_us as f64 / 1e3 / count.max(1) as f64),
+        ]);
+    }
+    t
+}
+
+/// Render the pool's per-worker busy/idle/queue-wait accounting.
+pub fn utilization_table(stats: &PoolStats) -> Table {
+    let mut t = Table::new(
+        "pool utilization",
+        &["worker", "tasks", "busy s", "idle s", "busy %", "wait ms"],
+    );
+    for (i, w) in stats.workers.iter().enumerate() {
+        let busy = w.busy.as_secs_f64();
+        let idle = w.idle.as_secs_f64();
+        let util = 100.0 * busy / (busy + idle).max(1e-12);
+        let wait_ms = w.queue_wait.as_secs_f64() * 1e3 / w.tasks.max(1) as f64;
+        t.row(&[
+            format!("lpdsvm-pool-{i}"),
+            w.tasks.to_string(),
+            Table::secs(busy),
+            Table::secs(idle),
+            format!("{util:.1}"),
+            format!("{wait_ms:.3}"),
+        ]);
+    }
+    t
+}
+
+/// Incremental builder for the Prometheus text exposition format
+/// (0.0.4): declare each metric family once, then append its samples.
+#[derive(Default)]
+pub struct PromText {
+    out: String,
+}
+
+impl PromText {
+    pub fn new() -> PromText {
+        PromText::default()
+    }
+
+    /// Write the `# HELP` / `# TYPE` header for one metric family.
+    /// `kind` is `counter`, `gauge`, or `histogram`.
+    pub fn family(&mut self, name: &str, kind: &str, help: &str) {
+        let _ = writeln!(self.out, "# HELP {name} {help}");
+        let _ = writeln!(self.out, "# TYPE {name} {kind}");
+    }
+
+    /// Append one sample line, with optional labels.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                let _ = write!(self.out, "{k}=\"{}\"", escape_label(v));
+            }
+            self.out.push('}');
+        }
+        // Counters are exact integers below 2⁵³; print them without a
+        // fraction so `grep`-style checks see the natural form.
+        if value.fract() == 0.0 && value.abs() < 9.007_199_254_740_992e15 {
+            let _ = writeln!(self.out, " {}", value as i64);
+        } else {
+            let _ = writeln!(self.out, " {value}");
+        }
+    }
+
+    /// Append the `_bucket`/`_sum`/`_count` series for one histogram.
+    /// The family (type `histogram`) must already be declared. `le`
+    /// edges are the histogram's exact inclusive integer bounds
+    /// ([`Histogram::bucket_upper`]); empty buckets above the highest
+    /// occupied one collapse into `+Inf`.
+    pub fn histogram(&mut self, name: &str, labels: &[(&str, &str)], h: &Histogram) {
+        let counts = h.bucket_counts();
+        let last = counts.iter().rposition(|&c| c > 0).unwrap_or(0);
+        let bucket_name = format!("{name}_bucket");
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate().take(last + 1) {
+            cum += c;
+            let le = Histogram::bucket_upper(i);
+            if le == u64::MAX {
+                // The clamped top bucket has no finite edge; it is
+                // covered by the +Inf sample below.
+                continue;
+            }
+            let le_s = le.to_string();
+            let mut ls: Vec<(&str, &str)> = labels.to_vec();
+            ls.push(("le", &le_s));
+            self.sample(&bucket_name, &ls, cum as f64);
+        }
+        let mut ls: Vec<(&str, &str)> = labels.to_vec();
+        ls.push(("le", "+Inf"));
+        self.sample(&bucket_name, &ls, h.count() as f64);
+        self.sample(&format!("{name}_sum"), labels, h.sum() as f64);
+        self.sample(&format!("{name}_count"), labels, h.count() as f64);
+    }
+
+    /// The accumulated exposition text.
+    pub fn render(self) -> String {
+        self.out
+    }
+}
+
+/// Escape a label value per the exposition format (backslash, quote,
+/// newline).
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for ch in v.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::borrow::Cow;
+
+    fn dump(records: Vec<SpanRecord>) -> ThreadDump {
+        ThreadDump {
+            tid: 7,
+            thread_name: "test-thread".into(),
+            records,
+            dropped: 0,
+        }
+    }
+
+    fn rec(name: &'static str, start_us: u64, dur_us: u64) -> SpanRecord {
+        SpanRecord {
+            name: Cow::Borrowed(name),
+            start_us,
+            dur_us,
+            args: vec![("n", 3.0)],
+        }
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let doc = chrome_trace(&[dump(vec![rec("train", 0, 100), rec("epoch", 10, 20)])]);
+        let back = Json::parse(&doc.to_string()).unwrap();
+        let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+        // 1 metadata + 2 X events.
+        assert_eq!(events.len(), 3);
+        let meta = &events[0];
+        assert_eq!(meta.get("ph").unwrap().as_str(), Some("M"));
+        assert_eq!(
+            meta.get("args").unwrap().get("name").unwrap().as_str(),
+            Some("test-thread")
+        );
+        let x = &events[1];
+        assert_eq!(x.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(x.get("name").unwrap().as_str(), Some("train"));
+        assert_eq!(x.get("ts").unwrap().as_u64(), Some(0));
+        assert_eq!(x.get("dur").unwrap().as_u64(), Some(100));
+        assert_eq!(x.get("args").unwrap().get("n").unwrap().as_f64(), Some(3.0));
+        // Threads with no records emit nothing.
+        let empty = chrome_trace(&[dump(vec![])]);
+        assert_eq!(
+            empty.get("traceEvents").unwrap().as_arr().unwrap().len(),
+            0
+        );
+    }
+
+    #[test]
+    fn phase_table_aggregates() {
+        let t = phase_table(&[dump(vec![
+            rec("epoch", 0, 10),
+            rec("epoch", 10, 30),
+            rec("prep", 0, 100),
+        ])]);
+        let r = t.render();
+        assert!(r.contains("epoch"));
+        assert!(r.contains("prep"));
+        // Heaviest first: prep (100µs total) before epoch (40µs).
+        assert!(r.find("prep").unwrap() < r.find("epoch").unwrap(), "{r}");
+    }
+
+    #[test]
+    fn prometheus_samples_and_histogram() {
+        let mut p = PromText::new();
+        p.family("demo_total", "counter", "A demo counter.");
+        p.sample("demo_total", &[], 42.0);
+        p.sample("demo_total", &[("model", "a\"b")], 1.0);
+        let h = Histogram::new();
+        h.record(0);
+        h.record(3);
+        h.record(700);
+        p.family("demo_us", "histogram", "A demo histogram.");
+        p.histogram("demo_us", &[("model", "m")], &h);
+        let text = p.render();
+        assert!(text.contains("# TYPE demo_total counter"), "{text}");
+        assert!(text.contains("demo_total 42\n"), "{text}");
+        assert!(text.contains("demo_total{model=\"a\\\"b\"} 1\n"), "{text}");
+        // Cumulative buckets: le=0 → 1, le=3 → 2, le=1023 → 3, +Inf → 3.
+        assert!(text.contains("demo_us_bucket{model=\"m\",le=\"0\"} 1\n"), "{text}");
+        assert!(text.contains("demo_us_bucket{model=\"m\",le=\"3\"} 2\n"), "{text}");
+        assert!(
+            text.contains("demo_us_bucket{model=\"m\",le=\"1023\"} 3\n"),
+            "{text}"
+        );
+        assert!(
+            text.contains("demo_us_bucket{model=\"m\",le=\"+Inf\"} 3\n"),
+            "{text}"
+        );
+        assert!(text.contains("demo_us_sum{model=\"m\"} 703\n"), "{text}");
+        assert!(text.contains("demo_us_count{model=\"m\"} 3\n"), "{text}");
+    }
+}

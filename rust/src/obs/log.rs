@@ -1,0 +1,175 @@
+//! Leveled structured logging to stderr.
+//!
+//! One line per event, `key=value` style so the output greps and parses
+//! without a log pipeline:
+//!
+//! ```text
+//! ts=1.042913 level=info target=serve engine up workers=4 max_batch=256
+//! ```
+//!
+//! `ts` is seconds since the first log line (process-relative, like the
+//! span clock). The level is a process-global `AtomicU8` — one `Relaxed`
+//! load per *suppressed* event, checked inside the macros before any
+//! formatting happens, so `log_debug!` in a hot loop costs nothing at
+//! the default `info` level.
+//!
+//! Diagnostics go through these macros ([`crate::log_error!`] …
+//! [`crate::log_trace!`]); *results* (report tables, JSON emission, CLI
+//! summaries) intentionally stay on stdout so they can be piped without
+//! the diagnostics interleaving.
+
+use std::fmt::Arguments;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Log severity, most severe first. Ordering follows verbosity:
+/// `Error < Warn < Info < Debug < Trace`, and an event is emitted when
+/// its level is ≤ the configured one.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+
+    /// Parse a `--log-level` value (case-insensitive).
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static START: OnceLock<Instant> = OnceLock::new();
+
+/// Set the process-wide log level.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Set the level from a CLI string, erroring on unknown names.
+pub fn set_level_str(s: &str) -> anyhow::Result<()> {
+    let level = Level::parse(s)
+        .ok_or_else(|| anyhow::anyhow!("unknown log level '{s}' (error|warn|info|debug|trace)"))?;
+    set_level(level);
+    Ok(())
+}
+
+/// The currently configured level.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Would an event at `level` be emitted right now?
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one line. Called by the `log_*!` macros after their level check;
+/// prefer the macros so suppressed events never format.
+pub fn write(level: Level, target: &str, args: Arguments<'_>) {
+    let ts = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    eprintln!("ts={ts:.6} level={} target={target} {args}", level.as_str());
+}
+
+/// Log at `error` level: `log_error!("target", "msg {}", v)`.
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Error) {
+            $crate::obs::log::write($crate::obs::log::Level::Error, $target, format_args!($($arg)*));
+        }
+    };
+}
+
+/// Log at `warn` level: `log_warn!("target", "msg {}", v)`.
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Warn) {
+            $crate::obs::log::write($crate::obs::log::Level::Warn, $target, format_args!($($arg)*));
+        }
+    };
+}
+
+/// Log at `info` level: `log_info!("target", "msg {}", v)`.
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Info) {
+            $crate::obs::log::write($crate::obs::log::Level::Info, $target, format_args!($($arg)*));
+        }
+    };
+}
+
+/// Log at `debug` level: `log_debug!("target", "msg {}", v)`.
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Debug) {
+            $crate::obs::log::write($crate::obs::log::Level::Debug, $target, format_args!($($arg)*));
+        }
+    };
+}
+
+/// Log at `trace` level: `log_trace!("target", "msg {}", v)`.
+#[macro_export]
+macro_rules! log_trace {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Trace) {
+            $crate::obs::log::write($crate::obs::log::Level::Trace, $target, format_args!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing_and_ordering() {
+        assert_eq!(Level::parse("info"), Some(Level::Info));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("bogus"), None);
+        assert!(Level::Error < Level::Trace);
+        assert_eq!(Level::Debug.as_str(), "debug");
+    }
+
+    #[test]
+    fn set_level_str_rejects_unknown() {
+        assert!(set_level_str("nope").is_err());
+    }
+
+    // `enabled`/`set_level` mutate process-global state shared with
+    // concurrently running tests, so the behavioural check lives in
+    // tests/obs_trace.rs where it owns the process.
+}

@@ -1,0 +1,215 @@
+//! Shared telemetry primitives — currently the log₂-bucketed
+//! [`Histogram`] that both the serve metrics and the solver's epoch
+//! timing report quantiles through (promoted here from `serve::metrics`
+//! so train and serve summarise distributions identically; `serve`
+//! re-exports it, so existing paths keep working).
+
+use crate::util::json::{self, Json};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of power-of-two buckets (bucket 0 counts zeros, the top
+/// bucket clamps everything ≥ 2³⁸).
+pub const BUCKETS: usize = 40;
+
+/// Histogram over `u64` values with power-of-two buckets: bucket `i`
+/// (i ≥ 1) counts values in `[2^(i-1), 2^i)`; bucket 0 counts zeros.
+/// Percentiles are reported as the upper edge of the covering bucket —
+/// at most 2× off, which is plenty for latency reporting.
+///
+/// Recording is plain relaxed atomics, so any number of threads can
+/// record without a lock; snapshots are approximate under concurrent
+/// writers, which is fine for operational telemetry.
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+// [T; 40] has no Default impl (arrays stop at 32), hence the manual one.
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket_index(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            ((64 - v.leading_zeros()) as usize).min(BUCKETS - 1)
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all recorded values (for mean reconstruction and the
+    /// Prometheus `_sum` sample).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the per-bucket counts (index `i` as in
+    /// [`Histogram::bucket_upper`]).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Inclusive upper bound of bucket `i`: 0 for the zero bucket,
+    /// `2^i − 1` in between, `u64::MAX` for the clamped top bucket.
+    /// Values are integers, so these bounds are exact (Prometheus `le`
+    /// edges).
+    pub fn bucket_upper(i: usize) -> u64 {
+        match i {
+            0 => 0,
+            i if i >= BUCKETS - 1 => u64::MAX,
+            i => (1u64 << i) - 1,
+        }
+    }
+
+    /// Upper bucket edge covering quantile `q` ∈ [0, 1].
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return match i {
+                    0 => 0,
+                    // The top bucket is clamped — it holds every value ≥
+                    // 2^(BUCKETS-2), so its nominal power-of-two edge can
+                    // under-report by orders of magnitude. The tracked max
+                    // is a true upper bound for anything landing here (the
+                    // overall max always lives in the highest occupied
+                    // bucket).
+                    i if i == BUCKETS - 1 => self.max(),
+                    i => 1u64 << i,
+                };
+            }
+        }
+        self.max()
+    }
+
+    /// Machine-readable summary (count / mean / tail quantiles / max).
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("count", json::unum(self.count())),
+            ("mean", json::num(self.mean())),
+            ("p50", json::unum(self.quantile(0.50))),
+            ("p90", json::unum(self.quantile(0.90))),
+            ("p99", json::unum(self.quantile(0.99))),
+            ("max", json::unum(self.max())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_stats() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 1, 2, 3, 100, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.max(), 1000);
+        assert_eq!(h.sum(), 1107);
+        assert!((h.mean() - (1107.0 / 7.0)).abs() < 1e-9);
+        // q=0 clamps to the first recorded value's bucket (zero here).
+        assert_eq!(h.quantile(0.0), 0);
+        // All seven values are ≤ 1024, so p100 lands in that bucket.
+        assert_eq!(h.quantile(1.0), 1024);
+        // Median of {0,1,1,2,3,100,1000} is 2 → bucket [2,4) → edge 4.
+        assert_eq!(h.quantile(0.5), 4);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.99), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn histogram_huge_values_clamp() {
+        // Regression: values ≥ 2^39 clamp into the top bucket, whose
+        // nominal edge (1 << 39) used to be reported even when the
+        // recorded max was far larger. The top bucket must report the
+        // tracked max instead.
+        let h = Histogram::new();
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.quantile(0.5), u64::MAX);
+        assert_eq!(h.quantile(1.0), u64::MAX);
+        assert_eq!(h.max(), u64::MAX);
+        // Any quantile landing in the clamped bucket reports the max (an
+        // upper bound, consistent with the bucket-edge semantics).
+        h.record(1u64 << 45);
+        assert_eq!(h.quantile(0.01), u64::MAX);
+        // Values below the top bucket keep their power-of-two upper edge.
+        let h2 = Histogram::new();
+        h2.record(1000);
+        assert_eq!(h2.quantile(0.5), 1024);
+    }
+
+    #[test]
+    fn bucket_edges_cover_the_counts() {
+        // The cumulative bucket view must agree with `count()` and the
+        // inclusive upper bounds must actually bound their bucket.
+        let h = Histogram::new();
+        for v in [0u64, 1, 5, 700, 1 << 20] {
+            h.record(v);
+        }
+        let counts = h.bucket_counts();
+        assert_eq!(counts.len(), BUCKETS);
+        assert_eq!(counts.iter().sum::<u64>(), h.count());
+        assert_eq!(Histogram::bucket_upper(0), 0);
+        assert_eq!(Histogram::bucket_upper(1), 1);
+        assert_eq!(Histogram::bucket_upper(10), 1023);
+        assert_eq!(Histogram::bucket_upper(BUCKETS - 1), u64::MAX);
+        // 700 ∈ [512, 1024) → bucket 10, inclusive upper bound 1023.
+        assert_eq!(counts[10], 1);
+    }
+}

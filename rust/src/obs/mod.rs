@@ -1,0 +1,34 @@
+//! Observability: tracing spans, leveled logging, shared telemetry
+//! primitives, and exporters — dependency-free, like everything else in
+//! the crate.
+//!
+//! The paper's recipe is "polishing, parallelism, and more RAM"; this
+//! module is how the repo *sees* each ingredient instead of asserting
+//! it: solver polishing progress (per-epoch KKT violation, active-set
+//! shrinkage) rides as span fields, parallelism shows up as per-worker
+//! pool utilization and thread-attributed spans, and the serve path
+//! splits latency into queue-wait vs service time.
+//!
+//! Components:
+//! - [`span`] — hierarchical, thread-attributed timed regions in
+//!   per-thread ring buffers. Disabled cost: one relaxed atomic load.
+//! - [`log`] — leveled `key=value` stderr logging (`--log-level`),
+//!   via the crate-root `log_error!` … `log_trace!` macros.
+//! - [`metrics`] — the shared log₂ [`Histogram`] (promoted from
+//!   `serve::metrics`; serve re-exports it).
+//! - [`export`] — Chrome-trace-event JSON for Perfetto (`--trace`),
+//!   Prometheus text exposition (`GET /metrics?format=prometheus`), and
+//!   `report::Table` phase/utilization summaries.
+//!
+//! Contract: with tracing disabled and the default `info` log level,
+//! instrumented hot paths (solver epochs, pool slots, serve dispatch)
+//! pay one atomic check and nothing else — no allocation, no lock, no
+//! formatting.
+
+pub mod export;
+pub mod log;
+pub mod metrics;
+pub mod span;
+
+pub use metrics::Histogram;
+pub use span::{enabled, span, Span};

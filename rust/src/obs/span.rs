@@ -1,0 +1,307 @@
+//! Thread-attributed timed regions ("spans") recorded into per-thread
+//! ring buffers.
+//!
+//! Design constraints, in priority order:
+//!
+//! 1. **Zero cost when disabled.** Tracing instruments the solver epoch
+//!    loop, the pool worker loop and the serve dispatch path — all hot.
+//!    [`Span::new`] performs exactly one `Relaxed` atomic load when
+//!    tracing is off and returns a disarmed guard whose `Drop` does
+//!    nothing; callers that would allocate a name gate on [`enabled`]
+//!    first.
+//! 2. **No cross-thread contention when enabled.** Every thread records
+//!    into its own buffer; the only global lock is taken once per thread
+//!    (registration) and once per export ([`drain`]).
+//! 3. **Bounded memory.** Each per-thread buffer is a fixed-capacity
+//!    ring: once full, the oldest record is overwritten and counted in
+//!    `dropped`, so a long traced run degrades to "most recent window"
+//!    instead of unbounded growth.
+//!
+//! Span hierarchy is implicit: a Chrome-trace viewer (Perfetto) nests
+//! complete (`ph: "X"`) events of one thread by timestamp containment,
+//! so parent/child links never need to be recorded explicitly.
+//!
+//! Timestamps are microseconds since the trace epoch — the instant of
+//! the first [`enable`] call — which keeps them small, positive, and
+//! consistent across threads.
+
+use std::borrow::Cow;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::{Duration, Instant};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// Records kept per thread before the ring starts overwriting its
+/// oldest entries (64Ki spans ≈ a few MB per thread, recent-window
+/// semantics beyond that).
+pub const RING_CAPACITY: usize = 1 << 16;
+
+/// Is tracing globally enabled? One `Relaxed` load — this is the whole
+/// cost instrumented hot paths pay when tracing is off.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn span recording on (idempotent). The first call pins the trace
+/// epoch that all span timestamps are measured from.
+pub fn enable() {
+    EPOCH.get_or_init(Instant::now);
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn span recording off. Already-recorded spans stay buffered until
+/// [`drain`].
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// The instant all span timestamps are relative to.
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Mutex helper: telemetry must keep working (and never double-panic)
+/// even if a traced thread panicked while holding a buffer lock.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// One completed span, ready for export.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    pub name: Cow<'static, str>,
+    /// Start, microseconds since the trace epoch.
+    pub start_us: u64,
+    /// Duration, microseconds.
+    pub dur_us: u64,
+    /// Structured numeric fields (e.g. the solver's per-epoch KKT
+    /// violation and active-set size).
+    pub args: Vec<(&'static str, f64)>,
+}
+
+/// Per-thread ring buffer plus the identity the exporters need.
+struct ThreadBuffer {
+    tid: u64,
+    name: String,
+    ring: Vec<SpanRecord>,
+    /// Oldest entry once the ring has wrapped (next overwrite position).
+    head: usize,
+    /// Records overwritten since the last drain.
+    dropped: u64,
+}
+
+type SharedBuffer = Arc<Mutex<ThreadBuffer>>;
+
+static REGISTRY: Mutex<Vec<SharedBuffer>> = Mutex::new(Vec::new());
+
+thread_local! {
+    static LOCAL: SharedBuffer = register_thread();
+}
+
+fn register_thread() -> SharedBuffer {
+    let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    let name = std::thread::current()
+        .name()
+        .unwrap_or("unnamed")
+        .to_string();
+    let buf = Arc::new(Mutex::new(ThreadBuffer {
+        tid,
+        name,
+        ring: Vec::new(),
+        head: 0,
+        dropped: 0,
+    }));
+    lock(&REGISTRY).push(Arc::clone(&buf));
+    buf
+}
+
+fn record(rec: SpanRecord) {
+    LOCAL.with(|buf| {
+        let mut b = lock(buf);
+        if b.ring.len() < RING_CAPACITY {
+            b.ring.push(rec);
+        } else {
+            let head = b.head;
+            b.ring[head] = rec;
+            b.head = (head + 1) % RING_CAPACITY;
+            b.dropped += 1;
+        }
+    });
+}
+
+/// Record a span whose timing was measured elsewhere — used for
+/// retroactive regions like serve queue-wait, where the interval is only
+/// known once the request is pulled into a batch on another thread.
+pub fn record_manual(
+    name: impl Into<Cow<'static, str>>,
+    start: Instant,
+    dur: Duration,
+    args: Vec<(&'static str, f64)>,
+) {
+    if !enabled() {
+        return;
+    }
+    record(SpanRecord {
+        name: name.into(),
+        // `duration_since` saturates to zero for instants before the
+        // epoch (e.g. a request enqueued before tracing was enabled).
+        start_us: start.duration_since(epoch()).as_micros() as u64,
+        dur_us: dur.as_micros() as u64,
+        args,
+    });
+}
+
+/// RAII span guard: times from construction to drop and records the
+/// result into the current thread's ring buffer. Construct through
+/// [`span`] (or [`Span::new`]); when tracing is disabled the guard is
+/// disarmed and costs nothing beyond the one atomic check.
+pub struct Span {
+    start: Option<Instant>,
+    name: Cow<'static, str>,
+    args: Vec<(&'static str, f64)>,
+}
+
+impl Span {
+    #[inline]
+    pub fn new(name: impl Into<Cow<'static, str>>) -> Span {
+        if enabled() {
+            Span {
+                start: Some(Instant::now()),
+                name: name.into(),
+                args: Vec::new(),
+            }
+        } else {
+            Span {
+                start: None,
+                name: Cow::Borrowed(""),
+                args: Vec::new(),
+            }
+        }
+    }
+
+    /// Attach a structured numeric field (no-op on a disarmed span).
+    #[inline]
+    pub fn arg(&mut self, key: &'static str, value: f64) {
+        if self.start.is_some() {
+            self.args.push((key, value));
+        }
+    }
+
+    /// Is this guard actually recording?
+    #[inline]
+    pub fn armed(&self) -> bool {
+        self.start.is_some()
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            record(SpanRecord {
+                name: std::mem::replace(&mut self.name, Cow::Borrowed("")),
+                start_us: start.duration_since(epoch()).as_micros() as u64,
+                dur_us: start.elapsed().as_micros() as u64,
+                args: std::mem::take(&mut self.args),
+            });
+        }
+    }
+}
+
+/// Open a span named `name` (see [`Span::new`]).
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    Span::new(name)
+}
+
+/// Everything one thread recorded since the last drain.
+#[derive(Clone, Debug)]
+pub struct ThreadDump {
+    pub tid: u64,
+    pub thread_name: String,
+    /// Records in chronological order.
+    pub records: Vec<SpanRecord>,
+    /// Records lost to ring overwrites (0 unless the run out-spanned
+    /// [`RING_CAPACITY`]).
+    pub dropped: u64,
+}
+
+/// Snapshot-and-reset every thread's buffer. Buffers of exited threads
+/// are included (the registry keeps them alive until drained).
+pub fn drain() -> Vec<ThreadDump> {
+    let registry = lock(&REGISTRY);
+    registry
+        .iter()
+        .map(|buf| {
+            let mut b = lock(buf);
+            let head = b.head;
+            let mut records = std::mem::take(&mut b.ring);
+            if head > 0 {
+                // The ring wrapped: `head` marks the oldest record.
+                records.rotate_left(head);
+            }
+            b.head = 0;
+            let dropped = b.dropped;
+            b.dropped = 0;
+            ThreadDump {
+                tid: b.tid,
+                thread_name: b.name.clone(),
+                records,
+                dropped,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: tracing state is process-global, so everything that needs it
+    // enabled lives in ONE test (integration-level coverage is in
+    // tests/obs_trace.rs, a separate binary).
+    #[test]
+    fn spans_record_only_while_enabled() {
+        {
+            let mut s = Span::new("never-recorded");
+            s.arg("x", 1.0);
+            assert!(!s.armed());
+        }
+        enable();
+        {
+            let mut s = Span::new("recorded");
+            s.arg("k", 2.5);
+            assert!(s.armed());
+        }
+        record_manual(
+            "manual",
+            epoch(),
+            Duration::from_micros(7),
+            vec![("n", 3.0)],
+        );
+        disable();
+        {
+            let s = Span::new("after-disable");
+            assert!(!s.armed());
+        }
+        let dumps = drain();
+        let mine: Vec<&SpanRecord> = dumps.iter().flat_map(|d| d.records.iter()).collect();
+        let names: Vec<&str> = mine.iter().map(|r| r.name.as_ref()).collect();
+        assert!(names.contains(&"recorded"), "{names:?}");
+        assert!(names.contains(&"manual"), "{names:?}");
+        assert!(!names.contains(&"never-recorded"), "{names:?}");
+        assert!(!names.contains(&"after-disable"), "{names:?}");
+        let rec = mine.iter().find(|r| r.name == "recorded").unwrap();
+        assert_eq!(rec.args, vec![("k", 2.5)]);
+        let man = mine.iter().find(|r| r.name == "manual").unwrap();
+        assert_eq!(man.dur_us, 7);
+        assert_eq!(man.args, vec![("n", 3.0)]);
+        // Drained means gone.
+        let again = drain();
+        assert!(again.iter().all(|d| d.records.is_empty()));
+        assert!(dumps.iter().all(|d| d.dropped == 0));
+    }
+}

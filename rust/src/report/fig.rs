@@ -35,6 +35,18 @@ pub fn bar_chart(title: &str, entries: &[(String, f64)], width: usize) -> String
     out
 }
 
+/// Write a labelled bar chart into any byte sink — the figure-side
+/// counterpart of [`crate::report::Table::write_to`]; benches hand it
+/// stdout, tests a buffer.
+pub fn write_bar_chart(
+    w: &mut impl std::io::Write,
+    title: &str,
+    entries: &[(String, f64)],
+    width: usize,
+) -> std::io::Result<()> {
+    w.write_all(bar_chart(title, entries, width).as_bytes())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -64,5 +76,13 @@ mod tests {
         assert!(s.contains("fast"));
         assert!(s.contains("slow"));
         assert!(s.contains("log scale"));
+    }
+
+    #[test]
+    fn sink_matches_string_render() {
+        let entries = [("x".to_string(), 0.5)];
+        let mut buf: Vec<u8> = Vec::new();
+        write_bar_chart(&mut buf, "demo", &entries, 10).unwrap();
+        assert_eq!(String::from_utf8(buf).unwrap(), bar_chart("demo", &entries, 10));
     }
 }

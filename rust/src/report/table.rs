@@ -67,9 +67,16 @@ impl Table {
         out
     }
 
-    /// Print to stdout.
+    /// Render into any byte sink — the single choke point table output
+    /// funnels through; [`Table::print`] hands it a locked stdout.
+    pub fn write_to(&self, w: &mut impl std::io::Write) -> std::io::Result<()> {
+        writeln!(w, "{}", self.render())
+    }
+
+    /// Print to stdout. Tables are *results*, so they stay on stdout
+    /// rather than going through the stderr logger.
     pub fn print(&self) {
-        println!("{}", self.render());
+        let _ = self.write_to(&mut std::io::stdout().lock());
     }
 
     /// Write the table as TSV (figure-data export for external plotting).
@@ -109,6 +116,15 @@ mod tests {
         assert_eq!(Table::secs(89.86), "89.86");
         assert_eq!(Table::secs(0.123), "0.123");
         assert_eq!(Table::pct(0.1477), "14.77");
+    }
+
+    #[test]
+    fn write_to_matches_render() {
+        let mut t = Table::new("sink", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let mut buf: Vec<u8> = Vec::new();
+        t.write_to(&mut buf).unwrap();
+        assert_eq!(String::from_utf8(buf).unwrap(), t.render() + "\n");
     }
 
     #[test]

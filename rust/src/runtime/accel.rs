@@ -214,7 +214,7 @@ mod tests {
         if dir.join("manifest.json").exists() {
             Some(Runtime::load(&dir).unwrap())
         } else {
-            eprintln!("skipping: artifacts not built");
+            crate::log_warn!("test", "skipping: artifacts not built");
             None
         }
     }

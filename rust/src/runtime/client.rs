@@ -150,7 +150,7 @@ mod tests {
     fn manifest_loads_when_built() {
         let dir = artifacts_dir();
         if !dir.join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
+            crate::log_warn!("test", "skipping: artifacts not built");
             return;
         }
         let rt = Runtime::load(&dir).unwrap();
@@ -162,7 +162,7 @@ mod tests {
     fn pick_smallest_fitting_variant() {
         let dir = artifacts_dir();
         if !dir.join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
+            crate::log_warn!("test", "skipping: artifacts not built");
             return;
         }
         let rt = Runtime::load(&dir).unwrap();

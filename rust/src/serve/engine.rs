@@ -384,6 +384,9 @@ impl ServeEngine {
     /// counted in the metrics (`rejected_full`, and as submitted+failed,
     /// globally and in the model's bucket) on this path.
     pub fn try_submit(&self, model: &str, features: &[(u32, f32)]) -> Result<Ticket, ServeError> {
+        // Times the whole admission path (canonicalise → queue lock →
+        // enqueue/reject), on whichever thread is submitting.
+        let _span = crate::obs::Span::new("serve.admit");
         // Canonicalise (and allocate the owned model name) outside the
         // queue lock — per-request CPU and allocator work must not extend
         // the critical section every other submitter serialises on. The
@@ -821,6 +824,8 @@ fn worker_loop(shared: &Shared, backend: &dyn Stage1Backend) {
 
 fn process_batch(shared: &Shared, backend: &dyn Stage1Backend, batch: Batch) {
     let t0 = Instant::now();
+    let mut batch_span = crate::obs::Span::new("serve.batch");
+    batch_span.arg("size", batch.requests.len() as f64);
     let name = batch.model;
     let Some(model) = shared.registry.get(&name) else {
         let msg = format!("model '{name}' is not registered");
@@ -856,14 +861,24 @@ fn process_batch(shared: &Shared, backend: &dyn Stage1Backend, batch: Batch) {
     let x = SparseMatrix::from_rows(dim, &rows);
     // Rejected rows are not part of the scored batch.
     let batch_size = scorable.len();
+    let predict_span = crate::obs::Span::new("serve.predict");
     match model.features(&x, backend) {
         Ok(g) => {
             let preds = model.predict_from_features(&g);
+            drop(predict_span);
             for (r, label) in scorable.into_iter().zip(preds) {
                 let queue_wait = t0.saturating_duration_since(r.enqueued);
                 let total = r.enqueued.elapsed();
+                // Retroactive span: the wait interval is only known once
+                // the batch pull (on this thread) observes the request.
+                crate::obs::span::record_manual(
+                    "serve.queue_wait",
+                    r.enqueued,
+                    queue_wait,
+                    Vec::new(),
+                );
                 shared.metrics.note_completed(total, queue_wait);
-                r.metrics.note_completed(total);
+                r.metrics.note_completed(total, queue_wait);
                 r.fulfiller.fulfill(Ok(Prediction {
                     label,
                     batch_size,

@@ -28,7 +28,9 @@
 //! * `GET /metrics` — [`crate::serve::ServeMetrics::to_json`], including
 //!   the `per_model` section (per-tenant counters, weights, and latency
 //!   histograms); append `?format=table` for the human-readable table the
-//!   CLI prints.
+//!   CLI prints, or `?format=prometheus` for the Prometheus text
+//!   exposition ([`crate::serve::ServeMetrics::prometheus`]) with
+//!   per-model labels and the queue-wait vs service-time latency split.
 //! * `GET /healthz` — 200 with the healthy-worker count, 503 when no
 //!   worker survived backend init.
 //!
@@ -599,7 +601,10 @@ fn healthz(engine: &ServeEngine) -> (u16, &'static str, String) {
 }
 
 fn metrics(engine: &ServeEngine, query: &str) -> (u16, &'static str, String) {
-    if query.split('&').any(|kv| kv == "format=table") {
+    if query.split('&').any(|kv| kv == "format=prometheus") {
+        let text = engine.metrics().prometheus(engine.elapsed());
+        (200, "text/plain; version=0.0.4; charset=utf-8", text)
+    } else if query.split('&').any(|kv| kv == "format=table") {
         let table = engine.metrics().table(engine.elapsed()).render();
         (200, "text/plain; charset=utf-8", table)
     } else {

@@ -15,6 +15,7 @@
 //! every request is attributed to exactly one bucket for its whole
 //! lifetime, so the buckets sum to the global counters.
 
+use crate::obs::export::PromText;
 use crate::report::Table;
 use crate::util::json::{self, Json};
 use std::collections::BTreeMap;
@@ -22,107 +23,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 use std::time::Duration;
 
-const BUCKETS: usize = 40;
-
-/// Histogram over `u64` values with power-of-two buckets: bucket `i`
-/// (i ≥ 1) counts values in `[2^(i-1), 2^i)`; bucket 0 counts zeros.
-/// Percentiles are reported as the upper edge of the covering bucket —
-/// at most 2× off, which is plenty for latency reporting.
-pub struct Histogram {
-    buckets: [AtomicU64; BUCKETS],
-    count: AtomicU64,
-    sum: AtomicU64,
-    max: AtomicU64,
-}
-
-// [T; 40] has no Default impl (arrays stop at 32), hence the manual one.
-impl Default for Histogram {
-    fn default() -> Self {
-        Histogram {
-            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
-            count: AtomicU64::new(0),
-            sum: AtomicU64::new(0),
-            max: AtomicU64::new(0),
-        }
-    }
-}
-
-impl Histogram {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    fn bucket_index(v: u64) -> usize {
-        if v == 0 {
-            0
-        } else {
-            ((64 - v.leading_zeros()) as usize).min(BUCKETS - 1)
-        }
-    }
-
-    pub fn record(&self, v: u64) {
-        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum.fetch_add(v, Ordering::Relaxed);
-        self.max.fetch_max(v, Ordering::Relaxed);
-    }
-
-    pub fn count(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
-    }
-
-    pub fn mean(&self) -> f64 {
-        let n = self.count();
-        if n == 0 {
-            0.0
-        } else {
-            self.sum.load(Ordering::Relaxed) as f64 / n as f64
-        }
-    }
-
-    pub fn max(&self) -> u64 {
-        self.max.load(Ordering::Relaxed)
-    }
-
-    /// Upper bucket edge covering quantile `q` ∈ [0, 1].
-    pub fn quantile(&self, q: f64) -> u64 {
-        let n = self.count();
-        if n == 0 {
-            return 0;
-        }
-        let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
-        let mut seen = 0u64;
-        for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return match i {
-                    0 => 0,
-                    // The top bucket is clamped — it holds every value ≥
-                    // 2^(BUCKETS-2), so its nominal power-of-two edge can
-                    // under-report by orders of magnitude. The tracked max
-                    // is a true upper bound for anything landing here (the
-                    // overall max always lives in the highest occupied
-                    // bucket).
-                    i if i == BUCKETS - 1 => self.max(),
-                    i => 1u64 << i,
-                };
-            }
-        }
-        self.max()
-    }
-
-    /// Machine-readable summary (count / mean / tail quantiles / max).
-    pub fn to_json(&self) -> Json {
-        json::obj(vec![
-            ("count", json::unum(self.count())),
-            ("mean", json::num(self.mean())),
-            ("p50", json::unum(self.quantile(0.50))),
-            ("p90", json::unum(self.quantile(0.90))),
-            ("p99", json::unum(self.quantile(0.99))),
-            ("max", json::unum(self.max())),
-        ])
-    }
-}
+// The histogram lives in the shared observability module now (the
+// solver's epoch timing uses the same type), re-exported here so
+// `serve::Histogram` and `serve::metrics::Histogram` keep resolving.
+pub use crate::obs::metrics::Histogram;
 
 /// One tenant's slice of the serve metrics. Same discipline as the
 /// engine-wide counters — plain atomics, approximate under concurrent
@@ -153,6 +57,12 @@ pub struct ModelMetrics {
     pub queue_depth_max: AtomicU64,
     /// End-to-end latency of this model's completed requests, µs.
     pub latency_us: Histogram,
+    /// Queue-wait share of those latencies (submit → pulled into a
+    /// batch), µs. Batches are single-model, so the split attributes
+    /// cleanly per tenant.
+    pub queue_wait_us: Histogram,
+    /// Service share (pulled into a batch → fulfilled), µs.
+    pub service_us: Histogram,
     /// Display copy of the scheduler weight currently applied to this
     /// model's sub-queue (the authoritative value lives in the registry's
     /// `ModelServeConfig`).
@@ -170,6 +80,8 @@ impl Default for ModelMetrics {
             queue_depth: AtomicU64::new(0),
             queue_depth_max: AtomicU64::new(0),
             latency_us: Histogram::new(),
+            queue_wait_us: Histogram::new(),
+            service_us: Histogram::new(),
             weight: AtomicU64::new(1),
         }
     }
@@ -182,9 +94,12 @@ impl ModelMetrics {
         self.queue_depth_max.fetch_max(depth, Ordering::Relaxed);
     }
 
-    pub(crate) fn note_completed(&self, latency: Duration) {
+    pub(crate) fn note_completed(&self, latency: Duration, queue_wait: Duration) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.latency_us.record(latency.as_micros() as u64);
+        self.queue_wait_us.record(queue_wait.as_micros() as u64);
+        self.service_us
+            .record(latency.saturating_sub(queue_wait).as_micros() as u64);
     }
 
     pub(crate) fn note_failed(&self) {
@@ -252,6 +167,8 @@ impl ModelMetrics {
             ("queue_depth_max", c(&self.queue_depth_max)),
             ("weight", json::unum(self.weight())),
             ("latency_us", self.latency_us.to_json()),
+            ("queue_wait_us", self.queue_wait_us.to_json()),
+            ("service_us", self.service_us.to_json()),
         ])
     }
 }
@@ -477,58 +394,161 @@ impl ServeMetrics {
                 .map(|(name, m)| (name.clone(), m.to_json())),
         )
     }
+
+    /// Prometheus text exposition (0.0.4) of the same counters the JSON
+    /// snapshot reports — the `GET /metrics?format=prometheus` payload.
+    /// Per-model counters and histograms carry a `model="name"` label;
+    /// histogram `le` edges are the exact inclusive integer bounds of the
+    /// shared log₂ [`Histogram`], in microseconds.
+    pub fn prometheus(&self, elapsed: Duration) -> String {
+        let mut p = PromText::new();
+        let v = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
+
+        let counters: [(&str, &AtomicU64, &str); 8] = [
+            ("lpdsvm_serve_submitted_total", &self.submitted, "Requests accepted by submit."),
+            (
+                "lpdsvm_serve_completed_total",
+                &self.completed,
+                "Requests fulfilled with a prediction.",
+            ),
+            ("lpdsvm_serve_failed_total", &self.failed, "Requests fulfilled with an error."),
+            (
+                "lpdsvm_serve_rejected_full_total",
+                &self.rejected_full,
+                "Requests fast-failed because a bounded sub-queue was full.",
+            ),
+            (
+                "lpdsvm_serve_shed_expired_total",
+                &self.shed_expired,
+                "Queued requests dropped by the deadline shed policy.",
+            ),
+            (
+                "lpdsvm_serve_queue_full_events_total",
+                &self.queue_full_events,
+                "Submits that found a sub-queue at its cap.",
+            ),
+            ("lpdsvm_serve_batches_total", &self.batches, "Batches dispatched to workers."),
+            (
+                "lpdsvm_serve_batch_panics_total",
+                &self.batch_panics,
+                "Batches whose scoring panicked.",
+            ),
+        ];
+        for (name, a, help) in counters {
+            p.family(name, "counter", help);
+            p.sample(name, &[], v(a));
+        }
+
+        p.family(
+            "lpdsvm_serve_queue_depth",
+            "gauge",
+            "Requests submitted but not yet pulled into a batch.",
+        );
+        p.sample("lpdsvm_serve_queue_depth", &[], v(&self.queue_depth));
+        p.family("lpdsvm_serve_queue_depth_max", "gauge", "High-water mark of the queue depth.");
+        p.sample("lpdsvm_serve_queue_depth_max", &[], v(&self.queue_depth_max));
+        p.family("lpdsvm_serve_uptime_seconds", "gauge", "Engine uptime at scrape time.");
+        p.sample("lpdsvm_serve_uptime_seconds", &[], elapsed.as_secs_f64());
+
+        let histograms: [(&str, &Histogram, &str); 4] = [
+            (
+                "lpdsvm_serve_latency_us",
+                &self.latency_us,
+                "End-to-end request latency, microseconds.",
+            ),
+            (
+                "lpdsvm_serve_queue_wait_us",
+                &self.queue_wait_us,
+                "Queue-wait share of the latency (submit to batch pull), microseconds.",
+            ),
+            (
+                "lpdsvm_serve_service_us",
+                &self.service_us,
+                "Per-batch service time (stage 1 + scoring + fulfilment), microseconds.",
+            ),
+            ("lpdsvm_serve_batch_size", &self.batch_size, "Dispatched batch sizes."),
+        ];
+        for (name, h, help) in histograms {
+            p.family(name, "histogram", help);
+            p.histogram(name, &[], h);
+        }
+
+        // Per-model rollups: same invariant counters and the same
+        // latency split, one label set per tenant bucket.
+        let per_model = self.per_model.read().unwrap();
+        let model_counters: [(&str, fn(&ModelMetrics) -> &AtomicU64, &str); 5] = [
+            (
+                "lpdsvm_serve_model_submitted_total",
+                |m| &m.submitted,
+                "Per-model requests accepted by submit.",
+            ),
+            (
+                "lpdsvm_serve_model_completed_total",
+                |m| &m.completed,
+                "Per-model requests fulfilled with a prediction.",
+            ),
+            (
+                "lpdsvm_serve_model_failed_total",
+                |m| &m.failed,
+                "Per-model requests fulfilled with an error.",
+            ),
+            (
+                "lpdsvm_serve_model_rejected_full_total",
+                |m| &m.rejected_full,
+                "Per-model full-queue fast-fails.",
+            ),
+            (
+                "lpdsvm_serve_model_shed_expired_total",
+                |m| &m.shed_expired,
+                "Per-model deadline sheds.",
+            ),
+        ];
+        for (name, field, help) in model_counters {
+            p.family(name, "counter", help);
+            for (model, m) in per_model.iter() {
+                p.sample(name, &[("model", model)], v(field(m)));
+            }
+        }
+        p.family("lpdsvm_serve_model_queue_depth", "gauge", "Per-model sub-queue depth.");
+        for (model, m) in per_model.iter() {
+            p.sample("lpdsvm_serve_model_queue_depth", &[("model", model)], v(&m.queue_depth));
+        }
+        p.family("lpdsvm_serve_model_weight", "gauge", "Scheduler weight of the sub-queue.");
+        for (model, m) in per_model.iter() {
+            p.sample("lpdsvm_serve_model_weight", &[("model", model)], m.weight() as f64);
+        }
+        let model_histograms: [(&str, fn(&ModelMetrics) -> &Histogram, &str); 3] = [
+            (
+                "lpdsvm_serve_model_latency_us",
+                |m| &m.latency_us,
+                "Per-model end-to-end latency, microseconds.",
+            ),
+            (
+                "lpdsvm_serve_model_queue_wait_us",
+                |m| &m.queue_wait_us,
+                "Per-model queue-wait share of the latency, microseconds.",
+            ),
+            (
+                "lpdsvm_serve_model_service_us",
+                |m| &m.service_us,
+                "Per-model service share of the latency, microseconds.",
+            ),
+        ];
+        for (name, field, help) in model_histograms {
+            p.family(name, "histogram", help);
+            for (model, m) in per_model.iter() {
+                p.histogram(name, &[("model", model)], field(m));
+            }
+        }
+        p.render()
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn histogram_buckets_and_stats() {
-        let h = Histogram::new();
-        for v in [0u64, 1, 1, 2, 3, 100, 1000] {
-            h.record(v);
-        }
-        assert_eq!(h.count(), 7);
-        assert_eq!(h.max(), 1000);
-        assert!((h.mean() - (1107.0 / 7.0)).abs() < 1e-9);
-        // q=0 clamps to the first recorded value's bucket (zero here).
-        assert_eq!(h.quantile(0.0), 0);
-        // All seven values are ≤ 1024, so p100 lands in that bucket.
-        assert_eq!(h.quantile(1.0), 1024);
-        // Median of {0,1,1,2,3,100,1000} is 2 → bucket [2,4) → edge 4.
-        assert_eq!(h.quantile(0.5), 4);
-    }
-
-    #[test]
-    fn histogram_empty() {
-        let h = Histogram::new();
-        assert_eq!(h.count(), 0);
-        assert_eq!(h.quantile(0.99), 0);
-        assert_eq!(h.mean(), 0.0);
-    }
-
-    #[test]
-    fn histogram_huge_values_clamp() {
-        // Regression: values ≥ 2^39 clamp into the top bucket, whose
-        // nominal edge (1 << 39) used to be reported even when the
-        // recorded max was far larger. The top bucket must report the
-        // tracked max instead.
-        let h = Histogram::new();
-        h.record(u64::MAX);
-        assert_eq!(h.count(), 1);
-        assert_eq!(h.quantile(0.5), u64::MAX);
-        assert_eq!(h.quantile(1.0), u64::MAX);
-        assert_eq!(h.max(), u64::MAX);
-        // Any quantile landing in the clamped bucket reports the max (an
-        // upper bound, consistent with the bucket-edge semantics).
-        h.record(1u64 << 45);
-        assert_eq!(h.quantile(0.01), u64::MAX);
-        // Values below the top bucket keep their power-of-two upper edge.
-        let h2 = Histogram::new();
-        h2.record(1000);
-        assert_eq!(h2.quantile(0.5), 1024);
-    }
+    // Histogram unit tests moved to `obs::metrics` with the type.
 
     #[test]
     fn metrics_counters_flow() {
@@ -597,7 +617,7 @@ mod tests {
         m.note_batch(1);
         hot.note_dispatched();
         m.note_completed(Duration::from_micros(900), Duration::from_micros(100));
-        hot.note_completed(Duration::from_micros(900));
+        hot.note_completed(Duration::from_micros(900), Duration::from_micros(100));
         m.note_shed_expired(1);
         hot.note_shed_expired();
         m.note_rejected_full();
@@ -605,7 +625,7 @@ mod tests {
         m.note_batch(1);
         cold.note_dispatched();
         m.note_completed(Duration::from_micros(200), Duration::from_micros(50));
-        cold.note_completed(Duration::from_micros(200));
+        cold.note_completed(Duration::from_micros(200), Duration::from_micros(50));
 
         let inv = |b: &ModelMetrics| {
             assert_eq!(
@@ -663,6 +683,67 @@ mod tests {
                 + b.failed.load(Ordering::Relaxed)
                 + b.queue_depth.load(Ordering::Relaxed)
         );
+    }
+
+    #[test]
+    fn prometheus_exposition_matches_the_json_snapshot() {
+        let m = ServeMetrics::new();
+        let hot = m.model("hot");
+        hot.set_weight(3);
+        for _ in 0..2 {
+            m.note_submitted();
+            hot.note_submitted();
+        }
+        m.note_batch(2);
+        hot.note_dispatched();
+        hot.note_dispatched();
+        for _ in 0..2 {
+            m.note_completed(Duration::from_micros(800), Duration::from_micros(300));
+            hot.note_completed(Duration::from_micros(800), Duration::from_micros(300));
+        }
+        m.note_service(Duration::from_micros(500));
+
+        let text = m.prometheus(Duration::from_secs(2));
+        let j = m.to_json(Duration::from_secs(2));
+
+        // Counter values agree with the JSON snapshot.
+        let submitted = j.get("submitted").unwrap().as_u64().unwrap();
+        assert!(text.contains(&format!("lpdsvm_serve_submitted_total {submitted}\n")), "{text}");
+        assert!(text.contains("lpdsvm_serve_completed_total 2\n"), "{text}");
+        assert!(text.contains("# TYPE lpdsvm_serve_latency_us histogram"), "{text}");
+        // Histogram _count/_sum agree with the recorded population.
+        assert!(text.contains("lpdsvm_serve_latency_us_count 2\n"), "{text}");
+        assert!(text.contains("lpdsvm_serve_latency_us_sum 1600\n"), "{text}");
+        assert!(text.contains("lpdsvm_serve_queue_wait_us_sum 600\n"), "{text}");
+        // The service split is latency − queue-wait per request.
+        assert!(text.contains("lpdsvm_serve_service_us_count 1\n"), "{text}");
+        // Per-model families carry the model label.
+        assert!(
+            text.contains("lpdsvm_serve_model_completed_total{model=\"hot\"} 2\n"),
+            "{text}"
+        );
+        assert!(text.contains("lpdsvm_serve_model_weight{model=\"hot\"} 3\n"), "{text}");
+        assert!(
+            text.contains("lpdsvm_serve_model_latency_us_count{model=\"hot\"} 2\n"),
+            "{text}"
+        );
+        assert!(
+            text.contains("lpdsvm_serve_model_queue_wait_us_sum{model=\"hot\"} 600\n"),
+            "{text}"
+        );
+        assert!(
+            text.contains("lpdsvm_serve_model_service_us_sum{model=\"hot\"} 1000\n"),
+            "{text}"
+        );
+        // Every bucket series ends in the mandatory +Inf sample.
+        assert!(
+            text.contains("lpdsvm_serve_model_latency_us_bucket{model=\"hot\",le=\"+Inf\"} 2\n"),
+            "{text}"
+        );
+        // JSON snapshot agrees on the split.
+        let pm = j.get("per_model").unwrap().get("hot").unwrap();
+        assert_eq!(pm.get("queue_wait_us").unwrap().get("count").unwrap().as_u64(), Some(2));
+        assert_eq!(pm.get("service_us").unwrap().get("count").unwrap().as_u64(), Some(2));
     }
 
     #[test]

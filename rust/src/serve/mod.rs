@@ -41,8 +41,10 @@
 //! * [`registry`] — named models behind `Arc`, hot-swappable with zero
 //!   downtime, loadable from [`crate::model::io`] files, plus per-model
 //!   serve policy ([`ModelServeConfig`]).
-//! * [`metrics`] — latency histograms, queue depth, shed/rejection
-//!   counters, batch-size distribution, throughput; per-model rollups.
+//! * [`metrics`] — latency histograms (queue-wait vs service-time),
+//!   queue depth, shed/rejection counters, batch-size distribution,
+//!   throughput; per-model rollups; JSON, table, and Prometheus text
+//!   exposition snapshots.
 //! * [`session`] — per-request tickets (futures-style result delivery).
 //! * [`http`] — dependency-free HTTP/1.1 front-end (`:predict`,
 //!   `:config`, `/v1/models`, `/metrics`, `/healthz`) over the same

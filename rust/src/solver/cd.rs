@@ -159,9 +159,18 @@ pub fn solve(problem: &ProblemView, opts: &SolverOptions) -> Solution {
     // the solver fully deterministic for a given seed.
     let mut active_work: u64 = 0;
     let mut check_work: u64 = 0;
+    // Epoch wall-time distribution (µs) for the solve summary — same
+    // log₂ histogram the serve metrics use. One Instant pair per epoch;
+    // noise against the O(n·B) epoch body.
+    let epoch_us = crate::obs::Histogram::new();
+    let mut solve_span = crate::obs::Span::new("solve");
+    solve_span.arg("n", n as f64);
 
     while epochs < opts.max_epochs {
         epochs += 1;
+        let epoch_start = Instant::now();
+        let mut epoch_span = crate::obs::Span::new("solve.epoch");
+        let mut epoch_reactivated: u64 = 0;
 
         // Random permutation of the active set (round-robin in randomized
         // order, as the paper prescribes).
@@ -213,6 +222,10 @@ pub fn solve(problem: &ProblemView, opts: &SolverOptions) -> Solution {
         active_work += order.len() as u64;
 
         let active_converged = (max_viol as f64) < opts.eps;
+        epoch_span.arg("epoch", epochs as f64);
+        epoch_span.arg("kkt", max_viol as f64);
+        epoch_span.arg("active", active.n_active() as f64);
+        epoch_span.arg("shrunk", flagged.len() as f64);
 
         // Re-activation sweep: either the η work budget says we owe one, or
         // the active set has (apparently) converged and we must verify the
@@ -236,12 +249,14 @@ pub fn solve(problem: &ProblemView, opts: &SolverOptions) -> Solution {
                     violators.push(i);
                 }
             }
+            epoch_reactivated += violators.len() as u64;
             active.reactivate_all(&violators);
 
             if active_converged {
                 if violators.is_empty() {
                     final_violation = max_viol.max(max_inactive_viol) as f64;
                     converged = true;
+                    epoch_us.record(epoch_start.elapsed().as_micros() as u64);
                     break;
                 }
                 // Violators were re-activated: the next epoch will move
@@ -268,13 +283,18 @@ pub fn solve(problem: &ProblemView, opts: &SolverOptions) -> Solution {
                     violators.push(i);
                 }
             }
+            epoch_reactivated += violators.len() as u64;
             active.reactivate_all(&violators);
             if active.n_active() == 0 {
                 final_violation = mv as f64;
                 converged = true;
+                epoch_us.record(epoch_start.elapsed().as_micros() as u64);
                 break;
             }
         }
+        epoch_span.arg("reactivated", epoch_reactivated as f64);
+        drop(epoch_span);
+        epoch_us.record(epoch_start.elapsed().as_micros() as u64);
     }
 
     if final_violation == f64::MAX {
@@ -287,6 +307,22 @@ pub fn solve(problem: &ProblemView, opts: &SolverOptions) -> Solution {
         final_violation = mv as f64;
         converged = final_violation < opts.eps;
     }
+
+    solve_span.arg("epochs", epochs as f64);
+    solve_span.arg("steps", steps as f64);
+    solve_span.arg("converged", converged as u8 as f64);
+    solve_span.arg("kkt", final_violation);
+    solve_span.arg("epoch_p50_us", epoch_us.quantile(0.50) as f64);
+    solve_span.arg("epoch_p99_us", epoch_us.quantile(0.99) as f64);
+    crate::log_debug!(
+        "solver",
+        "n={n} epochs={epochs} steps={steps} converged={converged} kkt={final_violation:.3e} \
+         shrunk={} reactivated={} epoch_p50_us={} epoch_p99_us={}",
+        active.total_shrunk,
+        active.total_reactivated,
+        epoch_us.quantile(0.50),
+        epoch_us.quantile(0.99)
+    );
 
     let final_active = active.n_active();
     finish(

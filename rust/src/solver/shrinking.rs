@@ -17,6 +17,11 @@ pub struct ActiveSet {
     k: u8,
     /// Variables removed from the active set.
     pub inactive: Vec<u32>,
+    /// Lifetime count of shrink moves (a variable shrunk twice counts
+    /// twice) — telemetry for the solver's trace spans and summary log.
+    pub total_shrunk: u64,
+    /// Lifetime count of re-activation moves.
+    pub total_reactivated: u64,
 }
 
 impl ActiveSet {
@@ -26,6 +31,8 @@ impl ActiveSet {
             unchanged: vec![0; n],
             k,
             inactive: Vec::new(),
+            total_shrunk: 0,
+            total_reactivated: 0,
         }
     }
 
@@ -58,6 +65,7 @@ impl ActiveSet {
         for &i in flagged {
             mark[i as usize] = true;
         }
+        let before = self.active.len();
         self.active.retain(|&i| {
             if mark[i as usize] {
                 self.inactive.push(i);
@@ -66,6 +74,7 @@ impl ActiveSet {
                 true
             }
         });
+        self.total_shrunk += (before - self.active.len()) as u64;
     }
 
     /// Move `i` (currently inactive) back into the active set with a reset
@@ -79,6 +88,7 @@ impl ActiveSet {
             mark[i as usize] = true;
             self.unchanged[i as usize] = 0;
         }
+        let before = self.inactive.len();
         self.inactive.retain(|&i| {
             if mark[i as usize] {
                 self.active.push(i);
@@ -87,6 +97,7 @@ impl ActiveSet {
                 true
             }
         });
+        self.total_reactivated += (before - self.inactive.len()) as u64;
     }
 }
 
@@ -122,6 +133,7 @@ mod tests {
         s.shrink(&[1, 3]);
         assert_eq!(s.n_active(), 3);
         assert_eq!(s.inactive, vec![1, 3]);
+        assert_eq!(s.total_shrunk, 2);
         assert!(!s.active.contains(&1));
         assert!(!s.active.contains(&3));
     }
@@ -133,6 +145,8 @@ mod tests {
         s.reactivate_all(&[2, 4]);
         assert_eq!(s.inactive, vec![0]);
         assert_eq!(s.n_active(), 4);
+        assert_eq!(s.total_shrunk, 3);
+        assert_eq!(s.total_reactivated, 2);
         assert!(s.active.contains(&2));
         // counters were reset
         for _ in 0..4 {

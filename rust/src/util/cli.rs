@@ -112,6 +112,7 @@ pub fn parse(cmd: &str, about: &str, specs: &[ArgSpec], args: &[String]) -> anyh
     while i < args.len() {
         let a = &args[i];
         if a == "--help" || a == "-h" {
+            // Requested output, not a diagnostic: stdout, not the logger.
             println!("{}", help(cmd, about, specs));
             std::process::exit(0);
         }

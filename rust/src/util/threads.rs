@@ -39,8 +39,9 @@
 use std::any::Any;
 use std::ops::Range;
 use std::panic::{self, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::{Duration, Instant};
 
 /// Number of worker threads to use: respects `LPDSVM_THREADS`, defaults to
 /// available parallelism.
@@ -65,6 +66,9 @@ struct Task {
     claimed: AtomicUsize,
     completed: AtomicUsize,
     joined: AtomicUsize,
+    /// Submission time — lets each joining worker account its dispatch
+    /// latency (join time − enqueue time) as queue wait.
+    enqueued: Instant,
     /// Pointer to the submitting call's closure. Only dereferenced for
     /// claims `< n`, all of which finish before `ThreadPool::run`
     /// returns, so the borrow never outlives the referent.
@@ -101,6 +105,43 @@ struct PoolShared {
     done_mx: Mutex<()>,
     done_cv: Condvar,
     shutdown: AtomicBool,
+    /// Per-worker utilization accounting, indexed like the handles.
+    /// Always on: the counters move once per *task join*, not per slot,
+    /// so the cost is a handful of relaxed adds per submission.
+    stats: Vec<WorkerStat>,
+}
+
+/// Internal per-worker accumulators (µs resolution).
+#[derive(Default)]
+struct WorkerStat {
+    tasks: AtomicU64,
+    busy_us: AtomicU64,
+    idle_us: AtomicU64,
+    wait_us: AtomicU64,
+}
+
+/// Snapshot of one worker's lifetime accounting — see
+/// [`ThreadPool::stats`].
+#[derive(Clone, Debug, Default)]
+pub struct WorkerStats {
+    /// Tasks this worker joined (it may have run many slots of each).
+    pub tasks: u64,
+    /// Time spent executing slots.
+    pub busy: Duration,
+    /// Time spent parked waiting for work.
+    pub idle: Duration,
+    /// Summed dispatch latency: for each joined task, the gap between
+    /// its submission and this worker picking it up.
+    pub queue_wait: Duration,
+}
+
+/// Per-worker utilization snapshot of a [`ThreadPool`] — the source for
+/// [`crate::obs::export::utilization_table`]. Covers only the pool's
+/// long-lived workers; submitting threads execute slots too but are not
+/// listed here.
+#[derive(Clone, Debug, Default)]
+pub struct PoolStats {
+    pub workers: Vec<WorkerStats>,
 }
 
 /// Persistent worker pool: long-lived workers behind a job queue.
@@ -114,23 +155,43 @@ pub struct ThreadPool {
 impl ThreadPool {
     /// Spawn a pool with `workers` long-lived threads (clamped to ≥ 1).
     pub fn new(workers: usize) -> ThreadPool {
+        let workers = workers.max(1);
         let shared = Arc::new(PoolShared {
             queue: Mutex::new(Vec::new()),
             work_cv: Condvar::new(),
             done_mx: Mutex::new(()),
             done_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            stats: (0..workers).map(|_| WorkerStat::default()).collect(),
         });
-        let handles = (0..workers.max(1))
+        let handles = (0..workers)
             .map(|i| {
                 let shared = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("lpdsvm-pool-{i}"))
-                    .spawn(move || worker_loop(&shared))
+                    .spawn(move || worker_loop(&shared, i))
                     .expect("spawning pool worker")
             })
             .collect();
         ThreadPool { shared, handles }
+    }
+
+    /// Snapshot the per-worker busy/idle/queue-wait accounting.
+    pub fn stats(&self) -> PoolStats {
+        let us = |a: &AtomicU64| Duration::from_micros(a.load(Ordering::Relaxed));
+        PoolStats {
+            workers: self
+                .shared
+                .stats
+                .iter()
+                .map(|w| WorkerStats {
+                    tasks: w.tasks.load(Ordering::Relaxed),
+                    busy: us(&w.busy_us),
+                    idle: us(&w.idle_us),
+                    queue_wait: us(&w.wait_us),
+                })
+                .collect(),
+        }
     }
 
     /// Number of long-lived workers (excluding submitting threads, which
@@ -254,6 +315,7 @@ impl ThreadPool {
             claimed: AtomicUsize::new(0),
             completed: AtomicUsize::new(0),
             joined: AtomicUsize::new(0),
+            enqueued: Instant::now(),
             data: f as *const F as *const (),
             call: call_shim::<F>,
             panic: Mutex::new(None),
@@ -342,8 +404,10 @@ fn run_slots(shared: &PoolShared, task: &Task) {
     }
 }
 
-fn worker_loop(shared: &PoolShared) {
+fn worker_loop(shared: &PoolShared, idx: usize) {
+    let stat = &shared.stats[idx];
     loop {
+        let idle_from = Instant::now();
         let task = {
             let mut q = shared.queue.lock().unwrap();
             loop {
@@ -358,7 +422,25 @@ fn worker_loop(shared: &PoolShared) {
                 q = shared.work_cv.wait(q).unwrap();
             }
         };
-        run_slots(shared, &task);
+        let joined_at = Instant::now();
+        stat.idle_us.fetch_add(
+            joined_at.duration_since(idle_from).as_micros() as u64,
+            Ordering::Relaxed,
+        );
+        stat.wait_us.fetch_add(
+            joined_at.saturating_duration_since(task.enqueued).as_micros() as u64,
+            Ordering::Relaxed,
+        );
+        stat.tasks.fetch_add(1, Ordering::Relaxed);
+        {
+            // One span per joined task (disarmed: one atomic check).
+            let mut span = crate::obs::Span::new("pool.task");
+            span.arg("worker", idx as f64);
+            span.arg("slots", task.n as f64);
+            run_slots(shared, &task);
+        }
+        stat.busy_us
+            .fetch_add(joined_at.elapsed().as_micros() as u64, Ordering::Relaxed);
     }
 }
 
@@ -373,6 +455,13 @@ static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
 /// each of which executes slots of its own task while it waits.
 pub fn global() -> &'static ThreadPool {
     GLOBAL.get_or_init(|| ThreadPool::new(default_threads()))
+}
+
+/// Utilization snapshot of the process-wide pool, if it was ever
+/// spawned. `None` means every parallel section ran serially (or none
+/// ran), so there is nothing to report.
+pub fn global_stats() -> Option<PoolStats> {
+    GLOBAL.get().map(ThreadPool::stats)
 }
 
 /// Run `f(i)` for every `i in 0..n` across `threads` workers of the
@@ -681,6 +770,29 @@ mod tests {
             "global() must hand back one shared pool"
         );
         assert!(global().workers() >= 1);
+    }
+
+    #[test]
+    fn worker_stats_account_joined_tasks() {
+        let pool = ThreadPool::new(2);
+        assert_eq!(pool.stats().workers.len(), 2);
+        // Coarse slots so the workers reliably get to join before the
+        // submitter drains the claim counter on its own.
+        for _ in 0..20 {
+            pool.map(64, 3, |i| {
+                std::hint::black_box((0..500 + i).sum::<usize>())
+            });
+        }
+        let stats = pool.stats();
+        let joined: u64 = stats.workers.iter().map(|w| w.tasks).sum();
+        assert!(joined > 0, "no worker ever joined a task");
+        // Busy time only accumulates on a join (µs-rounded, so it may be
+        // zero even for a joined task — but never without one).
+        for w in &stats.workers {
+            if w.tasks == 0 {
+                assert_eq!(w.busy, Duration::ZERO);
+            }
+        }
     }
 
     #[test]

@@ -34,8 +34,15 @@ impl StageClock {
         Self::default()
     }
 
-    /// Time `f` and accumulate under `stage`.
+    /// Time `f` and accumulate under `stage`. When tracing is on, the
+    /// stage also rides as a span named `stage.<name>` (the name
+    /// allocation is gated, so the disabled cost stays one atomic check).
     pub fn time<T>(&mut self, stage: &str, f: impl FnOnce() -> T) -> T {
+        let _span = if crate::obs::enabled() {
+            Some(crate::obs::Span::new(format!("stage.{stage}")))
+        } else {
+            None
+        };
         let t = Instant::now();
         let out = f();
         self.add(stage, t.elapsed());

@@ -1,0 +1,123 @@
+//! End-to-end tracing test: span recording is process-global state, so
+//! the scenarios that arm/drain it live in this separate test binary
+//! where they own the process (library unit tests never enable spans).
+
+use lpdsvm::coordinator::train::{train, TrainConfig};
+use lpdsvm::data::synth::PaperDataset;
+use lpdsvm::kernel::Kernel;
+use lpdsvm::lowrank::Stage1Config;
+use lpdsvm::obs::export::{chrome_trace, phase_table, write_chrome_trace};
+use lpdsvm::obs::span;
+use lpdsvm::solver::SolverOptions;
+use lpdsvm::util::json::Json;
+
+fn find<'a>(events: &'a [Json], name: &str) -> Option<&'a Json> {
+    events.iter().find(|e| {
+        e.get("ph").and_then(|p| p.as_str()) == Some("X")
+            && e.get("name").and_then(|n| n.as_str()) == Some(name)
+    })
+}
+
+#[test]
+fn traced_train_exports_a_parseable_chrome_trace() {
+    // Tracing is process-global, so this binary holds exactly one test:
+    // a second `#[test]` toggling enable/disable would race this one.
+    // Before arming: spans are disarmed at construction and args no-op.
+    let mut disarmed = lpdsvm::obs::Span::new("never");
+    disarmed.arg("x", 1.0);
+    assert!(!disarmed.armed());
+    drop(disarmed);
+
+    let spec = PaperDataset::Adult.spec(0.01, 5);
+    let data = spec.synth.generate();
+    let cfg = TrainConfig {
+        kernel: Kernel::gaussian(spec.gamma),
+        stage1: Stage1Config {
+            budget: 32,
+            ..Default::default()
+        },
+        solver: SolverOptions {
+            c: spec.c,
+            ..Default::default()
+        },
+        threads: 2,
+        ..Default::default()
+    };
+
+    span::enable();
+    let model = train(&data, &cfg).unwrap();
+    span::disable();
+    assert!(model.factor.rank > 0);
+
+    let dumps = span::drain();
+    assert!(!dumps.is_empty(), "no thread recorded any span");
+
+    // Round-trip through the exporter and our own JSON parser — exactly
+    // what `--trace` writes and Perfetto loads.
+    let doc = chrome_trace(&dumps);
+    let back = Json::parse(&doc.to_string()).unwrap();
+    let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+
+    // One thread_name metadata event per contributing thread.
+    let meta_count = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("M"))
+        .count();
+    let n_threads = dumps.iter().filter(|d| !d.records.is_empty()).count();
+    assert_eq!(meta_count, n_threads);
+
+    // Every X event is complete: name, tid, ts, dur.
+    for e in events {
+        if e.get("ph").and_then(|p| p.as_str()) != Some("X") {
+            continue;
+        }
+        assert!(e.get("name").and_then(|n| n.as_str()).is_some(), "unnamed X event");
+        assert!(e.get("tid").and_then(|t| t.as_u64()).is_some());
+        assert!(e.get("ts").and_then(|t| t.as_u64()).is_some());
+        assert!(e.get("dur").and_then(|d| d.as_u64()).is_some());
+    }
+
+    // The span taxonomy the CLI promises: root, stage-1 phases, the
+    // eigensolver, and per-epoch solver spans must all be present.
+    let train_ev = find(events, "train").expect("missing 'train' span");
+    for name in ["stage.preparation", "stage.matrix_g", "eigensolve", "solve", "solve.epoch"] {
+        assert!(find(events, name).is_some(), "missing '{name}' span");
+    }
+
+    // Hierarchy is timestamp containment: the stage-1 phases sit inside
+    // the root train span on the same thread.
+    let t0 = train_ev.get("ts").unwrap().as_u64().unwrap();
+    let t1 = t0 + train_ev.get("dur").unwrap().as_u64().unwrap();
+    let train_tid = train_ev.get("tid").unwrap().as_u64().unwrap();
+    for name in ["stage.preparation", "stage.matrix_g"] {
+        let e = find(events, name).unwrap();
+        assert_eq!(e.get("tid").unwrap().as_u64().unwrap(), train_tid);
+        let s0 = e.get("ts").unwrap().as_u64().unwrap();
+        let s1 = s0 + e.get("dur").unwrap().as_u64().unwrap();
+        assert!(t0 <= s0 && s1 <= t1, "'{name}' [{s0},{s1}] outside train [{t0},{t1}]");
+    }
+
+    // Solver epochs carry the structured convergence fields.
+    let epoch = find(events, "solve.epoch").unwrap();
+    let args = epoch.get("args").unwrap();
+    for key in ["epoch", "kkt", "active", "shrunk"] {
+        assert!(args.get(key).and_then(|v| v.as_f64()).is_some(), "epoch missing arg '{key}'");
+    }
+    let solve = find(events, "solve").unwrap().get("args").unwrap();
+    assert!(solve.get("epochs").and_then(|v| v.as_f64()).unwrap_or(0.0) >= 1.0);
+
+    // The same dumps drive the CLI's summary table.
+    let summary = phase_table(&dumps).render();
+    assert!(summary.contains("solve.epoch"), "{summary}");
+
+    // And the file writer drops valid JSON where --trace points.
+    let path = std::env::temp_dir().join("lpdsvm_obs_trace_test/trace.json");
+    write_chrome_trace(&path, &dumps).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(Json::parse(&text).is_ok());
+    std::fs::remove_file(&path).ok();
+
+    // Drain is destructive: the buffers reset for the next run.
+    let total: usize = span::drain().iter().map(|d| d.records.len()).sum();
+    assert_eq!(total, 0, "drain did not reset the ring buffers");
+}

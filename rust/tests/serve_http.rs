@@ -224,6 +224,31 @@ fn healthz_metrics_and_model_listing() {
     assert_eq!(status, 200);
     assert!(body.contains("requests submitted"), "table body: {body}");
 
+    // Prometheus exposition: same counter values as the JSON snapshot,
+    // with per-model labels for the tenant buckets.
+    let (status, body) = http_call(addr, "GET", "/metrics?format=prometheus", None);
+    assert_eq!(status, 200);
+    assert!(
+        body.contains("# TYPE lpdsvm_serve_submitted_total counter"),
+        "prometheus body: {body}"
+    );
+    assert!(
+        body.contains(&format!("lpdsvm_serve_submitted_total {submitted}\n")),
+        "prometheus body: {body}"
+    );
+    assert!(
+        body.contains("lpdsvm_serve_model_submitted_total{model=\"m\"}"),
+        "prometheus body: {body}"
+    );
+    assert!(
+        body.contains("lpdsvm_serve_latency_us_bucket"),
+        "prometheus body: {body}"
+    );
+    assert!(
+        body.contains("lpdsvm_serve_queue_wait_us_count"),
+        "prometheus body: {body}"
+    );
+
     server.shutdown();
     engine.shutdown();
 }
