@@ -1,0 +1,637 @@
+//! Crash-safe training checkpoints: versioned, checksummed, atomically
+//! replaced files that let a killed run resume **bit-identically**.
+//!
+//! Three artifact kinds live in one checkpoint directory, all written
+//! through [`crate::util::fsio`] (temp + fsync + rename, CRC-32 footer):
+//!
+//! * `<tag>.ckpt` — a mid-solve [`SolverSnapshot`]: everything the CD
+//!   loop carries across an epoch boundary (α, v, shrinking state, RNG
+//!   state, work counters). Written every `--checkpoint-every` epochs;
+//!   deleted once the solve completes.
+//! * `<tag>.done.ckpt` — the finished [`Solution`] of one binary solve.
+//!   A resumed run returns it verbatim instead of re-solving, so the
+//!   pairs that finished before the crash contribute the *same bits* to
+//!   the final model as in an uninterrupted run.
+//! * `<tag>.cell.ckpt` — a grid cell's journal entry: the fold errors
+//!   plus the per-pair warm-start α store. The grid's warm-start chain
+//!   along the C axis resumes from exactly the α values the killed run
+//!   produced, which is what keeps downstream cells bit-identical.
+//!
+//! The stage-1 factor `G` is deliberately **not** checkpointed: it is a
+//! deterministic function of (data, kernel, stage-1 config, seed) and is
+//! cheap relative to stage 2 at the scales where checkpointing matters,
+//! so resume recomputes it and only the solver state needs durability.
+//!
+//! Everything is little-endian binary — no floats or 64-bit counters ride
+//! through JSON (the repo's JSON numbers are f64, exact only below 2⁵³,
+//! and the RNG state is full-range `u64`).
+//!
+//! Tags encode the solve's position in the run: `pair_{a}_{b}` for
+//! training, `fold{f}_pair_{a}_{b}` for CV, `cell_g{gi}_c{ci}_…` for grid
+//! cells. A checkpoint only ever resumes the exact run shape it was taken
+//! from; size mismatches fail fast, corrupt files refuse with a clean
+//! checksum error instead of resuming wrong.
+
+use crate::coordinator::cv::CvResult;
+use crate::coordinator::ovo::WarmStore;
+use crate::solver::{solve_resumable, ProblemView, Solution, SolverOptions, SolverSnapshot};
+use crate::util::fsio;
+use std::path::{Path, PathBuf};
+
+/// Magic prefix of every checkpoint artifact.
+const MAGIC: &[u8; 8] = b"LPDCKPT1";
+/// Bumped when the binary layout changes incompatibly.
+const VERSION: u32 = 1;
+
+const KIND_SNAPSHOT: u8 = 1;
+const KIND_SOLUTION: u8 = 2;
+const KIND_CELL: u8 = 3;
+
+// ---------------------------------------------------------------------
+// Little-endian byte (de)serialization.
+
+#[derive(Default)]
+struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32s(&mut self, vs: &[f32]) {
+        self.u64(vs.len() as u64);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    fn u32s(&mut self, vs: &[u32]) {
+        self.u64(vs.len() as u64);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    fn u8s(&mut self, vs: &[u8]) {
+        self.u64(vs.len() as u64);
+        self.buf.extend_from_slice(vs);
+    }
+}
+
+struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.pos + n <= self.buf.len(),
+            "checkpoint payload truncated at offset {} (want {n} more bytes of {})",
+            self.pos,
+            self.buf.len()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn len(&mut self) -> anyhow::Result<usize> {
+        let n = self.u64()?;
+        // A corrupt length must not drive a huge allocation; lengths are
+        // always bounded by the remaining payload.
+        anyhow::ensure!(
+            (n as usize) <= self.buf.len(),
+            "checkpoint length field {n} exceeds payload size {}",
+            self.buf.len()
+        );
+        Ok(n as usize)
+    }
+    fn f32s(&mut self) -> anyhow::Result<Vec<f32>> {
+        let n = self.len()?;
+        let bytes = self.take(n * 4)?;
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    fn u32s(&mut self) -> anyhow::Result<Vec<u32>> {
+        let n = self.len()?;
+        let bytes = self.take(n * 4)?;
+        Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    fn u8s(&mut self) -> anyhow::Result<Vec<u8>> {
+        let n = self.len()?;
+        Ok(self.take(n)?.to_vec())
+    }
+    fn done(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.pos == self.buf.len(),
+            "checkpoint payload has {} trailing bytes",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+fn header(kind: u8) -> ByteWriter {
+    let mut w = ByteWriter::default();
+    w.u32(VERSION);
+    w.u8(kind);
+    w
+}
+
+fn open_payload(bytes: &[u8], want_kind: u8, what: &str) -> anyhow::Result<ByteReader<'_>> {
+    let mut r = ByteReader::new(bytes);
+    let version = r.u32()?;
+    anyhow::ensure!(
+        version == VERSION,
+        "checkpoint version {version} is not the supported version {VERSION}"
+    );
+    let kind = r.u8()?;
+    anyhow::ensure!(
+        kind == want_kind,
+        "checkpoint kind {kind} where a {what} (kind {want_kind}) was expected"
+    );
+    Ok(r)
+}
+
+// ---------------------------------------------------------------------
+// Context
+
+/// Handle on a checkpoint directory plus the snapshot cadence. `Sync`,
+/// so the OVO pair farm can checkpoint from pool threads.
+#[derive(Clone, Debug)]
+pub struct CheckpointCtx {
+    dir: PathBuf,
+    /// Epochs between mid-solve snapshots (0 = only `done` files).
+    pub every: usize,
+}
+
+impl CheckpointCtx {
+    /// Open (creating if needed) a checkpoint directory.
+    pub fn new(dir: &Path, every: usize) -> anyhow::Result<CheckpointCtx> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("creating checkpoint dir {}: {e}", dir.display()))?;
+        Ok(CheckpointCtx { dir: dir.to_path_buf(), every })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn snapshot_path(&self, tag: &str) -> PathBuf {
+        self.dir.join(format!("{tag}.ckpt"))
+    }
+    fn done_path(&self, tag: &str) -> PathBuf {
+        self.dir.join(format!("{tag}.done.ckpt"))
+    }
+    fn cell_path(&self, tag: &str) -> PathBuf {
+        self.dir.join(format!("{tag}.cell.ckpt"))
+    }
+
+    /// Persist a mid-solve snapshot for `tag` (atomic replace).
+    pub fn store_snapshot(&self, tag: &str, s: &SolverSnapshot) -> anyhow::Result<()> {
+        let mut w = header(KIND_SNAPSHOT);
+        w.u64(s.epochs as u64);
+        w.u64(s.steps);
+        w.u64(s.active_work);
+        w.u64(s.check_work);
+        w.u64(s.total_shrunk);
+        w.u64(s.total_reactivated);
+        for &r in &s.rng {
+            w.u64(r);
+        }
+        w.f32s(&s.alpha);
+        w.f32s(&s.v);
+        w.u32s(&s.active);
+        w.u8s(&s.unchanged);
+        w.u32s(&s.inactive);
+        fsio::write_checksummed(
+            &self.snapshot_path(tag),
+            MAGIC,
+            &w.buf,
+            "ckpt.after_tmp_write",
+        )
+    }
+
+    /// Load the mid-solve snapshot for `tag`, if one exists. Corruption
+    /// is an error, not a silent cold start.
+    pub fn load_snapshot(&self, tag: &str) -> anyhow::Result<Option<SolverSnapshot>> {
+        let Some(bytes) = fsio::read_checksummed(&self.snapshot_path(tag), MAGIC)? else {
+            return Ok(None);
+        };
+        let mut r = open_payload(&bytes, KIND_SNAPSHOT, "solver snapshot")?;
+        let epochs = r.u64()? as usize;
+        let steps = r.u64()?;
+        let active_work = r.u64()?;
+        let check_work = r.u64()?;
+        let total_shrunk = r.u64()?;
+        let total_reactivated = r.u64()?;
+        let rng = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+        let alpha = r.f32s()?;
+        let v = r.f32s()?;
+        let active = r.u32s()?;
+        let unchanged = r.u8s()?;
+        let inactive = r.u32s()?;
+        r.done()?;
+        Ok(Some(SolverSnapshot {
+            epochs,
+            steps,
+            alpha,
+            v,
+            active,
+            unchanged,
+            inactive,
+            total_shrunk,
+            total_reactivated,
+            rng,
+            active_work,
+            check_work,
+        }))
+    }
+
+    /// Record a completed solve for `tag` and drop its (now redundant)
+    /// mid-solve snapshot.
+    pub fn store_solution(&self, tag: &str, s: &Solution) -> anyhow::Result<()> {
+        let mut w = header(KIND_SOLUTION);
+        w.u64(s.steps);
+        w.u64(s.epochs as u64);
+        w.u64(s.sv_count as u64);
+        w.u64(s.final_active as u64);
+        w.u8(s.converged as u8);
+        w.f64(s.objective);
+        w.f64(s.violation);
+        w.f64(s.train_secs);
+        w.f32s(&s.alpha);
+        w.f32s(&s.w);
+        fsio::write_checksummed(&self.done_path(tag), MAGIC, &w.buf, "ckpt.after_tmp_write")?;
+        let _ = std::fs::remove_file(self.snapshot_path(tag));
+        Ok(())
+    }
+
+    /// Load a completed solve for `tag`, if recorded.
+    pub fn load_solution(&self, tag: &str) -> anyhow::Result<Option<Solution>> {
+        let Some(bytes) = fsio::read_checksummed(&self.done_path(tag), MAGIC)? else {
+            return Ok(None);
+        };
+        let mut r = open_payload(&bytes, KIND_SOLUTION, "solution")?;
+        let steps = r.u64()?;
+        let epochs = r.u64()? as usize;
+        let sv_count = r.u64()? as usize;
+        let final_active = r.u64()? as usize;
+        let converged = r.u8()? != 0;
+        let objective = r.f64()?;
+        let violation = r.f64()?;
+        let train_secs = r.f64()?;
+        let alpha = r.f32s()?;
+        let w = r.f32s()?;
+        r.done()?;
+        Ok(Some(Solution {
+            alpha,
+            w,
+            objective,
+            steps,
+            epochs,
+            sv_count,
+            converged,
+            violation,
+            train_secs,
+            final_active,
+        }))
+    }
+
+    /// Run one checkpointed solve: return the recorded solution if `tag`
+    /// already completed, otherwise resume from its snapshot (if any) and
+    /// run to completion, snapshotting every [`CheckpointCtx::every`]
+    /// epochs along the way.
+    ///
+    /// Snapshot *writes* that fail are logged and skipped — losing a
+    /// checkpoint degrades resumability, not the training run. Corrupt
+    /// files on the *read* side are hard errors.
+    pub fn solve(
+        &self,
+        tag: &str,
+        problem: &ProblemView,
+        opts: &SolverOptions,
+    ) -> anyhow::Result<Solution> {
+        if let Some(sol) = self.load_solution(tag)? {
+            crate::log_debug!("ckpt", "{tag}: already complete, skipping solve");
+            return Ok(sol);
+        }
+        let resume = self.load_snapshot(tag)?;
+        if let Some(s) = &resume {
+            anyhow::ensure!(
+                s.alpha.len() == problem.len() && s.v.len() == problem.dim(),
+                "checkpoint {tag} is for a {}-variable problem but this run has {} — \
+                 the checkpoint dir belongs to a different run configuration",
+                s.alpha.len(),
+                problem.len()
+            );
+            crate::log_info!("ckpt", "{tag}: resuming at epoch {}", s.epochs);
+        }
+        let sol = solve_resumable(problem, opts, resume, self.every, |snap| {
+            if let Err(e) = self.store_snapshot(tag, snap) {
+                crate::log_warn!("ckpt", "{tag}: snapshot at epoch {} failed: {e:#}", snap.epochs);
+            }
+        });
+        if let Err(e) = self.store_solution(tag, &sol) {
+            crate::log_warn!("ckpt", "{tag}: recording completion failed: {e:#}");
+        }
+        Ok(sol)
+    }
+
+    /// Journal a completed grid cell: its CV result plus the per-pair
+    /// warm-start α store the next C column chains from.
+    pub fn store_cell(
+        &self,
+        tag: &str,
+        cv: &CvResult,
+        stores: &[WarmStore],
+    ) -> anyhow::Result<()> {
+        let mut w = header(KIND_CELL);
+        w.u64(cv.fold_errors.len() as u64);
+        for &e in &cv.fold_errors {
+            w.f64(e);
+        }
+        w.f64(cv.mean_error);
+        w.u64(cv.n_binary_problems as u64);
+        w.f64(cv.total_secs);
+        w.u64(stores.len() as u64);
+        for store in stores {
+            w.u64(store.len() as u64);
+            for entry in store {
+                match entry {
+                    Some(alpha) => {
+                        w.u8(1);
+                        w.f32s(alpha);
+                    }
+                    None => w.u8(0),
+                }
+            }
+        }
+        fsio::write_checksummed(&self.cell_path(tag), MAGIC, &w.buf, "ckpt.after_tmp_write")
+    }
+
+    /// Load a journaled grid cell, if recorded.
+    #[allow(clippy::type_complexity)]
+    pub fn load_cell(&self, tag: &str) -> anyhow::Result<Option<(CvResult, Vec<WarmStore>)>> {
+        let Some(bytes) = fsio::read_checksummed(&self.cell_path(tag), MAGIC)? else {
+            return Ok(None);
+        };
+        let mut r = open_payload(&bytes, KIND_CELL, "grid cell journal")?;
+        let folds = r.len()?;
+        let mut fold_errors = Vec::with_capacity(folds);
+        for _ in 0..folds {
+            fold_errors.push(r.f64()?);
+        }
+        let mean_error = r.f64()?;
+        let n_binary_problems = r.u64()? as usize;
+        let total_secs = r.f64()?;
+        let n_stores = r.len()?;
+        let mut stores = Vec::with_capacity(n_stores);
+        for _ in 0..n_stores {
+            let n_entries = r.len()?;
+            let mut store: WarmStore = Vec::with_capacity(n_entries);
+            for _ in 0..n_entries {
+                if r.u8()? != 0 {
+                    store.push(Some(r.f32s()?));
+                } else {
+                    store.push(None);
+                }
+            }
+            stores.push(store);
+        }
+        r.done()?;
+        Ok(Some((
+            CvResult { fold_errors, mean_error, n_binary_problems, total_secs },
+            stores,
+        )))
+    }
+
+    /// Best-effort removal of every checkpoint artifact whose tag starts
+    /// with `prefix` — called when a larger unit (a grid cell) completes
+    /// and its per-pair files become redundant.
+    pub fn gc_prefix(&self, prefix: &str) {
+        let Ok(entries) = std::fs::read_dir(&self.dir) else { return };
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if name.starts_with(prefix) && name.ends_with(".ckpt") && !name.ends_with(".cell.ckpt")
+            {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::util::rng::Rng;
+
+    fn temp_ctx(name: &str) -> CheckpointCtx {
+        let dir = std::env::temp_dir().join(format!("lpdsvm_ckpt_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        CheckpointCtx::new(&dir, 1).unwrap()
+    }
+
+    fn toy_problem(n: usize, seed: u64) -> (Mat, Vec<usize>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let mut g = Mat::zeros(n, 3);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let cls = if i % 2 == 0 { 1.0f32 } else { -1.0 };
+            g.set(i, 0, cls * 2.0 + rng.normal() as f32 * 0.5);
+            g.set(i, 1, rng.normal() as f32 * 0.5);
+            g.set(i, 2, rng.normal() as f32 * 0.5);
+            y.push(cls);
+        }
+        (g, (0..n).collect(), y)
+    }
+
+    #[test]
+    fn snapshot_roundtrip_is_exact() {
+        let ctx = temp_ctx("snap");
+        let s = SolverSnapshot {
+            epochs: 7,
+            steps: 12345,
+            alpha: vec![0.0, 0.5, 1.0, f32::MIN_POSITIVE],
+            v: vec![-1.25, 3.5e-20, 0.0],
+            active: vec![3, 0, 2],
+            unchanged: vec![0, 4, 5, 1],
+            inactive: vec![1],
+            total_shrunk: 9,
+            total_reactivated: 2,
+            rng: [u64::MAX, 1, 0x0123_4567_89AB_CDEF, 42],
+            active_work: 999,
+            check_work: 111,
+        };
+        ctx.store_snapshot("t", &s).unwrap();
+        let r = ctx.load_snapshot("t").unwrap().unwrap();
+        assert_eq!(r.epochs, s.epochs);
+        assert_eq!(r.steps, s.steps);
+        assert_eq!(r.alpha, s.alpha);
+        assert_eq!(r.v, s.v);
+        assert_eq!(r.active, s.active);
+        assert_eq!(r.unchanged, s.unchanged);
+        assert_eq!(r.inactive, s.inactive);
+        assert_eq!(r.total_shrunk, s.total_shrunk);
+        assert_eq!(r.total_reactivated, s.total_reactivated);
+        assert_eq!(r.rng, s.rng);
+        assert_eq!(r.active_work, s.active_work);
+        assert_eq!(r.check_work, s.check_work);
+        let _ = std::fs::remove_dir_all(ctx.dir());
+    }
+
+    #[test]
+    fn missing_artifacts_are_none() {
+        let ctx = temp_ctx("none");
+        assert!(ctx.load_snapshot("x").unwrap().is_none());
+        assert!(ctx.load_solution("x").unwrap().is_none());
+        assert!(ctx.load_cell("x").unwrap().is_none());
+        let _ = std::fs::remove_dir_all(ctx.dir());
+    }
+
+    #[test]
+    fn corrupted_checksum_refuses_resume() {
+        let ctx = temp_ctx("corrupt");
+        let (g, rows, y) = toy_problem(40, 1);
+        let p = ProblemView::new(&g, &rows, &y);
+        let opts = SolverOptions::default();
+        ctx.solve("pair_0_1", &p, &opts).unwrap();
+        // Corrupt the done file in the middle of the alpha payload.
+        let path = ctx.dir().join("pair_0_1.done.ckpt");
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ctx.solve("pair_0_1", &p, &opts).unwrap_err();
+        assert!(err.to_string().contains("checksum mismatch"), "{err:#}");
+        let _ = std::fs::remove_dir_all(ctx.dir());
+    }
+
+    #[test]
+    fn completed_solve_is_returned_verbatim() {
+        let ctx = temp_ctx("done");
+        let (g, rows, y) = toy_problem(60, 2);
+        let p = ProblemView::new(&g, &rows, &y);
+        let opts = SolverOptions { eps: 1e-4, ..Default::default() };
+        let first = ctx.solve("t", &p, &opts).unwrap();
+        // Snapshot was cleaned up, done file remains.
+        assert!(!ctx.dir().join("t.ckpt").exists());
+        assert!(ctx.dir().join("t.done.ckpt").exists());
+        let second = ctx.solve("t", &p, &opts).unwrap();
+        assert_eq!(first.alpha, second.alpha);
+        assert_eq!(first.w, second.w);
+        assert_eq!(first.steps, second.steps);
+        assert_eq!(first.objective, second.objective);
+        let _ = std::fs::remove_dir_all(ctx.dir());
+    }
+
+    #[test]
+    fn resume_mid_solve_matches_uninterrupted_bits() {
+        // Simulate the crash: run once capturing a snapshot, then hand
+        // only that snapshot to a fresh context and finish the solve.
+        let (g, rows, mut y) = toy_problem(120, 3);
+        let mut rng = Rng::new(5);
+        for yi in y.iter_mut() {
+            if rng.bool(0.2) {
+                *yi = -*yi;
+            }
+        }
+        let p = ProblemView::new(&g, &rows, &y);
+        let opts = SolverOptions { c: 2.0, eps: 1e-4, ..Default::default() };
+        let uninterrupted = crate::solver::solve(&p, &opts);
+
+        let ctx = temp_ctx("resume");
+        // "Crash" after the first snapshot: run the solve but keep only
+        // what the checkpoint file holds.
+        let mut first_snap = None;
+        let _ = solve_resumable(&p, &opts, None, 1, |s| {
+            if first_snap.is_none() {
+                first_snap = Some(s.clone());
+            }
+        });
+        ctx.store_snapshot("t", &first_snap.expect("at least one epoch")).unwrap();
+
+        let resumed = ctx.solve("t", &p, &opts).unwrap();
+        assert_eq!(resumed.alpha, uninterrupted.alpha);
+        assert_eq!(resumed.w, uninterrupted.w);
+        assert_eq!(resumed.steps, uninterrupted.steps);
+        let _ = std::fs::remove_dir_all(ctx.dir());
+    }
+
+    #[test]
+    fn cell_journal_roundtrip() {
+        let ctx = temp_ctx("cell");
+        let cv = CvResult {
+            fold_errors: vec![0.125, 0.0625],
+            mean_error: 0.09375,
+            n_binary_problems: 6,
+            total_secs: 1.5,
+        };
+        let stores: Vec<WarmStore> = vec![
+            vec![Some(vec![0.5, 0.25]), None, Some(vec![])],
+            vec![None],
+        ];
+        ctx.store_cell("cell_g0_c1", &cv, &stores).unwrap();
+        let (rcv, rstores) = ctx.load_cell("cell_g0_c1").unwrap().unwrap();
+        assert_eq!(rcv.fold_errors, cv.fold_errors);
+        assert_eq!(rcv.mean_error, cv.mean_error);
+        assert_eq!(rcv.n_binary_problems, cv.n_binary_problems);
+        assert_eq!(rstores, stores);
+        let _ = std::fs::remove_dir_all(ctx.dir());
+    }
+
+    #[test]
+    fn gc_prefix_spares_cell_journals() {
+        let ctx = temp_ctx("gc");
+        let s = SolverSnapshot {
+            epochs: 1,
+            steps: 1,
+            alpha: vec![0.0],
+            v: vec![0.0],
+            active: vec![0],
+            unchanged: vec![0],
+            inactive: vec![],
+            total_shrunk: 0,
+            total_reactivated: 0,
+            rng: [1, 2, 3, 4],
+            active_work: 1,
+            check_work: 0,
+        };
+        ctx.store_snapshot("cell_g0_c0_fold0_pair_0_1", &s).unwrap();
+        let cv = CvResult {
+            fold_errors: vec![0.0],
+            mean_error: 0.0,
+            n_binary_problems: 1,
+            total_secs: 0.0,
+        };
+        ctx.store_cell("cell_g0_c0", &cv, &[]).unwrap();
+        ctx.gc_prefix("cell_g0_c0");
+        assert!(ctx.load_snapshot("cell_g0_c0_fold0_pair_0_1").unwrap().is_none());
+        assert!(ctx.load_cell("cell_g0_c0").unwrap().is_some());
+        let _ = std::fs::remove_dir_all(ctx.dir());
+    }
+}

@@ -49,6 +49,18 @@ pub fn cross_validate(
     cfg: &TrainConfig,
     cv: &CvConfig,
 ) -> anyhow::Result<CvResult> {
+    cross_validate_ckpt(data, cfg, cv, None)
+}
+
+/// [`cross_validate`] with crash-safe checkpointing of every fold's pair
+/// solves (stage 1 and the fold assignment are deterministic and
+/// recomputed on resume).
+pub fn cross_validate_ckpt(
+    data: &Dataset,
+    cfg: &TrainConfig,
+    cv: &CvConfig,
+    ckpt: Option<&super::checkpoint::CheckpointCtx>,
+) -> anyhow::Result<CvResult> {
     let mut clock = StageClock::new();
     let threads = cfg.effective_threads();
     let stage1 = cfg.stage1.with_thread_fallback(threads);
@@ -60,7 +72,8 @@ pub fn cross_validate(
         &mut clock,
     )?;
     let folds = Folds::stratified(&data.labels, cv.folds, &mut Rng::new(cv.seed));
-    cross_validate_shared(data, &factor, &folds, cfg, None).map(|(r, _)| r)
+    cross_validate_shared_ckpt(data, &factor, &folds, cfg, None, ckpt.map(|c| (c, "")))
+        .map(|(r, _)| r)
 }
 
 /// CV over a *precomputed* factor and fold assignment — the entry the grid
@@ -73,6 +86,20 @@ pub fn cross_validate_shared(
     folds: &Folds,
     cfg: &TrainConfig,
     warm: Option<&Vec<WarmStore>>,
+) -> anyhow::Result<(CvResult, Vec<WarmStore>)> {
+    cross_validate_shared_ckpt(data, factor, folds, cfg, warm, None)
+}
+
+/// [`cross_validate_shared`] with crash-safe checkpointing: `ckpt`
+/// carries a context plus a tag prefix, and fold `f`'s pair solves
+/// checkpoint under `{prefix}fold{f}_pair_{a}_{b}`.
+pub fn cross_validate_shared_ckpt(
+    data: &Dataset,
+    factor: &LowRankFactor,
+    folds: &Folds,
+    cfg: &TrainConfig,
+    warm: Option<&Vec<WarmStore>>,
+    ckpt: Option<(&super::checkpoint::CheckpointCtx, &str)>,
 ) -> anyhow::Result<(CvResult, Vec<WarmStore>)> {
     let t0 = std::time::Instant::now();
     let pairs = if data.n_classes == 2 {
@@ -108,6 +135,7 @@ pub fn cross_validate_shared(
         fold_span.arg("fold", f as f64);
         fold_span.arg("train_rows", train_idx.len() as f64);
         fold_span.arg("val_rows", val_idx.len() as f64);
+        let fold_ckpt = ckpt.map(|(ctx, prefix)| (ctx, format!("{prefix}fold{f}_")));
         let (heads, store) = ovo::train_all_pairs(
             &factor.g,
             &data.labels,
@@ -117,7 +145,8 @@ pub fn cross_validate_shared(
             threads,
             cfg.compact_pairs,
             warm.map(|w| &w[f]),
-        );
+            fold_ckpt.as_ref().map(|(c, p)| (*c, p.as_str())),
+        )?;
         let err = evaluate_heads(&factor.g, &heads, data, &val_idx);
         fold_span.arg("error", err);
         crate::log_debug!("cv", "fold={f} error={err:.4} pairs={}", pairs.len());

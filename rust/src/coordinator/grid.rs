@@ -6,7 +6,8 @@
 //! are warm-started from the previous C — together yielding the ×2–×7
 //! per-problem speed-ups of table 3.
 
-use crate::coordinator::cv::{cross_validate_shared, CvResult};
+use crate::coordinator::checkpoint::CheckpointCtx;
+use crate::coordinator::cv::{cross_validate_shared_ckpt, CvResult};
 use crate::coordinator::ovo::WarmStore;
 use crate::coordinator::train::TrainConfig;
 use crate::data::dataset::Dataset;
@@ -77,6 +78,21 @@ pub fn grid_search(
     base: &TrainConfig,
     grid: &GridConfig,
 ) -> anyhow::Result<GridResult> {
+    grid_search_ckpt(data, base, grid, None)
+}
+
+/// [`grid_search`] with a crash-safe per-cell completion journal. Each
+/// finished grid cell `(γ index, C index)` records its `CvResult` and
+/// warm stores under `cell_g{gi}_c{ci}.cell.ckpt`; a killed sweep
+/// re-invoked with the same arguments skips completed cells (their
+/// journaled warm stores keep the C-path warm-start chain bit-identical)
+/// and resumes mid-solve inside the first unfinished cell.
+pub fn grid_search_ckpt(
+    data: &Dataset,
+    base: &TrainConfig,
+    grid: &GridConfig,
+    ckpt: Option<&CheckpointCtx>,
+) -> anyhow::Result<GridResult> {
     anyhow::ensure!(!grid.c_values.is_empty() && !grid.gamma_values.is_empty());
     let t0 = std::time::Instant::now();
     let mut c_values = grid.c_values.clone();
@@ -95,7 +111,7 @@ pub fn grid_search(
     let stage1_cfg = base.stage1.with_thread_fallback(threads);
     let backend = NativeBackend::with_threads(threads);
 
-    for &gamma in &grid.gamma_values {
+    for (gi, &gamma) in grid.gamma_values.iter().enumerate() {
         // Stage 1: once per γ, shared by all C values and folds.
         let kernel = base.kernel.with_gamma(gamma);
         let mut clock = StageClock::new();
@@ -104,17 +120,42 @@ pub fn grid_search(
         stage1_secs += clock.total().as_secs_f64();
 
         let mut warm: Option<Vec<WarmStore>> = None;
-        for &c in &c_values {
+        for (ci, &c) in c_values.iter().enumerate() {
+            let cell_tag = format!("cell_g{gi}_c{ci}");
+            if let Some(ctx) = ckpt {
+                if let Some((cv, stores)) = ctx.load_cell(&cell_tag)? {
+                    crate::log_info!(
+                        "grid",
+                        "cell γ={gamma} C={c} already complete in journal, skipping"
+                    );
+                    n_problems += cv.n_binary_problems;
+                    points.push(GridPoint { c, gamma, cv });
+                    warm = Some(stores);
+                    continue;
+                }
+            }
             let mut cfg = base.clone();
             cfg.kernel = kernel;
             cfg.solver.c = c;
-            let (cv, stores) = cross_validate_shared(
+            let cell_prefix = format!("{cell_tag}_");
+            let (cv, stores) = cross_validate_shared_ckpt(
                 data,
                 &factor,
                 &folds,
                 &cfg,
                 if grid.warm_start { warm.as_ref() } else { None },
+                ckpt.map(|ctx| (ctx, cell_prefix.as_str())),
             )?;
+            if let Some(ctx) = ckpt {
+                // Journal the finished cell, then drop its per-solve
+                // checkpoints — the journal supersedes them. A journal
+                // write failure only degrades resumability.
+                if let Err(e) = ctx.store_cell(&cell_tag, &cv, &stores) {
+                    crate::log_warn!("grid", "cell journal write failed for {cell_tag}: {e}");
+                } else {
+                    ctx.gc_prefix(&cell_prefix);
+                }
+            }
             n_problems += cv.n_binary_problems;
             points.push(GridPoint { c, gamma, cv });
             warm = Some(stores);
@@ -202,6 +243,48 @@ mod tests {
                 pw.c
             );
         }
+    }
+
+    #[test]
+    fn checkpointed_grid_matches_plain_and_resumes_from_journal() {
+        let spec = PaperDataset::Adult.spec(0.006, 41);
+        let data = spec.synth.generate();
+        let grid = GridConfig {
+            c_values: vec![0.5, 2.0],
+            gamma_values: vec![0.05],
+            cv_folds: 2,
+            seed: 9,
+            warm_start: true,
+        };
+        let plain = grid_search(&data, &base_cfg(0.05), &grid).unwrap();
+
+        let dir = std::env::temp_dir()
+            .join(format!("lpdsvm_grid_ckpt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ctx = CheckpointCtx::new(&dir, 1).unwrap();
+        let first = grid_search_ckpt(&data, &base_cfg(0.05), &grid, Some(&ctx)).unwrap();
+        // A re-run over the same journal must skip every cell and still
+        // reproduce the identical sweep (the bit-identity contract).
+        let resumed = grid_search_ckpt(&data, &base_cfg(0.05), &grid, Some(&ctx)).unwrap();
+        for (a, b) in plain.points.iter().zip(&first.points) {
+            assert_eq!(a.cv.fold_errors, b.cv.fold_errors, "ckpt changed results");
+        }
+        for (a, b) in first.points.iter().zip(&resumed.points) {
+            assert_eq!(a.cv.fold_errors, b.cv.fold_errors, "journal replay diverged");
+        }
+        assert_eq!(first.best_c, resumed.best_c);
+        assert_eq!(first.n_binary_problems, resumed.n_binary_problems);
+        // Journals persist; per-solve checkpoints were garbage-collected.
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert!(names.iter().any(|n| n.ends_with(".cell.ckpt")), "{names:?}");
+        assert!(
+            names.iter().all(|n| n.ends_with(".cell.ckpt")),
+            "stray per-solve checkpoints: {names:?}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -16,8 +16,11 @@
 //! (every job reads shared immutable state and owns its output slot);
 //! fold assignment is seed-deterministic and never yields an empty
 //! fold; warm starts only ever change iteration counts, not the
-//! solution a run converges to.
+//! solution a run converges to; a run killed at any checkpoint boundary
+//! and resumed via [`checkpoint`] produces a bit-identical model to an
+//! uninterrupted run.
 
+pub mod checkpoint;
 pub mod cv;
 pub mod grid;
 pub mod ovo;

@@ -5,9 +5,10 @@
 //! problems (1000 classes) and notes the scheme is "a welcome opportunity
 //! for parallelization" — pairs are scheduled over the thread pool here.
 
+use crate::coordinator::checkpoint::CheckpointCtx;
 use crate::linalg::Mat;
 use crate::model::multiclass::BinaryHead;
-use crate::solver::{solve, ProblemView, SolverOptions};
+use crate::solver::{solve, ProblemView, Solution, SolverOptions};
 use crate::util::threads::parallel_map;
 
 /// Warm-start storage: per-pair dual variables from a previous run with
@@ -22,6 +23,11 @@ pub type WarmStore = Vec<Option<Vec<f32>>>;
 /// `2n/c` of `G`'s rows, so compaction converts scattered row access into
 /// sequential scans — the same cache effect the paper credits shrinking
 /// with. Returns the head and the final dual variables (for warm stores).
+///
+/// `ckpt` is a crash-safety context plus the solve's unique tag: the
+/// solve then resumes from (and records into) that tag's checkpoint
+/// files. A checkpoint read failure (corrupt file) is an error; without
+/// `ckpt` the function cannot fail.
 #[allow(clippy::too_many_arguments)]
 pub fn train_pair(
     g: &Mat,
@@ -32,7 +38,8 @@ pub fn train_pair(
     opts: &SolverOptions,
     compact: bool,
     warm: Option<&[f32]>,
-) -> (BinaryHead, Vec<f32>) {
+    ckpt: Option<(&CheckpointCtx, &str)>,
+) -> anyhow::Result<(BinaryHead, Vec<f32>)> {
     // Deterministic row order: subset order filtered by class.
     let rows: Vec<usize> = subset
         .iter()
@@ -49,14 +56,20 @@ pub fn train_pair(
     // De-correlate pair permutations.
     local_opts.seed = opts.seed ^ ((a as u64) << 32 | b as u64);
 
+    let run = |p: &ProblemView| -> anyhow::Result<Solution> {
+        match ckpt {
+            Some((ctx, tag)) => ctx.solve(tag, p, &local_opts),
+            None => Ok(solve(p, &local_opts)),
+        }
+    };
     let sol = if compact {
         let compacted = g.select_rows(&rows);
         let local_rows: Vec<usize> = (0..rows.len()).collect();
         let p = ProblemView::new(&compacted, &local_rows, &y);
-        solve(&p, &local_opts)
+        run(&p)?
     } else {
         let p = ProblemView::new(g, &rows, &y);
-        solve(&p, &local_opts)
+        run(&p)?
     };
 
     let head = BinaryHead {
@@ -67,12 +80,17 @@ pub fn train_pair(
         sv_count: sol.sv_count,
         steps: sol.steps,
     };
-    (head, sol.alpha)
+    Ok((head, sol.alpha))
 }
 
 /// Train all `c·(c−1)/2` pair heads in parallel. `pairs` fixes the job
 /// order; `warm` (if given) must be aligned with it. Returns heads in pair
 /// order plus the updated warm store.
+///
+/// `ckpt` carries a checkpoint context plus a tag *prefix*; each pair's
+/// solve checkpoints under `{prefix}pair_{a}_{b}`. The context is `Sync`,
+/// so pool threads checkpoint their own solves independently.
+#[allow(clippy::too_many_arguments)]
 pub fn train_all_pairs(
     g: &Mat,
     labels: &[u32],
@@ -82,7 +100,8 @@ pub fn train_all_pairs(
     threads: usize,
     compact: bool,
     warm: Option<&WarmStore>,
-) -> (Vec<BinaryHead>, WarmStore) {
+    ckpt: Option<(&CheckpointCtx, &str)>,
+) -> anyhow::Result<(Vec<BinaryHead>, WarmStore)> {
     let results = parallel_map(pairs.len(), threads, |pi| {
         let (a, b) = pairs[pi];
         // One span per OVO job, attributed to whichever pool thread (or
@@ -91,15 +110,21 @@ pub fn train_all_pairs(
         span.arg("a", a as f64);
         span.arg("b", b as f64);
         let warm_alpha = warm.and_then(|w| w[pi].as_deref());
-        train_pair(g, labels, subset, a, b, opts, compact, warm_alpha)
+        let tag = ckpt.map(|(_, prefix)| format!("{prefix}pair_{a}_{b}"));
+        let pair_ckpt = match (&ckpt, &tag) {
+            (Some((ctx, _)), Some(t)) => Some((*ctx, t.as_str())),
+            _ => None,
+        };
+        train_pair(g, labels, subset, a, b, opts, compact, warm_alpha, pair_ckpt)
     });
     let mut heads = Vec::with_capacity(results.len());
     let mut store: WarmStore = Vec::with_capacity(results.len());
-    for (head, alpha) in results {
+    for result in results {
+        let (head, alpha) = result?;
         heads.push(head);
         store.push(Some(alpha));
     }
-    (heads, store)
+    Ok((heads, store))
 }
 
 #[cfg(test)]
@@ -147,8 +172,10 @@ mod tests {
             eps: 1e-4,
             ..Default::default()
         };
-        let (h1, _) = train_pair(&factor.g, &labels, &subset, 0, 2, &opts, true, None);
-        let (h2, _) = train_pair(&factor.g, &labels, &subset, 0, 2, &opts, false, None);
+        let (h1, _) =
+            train_pair(&factor.g, &labels, &subset, 0, 2, &opts, true, None, None).unwrap();
+        let (h2, _) =
+            train_pair(&factor.g, &labels, &subset, 0, 2, &opts, false, None, None).unwrap();
         assert!(
             (h1.objective - h2.objective).abs() < 1e-3 * (1.0 + h2.objective.abs()),
             "{} vs {}",
@@ -164,7 +191,8 @@ mod tests {
         let pairs = vec![(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)];
         let opts = SolverOptions::default();
         let (heads, store) =
-            train_all_pairs(&factor.g, &labels, &subset, &pairs, &opts, 2, true, None);
+            train_all_pairs(&factor.g, &labels, &subset, &pairs, &opts, 2, true, None, None)
+                .unwrap();
         assert_eq!(heads.len(), 6);
         assert_eq!(store.len(), 6);
         for (h, &(a, b)) in heads.iter().zip(&pairs) {
@@ -184,14 +212,16 @@ mod tests {
             ..Default::default()
         };
         let (_, store) =
-            train_all_pairs(&factor.g, &labels, &subset, &pairs, &opts_small, 1, true, None);
+            train_all_pairs(&factor.g, &labels, &subset, &pairs, &opts_small, 1, true, None, None)
+                .unwrap();
         let opts_big = SolverOptions {
             c: 0.5,
             eps: 1e-4,
             ..Default::default()
         };
         let (cold, _) =
-            train_all_pairs(&factor.g, &labels, &subset, &pairs, &opts_big, 1, true, None);
+            train_all_pairs(&factor.g, &labels, &subset, &pairs, &opts_big, 1, true, None, None)
+                .unwrap();
         let (warm, _) = train_all_pairs(
             &factor.g,
             &labels,
@@ -201,7 +231,9 @@ mod tests {
             1,
             true,
             Some(&store),
-        );
+            None,
+        )
+        .unwrap();
         let cold_steps: u64 = cold.iter().map(|h| h.steps).sum();
         let warm_steps: u64 = warm.iter().map(|h| h.steps).sum();
         // Warm starts should not cost noticeably more work than cold
@@ -226,7 +258,8 @@ mod tests {
         // Train only on the first half; verify the solver saw <= half rows.
         let subset: Vec<usize> = (0..labels.len() / 2).collect();
         let opts = SolverOptions::default();
-        let (head, alpha) = train_pair(&factor.g, &labels, &subset, 0, 1, &opts, true, None);
+        let (head, alpha) =
+            train_pair(&factor.g, &labels, &subset, 0, 1, &opts, true, None, None).unwrap();
         assert_eq!(alpha.len(), subset.len());
         assert!(head.sv_count <= subset.len());
     }

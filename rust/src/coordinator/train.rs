@@ -65,6 +65,21 @@ pub fn train_with_backend(
     backend: &dyn Stage1Backend,
     clock: &mut StageClock,
 ) -> anyhow::Result<MulticlassModel> {
+    train_with_backend_ckpt(data, cfg, backend, clock, None)
+}
+
+/// [`train_with_backend`] with crash-safe checkpointing: when `ckpt` is
+/// set, every stage-2 solve resumes from (and records into) the
+/// checkpoint directory, so a killed run re-invoked with the same
+/// arguments produces a bit-identical model. Stage 1 is recomputed on
+/// resume — it is deterministic from the config and not worth the disk.
+pub fn train_with_backend_ckpt(
+    data: &Dataset,
+    cfg: &TrainConfig,
+    backend: &dyn Stage1Backend,
+    clock: &mut StageClock,
+    ckpt: Option<&super::checkpoint::CheckpointCtx>,
+) -> anyhow::Result<MulticlassModel> {
     anyhow::ensure!(!data.is_empty(), "empty dataset");
     anyhow::ensure!(data.n_classes >= 2, "need at least two classes");
     let threads = cfg.effective_threads();
@@ -91,7 +106,7 @@ pub fn train_with_backend(
 
     // Stage 2.
     let subset: Vec<usize> = (0..data.len()).collect();
-    let (heads, kind) = clock.time("linear_train", || {
+    let (heads, kind) = clock.time("linear_train", || -> anyhow::Result<_> {
         if data.n_classes == 2 {
             let (head, _) = super::ovo::train_pair(
                 &factor.g,
@@ -102,8 +117,9 @@ pub fn train_with_backend(
                 &cfg.solver,
                 false, // binary uses all rows; compaction buys nothing
                 None,
-            );
-            (vec![head], ModelKind::Binary)
+                ckpt.map(|c| (c, "pair_0_1")),
+            )?;
+            Ok((vec![head], ModelKind::Binary))
         } else {
             let pairs = data.class_pairs();
             let (heads, _) = super::ovo::train_all_pairs(
@@ -115,15 +131,16 @@ pub fn train_with_backend(
                 threads,
                 cfg.compact_pairs,
                 None,
-            );
-            (
+                ckpt.map(|c| (c, "")),
+            )?;
+            Ok((
                 heads,
                 ModelKind::OneVsOne {
                     n_classes: data.n_classes,
                 },
-            )
+            ))
         }
-    });
+    })?;
 
     span.arg("rank", factor.rank as f64);
     span.arg("heads", heads.len() as f64);

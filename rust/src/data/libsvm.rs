@@ -16,6 +16,7 @@ use std::path::Path;
 /// remapped to contiguous class ids `0..n_classes` in sorted label order
 /// (so −1 → 0, +1 → 1 for the usual binary convention).
 pub fn read(path: &Path) -> Result<Dataset> {
+    crate::util::fault::point("data.load")?;
     let file = std::fs::File::open(path)
         .with_context(|| format!("opening LIBSVM file {}", path.display()))?;
     parse(BufReader::new(file), &path.display().to_string())

@@ -15,9 +15,10 @@
 //! report tables, summary lines — intentionally stays on stdout so it
 //! pipes cleanly past the diagnostics.
 
-use lpdsvm::coordinator::cv::{cross_validate, CvConfig};
-use lpdsvm::coordinator::grid::{grid_search, GridConfig};
-use lpdsvm::coordinator::train::{train_with_backend, TrainConfig};
+use lpdsvm::coordinator::checkpoint::CheckpointCtx;
+use lpdsvm::coordinator::cv::{cross_validate_ckpt, CvConfig};
+use lpdsvm::coordinator::grid::{grid_search_ckpt, GridConfig};
+use lpdsvm::coordinator::train::{train_with_backend, train_with_backend_ckpt, TrainConfig};
 use lpdsvm::data::sparse::SparseMatrix;
 use lpdsvm::data::synth::PaperDataset;
 use lpdsvm::data::{dataset::Dataset, libsvm};
@@ -40,6 +41,13 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 fn main() {
+    // Arm the deterministic fault-injection harness before anything can
+    // hit a fault point. A malformed schedule is a usage error: fail
+    // loudly up front rather than silently running without faults.
+    if let Err(e) = lpdsvm::util::fault::init_from_env() {
+        eprintln!("error: invalid LPDSVM_FAULTS: {e:#}");
+        std::process::exit(2);
+    }
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, rest) = match args.split_first() {
         Some((c, r)) => (c.as_str(), r.to_vec()),
@@ -260,10 +268,33 @@ fn train_args() -> Vec<ArgSpec> {
         ArgSpec::opt("threads", "0", "worker threads (0 = auto)"),
         ArgSpec::opt("seed", "42", "RNG seed"),
         ArgSpec::flag("no-shrinking", "disable shrinking"),
+        ArgSpec::opt(
+            "checkpoint",
+            "",
+            "crash-safe checkpoint directory; a re-run with the same arguments \
+             resumes from it bit-identically",
+        ),
+        ArgSpec::opt(
+            "checkpoint-every",
+            "5",
+            "checkpoint each solver every N epochs (with --checkpoint)",
+        ),
     ]
     .into_iter()
     .chain(obs_args())
     .collect()
+}
+
+/// Build the optional checkpoint context from `--checkpoint` /
+/// `--checkpoint-every` (shared by train, cv, and grid).
+fn ckpt_from(p: &lpdsvm::util::cli::Parsed) -> anyhow::Result<Option<CheckpointCtx>> {
+    let dir = p.str("checkpoint");
+    if dir.is_empty() {
+        return Ok(None);
+    }
+    let every = p.usize("checkpoint-every")?;
+    anyhow::ensure!(every > 0, "--checkpoint-every must be >= 1");
+    Ok(Some(CheckpointCtx::new(Path::new(dir), every)?))
 }
 
 fn cmd_train(args: &[String]) -> anyhow::Result<()> {
@@ -274,9 +305,10 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
     obs_setup(&p)?;
     let data = load_data(p.str("data"))?;
     let cfg = train_cfg_from(&p)?;
+    let ckpt = ckpt_from(&p)?;
     let mut clock = StageClock::new();
     let model = with_backend(p.str("backend"), |b| {
-        train_with_backend(&data, &cfg, b, &mut clock)
+        train_with_backend_ckpt(&data, &cfg, b, &mut clock, ckpt.as_ref())
     })?;
     model_io::save(&model, Path::new(p.str("model-out")))?;
     let train_err = model.error_rate(&data.x, &data.labels)?;
@@ -339,7 +371,8 @@ fn cmd_cv(args: &[String]) -> anyhow::Result<()> {
         folds: p.usize("folds")?,
         seed: p.u64("seed")?,
     };
-    let r = cross_validate(&data, &cfg, &cv)?;
+    let ckpt = ckpt_from(&p)?;
+    let r = cross_validate_ckpt(&data, &cfg, &cv, ckpt.as_ref())?;
     let mut t = Table::new("cross-validation", &["fold", "error %"]);
     for (i, e) in r.fold_errors.iter().enumerate() {
         t.row(&[i.to_string(), Table::pct(*e)]);
@@ -385,7 +418,8 @@ fn cmd_grid(args: &[String]) -> anyhow::Result<()> {
         seed: p.u64("seed")?,
         warm_start: !p.flag("no-warm-start"),
     };
-    let r = grid_search(&data, &base, &grid)?;
+    let ckpt = ckpt_from(&p)?;
+    let r = grid_search_ckpt(&data, &base, &grid, ckpt.as_ref())?;
     let mut t = Table::new("grid search", &["gamma", "C", "cv error %"]);
     for pt in &r.points {
         t.row(&[
@@ -445,6 +479,32 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             "model-weight",
             "",
             "comma-separated NAME=W scheduler weights (e.g. default=4,tenant1=1)",
+        ),
+        ArgSpec::flag(
+            "no-supervise",
+            "disable worker supervision (panicked workers stay dead; debugging aid)",
+        ),
+        ArgSpec::opt(
+            "quarantine-after",
+            "3",
+            "quarantine a model after this many consecutive batch panics (0 = never)",
+        ),
+        ArgSpec::opt(
+            "quarantine-cooldown-ms",
+            "250",
+            "cooldown before a quarantined model gets a half-open probe batch",
+        ),
+        ArgSpec::opt(
+            "retries",
+            "0",
+            "load generator: retry retryable failures up to this many rounds \
+             (exponential backoff with jitter)",
+        ),
+        ArgSpec::opt(
+            "retry-budget",
+            "0",
+            "load generator: total resubmissions allowed across all retry rounds \
+             (0 = one per original request)",
         ),
         ArgSpec::opt("listen", "", "serve over HTTP on this address (e.g. 127.0.0.1:8080)"),
         ArgSpec::opt(
@@ -575,6 +635,9 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         workers,
         max_queue,
         shed_policy,
+        supervise: !p.flag("no-supervise"),
+        panic_quarantine_after: p.u64("quarantine-after")? as u32,
+        quarantine_cooldown: Duration::from_millis(p.u64("quarantine-cooldown-ms")?),
     };
     let provider = provider_for(p.str("backend"))?;
     let engine = Arc::new(ServeEngine::start_with_provider(
@@ -678,6 +741,7 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     }
     let mut errors = 0usize;
     let mut mismatches = 0usize;
+    let mut retryable: Vec<usize> = Vec::new();
     for (i, t) in tickets.iter().enumerate() {
         match t.wait() {
             Ok(pred) => {
@@ -685,7 +749,12 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
                     mismatches += 1;
                 }
             }
-            Err(_) => errors += 1,
+            Err(e) => {
+                errors += 1;
+                if e.is_retryable() {
+                    retryable.push(i);
+                }
+            }
         }
     }
     let elapsed = t0.elapsed();
@@ -695,6 +764,53 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         .map(|h| h.join().expect("probe thread"))
         .collect();
     let served = n_requests - errors;
+
+    // Retry rounds: resubmit retryable failures (sheds, quarantines,
+    // no-healthy-workers) with capped exponential backoff + jitter. The
+    // retry budget bounds total resubmissions so an unhealthy engine
+    // cannot turn the generator into a retry storm.
+    let max_retries = p.usize("retries")?;
+    let first_pass_retryable = retryable.len();
+    let mut recovered = 0usize;
+    let mut retry_submitted = 0usize;
+    if max_retries > 0 && !retryable.is_empty() {
+        let mut budget = p.usize("retry-budget")?;
+        if budget == 0 {
+            budget = n_requests;
+        }
+        let mut jitter = lpdsvm::util::rng::Rng::new(p.u64("seed")? ^ 0x7e7e_7e7e);
+        for round in 1..=max_retries {
+            if retryable.is_empty() || budget == 0 {
+                break;
+            }
+            // 1ms, 2ms, 4ms, ... capped at 100ms, each ±50% jittered.
+            let base_us = (1000u64 << (round - 1).min(7)).min(100_000);
+            let wait_us = base_us / 2 + jitter.next_u64() % base_us;
+            std::thread::sleep(Duration::from_micros(wait_us));
+            let take = retryable.len().min(budget);
+            budget -= take;
+            retry_submitted += take;
+            let this_round: Vec<usize> = retryable.drain(..take).collect();
+            let resubmits: Vec<(usize, _)> = this_round
+                .iter()
+                .map(|&i| (i, engine.submit("default", &rows[i % rows.len()])))
+                .collect();
+            let mut still_failing = Vec::new();
+            for (i, t) in resubmits {
+                match t.wait() {
+                    Ok(pred) => {
+                        recovered += 1;
+                        if pred.label != data.labels[i % rows.len()] {
+                            mismatches += 1;
+                        }
+                    }
+                    Err(e) if e.is_retryable() => still_failing.push(i),
+                    Err(_) => {}
+                }
+            }
+            retryable.splice(0..0, still_failing);
+        }
+    }
     engine.metrics().table(elapsed).print();
     println!(
         "served {n_requests} requests in {} s — {:.0} req/s, {} failed, label error {}%",
@@ -702,8 +818,18 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         n_requests as f64 / elapsed.as_secs_f64(),
         errors,
         // Error rate over the requests that actually got a prediction.
-        Table::pct(mismatches as f64 / served.max(1) as f64)
+        Table::pct(mismatches as f64 / (served + recovered).max(1) as f64)
     );
+    if max_retries > 0 {
+        let total_elapsed = t0.elapsed().as_secs_f64();
+        let eventually_served = served + recovered;
+        println!(
+            "retry: recovered {recovered}/{first_pass_retryable} retryable failures in \
+             {retry_submitted} resubmission(s) — goodput after retry {:.0} req/s \
+             ({eventually_served}/{n_requests} eventually served)",
+            eventually_served as f64 / total_elapsed
+        );
+    }
     if saturate {
         let m = engine.metrics();
         let rejected_full = m.rejected_full.load(Ordering::Relaxed);

@@ -2,20 +2,26 @@
 //! available offline, and the matrices are large enough that JSON would be
 //! wasteful anyway).
 //!
-//! Layout: magic "LPDSVM1\0", a JSON header (lengths + kernel + kind),
-//! then raw little-endian f32/f64 payload sections in header order.
+//! Layout: magic "LPDSVM2\0", a JSON header (lengths + kernel + kind),
+//! then raw little-endian f32/f64 payload sections in header order, then
+//! a CRC-32 footer over everything before it. Writes are atomic
+//! (temp + fsync + rename via [`crate::util::fsio`]), so a crash
+//! mid-save — exercised through the `model.save.after_tmp_write` fault
+//! point — can never leave a truncated or torn model on disk: either the
+//! old file survives intact or the new one is complete.
 
 use crate::kernel::Kernel;
 use crate::linalg::Mat;
 use crate::lowrank::LowRankFactor;
 use crate::model::multiclass::{BinaryHead, MulticlassModel};
 use crate::model::ModelKind;
+use crate::util::fsio;
 use crate::util::json::{arr, num, obj, s, Json};
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
-const MAGIC: &[u8; 8] = b"LPDSVM1\0";
+const MAGIC: &[u8; 8] = b"LPDSVM2\0";
 
 fn kernel_to_json(k: &Kernel) -> Json {
     match *k {
@@ -117,31 +123,35 @@ pub fn save(model: &MulticlassModel, path: &Path) -> Result<()> {
     ]);
     let header_bytes = header.to_string().into_bytes();
 
-    let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
-    out.write_all(MAGIC)?;
-    out.write_all(&(header_bytes.len() as u64).to_le_bytes())?;
-    out.write_all(&header_bytes)?;
+    // Build the whole image in memory, then hand it to the atomic
+    // checksummed writer — a model is a few MB at most, and the in-memory
+    // detour is what makes the on-disk state all-or-nothing.
+    let mut payload = Vec::with_capacity(
+        header_bytes.len() + 16 + 4 * (f.landmarks.data.len() + f.whiten.data.len()),
+    );
+    payload.extend_from_slice(&(header_bytes.len() as u64).to_le_bytes());
+    payload.extend_from_slice(&header_bytes);
     // Payload: landmarks, whiten, each head's w. (G itself is NOT saved —
     // it is training-time state; prediction only needs landmarks + W.)
-    write_f32s(&mut out, &f.landmarks.data)?;
-    write_f32s(&mut out, &f.whiten.data)?;
+    write_f32s(&mut payload, &f.landmarks.data)?;
+    write_f32s(&mut payload, &f.whiten.data)?;
     for h in &model.heads {
-        write_f32s(&mut out, &h.w)?;
+        write_f32s(&mut payload, &h.w)?;
     }
-    Ok(())
+    fsio::write_checksummed(path, MAGIC, &payload, "model.save.after_tmp_write")
+        .with_context(|| format!("saving model to {}", path.display()))
 }
 
 /// Load a model from `path`. The training-time `G` matrix is not stored;
 /// the loaded factor has an empty `g` (prediction does not need it).
+///
+/// The whole file is checksummed: a truncated or bit-flipped model is
+/// rejected with a clear error instead of deserializing into garbage.
 pub fn load(path: &Path) -> Result<MulticlassModel> {
-    let mut input = std::io::BufReader::new(
-        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
-    );
-    let mut magic = [0u8; 8];
-    input.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("not an LPD-SVM model file");
-    }
+    let payload = fsio::read_checksummed(path, MAGIC)
+        .with_context(|| format!("loading model from {}", path.display()))?
+        .with_context(|| format!("model file {} does not exist", path.display()))?;
+    let mut input: &[u8] = &payload;
     let mut len8 = [0u8; 8];
     input.read_exact(&mut len8)?;
     let hlen = u64::from_le_bytes(len8) as usize;
@@ -252,6 +262,76 @@ mod tests {
         assert_eq!(loaded.kind, model.kind);
         assert_eq!(loaded.factor.rank, model.factor.rank);
         std::fs::remove_file(&path).ok();
+    }
+
+    fn tiny_model() -> MulticlassModel {
+        let spec = PaperDataset::Adult.spec(0.005, 8);
+        let data = spec.synth.generate();
+        let cfg = TrainConfig {
+            kernel: Kernel::gaussian(spec.gamma),
+            stage1: Stage1Config {
+                budget: 16,
+                ..Default::default()
+            },
+            solver: SolverOptions::default(),
+            ..Default::default()
+        };
+        train(&data, &cfg).unwrap()
+    }
+
+    #[test]
+    fn crash_during_save_preserves_previous_model() {
+        let _serial = crate::util::fault::test_lock();
+        let dir = std::env::temp_dir().join(format!("lpdsvm_io_atomic_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.lpd");
+        let model = tiny_model();
+        save(&model, &path).unwrap();
+        let before = std::fs::read(&path).unwrap();
+
+        // Crash in the window between the temp write and the rename: the
+        // published file must be byte-identical to the previous save.
+        crate::util::fault::set_schedule("model.save.after_tmp_write=error").unwrap();
+        let err = save(&model, &path).unwrap_err();
+        crate::util::fault::clear();
+        assert!(err.to_string().contains("saving model"), "{err:#}");
+        assert_eq!(std::fs::read(&path).unwrap(), before, "old model was torn");
+        load(&path).unwrap();
+        // And no temp litter left behind for the retry to trip over.
+        let litter: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter(|e| {
+                e.as_ref()
+                    .unwrap()
+                    .file_name()
+                    .to_string_lossy()
+                    .contains(".tmp.")
+            })
+            .collect();
+        assert!(litter.is_empty(), "temp files left: {litter:?}");
+        save(&model, &path).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupted_model_is_rejected_not_misparsed() {
+        let dir = std::env::temp_dir().join(format!("lpdsvm_io_corrupt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.lpd");
+        save(&tiny_model(), &path).unwrap();
+
+        // Flip one payload byte: the checksum must catch it.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+
+        // Truncation (the classic torn write) is rejected too.
+        std::fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

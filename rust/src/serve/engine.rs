@@ -79,6 +79,19 @@ pub struct ServeConfig {
     pub max_queue: usize,
     /// What a submit does when it finds its model's sub-queue full.
     pub shed_policy: ShedPolicy,
+    /// Respawn scoring workers killed by a panic that escapes batch
+    /// processing (capped exponential backoff between respawns). With
+    /// supervision off a panicked worker stays dead; when the *last* one
+    /// dies the engine drains-and-rejects so clients never hang.
+    pub supervise: bool,
+    /// Per-model circuit breaker: after this many *consecutive* batch
+    /// panics a model is quarantined — its submits fast-fail with
+    /// [`ServeError::ModelQuarantined`] until a half-open probe batch
+    /// scores cleanly. `0` disables the breaker.
+    pub panic_quarantine_after: u32,
+    /// How long a quarantined model's submits are rejected before the
+    /// scheduler dispatches a half-open probe batch.
+    pub quarantine_cooldown: Duration,
 }
 
 impl Default for ServeConfig {
@@ -89,6 +102,9 @@ impl Default for ServeConfig {
             workers: 0,
             max_queue: 0,
             shed_policy: ShedPolicy::RejectNewest,
+            supervise: true,
+            panic_quarantine_after: 3,
+            quarantine_cooldown: Duration::from_millis(250),
         }
     }
 }
@@ -245,6 +261,44 @@ impl ModelQueue {
 struct Batch {
     model: String,
     requests: Vec<PendingRequest>,
+    /// This batch is the half-open probe for a quarantined model: its
+    /// verdict (clean score vs. panic) closes or re-opens the breaker.
+    probe: bool,
+}
+
+/// Phase of one model's panic circuit breaker.
+#[derive(Clone, Copy, Debug)]
+enum BreakerPhase {
+    /// Healthy: batches dispatch normally.
+    Closed,
+    /// Quarantined: submits fast-fail and dispatch is suppressed until
+    /// `until`, after which the scheduler sends one half-open probe.
+    Open { until: Instant },
+    /// Cooldown elapsed: a single probe batch decides the verdict while
+    /// further dispatch for this model stays suppressed.
+    HalfOpen,
+}
+
+/// Per-model panic circuit breaker. Lives in [`QueueState`] under the
+/// existing queue lock — the breaker is consulted exactly where admission
+/// and dispatch already hold that lock, so no new lock ordering exists.
+struct Breaker {
+    phase: BreakerPhase,
+    /// Consecutive batch panics; any clean batch resets it. Reaching
+    /// `ServeConfig::panic_quarantine_after` opens the breaker.
+    consecutive_panics: u32,
+    /// A half-open probe batch has been dispatched and not yet resolved.
+    probe_in_flight: bool,
+}
+
+impl Breaker {
+    fn new() -> Breaker {
+        Breaker {
+            phase: BreakerPhase::Closed,
+            consecutive_panics: 0,
+            probe_in_flight: false,
+        }
+    }
 }
 
 struct QueueState {
@@ -261,6 +315,10 @@ struct QueueState {
     /// Live sub-queues whose `counts_unregistered` flag is set — bounded
     /// by [`MAX_UNREGISTERED_QUEUES`].
     unregistered_queues: usize,
+    /// Panic circuit breakers, keyed by model name. Entries are created
+    /// lazily on the first batch panic, so the healthy path never touches
+    /// this map beyond an (empty) lookup.
+    breakers: HashMap<String, Breaker>,
     shutdown: bool,
 }
 
@@ -319,6 +377,7 @@ impl ServeEngine {
                 ring: VecDeque::new(),
                 total_depth: 0,
                 unregistered_queues: 0,
+                breakers: HashMap::new(),
                 shutdown: false,
             }),
             cv: Condvar::new(),
@@ -327,27 +386,14 @@ impl ServeEngine {
             cfg,
             healthy_workers: AtomicUsize::new(n_workers),
         });
+        shared.metrics.set_healthy_workers(n_workers as u64);
         let workers = (0..n_workers)
             .map(|i| {
                 let shared = Arc::clone(&shared);
                 let provider = Arc::clone(&provider);
                 std::thread::Builder::new()
                     .name(format!("lpdsvm-serve-{i}"))
-                    .spawn(move || match provider.backend() {
-                        Ok(backend) => worker_loop(&shared, backend.as_ref()),
-                        Err(e) => {
-                            let left = shared.healthy_workers.fetch_sub(1, Ordering::AcqRel) - 1;
-                            if left > 0 {
-                                return; // healthy workers carry the traffic
-                            }
-                            let msg = format!("worker backend init failed: {e:#}");
-                            while let Some(batch) = next_batch(&shared) {
-                                for r in batch.requests {
-                                    fail(&shared, r, msg.clone());
-                                }
-                            }
-                        }
-                    })
+                    .spawn(move || supervise_worker(&shared, &*provider))
                     .expect("spawning serve worker")
             })
             .collect();
@@ -405,6 +451,31 @@ impl ServeEngine {
             self.shared.metrics.note_rejected_at_submit();
             mm.note_rejected_at_submit();
             return Err(ServeError::ShuttingDown);
+        }
+        // Supervision fast-fail: with every scoring worker dead there is
+        // nothing to drain the queues — admitting the request would only
+        // convert a clear, retryable error into a hang (or a slow shed).
+        // Applies whether or not supervision is on; respawning workers
+        // raise the count again the moment one is back.
+        if self.shared.healthy_workers.load(Ordering::Acquire) == 0 {
+            drop(st);
+            self.shared.metrics.note_rejected_at_submit();
+            mm.note_rejected_at_submit();
+            return Err(ServeError::NoHealthyWorkers);
+        }
+        // Circuit breaker: a quarantined model rejects new traffic while
+        // its cooldown runs. Once the cooldown elapses submits are
+        // admitted again — they park behind the half-open probe batch
+        // whose verdict decides whether they score or re-quarantine.
+        if let Some(b) = st.breakers.get(model.as_str()) {
+            if let BreakerPhase::Open { until } = b.phase {
+                if Instant::now() < until {
+                    drop(st);
+                    self.shared.metrics.note_rejected_at_submit();
+                    mm.note_rejected_at_submit();
+                    return Err(ServeError::ModelQuarantined { model });
+                }
+            }
         }
         // Reborrow the guarded state once so the queue borrow below can
         // split across fields (ring, depth) without re-hashing the model
@@ -715,11 +786,35 @@ fn next_batch(shared: &Shared) -> Option<Batch> {
         let now = Instant::now();
         let shutdown = st.shutdown;
         let mut chosen = None;
+        let mut probe = false;
         let mut earliest_deadline: Option<Duration> = None;
         for i in 0..st.ring.len() {
-            let q = &st.queues[&st.ring[i]];
+            let name = &st.ring[i];
+            // Breaker gating. A quarantined model still cooling down is
+            // skipped without losing its ring position (its cooldown expiry
+            // is folded into the sleep below); once the cooldown elapses
+            // its next batch dispatches as the half-open probe, and while
+            // that probe is in flight the model stays suppressed. At
+            // shutdown the gate lifts entirely — every queue must drain.
+            let mut is_probe = false;
+            match st.breakers.get(name).map(|b| (b.phase, b.probe_in_flight)) {
+                Some((BreakerPhase::Open { until }, _)) if now < until && !shutdown => {
+                    let wait = until - now;
+                    earliest_deadline = Some(match earliest_deadline {
+                        Some(e) if e < wait => e,
+                        _ => wait,
+                    });
+                    continue;
+                }
+                Some((BreakerPhase::Open { .. }, _)) => is_probe = true,
+                Some((BreakerPhase::HalfOpen, true)) if !shutdown => continue,
+                Some((BreakerPhase::HalfOpen, _)) => is_probe = true,
+                _ => {}
+            }
+            let q = &st.queues[name];
             if trigger_fired(q, now, &shared.cfg, shutdown) {
                 chosen = Some(i);
+                probe = is_probe;
                 break;
             }
             let waited = now.saturating_duration_since(q.queue.front().unwrap().enqueued);
@@ -772,6 +867,13 @@ fn next_batch(shared: &Shared) -> Option<Batch> {
                 }
             }
         }
+        if probe {
+            // Mark the probe in flight before releasing the lock so no
+            // second worker dispatches this model until the verdict is in.
+            let b = st.breakers.get_mut(&name).expect("probe implies a breaker entry");
+            b.phase = BreakerPhase::HalfOpen;
+            b.probe_in_flight = true;
+        }
         shared.metrics.note_batch(requests.len());
         for r in &requests {
             r.metrics.note_dispatched();
@@ -779,6 +881,7 @@ fn next_batch(shared: &Shared) -> Option<Batch> {
         return Some(Batch {
             model: name,
             requests,
+            probe,
         });
     }
 }
@@ -808,17 +911,199 @@ fn fail(shared: &Shared, r: PendingRequest, msg: String) {
 }
 
 fn worker_loop(shared: &Shared, backend: &dyn Stage1Backend) {
-    while let Some(batch) = next_batch(shared) {
+    loop {
+        // Fault point *outside* the per-batch catch: an injected panic
+        // here escapes the loop and kills the worker thread itself,
+        // exercising the supervisor's respawn path. Deliberately placed
+        // *before* the batch pull — the worker dies empty-handed, so no
+        // request is abandoned and no half-open probe is stranded.
+        crate::util::fault::point("serve.worker").expect("injected worker fault");
+        let Some(batch) = next_batch(shared) else {
+            return;
+        };
+        let model = batch.model.clone();
+        let probe = batch.probe;
         // A scoring panic (e.g. a hot-swapped model whose head weights
         // disagree with its factor rank) must not kill the worker: the
         // unwind drops the batch's `Fulfiller`s, which rejects those
         // tickets, and the worker lives on to serve the next batch.
         let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // Fault point *inside* the catch: an injected panic here is
+            // a batch panic — the circuit breaker's trigger.
+            crate::util::fault::point("serve.batch").expect("injected batch fault");
             process_batch(shared, backend, batch);
         }));
-        if caught.is_err() {
-            shared.metrics.note_batch_panic();
+        match caught {
+            Ok(()) => breaker_note_success(shared, &model, probe),
+            Err(_) => {
+                shared.metrics.note_batch_panic();
+                breaker_note_panic(shared, &model, probe);
+            }
         }
+    }
+}
+
+/// Record a clean batch for `model`: reset its panic streak and, if the
+/// batch was the half-open probe, close the breaker (ending quarantine).
+fn breaker_note_success(shared: &Shared, model: &str, probe: bool) {
+    if shared.cfg.panic_quarantine_after == 0 {
+        return;
+    }
+    let mut recovered = false;
+    {
+        let mut st = shared.state.lock().unwrap();
+        if let Some(b) = st.breakers.get_mut(model) {
+            b.consecutive_panics = 0;
+            if probe {
+                b.probe_in_flight = false;
+                if !matches!(b.phase, BreakerPhase::Closed) {
+                    b.phase = BreakerPhase::Closed;
+                    recovered = true;
+                }
+            }
+        }
+    }
+    if recovered {
+        shared.metrics.note_quarantine_recovery();
+        crate::log_info!("serve", "model '{model}' recovered from quarantine");
+        // The model's queue is dispatchable again — wake sleeping workers.
+        shared.cv.notify_all();
+    }
+}
+
+/// Record a panicked batch for `model`: bump its panic streak and open
+/// the breaker at the configured threshold — or immediately, if the
+/// panicked batch was the half-open probe.
+fn breaker_note_panic(shared: &Shared, model: &str, probe: bool) {
+    let k = shared.cfg.panic_quarantine_after;
+    if k == 0 {
+        return;
+    }
+    let quarantined = {
+        let mut st = shared.state.lock().unwrap();
+        let b = st.breakers.entry(model.to_string()).or_insert_with(Breaker::new);
+        b.consecutive_panics = b.consecutive_panics.saturating_add(1);
+        if probe || b.consecutive_panics >= k {
+            // Keep the counter monotone across already-open refreshes so
+            // concurrent in-flight panics don't inflate `quarantines`.
+            let newly = !matches!(b.phase, BreakerPhase::Open { .. });
+            b.probe_in_flight = false;
+            b.phase = BreakerPhase::Open {
+                until: Instant::now() + shared.cfg.quarantine_cooldown,
+            };
+            newly
+        } else {
+            false
+        }
+    };
+    if quarantined {
+        shared.metrics.note_quarantine();
+        let bucket = if shared.registry.contains(model) {
+            model
+        } else {
+            UNREGISTERED_BUCKET
+        };
+        shared.metrics.model(bucket).note_quarantined();
+        crate::log_warn!("serve", "model '{model}' quarantined after repeated batch panics");
+        // Wake sleeping workers so they recompute their sleep against
+        // the cooldown expiry instead of the old queue deadlines.
+        shared.cv.notify_all();
+    }
+}
+
+/// Run one scoring worker under supervision: construct a backend, serve
+/// batches, and — if a panic escapes the per-batch catch — respawn the
+/// loop with capped exponential backoff (10ms doubling to 1s, reset
+/// after 5s of quiet service). The init-failure path is exactly the
+/// unsupervised engine's: a worker whose backend fails to construct
+/// exits (the rest carry the traffic) unless it is the last one, in
+/// which case it stays to drain-and-reject so clients never hang.
+fn supervise_worker(shared: &Shared, provider: &dyn BackendProvider) {
+    let mut backoff = Duration::from_millis(10);
+    loop {
+        let backend = match provider.backend() {
+            Ok(b) => b,
+            Err(e) => {
+                let left = shared.healthy_workers.fetch_sub(1, Ordering::AcqRel) - 1;
+                shared.metrics.set_healthy_workers(left as u64);
+                if left > 0 {
+                    return; // healthy workers carry the traffic
+                }
+                let msg = format!("worker backend init failed: {e:#}");
+                while let Some(batch) = next_batch(shared) {
+                    for r in batch.requests {
+                        fail(shared, r, msg.clone());
+                    }
+                }
+                return;
+            }
+        };
+        let up_since = Instant::now();
+        let died = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            worker_loop(shared, backend.as_ref());
+        }))
+        .is_err();
+        if !died {
+            return; // clean exit: shutdown drained every queue
+        }
+        shared.metrics.note_worker_panic();
+        let left = shared.healthy_workers.fetch_sub(1, Ordering::AcqRel) - 1;
+        shared.metrics.set_healthy_workers(left as u64);
+        if !shared.cfg.supervise {
+            crate::log_warn!("serve", "worker died to a panic (supervision disabled)");
+            if left == 0 {
+                // The last worker died with supervision off: stay behind
+                // to reject traffic so accepted requests never hang.
+                let msg = "every scoring worker died (supervision disabled)".to_string();
+                while let Some(batch) = next_batch(shared) {
+                    for r in batch.requests {
+                        fail(shared, r, msg.clone());
+                    }
+                }
+            }
+            return;
+        }
+        // A worker that served quietly for a while earned a fresh
+        // backoff; a crash loop keeps doubling it up to the cap.
+        if up_since.elapsed() > Duration::from_secs(5) {
+            backoff = Duration::from_millis(10);
+        }
+        let shutting_down = wait_backoff(shared, backoff);
+        if shutting_down {
+            let st = shared.state.lock().unwrap();
+            if st.total_depth == 0 {
+                // Shutdown with nothing left to drain: exit instead of
+                // respawning into a (possibly perpetual) crash loop that
+                // would stall the shutdown join.
+                return;
+            }
+        }
+        backoff = (backoff * 2).min(Duration::from_secs(1));
+        let healthy = shared.healthy_workers.fetch_add(1, Ordering::AcqRel) + 1;
+        shared.metrics.set_healthy_workers(healthy as u64);
+        shared.metrics.note_worker_restart();
+        crate::log_warn!("serve", "worker died to a panic; respawned ({healthy} healthy)");
+        // Loop: construct a fresh backend and serve again. A respawn
+        // racing shutdown is harmless — the new loop drains and exits.
+    }
+}
+
+/// Sleep `backoff` between respawns, waking early on shutdown (so
+/// `ServeEngine::shutdown` never stalls on a supervisor's backoff).
+/// Returns whether shutdown was observed.
+fn wait_backoff(shared: &Shared, backoff: Duration) -> bool {
+    let deadline = Instant::now() + backoff;
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if st.shutdown {
+            return true;
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            return false;
+        }
+        let (g, _) = shared.cv.wait_timeout(st, deadline - now).unwrap();
+        st = g;
     }
 }
 
@@ -953,6 +1238,7 @@ mod tests {
                 workers: 1,
                 max_queue: 2,
                 shed_policy: ShedPolicy::RejectNewest,
+                ..ServeConfig::default()
             },
         );
         let queued: Vec<_> = (0..2).map(|_| e.submit("m", &[(0, 1.0)])).collect();
@@ -987,6 +1273,7 @@ mod tests {
                 workers: 1,
                 max_queue: 2,
                 shed_policy: ShedPolicy::RejectNewest,
+                ..ServeConfig::default()
             },
         );
         for _ in 0..4 {
@@ -1018,6 +1305,7 @@ mod tests {
                 workers: 1,
                 max_queue: 2,
                 shed_policy: ShedPolicy::RejectNewest,
+                ..ServeConfig::default()
             },
         );
         for i in 0..MAX_UNREGISTERED_QUEUES {
@@ -1100,6 +1388,162 @@ mod tests {
         e.shutdown();
     }
 
+    #[test]
+    fn breaker_quarantines_after_consecutive_batch_panics() {
+        let _gate = crate::util::fault::test_lock();
+        crate::util::fault::set_schedule("serve.batch=panic x3").unwrap();
+        let e = ServeEngine::start(
+            Arc::new(ModelRegistry::new()),
+            ServeConfig {
+                max_batch: 1,
+                max_wait: Duration::ZERO,
+                workers: 1,
+                panic_quarantine_after: 3,
+                // Far future: this test only checks the rejection window.
+                quarantine_cooldown: Duration::from_secs(600),
+                ..ServeConfig::default()
+            },
+        );
+        // Three singleton batches, three injected panics: the tickets
+        // reject (abandoned by the unwind) and the third trips the breaker.
+        for _ in 0..3 {
+            assert!(e.submit("m", &[(0, 1.0)]).wait().is_err());
+        }
+        // The panic verdict lands just after the tickets resolve — poll.
+        let t0 = Instant::now();
+        while e.metrics().quarantines.load(Ordering::Relaxed) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "breaker never opened");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let err = e.try_submit("m", &[(0, 1.0)]).unwrap_err();
+        assert_eq!(err, ServeError::ModelQuarantined { model: "m".into() });
+        assert!(err.is_retryable() && !err.is_shed());
+        assert_eq!(e.metrics().batch_panics.load(Ordering::Relaxed), 3);
+        let bucket = e.metrics().get_model(UNREGISTERED_BUCKET).unwrap();
+        assert_eq!(bucket.quarantines.load(Ordering::Relaxed), 1);
+        // The quarantine rejection is fully accounted: invariant holds.
+        let m = e.metrics();
+        assert_eq!(
+            m.submitted.load(Ordering::Relaxed),
+            m.completed.load(Ordering::Relaxed)
+                + m.failed.load(Ordering::Relaxed)
+                + m.queue_depth.load(Ordering::Relaxed)
+        );
+        e.shutdown();
+        crate::util::fault::clear();
+    }
+
+    #[test]
+    fn breaker_half_open_probe_recovers_the_model() {
+        let _gate = crate::util::fault::test_lock();
+        crate::util::fault::set_schedule("serve.batch=panic x3").unwrap();
+        let e = ServeEngine::start(
+            Arc::new(ModelRegistry::new()),
+            ServeConfig {
+                max_batch: 1,
+                max_wait: Duration::ZERO,
+                workers: 1,
+                panic_quarantine_after: 3,
+                quarantine_cooldown: Duration::from_millis(5),
+                ..ServeConfig::default()
+            },
+        );
+        for _ in 0..3 {
+            assert!(e.submit("m", &[(0, 1.0)]).wait().is_err());
+        }
+        let t0 = Instant::now();
+        while e.metrics().quarantines.load(Ordering::Relaxed) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "breaker never opened");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Once the cooldown elapses a submit is admitted again; it
+        // dispatches as the half-open probe, scores cleanly (the fault
+        // budget is spent), and closes the breaker. Quarantine rejections
+        // while the cooldown runs are expected.
+        let t0 = Instant::now();
+        let ticket = loop {
+            match e.try_submit("m", &[(0, 1.0)]) {
+                Ok(t) => break t,
+                Err(ServeError::ModelQuarantined { .. }) => {
+                    assert!(t0.elapsed() < Duration::from_secs(10), "cooldown never elapsed");
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(other) => panic!("unexpected admission error: {other}"),
+            }
+        };
+        // The probe request itself fails ("not registered") but the batch
+        // is clean — that is the verdict that closes the breaker.
+        assert!(ticket.wait().unwrap_err().to_string().contains("not registered"));
+        let t0 = Instant::now();
+        while e.metrics().quarantine_recoveries.load(Ordering::Relaxed) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "probe never closed the breaker");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(e.metrics().quarantines.load(Ordering::Relaxed), 1);
+        e.shutdown();
+        crate::util::fault::clear();
+    }
+
+    #[test]
+    fn supervisor_respawns_a_panicked_worker() {
+        let _gate = crate::util::fault::test_lock();
+        // Kill the (sole) worker the first time it polls for work; the
+        // supervisor must respawn it and the engine keep serving.
+        crate::util::fault::set_schedule("serve.worker=panic").unwrap();
+        let e = engine(1, 0, 1);
+        let t0 = Instant::now();
+        while e.metrics().worker_restarts.load(Ordering::Relaxed) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "worker never respawned");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(e.healthy_workers(), 1);
+        assert_eq!(e.metrics().worker_panics.load(Ordering::Relaxed), 1);
+        assert_eq!(e.metrics().healthy_workers.load(Ordering::Relaxed), 1);
+        // The respawned worker serves: the request resolves (with the
+        // usual "not registered" failure) instead of hanging.
+        let err = predict_one(&e, "m", &[(0, 1.0)]).unwrap_err();
+        assert!(err.to_string().contains("not registered"), "got: {err}");
+        e.shutdown();
+        crate::util::fault::clear();
+    }
+
+    #[test]
+    fn zero_healthy_workers_fast_fails_without_supervision() {
+        let _gate = crate::util::fault::test_lock();
+        crate::util::fault::set_schedule("serve.worker=panic").unwrap();
+        let e = ServeEngine::start(
+            Arc::new(ModelRegistry::new()),
+            ServeConfig {
+                max_batch: 1,
+                max_wait: Duration::ZERO,
+                workers: 1,
+                supervise: false,
+                ..ServeConfig::default()
+            },
+        );
+        // The sole worker dies on its first poll and stays dead.
+        let t0 = Instant::now();
+        while e.healthy_workers() > 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "worker never died");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let err = e.try_submit("m", &[(0, 1.0)]).unwrap_err();
+        assert_eq!(err, ServeError::NoHealthyWorkers);
+        assert!(err.is_retryable() && !err.is_shed());
+        let t = e.submit("m", &[(0, 1.0)]);
+        assert_eq!(t.try_get().expect("fast fail"), Err(ServeError::NoHealthyWorkers));
+        assert_eq!(e.metrics().worker_restarts.load(Ordering::Relaxed), 0);
+        assert_eq!(e.metrics().healthy_workers.load(Ordering::Relaxed), 0);
+        // The fast-fails are fully accounted: invariant holds.
+        let m = e.metrics();
+        assert_eq!(
+            m.submitted.load(Ordering::Relaxed),
+            m.completed.load(Ordering::Relaxed) + m.failed.load(Ordering::Relaxed)
+        );
+        e.shutdown();
+        crate::util::fault::clear();
+    }
+
     /// Build a worker-less `Shared` with pre-filled sub-queues and
     /// `shutdown = true` (every trigger fired, no blocking), then drain it
     /// through `next_batch` to observe the scheduler's dispatch order.
@@ -1136,6 +1580,7 @@ mod tests {
                 ring,
                 total_depth,
                 unregistered_queues: 0,
+                breakers: HashMap::new(),
                 shutdown: true,
             }),
             cv: Condvar::new(),

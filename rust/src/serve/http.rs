@@ -42,7 +42,6 @@
 //! unbounded thread growth.
 
 use crate::serve::engine::ServeEngine;
-use crate::serve::session::ServeError;
 use crate::util::json::{self, Json};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -519,11 +518,12 @@ fn predict(engine: &ServeEngine, model: &str, body: &[u8]) -> (u16, &'static str
                 ("total_us", json::unum(p.total_us)),
             ])),
             Err(e) => {
-                // Shed, shutdown, and abandoned (worker panic) are all
-                // server-side conditions a retry can outlive → 503. Only
-                // permanently unservable rows (bad feature index, unknown
-                // model, …) blame the request with a 400.
-                if e.is_shed() || matches!(e, ServeError::ShuttingDown | ServeError::Abandoned(_)) {
+                // Every retryable condition — shed, shutdown, abandoned
+                // (worker panic), zero healthy workers, quarantined model
+                // — is server-side weather a retry can outlive → 503.
+                // Only permanently unservable rows (bad feature index,
+                // unknown model, …) blame the request with a 400.
+                if e.is_retryable() {
                     any_unavailable = true;
                 } else {
                     any_failed = true;
@@ -531,6 +531,7 @@ fn predict(engine: &ServeEngine, model: &str, body: &[u8]) -> (u16, &'static str
                 predictions.push(json::obj(vec![
                     ("error", json::s(&e.to_string())),
                     ("shed", Json::Bool(e.is_shed())),
+                    ("retryable", Json::Bool(e.is_retryable())),
                 ]));
             }
         }

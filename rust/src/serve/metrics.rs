@@ -51,6 +51,9 @@ pub struct ModelMetrics {
     pub rejected_full: AtomicU64,
     /// Queued requests dropped by the deadline shed policy.
     pub shed_expired: AtomicU64,
+    /// Times this model's circuit breaker opened (quarantined after
+    /// repeated batch panics).
+    pub quarantines: AtomicU64,
     /// Current depth of this model's sub-queue.
     pub queue_depth: AtomicU64,
     /// High-water mark of `queue_depth`.
@@ -77,6 +80,7 @@ impl Default for ModelMetrics {
             failed: AtomicU64::new(0),
             rejected_full: AtomicU64::new(0),
             shed_expired: AtomicU64::new(0),
+            quarantines: AtomicU64::new(0),
             queue_depth: AtomicU64::new(0),
             queue_depth_max: AtomicU64::new(0),
             latency_us: Histogram::new(),
@@ -140,6 +144,11 @@ impl ModelMetrics {
         self.queue_depth.fetch_sub(1, Ordering::Relaxed);
     }
 
+    /// This model's circuit breaker opened (quarantine).
+    pub(crate) fn note_quarantined(&self) {
+        self.quarantines.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub(crate) fn set_weight(&self, w: u64) {
         self.weight.store(w, Ordering::Relaxed);
     }
@@ -163,6 +172,7 @@ impl ModelMetrics {
             ("failed", c(&self.failed)),
             ("rejected_full", c(&self.rejected_full)),
             ("shed_expired", c(&self.shed_expired)),
+            ("quarantines", c(&self.quarantines)),
             ("queue_depth", c(&self.queue_depth)),
             ("queue_depth_max", c(&self.queue_depth_max)),
             ("weight", json::unum(self.weight())),
@@ -194,6 +204,20 @@ pub struct ServeMetrics {
     pub batches: AtomicU64,
     /// Batches whose scoring panicked (their requests were rejected).
     pub batch_panics: AtomicU64,
+    /// Worker threads that died to a panic outside batch scoring (the
+    /// supervisor's respawn trigger).
+    pub worker_panics: AtomicU64,
+    /// Workers respawned by the supervisor after a panic.
+    pub worker_restarts: AtomicU64,
+    /// Times any model's circuit breaker opened (quarantine).
+    pub quarantines: AtomicU64,
+    /// Quarantined models restored to service by a successful half-open
+    /// probe batch.
+    pub quarantine_recoveries: AtomicU64,
+    /// Mirror of the engine's healthy-worker count (a gauge: the
+    /// authoritative value lives in the engine; this copy makes it
+    /// scrapeable without an engine handle).
+    pub healthy_workers: AtomicU64,
     /// Current queue depth (submitted, not yet pulled into a batch).
     pub queue_depth: AtomicU64,
     /// High-water mark of `queue_depth`.
@@ -265,6 +289,31 @@ impl ServeMetrics {
 
     pub(crate) fn note_batch_panic(&self) {
         self.batch_panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A worker thread died to a panic that escaped batch scoring.
+    pub(crate) fn note_worker_panic(&self) {
+        self.worker_panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The supervisor respawned a dead worker.
+    pub(crate) fn note_worker_restart(&self) {
+        self.worker_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Some model's circuit breaker opened.
+    pub(crate) fn note_quarantine(&self) {
+        self.quarantines.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A half-open probe succeeded and closed a model's breaker.
+    pub(crate) fn note_quarantine_recovery(&self) {
+        self.quarantine_recoveries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mirror the engine's healthy-worker gauge for scrapes.
+    pub(crate) fn set_healthy_workers(&self, n: u64) {
+        self.healthy_workers.store(n, Ordering::Relaxed);
     }
 
     /// A request rejected at the submit boundary (engine shut down): it
@@ -340,6 +389,10 @@ impl ServeMetrics {
         t.row(&["queue-full events".into(), c(&self.queue_full_events)]);
         t.row(&["batches dispatched".into(), c(&self.batches)]);
         t.row(&["batch panics".into(), c(&self.batch_panics)]);
+        t.row(&["worker panics".into(), c(&self.worker_panics)]);
+        t.row(&["worker restarts".into(), c(&self.worker_restarts)]);
+        t.row(&["quarantines".into(), c(&self.quarantines)]);
+        t.row(&["quarantine recoveries".into(), c(&self.quarantine_recoveries)]);
         t.row(&["mean batch size".into(), format!("{:.1}", self.batch_size.mean())]);
         t.row(&["max queue depth".into(), c(&self.queue_depth_max)]);
         t.row(&["latency p50 (ms)".into(), ms(self.latency_us.quantile(0.50))]);
@@ -370,6 +423,11 @@ impl ServeMetrics {
             ("queue_full_events", c(&self.queue_full_events)),
             ("batches", c(&self.batches)),
             ("batch_panics", c(&self.batch_panics)),
+            ("worker_panics", c(&self.worker_panics)),
+            ("worker_restarts", c(&self.worker_restarts)),
+            ("quarantines", c(&self.quarantines)),
+            ("quarantine_recoveries", c(&self.quarantine_recoveries)),
+            ("healthy_workers", c(&self.healthy_workers)),
             ("queue_depth", c(&self.queue_depth)),
             ("queue_depth_max", c(&self.queue_depth_max)),
             ("elapsed_secs", json::num(elapsed.as_secs_f64())),
@@ -404,7 +462,7 @@ impl ServeMetrics {
         let mut p = PromText::new();
         let v = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
 
-        let counters: [(&str, &AtomicU64, &str); 8] = [
+        let counters: [(&str, &AtomicU64, &str); 12] = [
             ("lpdsvm_serve_submitted_total", &self.submitted, "Requests accepted by submit."),
             (
                 "lpdsvm_serve_completed_total",
@@ -433,6 +491,26 @@ impl ServeMetrics {
                 &self.batch_panics,
                 "Batches whose scoring panicked.",
             ),
+            (
+                "lpdsvm_serve_worker_panics_total",
+                &self.worker_panics,
+                "Worker threads killed by a panic outside batch scoring.",
+            ),
+            (
+                "lpdsvm_serve_worker_restarts_total",
+                &self.worker_restarts,
+                "Workers respawned by the supervisor.",
+            ),
+            (
+                "lpdsvm_serve_quarantines_total",
+                &self.quarantines,
+                "Times a model's circuit breaker opened.",
+            ),
+            (
+                "lpdsvm_serve_quarantine_recoveries_total",
+                &self.quarantine_recoveries,
+                "Quarantined models restored by a successful half-open probe.",
+            ),
         ];
         for (name, a, help) in counters {
             p.family(name, "counter", help);
@@ -449,6 +527,12 @@ impl ServeMetrics {
         p.sample("lpdsvm_serve_queue_depth_max", &[], v(&self.queue_depth_max));
         p.family("lpdsvm_serve_uptime_seconds", "gauge", "Engine uptime at scrape time.");
         p.sample("lpdsvm_serve_uptime_seconds", &[], elapsed.as_secs_f64());
+        p.family(
+            "lpdsvm_serve_healthy_workers",
+            "gauge",
+            "Scoring workers currently alive and accepting batches.",
+        );
+        p.sample("lpdsvm_serve_healthy_workers", &[], v(&self.healthy_workers));
 
         let histograms: [(&str, &Histogram, &str); 4] = [
             (
@@ -476,7 +560,7 @@ impl ServeMetrics {
         // Per-model rollups: same invariant counters and the same
         // latency split, one label set per tenant bucket.
         let per_model = self.per_model.read().unwrap();
-        let model_counters: [(&str, fn(&ModelMetrics) -> &AtomicU64, &str); 5] = [
+        let model_counters: [(&str, fn(&ModelMetrics) -> &AtomicU64, &str); 6] = [
             (
                 "lpdsvm_serve_model_submitted_total",
                 |m| &m.submitted,
@@ -501,6 +585,11 @@ impl ServeMetrics {
                 "lpdsvm_serve_model_shed_expired_total",
                 |m| &m.shed_expired,
                 "Per-model deadline sheds.",
+            ),
+            (
+                "lpdsvm_serve_model_quarantines_total",
+                |m| &m.quarantines,
+                "Times this model's circuit breaker opened.",
             ),
         ];
         for (name, field, help) in model_counters {
@@ -744,6 +833,42 @@ mod tests {
         let pm = j.get("per_model").unwrap().get("hot").unwrap();
         assert_eq!(pm.get("queue_wait_us").unwrap().get("count").unwrap().as_u64(), Some(2));
         assert_eq!(pm.get("service_us").unwrap().get("count").unwrap().as_u64(), Some(2));
+    }
+
+    #[test]
+    fn supervision_counters_surface_in_table_json_and_prometheus() {
+        let m = ServeMetrics::new();
+        m.note_worker_panic();
+        m.note_worker_restart();
+        m.note_quarantine();
+        m.model("hot").note_quarantined();
+        m.note_quarantine_recovery();
+        m.set_healthy_workers(3);
+
+        let table = m.table(Duration::from_secs(1)).render();
+        assert!(table.contains("worker panics"), "{table}");
+        assert!(table.contains("worker restarts"), "{table}");
+        assert!(table.contains("quarantine recoveries"), "{table}");
+
+        let j = m.to_json(Duration::from_secs(1));
+        assert_eq!(j.get("worker_panics").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("worker_restarts").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("quarantines").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("quarantine_recoveries").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("healthy_workers").unwrap().as_u64(), Some(3));
+        let hot = j.get("per_model").unwrap().get("hot").unwrap();
+        assert_eq!(hot.get("quarantines").unwrap().as_u64(), Some(1));
+
+        let text = m.prometheus(Duration::from_secs(1));
+        assert!(text.contains("lpdsvm_serve_worker_panics_total 1\n"), "{text}");
+        assert!(text.contains("lpdsvm_serve_worker_restarts_total 1\n"), "{text}");
+        assert!(text.contains("lpdsvm_serve_quarantines_total 1\n"), "{text}");
+        assert!(text.contains("lpdsvm_serve_quarantine_recoveries_total 1\n"), "{text}");
+        assert!(text.contains("lpdsvm_serve_healthy_workers 3\n"), "{text}");
+        assert!(
+            text.contains("lpdsvm_serve_model_quarantines_total{model=\"hot\"} 1\n"),
+            "{text}"
+        );
     }
 
     #[test]

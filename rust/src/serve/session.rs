@@ -25,11 +25,13 @@ pub struct Prediction {
 /// [`ServeError::DeadlineExceeded`] are *load-shedding* rejections — the
 /// request was fine, the engine was saturated, and the client should back
 /// off and retry — while the other kinds describe requests the engine
-/// could not serve at all. The HTTP front-end maps every retryable
-/// server-side condition — shed, [`ServeError::ShuttingDown`], and
-/// [`ServeError::Abandoned`] (worker panic) — to `503 Service
-/// Unavailable`, and only permanently unservable requests
-/// ([`ServeError::Failed`]) to `400`.
+/// could not serve at all. The HTTP front-end maps every
+/// [`ServeError::is_retryable`] condition — shed,
+/// [`ServeError::ShuttingDown`], [`ServeError::Abandoned`] (worker
+/// panic), [`ServeError::NoHealthyWorkers`], and
+/// [`ServeError::ModelQuarantined`] — to `503 Service Unavailable`, and
+/// only permanently unservable requests ([`ServeError::Failed`]) to
+/// `400`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ServeError {
     /// Admission control fast-fail: the bounded queue
@@ -44,6 +46,14 @@ pub enum ServeError {
     /// The engine dropped the request without resolving it (a worker
     /// panic unwinding a batch, or a shutdown race).
     Abandoned(String),
+    /// Supervision fast-fail: every scoring worker is currently dead
+    /// (crashed and, with supervision on, not yet respawned). Failing at
+    /// submit time beats queueing into an engine that cannot drain.
+    NoHealthyWorkers,
+    /// The model's circuit breaker is open: its batches panicked
+    /// repeatedly and the model is quarantined until a half-open probe
+    /// succeeds. Other models keep serving; retry this one after backoff.
+    ModelQuarantined { model: String },
     /// Any other serving-side failure: unknown model, out-of-range
     /// feature index, stage-1 transform error, backend init failure.
     Failed(String),
@@ -57,6 +67,14 @@ impl ServeError {
             self,
             ServeError::QueueFull { .. } | ServeError::DeadlineExceeded { .. }
         )
+    }
+
+    /// Whether a client should retry this request (with backoff): the
+    /// request itself was fine, the engine just could not take it *right
+    /// now*. Everything here maps to HTTP 503; [`ServeError::Failed`] is
+    /// the one permanent, non-retryable kind.
+    pub fn is_retryable(&self) -> bool {
+        !matches!(self, ServeError::Failed(_))
     }
 }
 
@@ -72,6 +90,13 @@ impl std::fmt::Display for ServeError {
                 "deadline exceeded: request shed after {waited_us}µs in a saturated queue"
             ),
             ServeError::ShuttingDown => write!(f, "engine is shut down"),
+            ServeError::NoHealthyWorkers => {
+                write!(f, "no healthy workers: every scoring worker is down")
+            }
+            ServeError::ModelQuarantined { model } => write!(
+                f,
+                "model '{model}' is quarantined after repeated batch panics; retry later"
+            ),
             ServeError::Abandoned(msg) | ServeError::Failed(msg) => write!(f, "{msg}"),
         }
     }

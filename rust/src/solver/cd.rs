@@ -114,10 +114,61 @@ fn violation(grad: f32, alpha: f32, c: f32) -> f32 {
     }
 }
 
+/// Everything the CD loop carries from one epoch to the next, captured at
+/// an epoch boundary. Restoring a snapshot and continuing produces the
+/// *bit-identical* trajectory of the uninterrupted run: the per-epoch
+/// permutation comes from the restored RNG state, the shrinking set and
+/// its unchanged-visit counters are restored in iteration order, and the
+/// η-fraction re-activation budget resumes from the restored work
+/// counters. Everything else the loop touches (`order`, `flagged`, the
+/// diagonal) is rebuilt deterministically at the top of each epoch.
+#[derive(Clone, Debug)]
+pub struct SolverSnapshot {
+    /// Epochs completed when the snapshot was taken.
+    pub epochs: usize,
+    /// Coordinate steps performed so far.
+    pub steps: u64,
+    /// Dual variables.
+    pub alpha: Vec<f32>,
+    /// Maintained primal vector `v = Σ αᵢ yᵢ Gᵢ`.
+    pub v: Vec<f32>,
+    /// Active variable ids, in iteration order.
+    pub active: Vec<u32>,
+    /// Consecutive unchanged-visit counters (all variables).
+    pub unchanged: Vec<u8>,
+    /// Shrunk variable ids, in re-activation scan order.
+    pub inactive: Vec<u32>,
+    pub total_shrunk: u64,
+    pub total_reactivated: u64,
+    /// xoshiro256++ state of the permutation RNG.
+    pub rng: [u64; 4],
+    /// Work counters for the η-fraction re-activation rule.
+    pub active_work: u64,
+    pub check_work: u64,
+}
+
 /// Train a linear SVM on the problem view. See module docs for the update
 /// rule; this function adds the paper's shrinking/stopping/warm-start
 /// machinery around the O(B) hot step.
 pub fn solve(problem: &ProblemView, opts: &SolverOptions) -> Solution {
+    solve_resumable(problem, opts, None, 0, |_| {})
+}
+
+/// [`solve`] with crash-safe checkpointing hooks.
+///
+/// `resume` restarts the loop from a previously captured
+/// [`SolverSnapshot`] (it overrides `opts.warm_alpha`). When
+/// `checkpoint_every > 0`, `sink` is called with a fresh snapshot after
+/// every `checkpoint_every`-th completed epoch that does not terminate
+/// the solve — persisting it is the caller's business
+/// ([`crate::coordinator::checkpoint`]).
+pub fn solve_resumable(
+    problem: &ProblemView,
+    opts: &SolverOptions,
+    resume: Option<SolverSnapshot>,
+    checkpoint_every: usize,
+    mut sink: impl FnMut(&SolverSnapshot),
+) -> Solution {
     let n = problem.len();
     // Validate the warm start up front: a mismatched α used to fail deep
     // inside `DualState` with a bare length assert, long after the caller
@@ -159,6 +210,35 @@ pub fn solve(problem: &ProblemView, opts: &SolverOptions) -> Solution {
     // the solver fully deterministic for a given seed.
     let mut active_work: u64 = 0;
     let mut check_work: u64 = 0;
+
+    if let Some(snap) = resume {
+        assert!(
+            snap.alpha.len() == n && snap.unchanged.len() == n,
+            "SolverSnapshot has {} variables but the problem has {n} — a \
+             checkpoint only resumes the exact problem it was taken from",
+            snap.alpha.len()
+        );
+        assert!(
+            snap.v.len() == problem.dim(),
+            "SolverSnapshot v has dim {} but the problem has dim {}",
+            snap.v.len(),
+            problem.dim()
+        );
+        state = DualState { alpha: snap.alpha, v: snap.v };
+        active = ActiveSet::from_snapshot(
+            snap.active,
+            snap.unchanged,
+            snap.inactive,
+            snap.total_shrunk,
+            snap.total_reactivated,
+            opts.shrink_k,
+        );
+        rng = Rng::from_state(snap.rng);
+        steps = snap.steps;
+        epochs = snap.epochs;
+        active_work = snap.active_work;
+        check_work = snap.check_work;
+    }
     // Epoch wall-time distribution (µs) for the solve summary — same
     // log₂ histogram the serve metrics use. One Instant pair per epoch;
     // noise against the O(n·B) epoch body.
@@ -295,6 +375,28 @@ pub fn solve(problem: &ProblemView, opts: &SolverOptions) -> Solution {
         epoch_span.arg("reactivated", epoch_reactivated as f64);
         drop(epoch_span);
         epoch_us.record(epoch_start.elapsed().as_micros() as u64);
+
+        // Checkpoint boundary: every surviving epoch multiple of the
+        // interval. The convergence paths above `break` before reaching
+        // here, so a snapshot is only taken when the loop will continue —
+        // restoring it replays the remaining epochs bit-identically.
+        if checkpoint_every > 0 && epochs % checkpoint_every == 0 && epochs < opts.max_epochs {
+            let (a, u, i, ts, tr) = active.snapshot();
+            sink(&SolverSnapshot {
+                epochs,
+                steps,
+                alpha: state.alpha.clone(),
+                v: state.v.clone(),
+                active: a,
+                unchanged: u,
+                inactive: i,
+                total_shrunk: ts,
+                total_reactivated: tr,
+                rng: rng.state(),
+                active_work,
+                check_work,
+            });
+        }
     }
 
     if final_violation == f64::MAX {
@@ -612,6 +714,55 @@ mod tests {
         let b = solve(&p, &SolverOptions::default());
         assert_eq!(a.alpha, b.alpha);
         assert_eq!(a.steps, b.steps);
+    }
+
+    #[test]
+    fn resume_from_any_snapshot_is_bit_identical() {
+        // The checkpoint contract: kill the solve at ANY epoch boundary,
+        // resume from the snapshot, and the final model is bit-identical
+        // to the uninterrupted run — alpha for alpha, step for step.
+        let (g, rows, mut y) = separable(200, 31);
+        let mut rng = Rng::new(55);
+        for yi in y.iter_mut() {
+            if rng.bool(0.2) {
+                *yi = -*yi;
+            }
+        }
+        let p = ProblemView::new(&g, &rows, &y);
+        let opts = SolverOptions {
+            c: 2.0,
+            eps: 1e-4,
+            ..Default::default()
+        };
+        let mut snaps = Vec::new();
+        let full = solve_resumable(&p, &opts, None, 1, |s| snaps.push(s.clone()));
+        assert!(snaps.len() >= 2, "want several epochs to resume from, got {}", snaps.len());
+        for snap in snaps {
+            let at = snap.epochs;
+            let resumed = solve_resumable(&p, &opts, Some(snap), 0, |_| {});
+            assert_eq!(resumed.alpha, full.alpha, "alpha diverged resuming at epoch {at}");
+            assert_eq!(resumed.w, full.w, "w diverged resuming at epoch {at}");
+            assert_eq!(resumed.steps, full.steps, "steps diverged resuming at epoch {at}");
+            assert_eq!(resumed.epochs, full.epochs);
+            assert_eq!(resumed.converged, full.converged);
+            assert_eq!(resumed.violation, full.violation);
+        }
+    }
+
+    #[test]
+    fn snapshot_interval_and_terminal_epochs_are_respected() {
+        let (g, rows, y) = separable(150, 12);
+        let p = ProblemView::new(&g, &rows, &y);
+        let opts = SolverOptions {
+            eps: 1e-4,
+            ..Default::default()
+        };
+        let mut at = Vec::new();
+        let sol = solve_resumable(&p, &opts, None, 2, |s| at.push(s.epochs));
+        // Snapshots land on interval multiples and never on the final
+        // (terminating) epoch.
+        assert!(at.iter().all(|e| e % 2 == 0), "{at:?}");
+        assert!(at.iter().all(|&e| e < sol.epochs), "{at:?} vs {}", sol.epochs);
     }
 
     #[test]

@@ -26,6 +26,6 @@ pub mod shrinking;
 pub mod state;
 pub mod svr;
 
-pub use cd::{solve, Solution, SolverOptions};
+pub use cd::{solve, solve_resumable, Solution, SolverOptions, SolverSnapshot};
 pub use state::ProblemView;
 pub use svr::{solve_svr, SvrOptions, SvrSolution};

@@ -77,6 +77,35 @@ impl ActiveSet {
         self.total_shrunk += (before - self.active.len()) as u64;
     }
 
+    /// Capture the full shrinking state for a checkpoint:
+    /// `(active, unchanged, inactive, total_shrunk, total_reactivated)`.
+    /// Order within `active`/`inactive` is part of the state — epoch
+    /// iteration order (and hence the bit-exact solve trajectory) depends
+    /// on it.
+    #[allow(clippy::type_complexity)]
+    pub fn snapshot(&self) -> (Vec<u32>, Vec<u8>, Vec<u32>, u64, u64) {
+        (
+            self.active.clone(),
+            self.unchanged.clone(),
+            self.inactive.clone(),
+            self.total_shrunk,
+            self.total_reactivated,
+        )
+    }
+
+    /// Rebuild an active set from a [`ActiveSet::snapshot`] capture plus
+    /// the original threshold `k`.
+    pub fn from_snapshot(
+        active: Vec<u32>,
+        unchanged: Vec<u8>,
+        inactive: Vec<u32>,
+        total_shrunk: u64,
+        total_reactivated: u64,
+        k: u8,
+    ) -> Self {
+        ActiveSet { active, unchanged, k, inactive, total_shrunk, total_reactivated }
+    }
+
     /// Move `i` (currently inactive) back into the active set with a reset
     /// counter.
     pub fn reactivate_all(&mut self, violators: &[u32]) {

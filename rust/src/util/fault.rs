@@ -1,0 +1,385 @@
+//! Deterministic fault injection behind named fault points.
+//!
+//! Robustness claims in this repo — "a crash between temp-write and
+//! rename never corrupts the model", "the serve engine returns to full
+//! strength after a panic storm" — are only claims until a fault actually
+//! fires at the interesting instruction. This module makes that firing
+//! deterministic and scriptable: production code declares *named fault
+//! points* at its crash-relevant boundaries, and a schedule (set
+//! programmatically or via the `LPDSVM_FAULTS` environment variable)
+//! decides which points misbehave, how, and on which hit.
+//!
+//! ```no_run
+//! // In production code, at the boundary worth crashing at:
+//! lpdsvm::util::fault::point("ckpt.after_tmp_write")?;
+//! ```
+//!
+//! With no schedule armed, [`point`] is a single relaxed atomic load and
+//! an immediate `Ok(())` — the same zero-cost-when-off discipline as the
+//! observability spans, so fault points are safe to leave in hot-ish
+//! paths like checkpoint writes and batch dispatch.
+//!
+//! # Schedule grammar (`LPDSVM_FAULTS`)
+//!
+//! A schedule is `;`- or `,`-separated clauses of the form
+//!
+//! ```text
+//! <point>=<action>[@<start>][x<count>]
+//! ```
+//!
+//! * `<action>` — `error` (the point returns [`FaultError`], which
+//!   propagates through the surrounding `Result` plumbing), `panic`
+//!   (the point panics, exercising unwind/supervision paths), `abort`
+//!   (immediate `std::process::abort()`, the honest stand-in for
+//!   SIGKILL / power loss), or `delay:<ms>` (sleep, for racing timeouts).
+//! * `@<start>` — first hit that triggers, 1-based (default 1: the very
+//!   first execution of the point).
+//! * `x<count>` — how many consecutive hits trigger (default 1;
+//!   `x*` = every hit from `<start>` on).
+//!
+//! `LPDSVM_FAULTS='ckpt.after_tmp_write=abort@2'` aborts the process the
+//! second time a checkpoint reaches the post-temp-write boundary;
+//! `serve.batch=panic x3` panics the first three scored batches —
+//! exactly the K consecutive panics that trip the circuit breaker.
+//!
+//! Hit counting is per-point and process-global, guarded by one mutex on
+//! the armed path — deterministic even when many workers pass the same
+//! point concurrently (the *set* of triggered hits is fixed, whichever
+//! thread draws them).
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+/// What a triggered fault point does.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Return [`FaultError`] from the point.
+    Error,
+    /// Panic at the point (unwinds into whatever supervision surrounds it).
+    Panic,
+    /// `std::process::abort()` — no unwinding, no destructors; the
+    /// in-process equivalent of SIGKILL for crash-recovery drills.
+    Abort,
+    /// Sleep this long, then continue normally.
+    Delay(Duration),
+}
+
+/// One armed fault point: the action plus its trigger window.
+#[derive(Clone, Debug)]
+struct FaultRule {
+    action: FaultAction,
+    /// 1-based hit number of the first trigger.
+    start: u64,
+    /// Number of triggering hits; `None` = unlimited.
+    count: Option<u64>,
+    /// Executions of this point observed so far.
+    hits: u64,
+}
+
+/// The error returned by a `error`-action fault point. Implements
+/// `std::error::Error`, so it rides the existing `anyhow`/`?` plumbing of
+/// whatever I/O path it interrupts.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultError {
+    /// Name of the fault point that fired.
+    pub point: String,
+}
+
+impl fmt::Display for FaultError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "injected fault at point '{}'", self.point)
+    }
+}
+
+impl std::error::Error for FaultError {}
+
+/// Fast-path switch: `false` means no schedule is armed and [`point`]
+/// returns after one relaxed load.
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+/// The armed schedule. `None` when disarmed; the mutex also serializes
+/// hit counting, which keeps trigger windows exact under concurrency.
+static SCHEDULE: Mutex<Option<HashMap<String, FaultRule>>> = Mutex::new(None);
+
+/// Serializes tests that arm process-global schedules. Poison-tolerant:
+/// a panicking test (several fault tests panic on purpose) must not
+/// poison the whole suite.
+static TEST_GATE: Mutex<()> = Mutex::new(());
+
+fn lock_schedule() -> MutexGuard<'static, Option<HashMap<String, FaultRule>>> {
+    // A panic while holding the lock (FaultAction::Panic drops the guard
+    // first, but a user panic inside `set_schedule`'s parser could not)
+    // should not disable fault injection for the rest of the process.
+    SCHEDULE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Declare a fault point. Returns `Ok(())` (after one atomic load) unless
+/// a schedule targets `name` and its trigger window covers this hit.
+///
+/// An `error` trigger returns `Err(FaultError)`; `panic`/`abort`/`delay`
+/// act before returning. Callers on `Result` paths write
+/// `fault::point("...")?;`, infallible callers (e.g. worker loops that
+/// route errors themselves) match on the result.
+#[inline]
+pub fn point(name: &str) -> Result<(), FaultError> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return Ok(());
+    }
+    point_slow(name)
+}
+
+#[cold]
+fn point_slow(name: &str) -> Result<(), FaultError> {
+    let action = {
+        let mut guard = lock_schedule();
+        let Some(schedule) = guard.as_mut() else { return Ok(()) };
+        let Some(rule) = schedule.get_mut(name) else { return Ok(()) };
+        rule.hits += 1;
+        let in_window = rule.hits >= rule.start
+            && match rule.count {
+                None => true,
+                Some(c) => rule.hits < rule.start + c,
+            };
+        if !in_window {
+            return Ok(());
+        }
+        rule.action.clone()
+        // Guard drops here: panic/abort/delay must not hold the lock.
+    };
+    match action {
+        FaultAction::Error => Err(FaultError { point: name.to_string() }),
+        FaultAction::Panic => panic!("injected fault at point '{name}'"),
+        FaultAction::Abort => {
+            // Leave a trace for the human watching the drill; abort()
+            // itself says nothing.
+            eprintln!("lpdsvm: injected abort at fault point '{name}'");
+            std::process::abort();
+        }
+        FaultAction::Delay(d) => {
+            std::thread::sleep(d);
+            Ok(())
+        }
+    }
+}
+
+/// Arm a schedule from its textual form (see the module docs for the
+/// grammar). Replaces any previously armed schedule; an empty spec
+/// disarms, same as [`clear`].
+pub fn set_schedule(spec: &str) -> anyhow::Result<()> {
+    let mut map = HashMap::new();
+    for clause in spec.split([';', ',']) {
+        let clause = clause.trim();
+        if clause.is_empty() {
+            continue;
+        }
+        let (name, rule) = parse_clause(clause)?;
+        map.insert(name, rule);
+    }
+    let mut guard = lock_schedule();
+    if map.is_empty() {
+        *guard = None;
+        ARMED.store(false, Ordering::Release);
+    } else {
+        *guard = Some(map);
+        ARMED.store(true, Ordering::Release);
+    }
+    Ok(())
+}
+
+fn parse_clause(clause: &str) -> anyhow::Result<(String, FaultRule)> {
+    let (name, mut spec) = clause
+        .split_once('=')
+        .ok_or_else(|| anyhow::anyhow!("fault clause '{clause}' is not <point>=<action>"))?;
+    let name = name.trim();
+    anyhow::ensure!(!name.is_empty(), "fault clause '{clause}' has an empty point name");
+    spec = spec.trim();
+
+    // Peel the trailing modifiers: ...x<count> then ...@<start>.
+    let mut count = Some(1u64);
+    if let Some((rest, c)) = spec.rsplit_once('x') {
+        // Only treat it as a count suffix if what follows parses — the
+        // action words themselves contain no 'x', so this is unambiguous.
+        let c = c.trim();
+        if c == "*" {
+            count = None;
+            spec = rest.trim_end();
+        } else if let Ok(n) = c.parse::<u64>() {
+            anyhow::ensure!(n >= 1, "fault clause '{clause}': count must be >= 1");
+            count = Some(n);
+            spec = rest.trim_end();
+        }
+    }
+    let mut start = 1u64;
+    if let Some((rest, s)) = spec.rsplit_once('@') {
+        let n: u64 = s
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("fault clause '{clause}': bad @start '{s}'"))?;
+        anyhow::ensure!(n >= 1, "fault clause '{clause}': @start is 1-based");
+        start = n;
+        spec = rest.trim_end();
+    }
+
+    let action = match spec {
+        "error" => FaultAction::Error,
+        "panic" => FaultAction::Panic,
+        "abort" => FaultAction::Abort,
+        _ => {
+            if let Some(ms) = spec.strip_prefix("delay:") {
+                let ms: u64 = ms.trim().parse().map_err(|_| {
+                    anyhow::anyhow!("fault clause '{clause}': bad delay '{ms}' (want delay:<ms>)")
+                })?;
+                FaultAction::Delay(Duration::from_millis(ms))
+            } else {
+                anyhow::bail!(
+                    "fault clause '{clause}': unknown action '{spec}' \
+                     (error | panic | abort | delay:<ms>)"
+                );
+            }
+        }
+    };
+    Ok((name.to_string(), FaultRule { action, start, count, hits: 0 }))
+}
+
+/// Disarm all fault points.
+pub fn clear() {
+    let mut guard = lock_schedule();
+    *guard = None;
+    ARMED.store(false, Ordering::Release);
+}
+
+/// Arm from `LPDSVM_FAULTS` if it is set and non-empty. Called once at
+/// process start by the CLI; library users call [`set_schedule`] directly.
+pub fn init_from_env() -> anyhow::Result<()> {
+    match std::env::var("LPDSVM_FAULTS") {
+        Ok(spec) if !spec.trim().is_empty() => set_schedule(&spec)
+            .map_err(|e| anyhow::anyhow!("LPDSVM_FAULTS: {e}")),
+        _ => Ok(()),
+    }
+}
+
+/// How many times the point `name` has executed under the current
+/// schedule (0 if unscheduled). Drill assertions use this to prove a
+/// fault point actually ran.
+pub fn hits(name: &str) -> u64 {
+    let guard = lock_schedule();
+    guard
+        .as_ref()
+        .and_then(|m| m.get(name))
+        .map(|r| r.hits)
+        .unwrap_or(0)
+}
+
+/// Serialize tests that arm global schedules: the returned guard holds an
+/// exclusive lock released on drop. Poison-tolerant, because fault tests
+/// panic on purpose.
+pub fn test_lock() -> MutexGuard<'static, ()> {
+    TEST_GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_points_are_noops() {
+        let _gate = test_lock();
+        clear();
+        for _ in 0..100 {
+            assert!(point("any.name").is_ok());
+        }
+    }
+
+    #[test]
+    fn error_triggers_in_window_only() {
+        let _gate = test_lock();
+        set_schedule("io.write=error@3x2").unwrap();
+        assert!(point("io.write").is_ok()); // hit 1
+        assert!(point("io.write").is_ok()); // hit 2
+        assert!(point("io.write").is_err()); // hit 3: window [3,4]
+        assert!(point("io.write").is_err()); // hit 4
+        assert!(point("io.write").is_ok()); // hit 5: past the window
+        assert_eq!(hits("io.write"), 5);
+        clear();
+    }
+
+    #[test]
+    fn unlimited_count_triggers_forever() {
+        let _gate = test_lock();
+        set_schedule("p=error x*").unwrap();
+        for _ in 0..10 {
+            assert!(point("p").is_err());
+        }
+        clear();
+    }
+
+    #[test]
+    fn unrelated_points_unaffected() {
+        let _gate = test_lock();
+        set_schedule("a=error").unwrap();
+        assert!(point("b").is_ok());
+        assert!(point("a").is_err());
+        assert!(point("a").is_ok()); // count defaults to 1
+        clear();
+    }
+
+    #[test]
+    fn panic_action_panics_and_disarms_cleanly() {
+        let _gate = test_lock();
+        set_schedule("boom=panic").unwrap();
+        let r = std::panic::catch_unwind(|| point("boom"));
+        assert!(r.is_err(), "panic action did not panic");
+        // The lock was released before the panic; the schedule still works.
+        assert!(point("boom").is_ok());
+        clear();
+    }
+
+    #[test]
+    fn delay_action_sleeps_then_continues() {
+        let _gate = test_lock();
+        set_schedule("slow=delay:10").unwrap();
+        let t0 = std::time::Instant::now();
+        assert!(point("slow").is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+        clear();
+    }
+
+    #[test]
+    fn multi_clause_schedules_parse() {
+        let _gate = test_lock();
+        set_schedule("a=error; b=delay:5 x2, c=panic@7").unwrap();
+        assert!(point("a").is_err());
+        assert!(point("b").is_ok());
+        assert!(point("c").is_ok()); // start=7, this is hit 1
+        clear();
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        let _gate = test_lock();
+        assert!(set_schedule("no-equals-sign").is_err());
+        assert!(set_schedule("p=explode").is_err());
+        assert!(set_schedule("p=delay:abc").is_err());
+        assert!(set_schedule("p=error@0").is_err());
+        assert!(set_schedule("=error").is_err());
+        // A failed parse must not leave a half-armed schedule.
+        clear();
+        assert!(point("p").is_ok());
+    }
+
+    #[test]
+    fn fault_error_rides_anyhow() {
+        let _gate = test_lock();
+        set_schedule("deep=error").unwrap();
+        fn io_like() -> anyhow::Result<()> {
+            point("deep")?;
+            Ok(())
+        }
+        let err = io_like().unwrap_err();
+        assert!(err.to_string().contains("deep"), "{err}");
+        clear();
+    }
+}

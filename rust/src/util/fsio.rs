@@ -1,0 +1,201 @@
+//! Crash-safe file writes with integrity footers.
+//!
+//! Every durable artifact this crate produces (model files, training
+//! checkpoints, grid journals) goes through the same two defenses:
+//!
+//! 1. **Atomic replace** — bytes are written to a same-directory temp
+//!    file, fsync'd, then renamed over the destination (and the parent
+//!    directory fsync'd on Unix, making the rename itself durable). A
+//!    crash at any instant leaves either the complete old file or the
+//!    complete new file, never a torn mixture.
+//! 2. **CRC-32 footer** — the final four bytes are the checksum of
+//!    everything before them, verified on read. Torn writes the rename
+//!    dance cannot see (a dying disk, a truncating copy, bit rot) turn
+//!    into a clean "checksum mismatch" error instead of a parsed-but-
+//!    corrupt artifact.
+//!
+//! Each write declares a named fault point ([`crate::util::fault`]) in
+//! the window between temp-write and rename — the exact instruction a
+//! crash-recovery drill wants to die at.
+
+use crate::util::fault;
+use crate::util::hash::{crc32, Crc32};
+use anyhow::Context;
+use std::fs::{self, File};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+fn temp_sibling(path: &Path) -> PathBuf {
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "file".to_string());
+    path.with_file_name(format!(".{name}.tmp.{}", std::process::id()))
+}
+
+/// Atomically replace `path` with `bytes`: temp write → fsync →
+/// `fault_point` → rename → parent-dir fsync. On any error the
+/// destination is untouched and the temp file is removed.
+pub fn atomic_write(path: &Path, bytes: &[u8], fault_point: &str) -> anyhow::Result<()> {
+    let tmp = temp_sibling(path);
+    let result = (|| -> anyhow::Result<()> {
+        {
+            let mut f = File::create(&tmp)
+                .with_context(|| format!("creating temp file {}", tmp.display()))?;
+            f.write_all(bytes)?;
+            f.sync_all()?;
+        }
+        // The crash window under test: the temp file is durable but the
+        // destination still holds the previous version.
+        fault::point(fault_point)?;
+        fs::rename(&tmp, path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        #[cfg(unix)]
+        if let Some(parent) = path.parent() {
+            let dir = if parent.as_os_str().is_empty() { Path::new(".") } else { parent };
+            // Make the rename durable: fsync the directory entry.
+            File::open(dir)?.sync_all()?;
+        }
+        Ok(())
+    })();
+    if result.is_err() {
+        let _ = fs::remove_file(&tmp);
+    }
+    result.with_context(|| format!("atomic write of {}", path.display()))
+}
+
+/// [`atomic_write`] of `magic ‖ payload ‖ crc32(magic ‖ payload)`.
+pub fn write_checksummed(
+    path: &Path,
+    magic: &[u8; 8],
+    payload: &[u8],
+    fault_point: &str,
+) -> anyhow::Result<()> {
+    let mut bytes = Vec::with_capacity(magic.len() + payload.len() + 4);
+    bytes.extend_from_slice(magic);
+    bytes.extend_from_slice(payload);
+    let mut crc = Crc32::new();
+    crc.update(&bytes);
+    bytes.extend_from_slice(&crc.finish().to_le_bytes());
+    atomic_write(path, &bytes, fault_point)
+}
+
+/// Read a [`write_checksummed`] file back, verifying magic and checksum.
+/// Returns `Ok(None)` when the file does not exist; any other problem —
+/// wrong magic, truncation, checksum mismatch — is an error naming the
+/// file, because silently ignoring a corrupt artifact is how resumes go
+/// wrong.
+pub fn read_checksummed(path: &Path, magic: &[u8; 8]) -> anyhow::Result<Option<Vec<u8>>> {
+    let bytes = match fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+    };
+    anyhow::ensure!(
+        bytes.len() >= magic.len() + 4,
+        "{}: truncated ({} bytes)",
+        path.display(),
+        bytes.len()
+    );
+    anyhow::ensure!(
+        &bytes[..magic.len()] == magic,
+        "{}: bad magic — not a {} file (or an incompatible version)",
+        path.display(),
+        String::from_utf8_lossy(&magic[..magic.len() - 1]),
+    );
+    let (body, foot) = bytes.split_at(bytes.len() - 4);
+    let want = u32::from_le_bytes(foot.try_into().expect("4-byte footer"));
+    let got = crc32(body);
+    anyhow::ensure!(
+        got == want,
+        "{}: checksum mismatch (stored {want:#010x}, computed {got:#010x}) — \
+         the file is corrupt or truncated",
+        path.display()
+    );
+    Ok(Some(body[magic.len()..].to_vec()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("lpdsvm_fsio_{name}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    const MAGIC: &[u8; 8] = b"LPDTEST\0";
+
+    #[test]
+    fn roundtrip() {
+        let dir = temp_dir("roundtrip");
+        let path = dir.join("a.bin");
+        write_checksummed(&path, MAGIC, b"payload bytes", "test.none").unwrap();
+        assert_eq!(read_checksummed(&path, MAGIC).unwrap().unwrap(), b"payload bytes");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_file_is_none() {
+        let dir = temp_dir("missing");
+        assert!(read_checksummed(&dir.join("nope.bin"), MAGIC).unwrap().is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corruption_and_truncation_are_clean_errors() {
+        let dir = temp_dir("corrupt");
+        let path = dir.join("a.bin");
+        write_checksummed(&path, MAGIC, b"some payload worth protecting", "test.none").unwrap();
+
+        let clean = fs::read(&path).unwrap();
+        let mut flipped = clean.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x40;
+        fs::write(&path, &flipped).unwrap();
+        let err = read_checksummed(&path, MAGIC).unwrap_err();
+        assert!(err.to_string().contains("checksum mismatch"), "{err:#}");
+
+        fs::write(&path, &clean[..clean.len() - 3]).unwrap();
+        let err = read_checksummed(&path, MAGIC).unwrap_err();
+        assert!(err.to_string().contains("checksum mismatch"), "{err:#}");
+
+        fs::write(&path, b"xx").unwrap();
+        let err = read_checksummed(&path, MAGIC).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err:#}");
+
+        fs::write(&path, b"WRONGMG\0rest of a long enough file").unwrap();
+        let err = read_checksummed(&path, MAGIC).unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "{err:#}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fault_between_tmp_and_rename_preserves_old_file() {
+        let _gate = fault::test_lock();
+        let dir = temp_dir("fault_window");
+        let path = dir.join("a.bin");
+        write_checksummed(&path, MAGIC, b"version one", "fsio.test.write").unwrap();
+
+        fault::set_schedule("fsio.test.write=error").unwrap();
+        let err = write_checksummed(&path, MAGIC, b"version two", "fsio.test.write").unwrap_err();
+        assert!(err.to_string().contains("injected fault"), "{err:#}");
+        fault::clear();
+
+        // The old version survives intact and no temp litter remains.
+        assert_eq!(read_checksummed(&path, MAGIC).unwrap().unwrap(), b"version one");
+        let leftovers: Vec<_> = fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "temp litter: {leftovers:?}");
+
+        // And a retry after the fault clears goes through.
+        write_checksummed(&path, MAGIC, b"version two", "fsio.test.write").unwrap();
+        assert_eq!(read_checksummed(&path, MAGIC).unwrap().unwrap(), b"version two");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,101 @@
+//! CRC-32 (IEEE 802.3, polynomial `0xEDB88320`) for file integrity
+//! footers.
+//!
+//! The offline registry has no `crc32fast`/`crc` crate, so we ship the
+//! classic byte-at-a-time table implementation. It is not a hot path:
+//! checksums are computed once per model save/load and once per training
+//! checkpoint, over buffers that are tiny next to the GEMM traffic. What
+//! matters is that the value is stable, standard (matches `cksum -o3`,
+//! zlib, PNG, gzip), and byte-exact across platforms — a checkpoint
+//! written on one machine must verify on another.
+
+/// Streaming CRC-32 state. Feed bytes with [`Crc32::update`], read the
+/// final value with [`Crc32::finish`].
+pub struct Crc32 {
+    state: u32,
+}
+
+/// The 256-entry lookup table for the reflected IEEE polynomial,
+/// computed at compile time so there is no lazy-init synchronization.
+const TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Crc32 {
+    /// Fresh checksum state.
+    pub fn new() -> Crc32 {
+        Crc32 { state: 0xFFFF_FFFF }
+    }
+
+    /// Absorb `bytes` into the running checksum.
+    #[inline]
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut c = self.state;
+        for &b in bytes {
+            c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.state = c;
+    }
+
+    /// The final CRC-32 value of everything absorbed so far.
+    pub fn finish(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+/// One-shot CRC-32 of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // The canonical check value for CRC-32/IEEE.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn streaming_matches_one_shot() {
+        let data = b"checkpointed solver state, many bytes of it";
+        let mut c = Crc32::new();
+        for chunk in data.chunks(7) {
+            c.update(chunk);
+        }
+        assert_eq!(c.finish(), crc32(data));
+    }
+
+    #[test]
+    fn single_bit_flip_changes_value() {
+        let mut data = vec![0u8; 64];
+        let base = crc32(&data);
+        data[40] ^= 0x01;
+        assert_ne!(crc32(&data), base);
+    }
+}

@@ -18,6 +18,9 @@
 //! of JSON the repo emits (numbers as f64, exact for integers < 2⁵³).
 
 pub mod cli;
+pub mod fault;
+pub mod fsio;
+pub mod hash;
 pub mod json;
 pub mod rng;
 pub mod threads;

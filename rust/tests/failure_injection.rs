@@ -2,6 +2,7 @@
 //! degenerate numerics must produce clean errors (or correct handling),
 //! never panics or NaNs.
 
+use lpdsvm::coordinator::checkpoint::CheckpointCtx;
 use lpdsvm::coordinator::train::{train, TrainConfig};
 use lpdsvm::data::dataset::Dataset;
 use lpdsvm::data::sparse::SparseMatrix;
@@ -9,8 +10,13 @@ use lpdsvm::data::synth::PaperDataset;
 use lpdsvm::kernel::Kernel;
 use lpdsvm::lowrank::Stage1Config;
 use lpdsvm::runtime::Runtime;
-use lpdsvm::solver::SolverOptions;
+use lpdsvm::serve::{ModelRegistry, ServeConfig, ServeEngine, ServeError};
+use lpdsvm::solver::{Solution, SolverOptions};
+use lpdsvm::util::fault;
 use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 fn temp_dir(name: &str) -> PathBuf {
     let d = std::env::temp_dir().join(format!("lpdsvm_failinj_{name}"));
@@ -168,4 +174,227 @@ fn truncated_model_file_is_a_clean_error() {
     let cut = dir.join("cut.lpd");
     std::fs::write(&cut, &bytes[..bytes.len() / 2]).unwrap();
     assert!(lpdsvm::model::io::load(&cut).is_err());
+}
+
+// ---------------------------------------------------------------------
+// Deterministic fault-injection drills: the crash-safety and supervision
+// claims, exercised by actually firing faults at the named boundaries.
+
+fn sample_solution() -> Solution {
+    Solution {
+        alpha: vec![0.0, 0.5, 1.0],
+        w: vec![0.25, -0.75],
+        objective: -1.5,
+        steps: 42,
+        epochs: 3,
+        sv_count: 2,
+        converged: true,
+        violation: 0.004,
+        train_secs: 0.1,
+        final_active: 3,
+    }
+}
+
+#[test]
+fn checkpoint_mid_write_crash_commits_nothing() {
+    let _gate = fault::test_lock();
+    let dir = temp_dir("ckpt_midwrite");
+    let _ = std::fs::remove_file(dir.join("t.done.ckpt"));
+    let ckpt = CheckpointCtx::new(&dir, 1).unwrap();
+    // Fail between temp-write and rename: the atomic-replace discipline
+    // means the committed path must simply not exist afterwards — a cold
+    // start on resume, never a half-written checkpoint.
+    fault::set_schedule("ckpt.after_tmp_write=error").unwrap();
+    assert!(ckpt.store_solution("t", &sample_solution()).is_err());
+    fault::clear();
+    assert!(ckpt.load_solution("t").unwrap().is_none());
+    // A clean retry commits and round-trips.
+    ckpt.store_solution("t", &sample_solution()).unwrap();
+    let back = ckpt.load_solution("t").unwrap().expect("committed");
+    assert_eq!(back.alpha, sample_solution().alpha);
+    assert_eq!(back.steps, 42);
+}
+
+#[test]
+fn corrupted_checkpoint_is_an_error_not_a_silent_cold_start() {
+    let dir = temp_dir("ckpt_corrupt");
+    let ckpt = CheckpointCtx::new(&dir, 1).unwrap();
+    ckpt.store_solution("t", &sample_solution()).unwrap();
+    let path = dir.join("t.done.ckpt");
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+    // A bit-flipped checkpoint must refuse to resume, loudly — silently
+    // restarting from zero would break the bit-identity contract without
+    // anyone noticing.
+    let err = ckpt.load_solution("t").unwrap_err();
+    assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+}
+
+#[test]
+fn killed_training_run_resumes_bit_identical() {
+    let bin = env!("CARGO_BIN_EXE_lpdsvm");
+    let dir = temp_dir("kill_resume");
+    let data = dir.join("data.svm");
+    let base_model = dir.join("base.lpd");
+    let resumed_model = dir.join("resumed.lpd");
+    let ckpt_dir = dir.join("ckpt");
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+    let _ = std::fs::remove_file(&base_model);
+    let _ = std::fs::remove_file(&resumed_model);
+
+    let run = |args: &[&str], faults: Option<&str>| {
+        let mut cmd = std::process::Command::new(bin);
+        cmd.args(args);
+        match faults {
+            Some(f) => cmd.env("LPDSVM_FAULTS", f),
+            None => cmd.env_remove("LPDSVM_FAULTS"),
+        };
+        cmd.output().unwrap()
+    };
+    let gen = run(
+        &[
+            "gen-data", "--dataset", "adult", "--scale", "0.002", "--seed", "6",
+            "--out", data.to_str().unwrap(),
+        ],
+        None,
+    );
+    assert!(gen.status.success(), "{}", String::from_utf8_lossy(&gen.stderr));
+
+    // Tight eps keeps the solve multi-epoch, so checkpoint writes (one
+    // snapshot per epoch, plus the completion record) number at least two.
+    let train_args = |model_out: &str, with_ckpt: bool| {
+        let mut a = vec![
+            "train".to_string(), "--data".into(), data.to_str().unwrap().into(),
+            "--model-out".into(), model_out.into(),
+            "--budget".into(), "16".into(), "--eps".into(), "0.001".into(),
+            "--seed".into(), "6".into(), "--threads".into(), "2".into(),
+        ];
+        if with_ckpt {
+            a.extend([
+                "--checkpoint".into(), ckpt_dir.to_str().unwrap().into(),
+                "--checkpoint-every".into(), "1".into(),
+            ]);
+        }
+        a
+    };
+    let to_refs = |a: &[String]| a.iter().map(|s| s.as_str()).collect::<Vec<_>>();
+
+    // Reference: an uninterrupted, checkpoint-free run.
+    let base_args = train_args(base_model.to_str().unwrap(), false);
+    let base = run(&to_refs(&base_args), None);
+    assert!(base.status.success(), "{}", String::from_utf8_lossy(&base.stderr));
+
+    // The drill: abort the process mid-run, at the second checkpoint
+    // write's temp-write/rename boundary (the honest stand-in for
+    // SIGKILL), then re-invoke the identical command to resume.
+    let ckpt_args = train_args(resumed_model.to_str().unwrap(), true);
+    let killed = run(&to_refs(&ckpt_args), Some("ckpt.after_tmp_write=abort@2"));
+    assert!(
+        !killed.status.success(),
+        "the injected abort must kill the run: {}",
+        String::from_utf8_lossy(&killed.stdout)
+    );
+    assert!(!resumed_model.exists(), "no model may survive the abort");
+    let resumed = run(&to_refs(&ckpt_args), None);
+    assert!(resumed.status.success(), "{}", String::from_utf8_lossy(&resumed.stderr));
+
+    // The killed-and-resumed model is bit-identical to the uninterrupted
+    // one — resume replays the exact run, it does not approximate it.
+    let a = std::fs::read(&base_model).unwrap();
+    let b = std::fs::read(&resumed_model).unwrap();
+    assert!(a == b, "resumed model differs from the uninterrupted run");
+}
+
+#[test]
+fn serve_panic_storm_recovers_to_full_strength() {
+    let _gate = fault::test_lock();
+    // Two worker deaths, then three straight batch panics: the supervisor
+    // must respawn both workers, the circuit breaker must quarantine the
+    // model and recover it through a half-open probe, and the metrics
+    // invariant must hold through all of it.
+    fault::set_schedule("serve.worker=panic x2; serve.batch=panic x3").unwrap();
+    let data = PaperDataset::Adult.spec(0.005, 9).synth.generate();
+    let model = train(
+        &data,
+        &TrainConfig {
+            stage1: Stage1Config {
+                budget: 24,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let registry = Arc::new(ModelRegistry::new());
+    registry.insert("m", model);
+    let expected = registry.get("m").unwrap().predict(&data.x).unwrap();
+    let engine = ServeEngine::start(
+        Arc::clone(&registry),
+        ServeConfig {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            workers: 2,
+            panic_quarantine_after: 3,
+            quarantine_cooldown: Duration::from_millis(5),
+            ..ServeConfig::default()
+        },
+    );
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let m = engine.metrics();
+
+    // Phase 1: both injected worker deaths happen on first poll; wait
+    // until the supervisor has respawned back to full strength.
+    while m.worker_restarts.load(Ordering::Relaxed) < 2 || engine.healthy_workers() < 2 {
+        assert!(Instant::now() < deadline, "supervisor never restored full strength");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(m.worker_panics.load(Ordering::Relaxed), 2);
+
+    // Phase 2: three sequential batches panic and trip the breaker.
+    let row = data.x.row_entries(0);
+    for _ in 0..3 {
+        assert!(engine.submit("m", &row).wait().is_err());
+    }
+    while m.quarantines.load(Ordering::Relaxed) == 0 {
+        assert!(Instant::now() < deadline, "breaker never opened");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    // Phase 3: once the cooldown lapses, a submit is admitted as the
+    // half-open probe; the fault budget is spent, so it scores cleanly
+    // and closes the breaker.
+    let ticket = loop {
+        match engine.try_submit("m", &row) {
+            Ok(t) => break t,
+            Err(ServeError::ModelQuarantined { .. }) => {
+                assert!(Instant::now() < deadline, "cooldown never elapsed");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(other) => panic!("unexpected admission error: {other}"),
+        }
+    };
+    assert_eq!(ticket.wait().unwrap().label, expected[0]);
+    while m.quarantine_recoveries.load(Ordering::Relaxed) == 0 {
+        assert!(Instant::now() < deadline, "breaker never closed");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    // Phase 4: full strength — every subsequent request scores correctly.
+    for i in 0..10 {
+        let got = engine.submit("m", &data.x.row_entries(i)).wait().unwrap();
+        assert_eq!(got.label, expected[i]);
+    }
+    assert_eq!(engine.healthy_workers(), 2);
+    assert_eq!(m.worker_restarts.load(Ordering::Relaxed), 2);
+    assert_eq!(m.quarantines.load(Ordering::Relaxed), 1);
+    assert_eq!(
+        m.submitted.load(Ordering::Relaxed),
+        m.completed.load(Ordering::Relaxed) + m.failed.load(Ordering::Relaxed),
+        "accounting invariant broken after the storm"
+    );
+    assert_eq!(m.queue_depth.load(Ordering::Relaxed), 0);
+    engine.shutdown();
+    fault::clear();
 }

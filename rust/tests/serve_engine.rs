@@ -309,6 +309,7 @@ fn bounded_queue_rejects_once_full_and_invariant_holds() {
             workers: 1,
             max_queue: 3,
             shed_policy: ShedPolicy::RejectNewest,
+            ..ServeConfig::default()
         },
     );
     let queued: Vec<_> = (0..3).map(|_| engine.submit("m", &[(0, 1.0)])).collect();
@@ -411,6 +412,7 @@ fn drop_expired_sheds_overdue_requests_to_admit_new_traffic() {
             workers: 1,
             max_queue: 2,
             shed_policy: ShedPolicy::DropExpired,
+            ..ServeConfig::default()
         },
         Arc::new(GatedProvider {
             gate: Arc::clone(&gate),

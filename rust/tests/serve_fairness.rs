@@ -163,6 +163,7 @@ fn hot_saturation_sheds_only_the_hot_tenant_reject_newest() {
             workers: 1,
             max_queue: 4,
             shed_policy: ShedPolicy::RejectNewest,
+            ..ServeConfig::default()
         },
     );
     let rows: Vec<Vec<(u32, f32)>> = (0..8).map(|i| data.x.row_entries(i)).collect();
@@ -223,6 +224,7 @@ fn deadline_shedding_stays_within_the_hot_tenant() {
             workers: 1,
             max_queue: 4,
             shed_policy: ShedPolicy::DropExpired,
+            ..ServeConfig::default()
         },
     );
     let rows: Vec<Vec<(u32, f32)>> = (0..8).map(|i| data.x.row_entries(i)).collect();
@@ -283,6 +285,7 @@ fn remove_model_fails_its_queue_and_leaves_other_tenants_alone() {
             workers: 1,
             max_queue: 0,
             shed_policy: ShedPolicy::RejectNewest,
+            ..ServeConfig::default()
         },
     );
     let rows: Vec<Vec<(u32, f32)>> = (0..6).map(|i| data.x.row_entries(i)).collect();
@@ -332,6 +335,7 @@ fn shed_without_room_still_resolves_tickets_once() {
             workers: 1,
             max_queue: 6,
             shed_policy: ShedPolicy::DropExpired,
+            ..ServeConfig::default()
         },
     );
     let rows: Vec<Vec<(u32, f32)>> = (0..8).map(|i| data.x.row_entries(i)).collect();
