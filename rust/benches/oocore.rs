@@ -1,0 +1,222 @@
+//! Out-of-core data plane: LIBSVM parse throughput and the cost of
+//! blockwise training relative to the resident in-memory path.
+//!
+//! Three sections:
+//!
+//! 1. **Parse throughput** — the reused-buffer LIBSVM reader, reported in
+//!    MB/s. This is the hot loop of the streaming path, which re-parses
+//!    every shard once per epoch, so its throughput bounds how small a
+//!    block budget can get before epochs become I/O-dominated.
+//! 2. **Sharding** — `split` over the same file, plus a `ShardedSource`
+//!    open (label pass + manifest check).
+//! 3. **Blockwise vs in-memory training** — the same `train_streaming`
+//!    entry point with budget 0 (one resident block, the reference), a
+//!    stripe-sized budget over the in-memory source, and the same budget
+//!    over the shard directory. All three models must be byte-identical —
+//!    the bench doubles as a differential test — and the slowdown of the
+//!    bounded-memory paths is what the JSON artifact tracks.
+//!
+//! Results land in `BENCH_oocore.json` (override with
+//! `LPDSVM_BENCH_OOCORE_OUT`).
+//!
+//!     cargo bench --bench oocore              # full workload
+//!     cargo bench --bench oocore -- --smoke   # CI fast mode
+
+mod harness;
+
+use lpdsvm::coordinator::train::{train_streaming, TrainConfig};
+use lpdsvm::data::synth::{FeatureStyle, SynthSpec};
+use lpdsvm::data::{libsvm, DataSource, MemorySource, ShardedSource};
+use lpdsvm::kernel::Kernel;
+use lpdsvm::lowrank::Stage1Config;
+use lpdsvm::model::io as model_io;
+use lpdsvm::model::multiclass::MulticlassModel;
+use lpdsvm::report::Table;
+use lpdsvm::solver::SolverOptions;
+use lpdsvm::util::json::{num, obj, s, Json};
+use lpdsvm::util::timer::StageClock;
+use std::path::Path;
+
+fn model_bytes(model: &MulticlassModel, dir: &Path, name: &str) -> Vec<u8> {
+    let path = dir.join(name);
+    model_io::save(model, &path).expect("serialize bench model");
+    std::fs::read(&path).expect("read bench model back")
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let seed = harness::bench_seed();
+    let (n, p) = if smoke { (6_000, 24) } else { (60_000, 48) };
+
+    // Dense features so the LIBSVM round-trip touches every column and
+    // the text file has realistic per-row weight.
+    let data = SynthSpec {
+        name: "oocore-bench".into(),
+        n,
+        p,
+        n_classes: 2,
+        sep: 1.5,
+        latent: 6,
+        noise: 1.0,
+        style: FeatureStyle::Dense,
+        seed,
+    }
+    .generate();
+
+    let dir = std::env::temp_dir().join("lpdsvm_bench_oocore");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("bench tmp dir");
+    let svm = dir.join("data.svm");
+    libsvm::write(&data, &svm).expect("write libsvm file");
+    let bytes = std::fs::metadata(&svm).expect("stat libsvm file").len();
+    let mb = bytes as f64 / (1024.0 * 1024.0);
+    println!(
+        "oocore{}: n={n} p={p} → {mb:.1} MB of LIBSVM text\n",
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    // --- 1. parse throughput ---
+    let samples = if smoke { 3 } else { 7 };
+    let stats = harness::bench_stats(1, samples, || {
+        let ds = libsvm::read(&svm).expect("parse libsvm file");
+        assert_eq!(ds.len(), n, "parse dropped rows");
+    });
+    harness::print_stats("libsvm parse (reused-buffer reader)", &stats, Some((mb, "MB")));
+    let parse_mb_s_best = mb / stats.min.max(1e-12);
+
+    // --- 2. shard + open ---
+    let shard_dir = dir.join("shards");
+    let parts = 8usize;
+    let (_, split_secs) = harness::time_once(|| {
+        libsvm::split_shards(&svm, &shard_dir, parts).expect("split shards")
+    });
+    let (sharded, open_secs) =
+        harness::time_once(|| ShardedSource::open(&shard_dir).expect("open shard dir"));
+    assert_eq!(sharded.n_rows(), n, "shard label pass lost rows");
+    println!(
+        "split into {parts} shards {} s, ShardedSource::open (label pass) {} s\n",
+        Table::secs(split_secs),
+        Table::secs(open_secs)
+    );
+
+    // --- 3. blockwise vs in-memory training ---
+    let cfg = TrainConfig {
+        kernel: Kernel::gaussian(0.5 / p as f64),
+        stage1: Stage1Config {
+            budget: 64,
+            seed,
+            ..Default::default()
+        },
+        solver: SolverOptions {
+            eps: 1e-3,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    // ~One stripe of G per block at budget 64: small enough that every
+    // epoch really streams multiple blocks at both workload sizes.
+    let block_budget = 300_000usize;
+    let src = MemorySource::new(&data);
+
+    let (mem_model, mem_secs) = harness::time_once(|| {
+        train_streaming(&src, &cfg, 0, &mut StageClock::new(), None).expect("in-memory train")
+    });
+    let (blk_model, blk_secs) = harness::time_once(|| {
+        train_streaming(&src, &cfg, block_budget, &mut StageClock::new(), None)
+            .expect("blockwise train")
+    });
+    let (shard_model, shard_secs) = harness::time_once(|| {
+        train_streaming(&sharded, &cfg, block_budget, &mut StageClock::new(), None)
+            .expect("sharded train")
+    });
+
+    // Differential check: the bounded-memory paths must reproduce the
+    // resident model byte for byte.
+    let reference = model_bytes(&mem_model, &dir, "mem.lpd");
+    assert_eq!(
+        model_bytes(&blk_model, &dir, "blk.lpd"),
+        reference,
+        "blockwise model diverged from the in-memory reference"
+    );
+    assert_eq!(
+        model_bytes(&shard_model, &dir, "shard.lpd"),
+        reference,
+        "sharded model diverged from the in-memory reference"
+    );
+
+    let mut t = Table::new(
+        "train_streaming: resident vs bounded block budget",
+        &["path", "block budget", "train s", "vs resident"],
+    );
+    t.row(&[
+        "in-memory, budget 0".into(),
+        "∞".into(),
+        Table::secs(mem_secs),
+        "1.00x".into(),
+    ]);
+    t.row(&[
+        "in-memory, blockwise".into(),
+        format!("{block_budget} B"),
+        Table::secs(blk_secs),
+        format!("{:.2}x", blk_secs / mem_secs.max(1e-12)),
+    ]);
+    t.row(&[
+        "LIBSVM shards, blockwise".into(),
+        format!("{block_budget} B"),
+        Table::secs(shard_secs),
+        format!("{:.2}x", shard_secs / mem_secs.max(1e-12)),
+    ]);
+    t.print();
+    t.write_tsv(&harness::report_dir().join("oocore.tsv")).ok();
+
+    let peak_rss_mb = lpdsvm::util::mem::peak_rss_bytes()
+        .map(|b| b as f64 / (1024.0 * 1024.0))
+        .unwrap_or(f64::NAN);
+    println!(
+        "\nall three models byte-identical; process peak RSS {peak_rss_mb:.1} MiB \
+         (shared across all sections — the CLI smoke enforces the per-run cap)"
+    );
+
+    let out_path = std::env::var("LPDSVM_BENCH_OOCORE_OUT")
+        .unwrap_or_else(|_| "BENCH_oocore.json".to_string());
+    let doc = obj(vec![
+        ("bench", s("oocore")),
+        ("source", s("cargo bench --bench oocore")),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "dataset",
+            obj(vec![
+                ("n", num(n as f64)),
+                ("p", num(p as f64)),
+                ("libsvm_mb", num(mb)),
+                ("seed", num(seed as f64)),
+            ]),
+        ),
+        (
+            "parse",
+            obj(vec![
+                ("mean_s", num(stats.mean)),
+                ("min_s", num(stats.min)),
+                ("mb_per_s_mean", num(mb / stats.mean.max(1e-12))),
+                ("mb_per_s_best", num(parse_mb_s_best)),
+            ]),
+        ),
+        ("split_s", num(split_secs)),
+        ("shard_open_s", num(open_secs)),
+        (
+            "train",
+            obj(vec![
+                ("block_budget_bytes", num(block_budget as f64)),
+                ("in_memory_s", num(mem_secs)),
+                ("blockwise_s", num(blk_secs)),
+                ("sharded_s", num(shard_secs)),
+                ("byte_identical", Json::Bool(true)),
+            ]),
+        ),
+        ("peak_rss_mb", num(peak_rss_mb)),
+    ]);
+    std::fs::write(&out_path, doc.to_string() + "\n").expect("write bench json");
+    println!("wrote {out_path}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -7,7 +7,11 @@
 //! * `<tag>.ckpt` — a mid-solve [`SolverSnapshot`]: everything the CD
 //!   loop carries across an epoch boundary (α, v, shrinking state, RNG
 //!   state, work counters). Written every `--checkpoint-every` epochs;
-//!   deleted once the solve completes.
+//!   deleted once the solve completes. Blockwise (out-of-core) solves
+//!   store a [`BlockSnapshot`] at the same path under its own kind tag —
+//!   it swaps the RNG state for a mid-epoch stripe cursor plus the
+//!   carried residual predictions, so a kill between *blocks* of one
+//!   epoch resumes bit-identically too.
 //! * `<tag>.done.ckpt` — the finished [`Solution`] of one binary solve.
 //!   A resumed run returns it verbatim instead of re-solving, so the
 //!   pairs that finished before the crash contribute the *same bits* to
@@ -34,7 +38,10 @@
 
 use crate::coordinator::cv::CvResult;
 use crate::coordinator::ovo::WarmStore;
-use crate::solver::{solve_resumable, ProblemView, Solution, SolverOptions, SolverSnapshot};
+use crate::solver::{
+    solve_blockwise_resumable, solve_resumable, BlockProblem, BlockSnapshot, ProblemView,
+    Solution, SolverOptions, SolverSnapshot,
+};
 use crate::util::fsio;
 use std::path::{Path, PathBuf};
 
@@ -46,6 +53,7 @@ const VERSION: u32 = 1;
 const KIND_SNAPSHOT: u8 = 1;
 const KIND_SOLUTION: u8 = 2;
 const KIND_CELL: u8 = 3;
+const KIND_BLOCK_SNAPSHOT: u8 = 4;
 
 // ---------------------------------------------------------------------
 // Little-endian byte (de)serialization.
@@ -270,6 +278,77 @@ impl CheckpointCtx {
         }))
     }
 
+    /// Persist a mid-solve *blockwise* snapshot for `tag`. Shares the
+    /// `<tag>.ckpt` path with classic snapshots (a tag is only ever
+    /// solved by one path; a kind mismatch on load fails cleanly), so
+    /// [`CheckpointCtx::store_solution`]'s cleanup and
+    /// [`CheckpointCtx::gc_prefix`] work unchanged.
+    pub fn store_block_snapshot(&self, tag: &str, s: &BlockSnapshot) -> anyhow::Result<()> {
+        let mut w = header(KIND_BLOCK_SNAPSHOT);
+        w.u64(s.epochs);
+        w.u64(s.cursor);
+        w.u64(s.steps);
+        w.u64(s.active_work);
+        w.u64(s.check_work);
+        w.u64(s.total_shrunk);
+        w.u64(s.total_reactivated);
+        w.f64(s.epoch_max_viol);
+        w.f32s(&s.alpha);
+        w.f32s(&s.v);
+        w.f32s(&s.pred);
+        w.u32s(&s.active);
+        w.u8s(&s.unchanged);
+        w.u32s(&s.inactive);
+        w.u32s(&s.flagged);
+        fsio::write_checksummed(
+            &self.snapshot_path(tag),
+            MAGIC,
+            &w.buf,
+            "ckpt.after_tmp_write",
+        )
+    }
+
+    /// Load the blockwise snapshot for `tag`, if one exists.
+    pub fn load_block_snapshot(&self, tag: &str) -> anyhow::Result<Option<BlockSnapshot>> {
+        let Some(bytes) = fsio::read_checksummed(&self.snapshot_path(tag), MAGIC)? else {
+            return Ok(None);
+        };
+        let mut r = open_payload(&bytes, KIND_BLOCK_SNAPSHOT, "blockwise snapshot")?;
+        let epochs = r.u64()?;
+        let cursor = r.u64()?;
+        let steps = r.u64()?;
+        let active_work = r.u64()?;
+        let check_work = r.u64()?;
+        let total_shrunk = r.u64()?;
+        let total_reactivated = r.u64()?;
+        let epoch_max_viol = r.f64()?;
+        let alpha = r.f32s()?;
+        let v = r.f32s()?;
+        let pred = r.f32s()?;
+        let active = r.u32s()?;
+        let unchanged = r.u8s()?;
+        let inactive = r.u32s()?;
+        let flagged = r.u32s()?;
+        r.done()?;
+        Ok(Some(BlockSnapshot {
+            epochs,
+            cursor,
+            steps,
+            active_work,
+            check_work,
+            epoch_max_viol,
+            alpha,
+            v,
+            pred,
+            active,
+            unchanged,
+            inactive,
+            flagged,
+            total_shrunk,
+            total_reactivated,
+        }))
+    }
+
     /// Record a completed solve for `tag` and drop its (now redundant)
     /// mid-solve snapshot.
     pub fn store_solution(&self, tag: &str, s: &Solution) -> anyhow::Result<()> {
@@ -354,6 +433,47 @@ impl CheckpointCtx {
                 crate::log_warn!("ckpt", "{tag}: snapshot at epoch {} failed: {e:#}", snap.epochs);
             }
         });
+        if let Err(e) = self.store_solution(tag, &sol) {
+            crate::log_warn!("ckpt", "{tag}: recording completion failed: {e:#}");
+        }
+        Ok(sol)
+    }
+
+    /// Blockwise counterpart of [`CheckpointCtx::solve`]: return the
+    /// recorded solution if `tag` already completed, otherwise resume
+    /// from its blockwise snapshot — possibly *mid-epoch*, at the stored
+    /// stripe cursor — and run to completion.
+    pub fn solve_blockwise(
+        &self,
+        tag: &str,
+        problem: &BlockProblem<'_>,
+        opts: &SolverOptions,
+    ) -> anyhow::Result<Solution> {
+        if let Some(sol) = self.load_solution(tag)? {
+            crate::log_debug!("ckpt", "{tag}: already complete, skipping solve");
+            return Ok(sol);
+        }
+        let resume = self.load_block_snapshot(tag)?;
+        if let Some(s) = &resume {
+            anyhow::ensure!(
+                s.alpha.len() == problem.len() && s.v.len() == problem.factor.rank,
+                "checkpoint {tag} is for a {}-variable problem but this run has {} — \
+                 the checkpoint dir belongs to a different run configuration",
+                s.alpha.len(),
+                problem.len()
+            );
+            crate::log_info!(
+                "ckpt",
+                "{tag}: resuming at epoch {} stripe cursor {}",
+                s.epochs,
+                s.cursor
+            );
+        }
+        let sol = solve_blockwise_resumable(problem, opts, resume, self.every, |snap| {
+            if let Err(e) = self.store_block_snapshot(tag, snap) {
+                crate::log_warn!("ckpt", "{tag}: snapshot at epoch {} failed: {e:#}", snap.epochs);
+            }
+        })?;
         if let Err(e) = self.store_solution(tag, &sol) {
             crate::log_warn!("ckpt", "{tag}: recording completion failed: {e:#}");
         }
@@ -501,6 +621,69 @@ mod tests {
         assert_eq!(r.rng, s.rng);
         assert_eq!(r.active_work, s.active_work);
         assert_eq!(r.check_work, s.check_work);
+        let _ = std::fs::remove_dir_all(ctx.dir());
+    }
+
+    #[test]
+    fn block_snapshot_roundtrip_is_exact() {
+        let ctx = temp_ctx("blocksnap");
+        let s = BlockSnapshot {
+            epochs: 3,
+            cursor: 2,
+            steps: 777,
+            active_work: 700,
+            check_work: 77,
+            epoch_max_viol: 0.015625,
+            alpha: vec![0.0, 1.5, f32::MIN_POSITIVE],
+            v: vec![-2.5, 1e-30],
+            pred: vec![0.25, -0.75, 0.0],
+            active: vec![2, 0],
+            unchanged: vec![1, 0, 4],
+            inactive: vec![1],
+            flagged: vec![0],
+            total_shrunk: 5,
+            total_reactivated: 1,
+        };
+        ctx.store_block_snapshot("t", &s).unwrap();
+        let r = ctx.load_block_snapshot("t").unwrap().unwrap();
+        assert_eq!(r.epochs, s.epochs);
+        assert_eq!(r.cursor, s.cursor);
+        assert_eq!(r.steps, s.steps);
+        assert_eq!(r.active_work, s.active_work);
+        assert_eq!(r.check_work, s.check_work);
+        assert_eq!(r.epoch_max_viol, s.epoch_max_viol);
+        assert_eq!(r.alpha, s.alpha);
+        assert_eq!(r.v, s.v);
+        assert_eq!(r.pred, s.pred);
+        assert_eq!(r.active, s.active);
+        assert_eq!(r.unchanged, s.unchanged);
+        assert_eq!(r.inactive, s.inactive);
+        assert_eq!(r.flagged, s.flagged);
+        assert_eq!(r.total_shrunk, s.total_shrunk);
+        assert_eq!(r.total_reactivated, s.total_reactivated);
+        let _ = std::fs::remove_dir_all(ctx.dir());
+    }
+
+    #[test]
+    fn block_and_classic_snapshot_kinds_do_not_cross_load() {
+        let ctx = temp_ctx("kinds");
+        let s = SolverSnapshot {
+            epochs: 1,
+            steps: 1,
+            alpha: vec![0.0],
+            v: vec![0.0],
+            active: vec![0],
+            unchanged: vec![0],
+            inactive: vec![],
+            total_shrunk: 0,
+            total_reactivated: 0,
+            rng: [1, 2, 3, 4],
+            active_work: 1,
+            check_work: 0,
+        };
+        ctx.store_snapshot("t", &s).unwrap();
+        let err = ctx.load_block_snapshot("t").unwrap_err();
+        assert!(err.to_string().contains("blockwise snapshot"), "{err:#}");
         let _ = std::fs::remove_dir_all(ctx.dir());
     }
 

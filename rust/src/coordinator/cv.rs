@@ -166,6 +166,98 @@ pub fn cross_validate_shared_ckpt(
     ))
 }
 
+/// Out-of-core k-fold CV: stage 1 streams once over the full source
+/// (the paper's shared-stage-1 scheme carries over unchanged), folds are
+/// stratified on the label vector — which a [`crate::data::ShardedSource`]
+/// reads in a cheap first pass, no features resident — and every fold's
+/// pair solves and validation scoring stream blocks under `budget_bytes`.
+///
+/// With `ckpt` (a context plus a tag prefix), fold `f`'s pair `(a, b)`
+/// checkpoints under `{prefix}fold{f}_pair_{a}_{b}`, mirroring the
+/// classic path's tags; the grid search supplies per-cell prefixes.
+pub fn cross_validate_streaming(
+    source: &dyn crate::data::block::DataSource,
+    cfg: &TrainConfig,
+    cv: &CvConfig,
+    budget_bytes: usize,
+    ckpt: Option<(&super::checkpoint::CheckpointCtx, &str)>,
+) -> anyhow::Result<CvResult> {
+    use crate::coordinator::train::{streaming_error_rate, train_pair_streaming};
+    use crate::lowrank::StreamFactor;
+
+    let t0 = std::time::Instant::now();
+    let n_classes = source.n_classes();
+    anyhow::ensure!(n_classes >= 2, "need at least two classes");
+    let pairs: Vec<(u32, u32)> = if n_classes == 2 {
+        vec![(0u32, 1u32)]
+    } else {
+        let c = n_classes as u32;
+        (0..c).flat_map(|a| ((a + 1)..c).map(move |b| (a, b))).collect()
+    };
+    let threads = cfg.effective_threads();
+    let backend = crate::lowrank::factor::NativeBackend::with_threads(threads);
+    let stage1 = cfg.stage1.with_thread_fallback(threads);
+    let mut clock = StageClock::new();
+    let factor = StreamFactor::compute(source, cfg.kernel, &stage1, budget_bytes, &mut clock)?;
+    let folds = Folds::stratified(source.labels(), cv.folds, &mut Rng::new(cv.seed));
+
+    let mut fold_errors = Vec::with_capacity(folds.k);
+    for f in 0..folds.k {
+        let (train_idx, val_idx) = folds.split(f);
+        anyhow::ensure!(
+            !val_idx.is_empty(),
+            "cross-validation fold {f} has an empty validation set \
+             ({} folds over {} points; lower k or provide more data per class)",
+            folds.k,
+            source.n_rows()
+        );
+        anyhow::ensure!(
+            !train_idx.is_empty(),
+            "cross-validation fold {f} has an empty training set ({} folds over {} points)",
+            folds.k,
+            source.n_rows()
+        );
+        let mut fold_span = crate::obs::Span::new("cv.fold");
+        fold_span.arg("fold", f as f64);
+        fold_span.arg("train_rows", train_idx.len() as f64);
+        fold_span.arg("val_rows", val_idx.len() as f64);
+        fold_span.arg("streaming", 1.0);
+        let mut heads = Vec::with_capacity(pairs.len());
+        for &(a, b) in &pairs {
+            let tag = ckpt.map(|(_, prefix)| format!("{prefix}fold{f}_pair_{a}_{b}"));
+            heads.push(train_pair_streaming(
+                source,
+                &factor,
+                Some(&train_idx),
+                a,
+                b,
+                &cfg.solver,
+                budget_bytes,
+                backend,
+                ckpt.map(|(c, _)| (c, tag.as_deref().unwrap_or(""))),
+            )?);
+        }
+        let kind = if n_classes == 2 {
+            ModelKind::Binary
+        } else {
+            ModelKind::OneVsOne { n_classes }
+        };
+        let model = MulticlassModel { factor: factor.to_model_factor(), heads, kind };
+        let err = streaming_error_rate(source, &model, Some(&val_idx), budget_bytes)?;
+        fold_span.arg("error", err);
+        crate::log_debug!("cv", "fold={f} error={err:.4} pairs={} (streaming)", pairs.len());
+        fold_errors.push(err);
+    }
+
+    let mean_error = fold_errors.iter().sum::<f64>() / fold_errors.len().max(1) as f64;
+    Ok(CvResult {
+        n_binary_problems: folds.k * pairs.len(),
+        mean_error,
+        fold_errors,
+        total_secs: t0.elapsed().as_secs_f64(),
+    })
+}
+
 /// Evaluate a set of heads on validation rows using the shared `G`.
 fn evaluate_heads(g: &Mat, heads: &[BinaryHead], data: &Dataset, val_idx: &[usize]) -> f64 {
     let kind = if data.n_classes == 2 {
@@ -286,6 +378,25 @@ mod tests {
             msg.contains("fold 2") && msg.contains("empty validation"),
             "unhelpful error: {msg}"
         );
+    }
+
+    #[test]
+    fn streaming_cv_is_budget_invariant_and_reasonable() {
+        let spec = PaperDataset::Adult.spec(0.02, 11);
+        let data = spec.synth.generate();
+        let src = crate::data::block::MemorySource::new(&data);
+        let cfg = TrainConfig {
+            kernel: Kernel::gaussian(spec.gamma),
+            stage1: Stage1Config { budget: 48, ..Default::default() },
+            solver: SolverOptions { c: spec.c, ..Default::default() },
+            ..Default::default()
+        };
+        let cv = CvConfig { folds: 3, seed: 7 };
+        let reference = cross_validate_streaming(&src, &cfg, &cv, 0, None).unwrap();
+        let blocked = cross_validate_streaming(&src, &cfg, &cv, 30_000, None).unwrap();
+        assert_eq!(reference.fold_errors, blocked.fold_errors);
+        assert_eq!(reference.n_binary_problems, 3);
+        assert!(reference.mean_error < 0.35, "cv error {}", reference.mean_error);
     }
 
     #[test]

@@ -1,12 +1,14 @@
 //! Top-level training entry points (single model, fixed hyperparameters).
 
+use crate::data::block::DataSource;
 use crate::data::dataset::Dataset;
 use crate::kernel::Kernel;
 use crate::lowrank::factor::NativeBackend;
+use crate::lowrank::stream::StreamFactor;
 use crate::lowrank::{LowRankFactor, Stage1Backend, Stage1Config};
-use crate::model::multiclass::MulticlassModel;
+use crate::model::multiclass::{error_rate, BinaryHead, MulticlassModel};
 use crate::model::ModelKind;
-use crate::solver::SolverOptions;
+use crate::solver::{solve_blockwise, BlockProblem, SolverOptions};
 use crate::util::threads;
 use crate::util::timer::StageClock;
 
@@ -158,6 +160,189 @@ pub fn train_with_backend_ckpt(
     })
 }
 
+/// Train one blockwise binary subproblem for the pair `(a, b)` over
+/// `include` rows (ascending global ids; `None` = all rows). The
+/// counterpart of [`crate::coordinator::ovo::train_pair`] for the
+/// out-of-core path: same row selection, same label convention
+/// (class `b` ⇒ +1), same per-pair seed de-correlation.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn train_pair_streaming(
+    source: &dyn DataSource,
+    factor: &StreamFactor,
+    include: Option<&[usize]>,
+    a: u32,
+    b: u32,
+    opts: &SolverOptions,
+    budget_bytes: usize,
+    backend: NativeBackend,
+    ckpt: Option<(&super::checkpoint::CheckpointCtx, &str)>,
+) -> anyhow::Result<BinaryHead> {
+    let labels = source.labels();
+    let pick = |i: usize| labels[i] == a || labels[i] == b;
+    let rows: Vec<usize> = match include {
+        Some(idx) => idx.iter().copied().filter(|&i| pick(i)).collect(),
+        None => (0..labels.len()).filter(|&i| pick(i)).collect(),
+    };
+    let y: Vec<f32> = rows.iter().map(|&i| if labels[i] == b { 1.0 } else { -1.0 }).collect();
+    let mut local_opts = opts.clone();
+    local_opts.seed = opts.seed ^ ((a as u64) << 32 | b as u64);
+    let p = BlockProblem::new(source, factor, rows, y, budget_bytes, backend);
+    let sol = match ckpt {
+        Some((ctx, tag)) => ctx.solve_blockwise(tag, &p, &local_opts)?,
+        None => solve_blockwise(&p, &local_opts)?,
+    };
+    Ok(BinaryHead {
+        pair: (a, b),
+        w: sol.w,
+        objective: sol.objective,
+        converged: sol.converged,
+        sv_count: sol.sv_count,
+        steps: sol.steps,
+    })
+}
+
+/// Out-of-core training: stage 1 and stage 2 both stream feature blocks
+/// through `source` under `budget_bytes`, never materializing `G` (or,
+/// for a sharded source, the features themselves) in full. Produces a
+/// model that is byte-identical across block budgets and sources; the
+/// `--block-budget-mb 0` run (single block) is the reference.
+///
+/// Pairs are solved sequentially — the data plane owns the memory
+/// budget, and `cfg.threads` parallelism lives *inside* each solve's
+/// per-stripe kernel/GEMM work instead of across pairs.
+pub fn train_streaming(
+    source: &dyn DataSource,
+    cfg: &TrainConfig,
+    budget_bytes: usize,
+    clock: &mut StageClock,
+    ckpt: Option<&super::checkpoint::CheckpointCtx>,
+) -> anyhow::Result<MulticlassModel> {
+    anyhow::ensure!(source.n_rows() > 0, "empty dataset");
+    let n_classes = source.n_classes();
+    anyhow::ensure!(n_classes >= 2, "need at least two classes");
+    let threads = cfg.effective_threads();
+    let backend = NativeBackend::with_threads(threads);
+
+    let mut span = crate::obs::Span::new("train");
+    span.arg("n", source.n_rows() as f64);
+    span.arg("classes", n_classes as f64);
+    span.arg("threads", threads as f64);
+    span.arg("streaming", 1.0);
+    crate::log_info!(
+        "train",
+        "start streaming source={} n={} dim={} classes={n_classes} threads={threads} \
+         budget_mb={:.1}",
+        source.name(),
+        source.n_rows(),
+        source.n_cols(),
+        budget_bytes as f64 / (1024.0 * 1024.0)
+    );
+
+    let stage1 = cfg.stage1.with_thread_fallback(threads);
+    let factor = StreamFactor::compute(source, cfg.kernel, &stage1, budget_bytes, clock)?;
+
+    let (heads, kind) = clock.time("linear_train", || -> anyhow::Result<_> {
+        if n_classes == 2 {
+            let head = train_pair_streaming(
+                source,
+                &factor,
+                None,
+                0,
+                1,
+                &cfg.solver,
+                budget_bytes,
+                backend,
+                ckpt.map(|c| (c, "pair_0_1")),
+            )?;
+            Ok((vec![head], ModelKind::Binary))
+        } else {
+            let mut heads = Vec::with_capacity(n_classes * (n_classes - 1) / 2);
+            let tags: Vec<String> = (0..n_classes as u32)
+                .flat_map(|a| {
+                    ((a + 1)..n_classes as u32).map(move |b| format!("pair_{a}_{b}"))
+                })
+                .collect();
+            let mut ti = 0;
+            for a in 0..n_classes as u32 {
+                for b in (a + 1)..n_classes as u32 {
+                    heads.push(train_pair_streaming(
+                        source,
+                        &factor,
+                        None,
+                        a,
+                        b,
+                        &cfg.solver,
+                        budget_bytes,
+                        backend,
+                        ckpt.map(|c| (c, tags[ti].as_str())),
+                    )?);
+                    ti += 1;
+                }
+            }
+            Ok((heads, ModelKind::OneVsOne { n_classes }))
+        }
+    })?;
+
+    span.arg("rank", factor.rank as f64);
+    span.arg("heads", heads.len() as f64);
+    crate::log_info!(
+        "train",
+        "done streaming rank={} heads={} total_s={:.3}",
+        factor.rank,
+        heads.len(),
+        clock.total().as_secs_f64()
+    );
+    Ok(MulticlassModel { factor: factor.to_model_factor(), heads, kind })
+}
+
+/// Classification error of `model` over `source`, streaming feature
+/// blocks under `budget_bytes` — evaluation never holds more than one
+/// block of features (plus one stripe of `G` rows) resident. `include`
+/// restricts scoring to those ascending global row ids (`None` = all).
+pub fn streaming_error_rate(
+    source: &dyn DataSource,
+    model: &MulticlassModel,
+    include: Option<&[usize]>,
+    budget_bytes: usize,
+) -> anyhow::Result<f64> {
+    let labels = source.labels();
+    let n_scored = include.map_or(labels.len(), |idx| idx.len());
+    anyhow::ensure!(n_scored > 0, "error_rate: empty input (0 rows)");
+    let backend = NativeBackend::default();
+    let w_mat = model.weight_matrix();
+    let mask = include.map(|idx| {
+        let mut m = vec![false; source.n_rows()];
+        for &i in idx {
+            m[i] = true;
+        }
+        m
+    });
+    let mut preds = Vec::with_capacity(n_scored);
+    let mut truth = Vec::with_capacity(n_scored);
+    source.for_each_block(budget_bytes, mask.as_deref(), &mut |blk| {
+        for (_, s, e) in blk.stripes() {
+            let g = backend.g_chunk(
+                blk.x,
+                &blk.local[s..e],
+                &model.factor.landmarks,
+                &model.factor.landmark_sq,
+                &model.factor.whiten,
+                &model.factor.kernel,
+            )?;
+            preds.extend(model.predict_with_weights(&g, &w_mat));
+            truth.extend(blk.rows[s..e].iter().map(|&i| labels[i]));
+        }
+        Ok(())
+    })?;
+    anyhow::ensure!(
+        preds.len() == n_scored,
+        "streaming evaluation scored {} of {} requested rows",
+        preds.len(),
+        n_scored
+    );
+    Ok(error_rate(&preds, &truth))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -230,5 +415,63 @@ mod tests {
         let x = crate::data::sparse::SparseMatrix::from_rows(2, &[vec![(0, 1.0)]]);
         let ds = Dataset::new("one", x, vec![0], 1);
         assert!(train(&ds, &TrainConfig::default()).is_err());
+    }
+
+    #[test]
+    fn streaming_binary_is_budget_invariant_and_accurate() {
+        let spec = PaperDataset::Adult.spec(0.02, 3);
+        let data = spec.synth.generate();
+        let src = crate::data::block::MemorySource::new(&data);
+        let cfg = TrainConfig {
+            kernel: Kernel::gaussian(spec.gamma),
+            stage1: Stage1Config { budget: 64, ..Default::default() },
+            solver: SolverOptions { c: spec.c, ..Default::default() },
+            ..Default::default()
+        };
+        let reference =
+            train_streaming(&src, &cfg, 0, &mut StageClock::new(), None).unwrap();
+        let blocked =
+            train_streaming(&src, &cfg, 48_000, &mut StageClock::new(), None).unwrap();
+        assert_eq!(reference.heads.len(), 1);
+        assert_eq!(reference.heads[0].w, blocked.heads[0].w);
+        assert_eq!(reference.heads[0].steps, blocked.heads[0].steps);
+        let err = streaming_error_rate(&src, &reference, None, 48_000).unwrap();
+        assert!(err < 0.25, "streaming train error {err}");
+        // Streaming evaluation agrees with the resident predictor.
+        let resident = reference.error_rate(&data.x, &data.labels).unwrap();
+        assert_eq!(err, resident);
+    }
+
+    #[test]
+    fn streaming_multiclass_is_budget_invariant() {
+        let spec = crate::data::synth::SynthSpec {
+            name: "mc".into(),
+            n: 360,
+            p: 10,
+            n_classes: 3,
+            sep: 6.0,
+            latent: 4,
+            noise: 1.0,
+            style: crate::data::synth::FeatureStyle::Dense,
+            seed: 17,
+        };
+        let data = spec.generate();
+        let src = crate::data::block::MemorySource::new(&data);
+        let cfg = TrainConfig {
+            kernel: Kernel::gaussian(0.05),
+            stage1: Stage1Config { budget: 48, ..Default::default() },
+            ..Default::default()
+        };
+        let reference =
+            train_streaming(&src, &cfg, 0, &mut StageClock::new(), None).unwrap();
+        let blocked =
+            train_streaming(&src, &cfg, 20_000, &mut StageClock::new(), None).unwrap();
+        assert_eq!(reference.heads.len(), 3); // C(3,2)
+        for (a, b) in reference.heads.iter().zip(&blocked.heads) {
+            assert_eq!(a.pair, b.pair);
+            assert_eq!(a.w, b.w, "pair {:?}", a.pair);
+        }
+        let err = streaming_error_rate(&src, &reference, None, 20_000).unwrap();
+        assert!(err < 0.15, "streaming train error {err}");
     }
 }

@@ -1,0 +1,540 @@
+//! Out-of-core data plane: fixed-memory block streaming over a
+//! [`DataSource`].
+//!
+//! Every consumer that used to demand a resident [`Dataset`] — stage-1
+//! landmark gather, the blockwise CD solver, streaming evaluation — now
+//! pulls the feature matrix through [`DataSource::for_each_block`]: the
+//! source delivers the wanted rows in ascending global order, chunked
+//! into blocks whose estimated footprint respects a caller-chosen byte
+//! budget. Labels are always resident (they are 4 bytes/row and every
+//! layer needs them for fold assignment and OVO pair selection); only
+//! features stream.
+//!
+//! ## Stripes: the block-size-independence contract
+//!
+//! The repo's bit-identity contract extends to this layer: training
+//! blockwise must equal training in-memory *byte for byte at any block
+//! budget*. Blocks are therefore cut only at global **stripe**
+//! boundaries (stripes are fixed windows of [`STRIPE_ROWS`] consecutive
+//! global row ids), and every consumer does its per-row work — factor
+//! chunk evaluation, visit-order shuffling — per stripe, never per
+//! block. A stripe's rows always arrive inside one block, so the
+//! computation on a stripe sees identical inputs whether the epoch
+//! streamed one block or fifty; the block boundary is purely an I/O
+//! artifact. Budgets are soft by one stripe: a block may overshoot the
+//! budget by the stripe that crossed it.
+//!
+//! Two sources implement the trait: [`MemorySource`] wraps a resident
+//! [`Dataset`] (blocks are index windows, nothing is copied) and
+//! [`ShardedSource`] re-parses LIBSVM shard files per epoch, holding
+//! only the current block's features in memory. A budget of `0` means
+//! unlimited — one block containing every wanted row, which is the
+//! in-memory reference the CI smoke compares the bounded runs against.
+
+use crate::data::dataset::Dataset;
+use crate::data::libsvm;
+use crate::data::sparse::SparseMatrix;
+use anyhow::{bail, Context, Result};
+use std::io::BufRead;
+use std::path::{Path, PathBuf};
+
+/// Rows per stripe. Blocks are cut only at multiples of this, and all
+/// per-row computation downstream is organised per stripe, which is what
+/// makes results independent of the block budget (see module docs).
+pub const STRIPE_ROWS: usize = 1024;
+
+/// Stripe id of a global row.
+#[inline]
+pub fn stripe_of(row: usize) -> usize {
+    row / STRIPE_ROWS
+}
+
+/// Estimated resident footprint of one sparse row with `nnz` stored
+/// entries: CSR value + index (8 bytes/entry) plus fixed per-row
+/// bookkeeping. An estimate, not an accounting — the RSS assertion in CI
+/// carries slack for allocator overhead and parse transients.
+#[inline]
+pub fn row_cost_bytes(nnz: usize) -> usize {
+    16 + 8 * nnz
+}
+
+/// One delivered block: a window of wanted rows, in ascending global
+/// order, backed by a feature matrix that is only guaranteed to live for
+/// the duration of the callback.
+pub struct Block<'a> {
+    /// Global row ids of the delivered rows, strictly ascending.
+    pub rows: &'a [usize],
+    /// `x`-row index of each delivered row (`x.row(local[k])` is the
+    /// feature row of global row `rows[k]`).
+    pub local: &'a [usize],
+    /// Feature storage for this block. For [`MemorySource`] this is the
+    /// whole resident matrix; for [`ShardedSource`] it holds exactly the
+    /// delivered rows.
+    pub x: &'a SparseMatrix,
+}
+
+impl Block<'_> {
+    /// Split the delivered rows into per-stripe index ranges:
+    /// `(stripe_id, start, end)` with `rows[start..end]` all in that
+    /// stripe. Consumers iterate these instead of the raw block so their
+    /// work units are budget-independent.
+    pub fn stripes(&self) -> Vec<(usize, usize, usize)> {
+        stripe_ranges(self.rows)
+    }
+}
+
+/// Group ascending global row ids into per-stripe `(stripe_id, start,
+/// end)` ranges.
+pub fn stripe_ranges(rows: &[usize]) -> Vec<(usize, usize, usize)> {
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    while start < rows.len() {
+        let sid = stripe_of(rows[start]);
+        let mut end = start + 1;
+        while end < rows.len() && stripe_of(rows[end]) == sid {
+            end += 1;
+        }
+        out.push((sid, start, end));
+        start = end;
+    }
+    out
+}
+
+/// A training-data provider that can stream its feature rows in
+/// fixed-memory blocks. Labels and shape are always cheap (resident);
+/// features may cost a re-parse per pass.
+pub trait DataSource {
+    /// Total number of data rows.
+    fn n_rows(&self) -> usize;
+    /// Feature dimensionality (max column bound across all rows).
+    fn n_cols(&self) -> usize;
+    /// Number of distinct classes (labels are `0..n_classes`).
+    fn n_classes(&self) -> usize;
+    /// Class id per row, the same remap [`libsvm::parse`] applies.
+    fn labels(&self) -> &[u32];
+    /// Human-readable source name (file/dir path or dataset name).
+    fn name(&self) -> &str;
+    /// Stream the wanted rows in ascending global order, cut into blocks
+    /// of roughly `budget_bytes` (0 = unlimited, a single block). When
+    /// `wanted` is `Some`, only rows with `wanted[g] == true` are
+    /// delivered (the mask must cover all `n_rows`); sources use it to
+    /// skip whole shards with no wanted rows. Block boundaries land only
+    /// on stripe boundaries and carry no information — consumers must
+    /// produce identical results for any budget.
+    fn for_each_block(
+        &self,
+        budget_bytes: usize,
+        wanted: Option<&[bool]>,
+        f: &mut dyn FnMut(&Block<'_>) -> Result<()>,
+    ) -> Result<()>;
+}
+
+fn check_mask(wanted: Option<&[bool]>, n_rows: usize) -> Result<()> {
+    if let Some(w) = wanted {
+        anyhow::ensure!(
+            w.len() == n_rows,
+            "row mask covers {} rows but the source has {n_rows}",
+            w.len()
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// In-memory source
+
+/// [`DataSource`] over a resident [`Dataset`]: blocks are index windows
+/// into the existing matrix, so streaming adds no copies — the classic
+/// in-RAM path expressed through the out-of-core interface.
+pub struct MemorySource<'a> {
+    ds: &'a Dataset,
+}
+
+impl<'a> MemorySource<'a> {
+    pub fn new(ds: &'a Dataset) -> MemorySource<'a> {
+        MemorySource { ds }
+    }
+}
+
+impl DataSource for MemorySource<'_> {
+    fn n_rows(&self) -> usize {
+        self.ds.len()
+    }
+    fn n_cols(&self) -> usize {
+        self.ds.dim()
+    }
+    fn n_classes(&self) -> usize {
+        self.ds.n_classes
+    }
+    fn labels(&self) -> &[u32] {
+        &self.ds.labels
+    }
+    fn name(&self) -> &str {
+        &self.ds.name
+    }
+
+    fn for_each_block(
+        &self,
+        budget_bytes: usize,
+        wanted: Option<&[bool]>,
+        f: &mut dyn FnMut(&Block<'_>) -> Result<()>,
+    ) -> Result<()> {
+        check_mask(wanted, self.ds.len())?;
+        let mut rows: Vec<usize> = Vec::new();
+        let mut bytes = 0usize;
+        for g in 0..self.ds.len() {
+            if budget_bytes > 0 && g % STRIPE_ROWS == 0 && bytes >= budget_bytes && !rows.is_empty()
+            {
+                f(&Block { rows: &rows, local: &rows, x: &self.ds.x })?;
+                rows.clear();
+                bytes = 0;
+            }
+            let want = match wanted {
+                Some(w) => w[g],
+                None => true,
+            };
+            if want {
+                let nnz = self.ds.x.indptr[g + 1] - self.ds.x.indptr[g];
+                bytes += row_cost_bytes(nnz);
+                rows.push(g);
+            }
+        }
+        if !rows.is_empty() {
+            f(&Block { rows: &rows, local: &rows, x: &self.ds.x })?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sharded LIBSVM source
+
+struct ShardMeta {
+    path: PathBuf,
+    start_row: usize,
+    n_rows: usize,
+}
+
+/// [`DataSource`] over a directory of LIBSVM shard files (`*.svm`,
+/// processed in sorted filename order — the order `lpdsvm split`
+/// produces, so shard concatenation is the original file).
+///
+/// [`ShardedSource::open`] makes one cheap label pass per shard: labels
+/// and column bounds parse, feature *values* don't. That yields the
+/// resident metadata (labels, shapes, per-shard row spans) that folds
+/// and OVO pair selection need, without ever loading features. Each
+/// [`DataSource::for_each_block`] pass then re-parses shard bytes,
+/// materializing only wanted rows and holding at most one block of
+/// features; shard files whose row span contains no wanted rows are
+/// skipped without opening them. Feature values of rows that are never
+/// wanted are never validated — corruption there surfaces on the first
+/// pass that wants the row.
+pub struct ShardedSource {
+    shards: Vec<ShardMeta>,
+    labels: Vec<u32>,
+    n_cols: usize,
+    n_classes: usize,
+    name: String,
+}
+
+impl ShardedSource {
+    /// Scan `dir` for `*.svm` shards and run the label pass.
+    pub fn open(dir: &Path) -> Result<ShardedSource> {
+        crate::util::fault::point("data.load")?;
+        let entries = std::fs::read_dir(dir)
+            .with_context(|| format!("opening shard directory {}", dir.display()))?;
+        let mut paths: Vec<PathBuf> = Vec::new();
+        for entry in entries {
+            let path = entry?.path();
+            if path.extension().is_some_and(|e| e == "svm") {
+                paths.push(path);
+            }
+        }
+        paths.sort();
+        if paths.is_empty() {
+            bail!("no .svm shard files in {}", dir.display());
+        }
+        let mut raw_labels: Vec<i64> = Vec::new();
+        let mut shards = Vec::with_capacity(paths.len());
+        let mut max_col = 0u32;
+        let mut line = String::new();
+        for path in paths {
+            let start_row = raw_labels.len();
+            let file = std::fs::File::open(&path)
+                .with_context(|| format!("opening shard {}", path.display()))?;
+            let mut reader = std::io::BufReader::new(file);
+            let mut lineno = 0usize;
+            loop {
+                line.clear();
+                if reader.read_line(&mut line)? == 0 {
+                    break;
+                }
+                lineno += 1;
+                let parsed = libsvm::parse_label(&line, lineno)
+                    .with_context(|| format!("scanning shard {}", path.display()))?;
+                let Some((label, rest)) = parsed else { continue };
+                let cols = libsvm::scan_max_index(rest, lineno)
+                    .with_context(|| format!("scanning shard {}", path.display()))?;
+                max_col = max_col.max(cols);
+                raw_labels.push(label);
+            }
+            let n_rows = raw_labels.len() - start_row;
+            shards.push(ShardMeta { path, start_row, n_rows });
+        }
+        if raw_labels.is_empty() {
+            bail!("shard files in {} contain no data rows", dir.display());
+        }
+        let map = libsvm::build_label_map(&raw_labels);
+        let labels = raw_labels.iter().map(|l| map[l]).collect();
+        let n_classes = map.len().max(1);
+        Ok(ShardedSource {
+            shards,
+            labels,
+            n_cols: max_col as usize,
+            n_classes,
+            name: dir.display().to_string(),
+        })
+    }
+
+    /// Number of shard files.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+/// Flush the sharded builder state as one block (no-op when empty).
+fn emit_sharded(
+    n_cols: usize,
+    rows: &mut Vec<usize>,
+    parsed: &mut Vec<Vec<(u32, f32)>>,
+    bytes: &mut usize,
+    f: &mut dyn FnMut(&Block<'_>) -> Result<()>,
+) -> Result<()> {
+    if rows.is_empty() {
+        return Ok(());
+    }
+    let x = SparseMatrix::from_rows(n_cols, parsed);
+    let local: Vec<usize> = (0..rows.len()).collect();
+    f(&Block { rows, local: &local, x: &x })?;
+    rows.clear();
+    parsed.clear();
+    *bytes = 0;
+    Ok(())
+}
+
+impl DataSource for ShardedSource {
+    fn n_rows(&self) -> usize {
+        self.labels.len()
+    }
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+    fn labels(&self) -> &[u32] {
+        &self.labels
+    }
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn for_each_block(
+        &self,
+        budget_bytes: usize,
+        wanted: Option<&[bool]>,
+        f: &mut dyn FnMut(&Block<'_>) -> Result<()>,
+    ) -> Result<()> {
+        check_mask(wanted, self.labels.len())?;
+        let mut rows: Vec<usize> = Vec::new();
+        let mut parsed: Vec<Vec<(u32, f32)>> = Vec::new();
+        let mut bytes = 0usize;
+        let mut line = String::new();
+        for shard in &self.shards {
+            if let Some(w) = wanted {
+                let span = &w[shard.start_row..shard.start_row + shard.n_rows];
+                if !span.iter().any(|&b| b) {
+                    continue; // whole shard unwanted: never opened
+                }
+            }
+            let file = std::fs::File::open(&shard.path)
+                .with_context(|| format!("opening shard {}", shard.path.display()))?;
+            let mut reader = std::io::BufReader::new(file);
+            let mut lineno = 0usize;
+            let mut g = shard.start_row;
+            loop {
+                line.clear();
+                if reader.read_line(&mut line)? == 0 {
+                    break;
+                }
+                lineno += 1;
+                let label = libsvm::parse_label(&line, lineno)
+                    .with_context(|| format!("parsing shard {}", shard.path.display()))?;
+                let Some((_, rest)) = label else { continue };
+                if budget_bytes > 0 && g % STRIPE_ROWS == 0 && bytes >= budget_bytes {
+                    emit_sharded(self.n_cols, &mut rows, &mut parsed, &mut bytes, f)?;
+                }
+                let want = match wanted {
+                    Some(w) => w[g],
+                    None => true,
+                };
+                if want {
+                    let (entries, _) = libsvm::parse_entries(rest, lineno)
+                        .with_context(|| format!("parsing shard {}", shard.path.display()))?;
+                    bytes += row_cost_bytes(entries.len());
+                    rows.push(g);
+                    parsed.push(entries);
+                }
+                g += 1;
+            }
+            anyhow::ensure!(
+                g - shard.start_row == shard.n_rows,
+                "shard {} changed since open: expected {} data rows, found {}",
+                shard.path.display(),
+                shard.n_rows,
+                g - shard.start_row
+            );
+        }
+        emit_sharded(self.n_cols, &mut rows, &mut parsed, &mut bytes, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    /// `n` single-entry rows with distinguishable values, two classes.
+    fn toy(n: usize) -> Dataset {
+        let rows: Vec<Vec<(u32, f32)>> =
+            (0..n).map(|i| vec![((i % 7) as u32, i as f32 * 0.5 + 1.0)]).collect();
+        let labels: Vec<u32> = (0..n).map(|i| (i % 2) as u32).collect();
+        Dataset::new("toy", SparseMatrix::from_rows(7, &rows), labels, 2)
+    }
+
+    fn collect_blocks(src: &dyn DataSource, budget: usize, wanted: Option<&[bool]>) -> (Vec<Vec<usize>>, Mat) {
+        let mut blocks = Vec::new();
+        let mut dense = Mat::zeros(src.n_rows(), src.n_cols());
+        src.for_each_block(budget, wanted, &mut |b: &Block<'_>| {
+            blocks.push(b.rows.to_vec());
+            for (k, &g) in b.rows.iter().enumerate() {
+                let (c, v) = b.x.row(b.local[k]);
+                for (&ci, &vi) in c.iter().zip(v) {
+                    dense.set(g, ci as usize, vi);
+                }
+            }
+            Ok(())
+        })
+        .unwrap();
+        (blocks, dense)
+    }
+
+    #[test]
+    fn memory_source_unlimited_budget_is_one_block() {
+        let ds = toy(50);
+        let src = MemorySource::new(&ds);
+        let (blocks, dense) = collect_blocks(&src, 0, None);
+        assert_eq!(blocks.len(), 1);
+        assert_eq!(blocks[0], (0..50).collect::<Vec<_>>());
+        assert_eq!(dense.data, ds.x.to_dense().data);
+    }
+
+    #[test]
+    fn memory_source_cuts_only_at_stripe_boundaries() {
+        let ds = toy(2500);
+        let src = MemorySource::new(&ds);
+        // Each row costs 24 bytes → a stripe is ~24.6 KB; a 30 KB budget
+        // forces a cut at the second stripe boundary.
+        let (blocks, dense) = collect_blocks(&src, 30_000, None);
+        assert!(blocks.len() > 1, "budget should have split the stream");
+        let mut all = Vec::new();
+        for (i, b) in blocks.iter().enumerate() {
+            if i + 1 < blocks.len() {
+                // Every cut lands on a stripe boundary.
+                assert_eq!((b.last().unwrap() + 1) % STRIPE_ROWS, 0, "{blocks:?}");
+            }
+            all.extend_from_slice(b);
+        }
+        assert_eq!(all, (0..2500).collect::<Vec<_>>());
+        assert_eq!(dense.data, ds.x.to_dense().data);
+    }
+
+    #[test]
+    fn wanted_mask_filters_rows() {
+        let ds = toy(2500);
+        let src = MemorySource::new(&ds);
+        let wanted: Vec<bool> = (0..2500).map(|g| g % 3 == 0).collect();
+        let (blocks, _) = collect_blocks(&src, 10_000, Some(&wanted));
+        let delivered: Vec<usize> = blocks.into_iter().flatten().collect();
+        let expect: Vec<usize> = (0..2500).filter(|g| g % 3 == 0).collect();
+        assert_eq!(delivered, expect);
+    }
+
+    #[test]
+    fn stripe_ranges_group_rows() {
+        let rows = [0, 5, STRIPE_ROWS - 1, STRIPE_ROWS, 3 * STRIPE_ROWS + 2];
+        assert_eq!(
+            stripe_ranges(&rows),
+            vec![(0, 0, 3), (1, 3, 4), (3, 4, 5)]
+        );
+        assert!(stripe_ranges(&[]).is_empty());
+    }
+
+    fn write_shards(ds: &Dataset, dir: &Path, parts: usize) {
+        std::fs::create_dir_all(dir).unwrap();
+        let per = ds.len().div_ceil(parts);
+        for p in 0..parts {
+            let lo = p * per;
+            let hi = ((p + 1) * per).min(ds.len());
+            let mut text = String::new();
+            for i in lo..hi {
+                let lbl: i64 = if ds.labels[i] == 1 { 1 } else { -1 };
+                text.push_str(&format!("{lbl}"));
+                let (c, v) = ds.x.row(i);
+                for (&ci, &vi) in c.iter().zip(v) {
+                    text.push_str(&format!(" {}:{}", ci + 1, vi));
+                }
+                text.push('\n');
+            }
+            std::fs::write(dir.join(format!("part-{p:05}.svm")), text).unwrap();
+        }
+    }
+
+    #[test]
+    fn sharded_source_matches_memory_source() {
+        let ds = toy(2500);
+        let dir = std::env::temp_dir()
+            .join(format!("lpdsvm_block_shards_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        write_shards(&ds, &dir, 4);
+        let sh = ShardedSource::open(&dir).unwrap();
+        assert_eq!(sh.n_rows(), ds.len());
+        assert_eq!(sh.n_cols(), ds.dim());
+        assert_eq!(sh.n_classes(), ds.n_classes);
+        assert_eq!(sh.labels(), &ds.labels[..]);
+        assert_eq!(sh.n_shards(), 4);
+        let mem = MemorySource::new(&ds);
+        for budget in [0usize, 10_000, 40_000] {
+            let (_, dm) = collect_blocks(&mem, budget, None);
+            let (_, dsh) = collect_blocks(&sh, budget, None);
+            assert_eq!(dm.data, dsh.data, "budget {budget}");
+        }
+        // Masked pass: rows from the middle shards only.
+        let wanted: Vec<bool> = (0..2500).map(|g| (700..1400).contains(&g)).collect();
+        let (_, dm) = collect_blocks(&mem, 5_000, Some(&wanted));
+        let (_, dsh) = collect_blocks(&sh, 5_000, Some(&wanted));
+        assert_eq!(dm.data, dsh.data);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_rejects_empty_dir() {
+        let dir = std::env::temp_dir()
+            .join(format!("lpdsvm_block_empty_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = ShardedSource::open(&dir).unwrap_err();
+        assert!(err.to_string().contains("no .svm shard files"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

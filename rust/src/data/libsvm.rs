@@ -4,6 +4,11 @@
 //! 1-based feature indices. This is the format of every dataset in the
 //! paper's table 1 (all published on the LIBSVM site), so real files can be
 //! dropped in place of the synthetic analogues without code changes.
+//!
+//! The line-level parsing helpers are shared with the out-of-core reader
+//! in [`crate::data::block`]: the sharded source re-parses the same bytes
+//! with the same code, which is what makes the streaming path produce the
+//! same matrix — entry for entry — as a monolithic [`read`].
 
 use crate::data::dataset::Dataset;
 use crate::data::sparse::SparseMatrix;
@@ -22,75 +27,105 @@ pub fn read(path: &Path) -> Result<Dataset> {
     parse(BufReader::new(file), &path.display().to_string())
 }
 
-/// Parse LIBSVM-format text from any reader.
-pub fn parse<R: BufRead>(reader: R, name: &str) -> Result<Dataset> {
-    let mut raw_labels: Vec<i64> = Vec::new();
-    let mut rows: Vec<Vec<(u32, f32)>> = Vec::new();
-    let mut max_col = 0u32;
-
-    for (lineno, line) in reader.lines().enumerate() {
-        let line = line?;
-        let line = line.split('#').next().unwrap_or("").trim();
-        if line.is_empty() {
-            continue;
-        }
-        let mut parts = line.split_ascii_whitespace();
-        let label_txt = parts.next().unwrap();
-        let label_f: f64 = label_txt
-            .parse::<f64>()
-            .with_context(|| format!("line {}: bad label '{label_txt}'", lineno + 1))?;
-        // Labels must be integral class ids (`1.0`/`-1.0` spellings are
-        // fine). A plain `as i64` truncation here silently collapsed
-        // fractional labels (0.5 and 0.7 both became class 0), mapped
-        // NaN/Inf to arbitrary ids, and saturated anything ≥ 2⁶³ — all
-        // of which merge distinct labels into one class.
-        if !label_f.is_finite()
-            || label_f.fract() != 0.0
-            || label_f.abs() >= i64::MAX as f64
-        {
-            bail!(
-                "line {}: non-integral label '{label_txt}' (labels must be \
-                 i64-range integer class ids or ±1; fractional, non-finite \
-                 or oversized values would be silently collapsed)",
-                lineno + 1
-            );
-        }
-        let label = label_f as i64;
-        let mut entries = Vec::new();
-        for tok in parts {
-            let (idx_txt, val_txt) = tok
-                .split_once(':')
-                .with_context(|| format!("line {}: bad feature '{tok}'", lineno + 1))?;
-            let idx: u32 = idx_txt
-                .parse()
-                .with_context(|| format!("line {}: bad index '{idx_txt}'", lineno + 1))?;
-            if idx == 0 {
-                bail!("line {}: LIBSVM indices are 1-based, found 0", lineno + 1);
-            }
-            let val: f32 = val_txt
-                .parse()
-                .with_context(|| format!("line {}: bad value '{val_txt}'", lineno + 1))?;
-            let col = idx - 1;
-            max_col = max_col.max(col + 1);
-            entries.push((col, val));
-        }
-        entries.sort_by_key(|&(c, _)| c);
-        // Duplicate indices: keep the last occurrence (LIBSVM behaviour).
-        entries.dedup_by(|a, b| {
-            if a.0 == b.0 {
-                b.1 = a.1;
-                true
-            } else {
-                false
-            }
-        });
-        raw_labels.push(label);
-        rows.push(entries);
+/// Strip the `#` comment and surrounding whitespace from one raw line,
+/// then split off and validate the label. Returns `None` for blank or
+/// comment-only lines. `lineno` is 1-based and only used for errors.
+///
+/// The remainder (feature tokens, possibly empty) is returned unparsed so
+/// callers can choose the full parse ([`parse_entries`]) or the cheap
+/// index-only scan ([`scan_max_index`]).
+pub(crate) fn parse_label(raw: &str, lineno: usize) -> Result<Option<(i64, &str)>> {
+    let line = raw.split('#').next().unwrap_or("").trim();
+    if line.is_empty() {
+        return Ok(None);
     }
+    let (label_txt, rest) = match line.split_once(|c: char| c.is_ascii_whitespace()) {
+        Some((l, r)) => (l, r),
+        None => (line, ""),
+    };
+    let label_f: f64 = label_txt
+        .parse::<f64>()
+        .with_context(|| format!("line {lineno}: bad label '{label_txt}'"))?;
+    // Labels must be integral class ids (`1.0`/`-1.0` spellings are
+    // fine). A plain `as i64` truncation here silently collapsed
+    // fractional labels (0.5 and 0.7 both became class 0), mapped
+    // NaN/Inf to arbitrary ids, and saturated anything ≥ 2⁶³ — all
+    // of which merge distinct labels into one class.
+    if !label_f.is_finite() || label_f.fract() != 0.0 || label_f.abs() >= i64::MAX as f64 {
+        bail!(
+            "line {lineno}: non-integral label '{label_txt}' (labels must be \
+             i64-range integer class ids or ±1; fractional, non-finite \
+             or oversized values would be silently collapsed)"
+        );
+    }
+    Ok(Some((label_f as i64, rest)))
+}
 
-    // Remap labels to 0..k in sorted order.
+/// Fully parse the feature tokens of one line into sorted, de-duplicated
+/// `(col, value)` entries (0-based columns, duplicate indices keep the
+/// last occurrence — LIBSVM behaviour). Also returns the line's column
+/// bound, i.e. `max(col) + 1` (0 for an empty feature list).
+pub(crate) fn parse_entries(rest: &str, lineno: usize) -> Result<(Vec<(u32, f32)>, u32)> {
+    let mut entries = Vec::new();
+    let mut max_col = 0u32;
+    for tok in rest.split_ascii_whitespace() {
+        let (idx_txt, val_txt) = tok
+            .split_once(':')
+            .with_context(|| format!("line {lineno}: bad feature '{tok}'"))?;
+        let idx: u32 = idx_txt
+            .parse()
+            .with_context(|| format!("line {lineno}: bad index '{idx_txt}'"))?;
+        if idx == 0 {
+            bail!("line {lineno}: LIBSVM indices are 1-based, found 0");
+        }
+        let val: f32 = val_txt
+            .parse()
+            .with_context(|| format!("line {lineno}: bad value '{val_txt}'"))?;
+        let col = idx - 1;
+        max_col = max_col.max(col + 1);
+        entries.push((col, val));
+    }
+    entries.sort_by_key(|&(c, _)| c);
+    // Duplicate indices: keep the last occurrence (LIBSVM behaviour).
+    entries.dedup_by(|a, b| {
+        if a.0 == b.0 {
+            b.1 = a.1;
+            true
+        } else {
+            false
+        }
+    });
+    Ok((entries, max_col))
+}
+
+/// Cheap first-pass scan of one line's feature tokens: validate and parse
+/// the indices only (values are never touched — float parsing is the
+/// expensive part), returning the line's column bound `max(col) + 1`.
+/// Used by the sharded reader's label pass to learn `n_cols` without
+/// materializing any features.
+pub(crate) fn scan_max_index(rest: &str, lineno: usize) -> Result<u32> {
+    let mut max_col = 0u32;
+    for tok in rest.split_ascii_whitespace() {
+        let (idx_txt, _) = tok
+            .split_once(':')
+            .with_context(|| format!("line {lineno}: bad feature '{tok}'"))?;
+        let idx: u32 = idx_txt
+            .parse()
+            .with_context(|| format!("line {lineno}: bad index '{idx_txt}'"))?;
+        if idx == 0 {
+            bail!("line {lineno}: LIBSVM indices are 1-based, found 0");
+        }
+        max_col = max_col.max(idx); // idx is 1-based, so idx == col + 1
+    }
+    Ok(max_col)
+}
+
+/// Map raw integer labels to contiguous class ids `0..k` ordered by raw
+/// label value — the exact remap [`parse`] applies, factored out so the
+/// sharded reader assigns identical class ids from its label-only pass.
+pub(crate) fn build_label_map(raw: &[i64]) -> BTreeMap<i64, u32> {
     let mut label_map: BTreeMap<i64, u32> = BTreeMap::new();
-    for &l in &raw_labels {
+    for &l in raw {
         let next = label_map.len() as u32;
         label_map.entry(l).or_insert(next);
     }
@@ -99,6 +134,39 @@ pub fn parse<R: BufRead>(reader: R, name: &str) -> Result<Dataset> {
     for (i, l) in sorted.iter().enumerate() {
         label_map.insert(*l, i as u32);
     }
+    label_map
+}
+
+/// Parse LIBSVM-format text from any reader.
+///
+/// The read loop reuses one line buffer (`read_line` into a cleared
+/// `String`) instead of `reader.lines()`'s fresh allocation per line —
+/// this is the hot loop of the out-of-core streaming path, which re-parses
+/// every shard once per epoch.
+pub fn parse<R: BufRead>(mut reader: R, name: &str) -> Result<Dataset> {
+    let mut raw_labels: Vec<i64> = Vec::new();
+    let mut rows: Vec<Vec<(u32, f32)>> = Vec::new();
+    let mut max_col = 0u32;
+
+    let mut line = String::new();
+    let mut lineno = 0usize;
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            break;
+        }
+        lineno += 1;
+        let Some((label, rest)) = parse_label(&line, lineno)? else {
+            continue;
+        };
+        let (entries, line_cols) = parse_entries(rest, lineno)?;
+        max_col = max_col.max(line_cols);
+        raw_labels.push(label);
+        rows.push(entries);
+    }
+
+    // Remap labels to 0..k in sorted order.
+    let label_map = build_label_map(&raw_labels);
     let labels: Vec<u32> = raw_labels.iter().map(|l| label_map[l]).collect();
     let n_classes = label_map.len().max(1);
 
@@ -124,6 +192,103 @@ pub fn write(ds: &Dataset, path: &Path) -> Result<()> {
         writeln!(f)?;
     }
     Ok(())
+}
+
+/// Outcome of [`split_shards`]: the shard layout plus the input's label
+/// histogram (keyed by *raw* label, before class-id remapping).
+#[derive(Debug)]
+pub struct SplitSummary {
+    /// Total data rows across all shards.
+    pub rows: usize,
+    /// Data rows per shard, in shard order.
+    pub shard_rows: Vec<usize>,
+    /// Raw label → row count over the whole input.
+    pub label_counts: BTreeMap<i64, usize>,
+}
+
+/// Shard a LIBSVM file into `parts` block files `part-00000.svm`,
+/// `part-00001.svm`, … under `out_dir`, plus a `MANIFEST.tsv` of
+/// per-shard row counts.
+///
+/// Rows are copied **verbatim** (original bytes, original order) into
+/// contiguous runs of ⌈n/parts⌉ data rows — concatenating the shards
+/// reproduces the input byte for byte, so a model trained from the shard
+/// directory is byte-identical to one trained from the monolithic file.
+/// Blank and comment lines ride along with whichever shard is current.
+/// Labels are validated (and counted) along the way, so a malformed file
+/// fails here rather than at training time.
+pub fn split_shards(input: &Path, out_dir: &Path, parts: usize) -> Result<SplitSummary> {
+    anyhow::ensure!(parts >= 1, "--parts must be >= 1");
+
+    // Pass 1: count data rows and build the label histogram.
+    let file = std::fs::File::open(input)
+        .with_context(|| format!("opening LIBSVM file {}", input.display()))?;
+    let mut reader = BufReader::new(file);
+    let mut label_counts: BTreeMap<i64, usize> = BTreeMap::new();
+    let mut rows = 0usize;
+    let mut line = String::new();
+    let mut lineno = 0usize;
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            break;
+        }
+        lineno += 1;
+        if let Some((label, _)) = parse_label(&line, lineno)? {
+            *label_counts.entry(label).or_insert(0) += 1;
+            rows += 1;
+        }
+    }
+    anyhow::ensure!(rows > 0, "{} contains no data rows", input.display());
+
+    // Pass 2: verbatim copy into contiguous shards of ceil(n/parts) rows.
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating shard dir {}", out_dir.display()))?;
+    let per_shard = rows.div_ceil(parts);
+    let open_shard = |i: usize| -> Result<std::io::BufWriter<std::fs::File>> {
+        let path = out_dir.join(format!("part-{i:05}.svm"));
+        Ok(std::io::BufWriter::new(std::fs::File::create(&path).with_context(
+            || format!("creating shard {}", path.display()),
+        )?))
+    };
+    let file = std::fs::File::open(input)
+        .with_context(|| format!("opening LIBSVM file {}", input.display()))?;
+    let mut reader = BufReader::new(file);
+    let mut shard_rows = vec![0usize; parts];
+    let mut shard = 0usize;
+    let mut out = open_shard(0)?;
+    let mut lineno = 0usize;
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            break;
+        }
+        lineno += 1;
+        let is_data = parse_label(&line, lineno)?.is_some();
+        if is_data && shard_rows[shard] == per_shard && shard + 1 < parts {
+            out.flush()?;
+            shard += 1;
+            out = open_shard(shard)?;
+        }
+        out.write_all(line.as_bytes())?;
+        if is_data {
+            shard_rows[shard] += 1;
+        }
+    }
+    out.flush()?;
+    // Trailing empty shards still get created: the directory always holds
+    // exactly `parts` shard files, as asked.
+    for i in (shard + 1)..parts {
+        open_shard(i)?.flush()?;
+    }
+
+    let mut manifest = String::from("shard\trows\n");
+    for (i, &r) in shard_rows.iter().enumerate() {
+        manifest.push_str(&format!("part-{i:05}.svm\t{r}\n"));
+    }
+    std::fs::write(out_dir.join("MANIFEST.tsv"), manifest)?;
+
+    Ok(SplitSummary { rows, shard_rows, label_counts })
 }
 
 #[cfg(test)]
@@ -239,5 +404,44 @@ mod tests {
         let ds = parse(Cursor::new("+1 3:3 1:1\n-1 1:1\n"), "t").unwrap();
         assert_eq!(ds.x.row(0).0, &[0, 2]);
         assert_eq!(ds.x.row(0).1, &[1.0, 3.0]);
+    }
+
+    #[test]
+    fn split_shards_concatenation_is_byte_identical() {
+        let text = "# header comment\n+1 1:0.5 3:1.5\n-1 2:2.0\n\n+1 1:1.0\n-1 3:0.25\n+1 2:0.125";
+        let dir = std::env::temp_dir().join(format!("lpdsvm_split_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let input = dir.join("all.svm");
+        std::fs::write(&input, text).unwrap();
+        let out = dir.join("shards");
+        let s = split_shards(&input, &out, 3).unwrap();
+        assert_eq!(s.rows, 5);
+        assert_eq!(s.shard_rows, vec![2, 2, 1]);
+        assert_eq!(s.label_counts[&1], 3);
+        assert_eq!(s.label_counts[&-1], 2);
+        let mut joined = Vec::new();
+        for i in 0..3 {
+            joined.extend(std::fs::read(out.join(format!("part-{i:05}.svm"))).unwrap());
+        }
+        assert_eq!(joined, text.as_bytes());
+        let manifest = std::fs::read_to_string(out.join("MANIFEST.tsv")).unwrap();
+        assert!(manifest.contains("part-00001.svm\t2"), "{manifest}");
+        // More parts than rows: trailing shards exist and are empty.
+        let out2 = dir.join("wide");
+        let s2 = split_shards(&input, &out2, 8).unwrap();
+        assert_eq!(s2.shard_rows.iter().sum::<usize>(), 5);
+        assert!(out2.join("part-00007.svm").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scan_max_index_matches_full_parse() {
+        let rest = "3:0.5 9:1.25 2:-1";
+        let (entries, max_col) = parse_entries(rest, 1).unwrap();
+        assert_eq!(scan_max_index(rest, 1).unwrap(), max_col);
+        assert_eq!(entries.iter().map(|e| e.0).max().unwrap() + 1, max_col);
+        assert_eq!(scan_max_index("", 1).unwrap(), 0);
+        assert!(scan_max_index("0:1.0", 1).is_err());
     }
 }

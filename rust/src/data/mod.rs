@@ -15,6 +15,7 @@
 //! so no fold ends up empty and no class piles its remainder onto
 //! fold 0.
 
+pub mod block;
 pub mod dataset;
 pub mod folds;
 pub mod libsvm;
@@ -22,5 +23,6 @@ pub mod scale;
 pub mod sparse;
 pub mod synth;
 
+pub use block::{Block, DataSource, MemorySource, ShardedSource};
 pub use dataset::Dataset;
 pub use sparse::SparseMatrix;

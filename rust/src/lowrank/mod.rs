@@ -14,6 +14,8 @@
 pub mod factor;
 pub mod landmarks;
 pub mod memory;
+pub mod stream;
 
 pub use factor::{LowRankFactor, Stage1Backend, Stage1Config};
 pub use memory::{max_affordable_budget, MemoryPlan};
+pub use stream::StreamFactor;

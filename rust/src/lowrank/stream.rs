@@ -1,0 +1,216 @@
+//! Stage 1 over a streaming [`DataSource`]: the factor without `G`.
+//!
+//! The classic [`LowRankFactor`] embodies the paper's "more RAM" move —
+//! precompute all of `G = K_nB·W` (n × rank, f32) and keep it resident.
+//! Out of core that is exactly the matrix we must *not* materialize, so
+//! the streaming factor keeps only the O(B·p + B·rank) pieces: the dense
+//! landmark matrix, its squared norms, and the whitening map. Consumers
+//! (the blockwise solver, streaming evaluation) recompute `G` rows per
+//! stripe through the same [`Stage1Backend::g_chunk`] the classic path
+//! uses — same inputs per stripe regardless of block budget, which is
+//! what carries the bit-identity contract through this layer.
+//!
+//! Landmark selection draws the same uniform sample as
+//! [`crate::lowrank::landmarks::select`] (same RNG seeding), so for the
+//! uniform strategy the streaming factor is bitwise the classic factor
+//! minus `G`. Landmark *features* are gathered in one masked streaming
+//! pass: shards holding no landmark rows are never opened.
+
+use crate::data::block::DataSource;
+use crate::data::sparse::SparseMatrix;
+use crate::kernel::Kernel;
+use crate::linalg::eigen::sym_eig_threads;
+use crate::linalg::Mat;
+use crate::lowrank::factor::{LowRankFactor, Stage1Backend, Stage1Config};
+use crate::lowrank::landmarks::LandmarkStrategy;
+use crate::util::rng::Rng;
+use crate::util::timer::StageClock;
+
+/// Stage-1 output for the out-of-core path: everything prediction and
+/// blockwise training need, except the resident `G`.
+#[derive(Clone, Debug)]
+pub struct StreamFactor {
+    /// Dense landmark matrix (B × p) and its squared row norms.
+    pub landmarks: Mat,
+    pub landmark_sq: Vec<f32>,
+    /// Whitening map `W = V_r Λ_r^{-1/2}` (B × rank).
+    pub whiten: Mat,
+    /// Effective rank after eigenvalue truncation.
+    pub rank: usize,
+    /// Eigenvalues of `K_BB` (descending, full length B).
+    pub eigenvalues: Vec<f64>,
+    pub kernel: Kernel,
+    /// Global row ids of the landmarks in the source.
+    pub landmark_idx: Vec<usize>,
+}
+
+impl StreamFactor {
+    /// Run streaming stage 1: sample landmarks, gather their features in
+    /// one masked pass under `budget_bytes`, factor `K_BB`. Timing lands
+    /// in `clock` under "preparation" like the classic path (there is no
+    /// "matrix_g" stage — `G` is never assembled).
+    pub fn compute(
+        source: &dyn DataSource,
+        kernel: Kernel,
+        cfg: &Stage1Config,
+        budget_bytes: usize,
+        clock: &mut StageClock,
+    ) -> anyhow::Result<StreamFactor> {
+        let n = source.n_rows();
+        anyhow::ensure!(n > 0, "empty dataset");
+        anyhow::ensure!(
+            cfg.strategy == LandmarkStrategy::Uniform,
+            "streaming stage 1 supports uniform landmark selection only \
+             (k-means++ needs resident features)"
+        );
+        let threads = cfg.effective_threads();
+        clock.time("preparation", || -> anyhow::Result<StreamFactor> {
+            // Identical draw to `landmarks::select(Uniform)`: same seed,
+            // same first RNG call, sorted — so landmark ids match the
+            // classic in-memory factor bit for bit.
+            let mut rng = Rng::new(cfg.seed);
+            let b = cfg.budget.min(n);
+            let mut idx = rng.sample_indices(n, b);
+            idx.sort_unstable();
+
+            let mut wanted = vec![false; n];
+            for &i in &idx {
+                wanted[i] = true;
+            }
+            let mut lm = Mat::zeros(b, source.n_cols());
+            source.for_each_block(budget_bytes, Some(&wanted), &mut |blk| {
+                for (k, &g) in blk.rows.iter().enumerate() {
+                    let pos = idx
+                        .binary_search(&g)
+                        .map_err(|_| anyhow::anyhow!("source delivered unrequested row {g}"))?;
+                    let (c, v) = blk.x.row(blk.local[k]);
+                    let row = lm.row_mut(pos);
+                    for (&ci, &vi) in c.iter().zip(v) {
+                        row[ci as usize] = vi;
+                    }
+                }
+                Ok(())
+            })?;
+            let lm_sq = lm.row_sq_norms();
+            let k_bb = kernel.symmetric_matrix_threads(&lm, &lm_sq, threads);
+            let eig = sym_eig_threads(&k_bb, 40, 1e-12, threads);
+            let whiten = eig.whitening_map(eig.effective_rank(cfg.eps_rank));
+            let rank = whiten.cols;
+            Ok(StreamFactor {
+                landmarks: lm,
+                landmark_sq: lm_sq,
+                whiten,
+                rank,
+                eigenvalues: eig.values,
+                kernel,
+                landmark_idx: idx,
+            })
+        })
+    }
+
+    /// `G` rows for a set of block-local rows, through the same backend
+    /// entry point the classic assembly uses. Callers pass exactly one
+    /// stripe's rows so the computation is block-budget-independent.
+    pub fn g_rows(
+        &self,
+        backend: &dyn Stage1Backend,
+        x: &SparseMatrix,
+        rows: &[usize],
+    ) -> anyhow::Result<Mat> {
+        backend.g_chunk(x, rows, &self.landmarks, &self.landmark_sq, &self.whiten, &self.kernel)
+    }
+
+    /// Package as a [`LowRankFactor`] for the model container. `g` is
+    /// empty — the same shape [`crate::model::io::load`] reconstructs, so
+    /// a streamed model serializes identically to a classic one.
+    pub fn to_model_factor(&self) -> LowRankFactor {
+        LowRankFactor {
+            g: Mat::zeros(0, self.rank),
+            landmarks: self.landmarks.clone(),
+            landmark_sq: self.landmark_sq.clone(),
+            whiten: self.whiten.clone(),
+            rank: self.rank,
+            eigenvalues: self.eigenvalues.clone(),
+            kernel: self.kernel,
+            landmark_idx: self.landmark_idx.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::block::MemorySource;
+    use crate::data::synth::{FeatureStyle, SynthSpec};
+    use crate::data::Dataset;
+    use crate::lowrank::factor::NativeBackend;
+
+    fn dataset(n: usize, seed: u64) -> Dataset {
+        SynthSpec {
+            name: "t".into(),
+            n,
+            p: 10,
+            n_classes: 2,
+            sep: 2.0,
+            latent: 4,
+            noise: 1.0,
+            style: FeatureStyle::Dense,
+            seed,
+        }
+        .generate()
+    }
+
+    #[test]
+    fn stream_factor_matches_classic_minus_g() {
+        let ds = dataset(300, 11);
+        let cfg = Stage1Config { budget: 48, ..Default::default() };
+        let kernel = Kernel::gaussian(0.2);
+        let mut clock = StageClock::new();
+        let classic =
+            LowRankFactor::compute(&ds.x, kernel, &cfg, &NativeBackend::default(), &mut clock)
+                .unwrap();
+        let src = MemorySource::new(&ds);
+        for budget in [0usize, 2_000] {
+            let mut clock2 = StageClock::new();
+            let sf = StreamFactor::compute(&src, kernel, &cfg, budget, &mut clock2).unwrap();
+            assert_eq!(sf.landmark_idx, classic.landmark_idx, "budget {budget}");
+            assert_eq!(sf.landmarks.data, classic.landmarks.data);
+            assert_eq!(sf.whiten.data, classic.whiten.data);
+            assert_eq!(sf.rank, classic.rank);
+            assert_eq!(sf.eigenvalues, classic.eigenvalues);
+            assert!(clock2.secs("preparation") > 0.0);
+        }
+    }
+
+    #[test]
+    fn g_rows_matches_classic_g() {
+        let ds = dataset(200, 12);
+        let cfg = Stage1Config { budget: 32, ..Default::default() };
+        let kernel = Kernel::gaussian(0.15);
+        let mut clock = StageClock::new();
+        let classic =
+            LowRankFactor::compute(&ds.x, kernel, &cfg, &NativeBackend::default(), &mut clock)
+                .unwrap();
+        let src = MemorySource::new(&ds);
+        let sf = StreamFactor::compute(&src, kernel, &cfg, 0, &mut StageClock::new()).unwrap();
+        let rows: Vec<usize> = (40..60).collect();
+        let g = sf.g_rows(&NativeBackend::default(), &ds.x, &rows).unwrap();
+        for (r, &i) in rows.iter().enumerate() {
+            assert_eq!(g.row(r), classic.g.row(i), "row {i}");
+        }
+    }
+
+    #[test]
+    fn model_factor_has_empty_g() {
+        let ds = dataset(80, 13);
+        let src = MemorySource::new(&ds);
+        let cfg = Stage1Config { budget: 16, ..Default::default() };
+        let sf =
+            StreamFactor::compute(&src, Kernel::gaussian(0.1), &cfg, 0, &mut StageClock::new())
+                .unwrap();
+        let f = sf.to_model_factor();
+        assert_eq!(f.g.rows, 0);
+        assert_eq!(f.g.cols, sf.rank);
+        assert_eq!(f.rank, sf.rank);
+    }
+}

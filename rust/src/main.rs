@@ -16,12 +16,15 @@
 //! pipes cleanly past the diagnostics.
 
 use lpdsvm::coordinator::checkpoint::CheckpointCtx;
-use lpdsvm::coordinator::cv::{cross_validate_ckpt, CvConfig};
+use lpdsvm::coordinator::cv::{cross_validate_ckpt, cross_validate_streaming, CvConfig};
 use lpdsvm::coordinator::grid::{grid_search_ckpt, GridConfig};
-use lpdsvm::coordinator::train::{train_with_backend, train_with_backend_ckpt, TrainConfig};
+use lpdsvm::coordinator::train::{
+    streaming_error_rate, train_streaming, train_with_backend, train_with_backend_ckpt,
+    TrainConfig,
+};
 use lpdsvm::data::sparse::SparseMatrix;
 use lpdsvm::data::synth::PaperDataset;
-use lpdsvm::data::{dataset::Dataset, libsvm};
+use lpdsvm::data::{dataset::Dataset, libsvm, DataSource, MemorySource, ShardedSource};
 use lpdsvm::kernel::Kernel;
 use lpdsvm::lowrank::factor::NativeBackend;
 use lpdsvm::lowrank::{Stage1Backend, Stage1Config};
@@ -58,6 +61,7 @@ fn main() {
     };
     let result = match cmd {
         "gen-data" => cmd_gen_data(&rest),
+        "split" => cmd_split(&rest),
         "train" => cmd_train(&rest),
         "predict" => cmd_predict(&rest),
         "cv" => cmd_cv(&rest),
@@ -86,12 +90,16 @@ fn print_usage() {
          Usage: lpdsvm <command> [options]   (each command supports --help)\n\n\
          Commands:\n\
            gen-data   synthesise a paper-analogue dataset (LIBSVM format)\n\
+           split      shard a LIBSVM file into block files for out-of-core training\n\
            train      train a model and save it\n\
            predict    predict with a saved model\n\
            cv         k-fold cross-validation\n\
            grid       (C, gamma) grid search with CV + warm starts\n\
            serve      batched inference engine (optional HTTP front-end) + load generator\n\
-           info       artifact/runtime information"
+           info       artifact/runtime information\n\n\
+         Out-of-core: train/cv/grid accept --block-budget-mb and/or --shards to\n\
+         stream feature blocks under a fixed byte budget instead of holding the\n\
+         dataset and G resident; models are byte-identical at any budget."
     );
 }
 
@@ -258,7 +266,19 @@ fn train_cfg_from(p: &lpdsvm::util::cli::Parsed) -> anyhow::Result<TrainConfig> 
 
 fn train_args() -> Vec<ArgSpec> {
     vec![
-        ArgSpec::req("data", "training data (LIBSVM format)"),
+        ArgSpec::opt("data", "", "training data (LIBSVM format; or use --shards)"),
+        ArgSpec::opt(
+            "block-budget-mb",
+            "",
+            "out-of-core mode: stream feature blocks under this byte budget \
+             (0 = one block; any budget yields a byte-identical model)",
+        ),
+        ArgSpec::opt(
+            "shards",
+            "",
+            "out-of-core mode: directory of LIBSVM shard files (see 'lpdsvm split') \
+             read blockwise instead of --data",
+        ),
         ArgSpec::opt("budget", "512", "landmark budget B"),
         ArgSpec::opt("c", "1.0", "regularisation C"),
         ArgSpec::opt("gamma", "0.05", "Gaussian kernel bandwidth"),
@@ -285,6 +305,81 @@ fn train_args() -> Vec<ArgSpec> {
     .collect()
 }
 
+/// Whether the run asked for the out-of-core data plane (either flag
+/// engages it; `--block-budget-mb 0` means "one block", the reference
+/// run for the byte-identity contract).
+fn streaming_requested(p: &lpdsvm::util::cli::Parsed) -> bool {
+    !p.str("block-budget-mb").is_empty() || !p.str("shards").is_empty()
+}
+
+fn block_budget_bytes(p: &lpdsvm::util::cli::Parsed) -> anyhow::Result<usize> {
+    let s = p.str("block-budget-mb");
+    if s.is_empty() {
+        return Ok(0);
+    }
+    let mb: usize = s
+        .parse()
+        .map_err(|e| anyhow::anyhow!("--block-budget-mb: bad value '{s}': {e}"))?;
+    Ok(mb * 1024 * 1024)
+}
+
+/// The `--data` path, required whenever `--shards` doesn't replace it.
+fn require_data(p: &lpdsvm::util::cli::Parsed) -> anyhow::Result<&str> {
+    let d = p.str("data");
+    anyhow::ensure!(!d.is_empty(), "--data is required (or --shards in out-of-core mode)");
+    Ok(d)
+}
+
+/// Resolve the out-of-core source: a sharded on-disk reader when
+/// `--shards` is given, otherwise the in-memory dataset behind the
+/// [`DataSource`] seam. Exactly one of the returns is `Some`.
+fn open_source(
+    p: &lpdsvm::util::cli::Parsed,
+) -> anyhow::Result<(Option<ShardedSource>, Option<Dataset>)> {
+    anyhow::ensure!(
+        p.str("backend") == "native",
+        "out-of-core mode (--block-budget-mb/--shards) supports the native backend only"
+    );
+    let shards = p.str("shards");
+    if !shards.is_empty() {
+        anyhow::ensure!(
+            p.str("data").is_empty(),
+            "--data and --shards are mutually exclusive"
+        );
+        Ok((Some(ShardedSource::open(Path::new(shards))?), None))
+    } else {
+        Ok((None, Some(load_data(require_data(p)?)?)))
+    }
+}
+
+/// Enforce `--max-rss-mb`: fail the run if the kernel's peak-RSS
+/// high-water mark exceeded the cap. 0 = off. This is the bounded-memory
+/// contract the CI smoke asserts.
+fn check_max_rss(p: &lpdsvm::util::cli::Parsed) -> anyhow::Result<()> {
+    let cap_mb = p.usize("max-rss-mb")?;
+    if cap_mb == 0 {
+        return Ok(());
+    }
+    match lpdsvm::util::mem::peak_rss_bytes() {
+        Some(peak) => {
+            println!(
+                "peak RSS {:.1} MiB (cap {cap_mb} MiB)",
+                peak as f64 / (1024.0 * 1024.0)
+            );
+            anyhow::ensure!(
+                peak <= cap_mb as u64 * 1024 * 1024,
+                "peak RSS {:.1} MiB exceeded --max-rss-mb {cap_mb}",
+                peak as f64 / (1024.0 * 1024.0)
+            );
+            Ok(())
+        }
+        None => {
+            lpdsvm::log_warn!("train", "--max-rss-mb: peak RSS unavailable on this platform");
+            Ok(())
+        }
+    }
+}
+
 /// Build the optional checkpoint context from `--checkpoint` /
 /// `--checkpoint-every` (shared by train, cv, and grid).
 fn ckpt_from(p: &lpdsvm::util::cli::Parsed) -> anyhow::Result<Option<CheckpointCtx>> {
@@ -300,18 +395,40 @@ fn ckpt_from(p: &lpdsvm::util::cli::Parsed) -> anyhow::Result<Option<CheckpointC
 fn cmd_train(args: &[String]) -> anyhow::Result<()> {
     let mut specs = train_args();
     specs.push(ArgSpec::req("model-out", "path to save the trained model"));
+    specs.push(ArgSpec::opt(
+        "max-rss-mb",
+        "0",
+        "fail if the process's peak RSS exceeds this many MiB (0 = off; \
+         the bounded-memory assertion for out-of-core runs)",
+    ));
     specs.extend(backend_args());
     let p = parse("train", "Train an LPD-SVM model", &specs, args)?;
     obs_setup(&p)?;
-    let data = load_data(p.str("data"))?;
     let cfg = train_cfg_from(&p)?;
     let ckpt = ckpt_from(&p)?;
     let mut clock = StageClock::new();
-    let model = with_backend(p.str("backend"), |b| {
-        train_with_backend_ckpt(&data, &cfg, b, &mut clock, ckpt.as_ref())
-    })?;
-    model_io::save(&model, Path::new(p.str("model-out")))?;
-    let train_err = model.error_rate(&data.x, &data.labels)?;
+    let (model, train_err) = if streaming_requested(&p) {
+        let budget = block_budget_bytes(&p)?;
+        let (sharded, resident) = open_source(&p)?;
+        let memory = resident.as_ref().map(MemorySource::new);
+        let source: &dyn DataSource = match (&sharded, &memory) {
+            (Some(s), _) => s,
+            (None, Some(m)) => m,
+            (None, None) => unreachable!("open_source returns one of the two"),
+        };
+        let model = train_streaming(source, &cfg, budget, &mut clock, ckpt.as_ref())?;
+        model_io::save(&model, Path::new(p.str("model-out")))?;
+        let err = streaming_error_rate(source, &model, None, budget)?;
+        (model, err)
+    } else {
+        let data = load_data(require_data(&p)?)?;
+        let model = with_backend(p.str("backend"), |b| {
+            train_with_backend_ckpt(&data, &cfg, b, &mut clock, ckpt.as_ref())
+        })?;
+        model_io::save(&model, Path::new(p.str("model-out")))?;
+        let err = model.error_rate(&data.x, &data.labels)?;
+        (model, err)
+    };
     let mut t = Table::new("training summary", &["stage", "seconds"]);
     for (k, v) in clock.entries() {
         t.row(&[k, Table::secs(v)]);
@@ -323,6 +440,45 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
         model.heads.len(),
         Table::pct(train_err),
         p.str("model-out")
+    );
+    check_max_rss(&p)?;
+    obs_finish(&p)?;
+    Ok(())
+}
+
+fn cmd_split(args: &[String]) -> anyhow::Result<()> {
+    let specs: Vec<ArgSpec> = vec![
+        ArgSpec::req("data", "input LIBSVM file"),
+        ArgSpec::req("out-dir", "directory for the shard files"),
+        ArgSpec::opt("parts", "8", "number of shards"),
+    ]
+    .into_iter()
+    .chain(obs_args())
+    .collect();
+    let p = parse(
+        "split",
+        "Shard a LIBSVM file into block files for out-of-core training",
+        &specs,
+        args,
+    )?;
+    obs_setup(&p)?;
+    let summary = libsvm::split_shards(
+        Path::new(p.str("data")),
+        Path::new(p.str("out-dir")),
+        p.usize("parts")?,
+    )?;
+    let mut t = Table::new("label histogram", &["raw label", "rows"]);
+    for (label, count) in &summary.label_counts {
+        t.row(&[label.to_string(), count.to_string()]);
+    }
+    t.print();
+    println!(
+        "wrote {} rows into {} shards (<= {} rows each) under {} — \
+         concatenating the shards reproduces the input byte for byte",
+        summary.rows,
+        summary.shard_rows.len(),
+        summary.shard_rows.iter().max().copied().unwrap_or(0),
+        p.str("out-dir")
     );
     obs_finish(&p)?;
     Ok(())
@@ -365,14 +521,26 @@ fn cmd_cv(args: &[String]) -> anyhow::Result<()> {
     specs.push(ArgSpec::opt("folds", "5", "number of CV folds"));
     let p = parse("cv", "k-fold cross validation (shared stage 1)", &specs, args)?;
     obs_setup(&p)?;
-    let data = load_data(p.str("data"))?;
     let cfg = train_cfg_from(&p)?;
     let cv = CvConfig {
         folds: p.usize("folds")?,
         seed: p.u64("seed")?,
     };
     let ckpt = ckpt_from(&p)?;
-    let r = cross_validate_ckpt(&data, &cfg, &cv, ckpt.as_ref())?;
+    let r = if streaming_requested(&p) {
+        let budget = block_budget_bytes(&p)?;
+        let (sharded, resident) = open_source(&p)?;
+        let memory = resident.as_ref().map(MemorySource::new);
+        let source: &dyn DataSource = match (&sharded, &memory) {
+            (Some(s), _) => s,
+            (None, Some(m)) => m,
+            (None, None) => unreachable!("open_source returns one of the two"),
+        };
+        cross_validate_streaming(source, &cfg, &cv, budget, ckpt.as_ref().map(|c| (c, "")))?
+    } else {
+        let data = load_data(require_data(&p)?)?;
+        cross_validate_ckpt(&data, &cfg, &cv, ckpt.as_ref())?
+    };
     let mut t = Table::new("cross-validation", &["fold", "error %"]);
     for (i, e) in r.fold_errors.iter().enumerate() {
         t.row(&[i.to_string(), Table::pct(*e)]);
@@ -404,7 +572,6 @@ fn cmd_grid(args: &[String]) -> anyhow::Result<()> {
     specs.push(ArgSpec::flag("no-warm-start", "disable warm starts along C"));
     let p = parse("grid", "Grid search with CV + warm starts", &specs, args)?;
     obs_setup(&p)?;
-    let data = load_data(p.str("data"))?;
     let base = train_cfg_from(&p)?;
     let parse_grid = |s: &str| -> anyhow::Result<Vec<f64>> {
         s.split(',')
@@ -419,6 +586,10 @@ fn cmd_grid(args: &[String]) -> anyhow::Result<()> {
         warm_start: !p.flag("no-warm-start"),
     };
     let ckpt = ckpt_from(&p)?;
+    if streaming_requested(&p) {
+        return grid_streaming(&p, &base, &grid, ckpt.as_ref());
+    }
+    let data = load_data(require_data(&p)?)?;
     let r = grid_search_ckpt(&data, &base, &grid, ckpt.as_ref())?;
     let mut t = Table::new("grid search", &["gamma", "C", "cv error %"]);
     for pt in &r.points {
@@ -440,6 +611,71 @@ fn cmd_grid(args: &[String]) -> anyhow::Result<()> {
         Table::secs(r.stage1_secs),
     );
     obs_finish(&p)?;
+    Ok(())
+}
+
+/// Out-of-core grid search: a plain double loop over (γ, C) running
+/// streaming CV per cell. No cross-cell warm starts (they would need the
+/// per-pair α resident across cells — the opposite of the fixed-memory
+/// contract); stage 1 is still recomputed only once per γ *within* each
+/// cell's CV. Checkpoints use the classic per-cell tag prefixes.
+fn grid_streaming(
+    p: &lpdsvm::util::cli::Parsed,
+    base: &TrainConfig,
+    grid: &GridConfig,
+    ckpt: Option<&CheckpointCtx>,
+) -> anyhow::Result<()> {
+    if grid.warm_start {
+        lpdsvm::log_warn!(
+            "grid",
+            "out-of-core grid search runs without warm starts along C \
+             (duals are not kept resident between cells)"
+        );
+    }
+    let budget = block_budget_bytes(p)?;
+    let (sharded, resident) = open_source(p)?;
+    let memory = resident.as_ref().map(MemorySource::new);
+    let source: &dyn DataSource = match (&sharded, &memory) {
+        (Some(s), _) => s,
+        (None, Some(m)) => m,
+        (None, None) => unreachable!("open_source returns one of the two"),
+    };
+    let cv = CvConfig {
+        folds: grid.cv_folds,
+        seed: grid.seed,
+    };
+    let t0 = Instant::now();
+    let mut t = Table::new("grid search (out-of-core)", &["gamma", "C", "cv error %"]);
+    let mut best = (f64::NAN, f64::NAN, f64::INFINITY);
+    let mut n_binary = 0usize;
+    for (gi, &gamma) in grid.gamma_values.iter().enumerate() {
+        for (ci, &c) in grid.c_values.iter().enumerate() {
+            let mut cfg = base.clone();
+            cfg.kernel = Kernel::gaussian(gamma);
+            cfg.solver.c = c;
+            let prefix = format!("cell_g{gi}_c{ci}_");
+            let r = cross_validate_streaming(
+                source,
+                &cfg,
+                &cv,
+                budget,
+                ckpt.map(|ctx| (ctx, prefix.as_str())),
+            )?;
+            n_binary += r.n_binary_problems;
+            t.row(&[format!("{gamma:e}"), c.to_string(), Table::pct(r.mean_error)]);
+            if r.mean_error < best.2 {
+                best = (gamma, c, r.mean_error);
+            }
+        }
+    }
+    t.print();
+    let (bg, bc, be) = best;
+    println!(
+        "best: gamma={bg:e} C={bc} error {}%  |  {n_binary} binary problems, total {} s",
+        Table::pct(be),
+        Table::secs(t0.elapsed().as_secs_f64()),
+    );
+    obs_finish(p)?;
     Ok(())
 }
 

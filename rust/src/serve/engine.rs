@@ -17,11 +17,13 @@
 //! model owns a bounded sub-queue — admission control and shedding are
 //! per model, so a saturating tenant sheds only its own traffic — and
 //! dispatch rotates over the backlogged models, giving a model `weight`
-//! batches per round (see [`ModelServeConfig`]). The rotation only ever
+//! batches' worth of *bytes* per round (deficit-round-robin charged in
+//! 256-byte payload quanta, so wide rows cost proportionally more credit
+//! than sparse ones; see [`ModelServeConfig`]). The rotation only ever
 //! skips models with nothing queued, so an idle tenant costs nothing and
 //! its capacity flows to the busy ones (work-conserving). With a single
-//! model the scheduler degenerates to exactly the PR 4 FIFO: same
-//! batches, same admission decisions, same metrics.
+//! model and single-quantum rows the scheduler degenerates to exactly
+//! the PR 4 FIFO: same batches, same admission decisions, same metrics.
 //!
 //! Each worker owns its own [`Stage1Backend`] instance (the trait is
 //! deliberately `!Sync`: the PJRT implementation wraps raw device
@@ -219,6 +221,24 @@ struct PendingRequest {
     metrics: Arc<ModelMetrics>,
 }
 
+/// Byte size of one scheduler deficit quantum. A request is charged
+/// `ceil(payload_bytes / DRR_QUANTUM_BYTES)` quanta (minimum 1), so the
+/// rotation shares *bytes scored* rather than request counts — a tenant
+/// sending dense 10k-entry rows cannot buy 10× the arithmetic of a
+/// sparse tenant at the same request rate. Requests of up to 32 entries
+/// (8 bytes each) cost exactly one quantum, where the scheduler behaves
+/// identically to the request-counting DRR it replaces.
+const DRR_QUANTUM_BYTES: usize = 256;
+
+impl PendingRequest {
+    /// This request's deficit charge: payload bytes rounded up to whole
+    /// quanta, never free (an empty row still costs one quantum).
+    fn drr_cost(&self) -> u64 {
+        let bytes = self.entries.len() * std::mem::size_of::<(u32, f32)>();
+        bytes.div_ceil(DRR_QUANTUM_BYTES).max(1) as u64
+    }
+}
+
 /// One model's sub-queue plus its scheduler state.
 struct ModelQueue {
     queue: VecDeque<PendingRequest>,
@@ -231,11 +251,12 @@ struct ModelQueue {
     /// Per-model cap override (`None` = inherit `ServeConfig::max_queue`).
     /// Same ownership rule as `weight`.
     max_queue: Option<usize>,
-    /// Deficit counter in *requests*. Refilled with
-    /// `weight × max_batch` when the scheduler selects this queue with an
-    /// empty deficit, decremented by the rows actually dispatched, and
-    /// reset to zero whenever the queue drains — an idle model accrues no
-    /// credit, which is what makes the rotation work-conserving.
+    /// Deficit counter in *byte quanta* (see `DRR_QUANTUM_BYTES`).
+    /// Refilled with `weight × max_batch` quanta when the scheduler
+    /// selects this queue with an empty deficit, charged per dispatched
+    /// request by its payload size, and reset to zero whenever the queue
+    /// drains or the turn rotates away — an idle model accrues no credit,
+    /// which is what makes the rotation work-conserving.
     deficit: u64,
     /// Whether this queue occupies a slot in the
     /// [`MAX_UNREGISTERED_QUEUES`] budget (it was created for a name that
@@ -761,12 +782,19 @@ fn trigger_fired(q: &ModelQueue, now: Instant, cfg: &ServeConfig, shutdown: bool
 /// Pull the next batch under weighted deficit-round-robin.
 ///
 /// The ring orders the backlogged models; the scheduler scans it from the
-/// front for the first model whose batch trigger fired and takes up to
-/// `min(max_batch, deficit)` of its requests. A queue arriving at its
+/// front for the first model whose batch trigger fired and fills a batch
+/// from its queue, charging each request its byte cost in quanta
+/// (`ceil(payload_bytes / DRR_QUANTUM_BYTES)`, min 1) — fairness is in
+/// bytes scored, not request count, so a tenant with wide rows cannot
+/// outrun one with sparse rows at equal weight. A queue arriving at its
 /// scheduling turn with an empty deficit is refilled with
-/// `weight × max_batch` credit, so a weight-`w` model is offered `w` full
-/// batches before the rotation moves on; a drained queue leaves the ring
-/// and forfeits its remaining credit (no banked bursts, work-conserving).
+/// `weight × max_batch` quanta, so a weight-`w` model is offered `w` full
+/// batches of single-quantum rows before the rotation moves on. The head
+/// request is always taken regardless of remaining credit (an oversized
+/// row must not wedge its own queue); subsequent requests need the credit
+/// to cover them. A drained queue — or one whose turn ends with its
+/// credit spent or too small for its next request — leaves its turn and
+/// forfeits the remaining credit (no banked bursts, work-conserving).
 /// Models whose trigger has not fired are *skipped without losing their
 /// turn* — a cold tenant waiting out `max_wait` keeps its place at the
 /// head of the rotation while hot tenants use the capacity.
@@ -837,20 +865,26 @@ fn next_batch(shared: &Shared) -> Option<Batch> {
         if q.deficit == 0 {
             q.deficit = q.weight.saturating_mul(shared.cfg.max_batch as u64);
         }
-        let take = (shared.cfg.max_batch as u64)
-            .min(q.queue.len() as u64)
-            .min(q.deficit) as usize;
-        let mut requests = Vec::with_capacity(take);
-        for _ in 0..take {
+        let mut requests = Vec::new();
+        while requests.len() < shared.cfg.max_batch {
+            let Some(front) = q.queue.front() else { break };
+            let cost = front.drr_cost();
+            // The head of the batch is taken unconditionally so a row
+            // costing more than a full refill cannot wedge its queue.
+            if !requests.is_empty() && cost > q.deficit {
+                break;
+            }
+            q.deficit = q.deficit.saturating_sub(cost);
             requests.push(q.queue.pop_front().unwrap());
         }
-        q.deficit -= take as u64;
         let emptied = q.queue.is_empty();
         if emptied {
             q.deficit = 0;
             st.ring.remove(i);
-        } else if q.deficit == 0 {
-            // Credit spent: rotate to the back of the ring.
+        } else if q.deficit == 0 || q.queue.front().unwrap().drr_cost() > q.deficit {
+            // Credit spent (or too small for the next request): forfeit
+            // the remainder and rotate to the back of the ring.
+            q.deficit = 0;
             let n = st.ring.remove(i).unwrap();
             st.ring.push_back(n);
         }
@@ -1549,13 +1583,13 @@ mod tests {
     /// through `next_batch` to observe the scheduler's dispatch order.
     fn drain_order(
         max_batch: usize,
-        tenants: &[(&str, u64, usize)], // (name, weight, queued requests)
+        tenants: &[(&str, u64, usize, usize)], // (name, weight, queued requests, entries each)
     ) -> Vec<(String, usize)> {
         let mut queues = HashMap::new();
         let mut ring = VecDeque::new();
         let mut total_depth = 0;
         let metrics = Arc::new(ServeMetrics::new());
-        for &(name, weight, n) in tenants {
+        for &(name, weight, n, entries) in tenants {
             let cfg = ModelServeConfig {
                 weight,
                 max_queue: None,
@@ -1564,7 +1598,7 @@ mod tests {
             for _ in 0..n {
                 let (_ticket, fulfiller) = session::channel();
                 q.queue.push_back(PendingRequest {
-                    entries: vec![(0, 1.0)],
+                    entries: vec![(0, 1.0); entries],
                     fulfiller,
                     enqueued: Instant::now(),
                     metrics: metrics.model(name),
@@ -1605,7 +1639,7 @@ mod tests {
     fn drr_gives_weighted_consecutive_batches_then_rotates() {
         // Weight 2 vs 1 at max_batch 1: A gets two singleton batches per
         // rotation, B one — and A's drained queue leaves the ring early.
-        let order = drain_order(1, &[("a", 2, 4), ("b", 1, 4)]);
+        let order = drain_order(1, &[("a", 2, 4, 1), ("b", 1, 4, 1)]);
         let names: Vec<&str> = order.iter().map(|(n, _)| n.as_str()).collect();
         assert_eq!(names, vec!["a", "a", "b", "a", "a", "b", "b", "b"]);
         assert!(order.iter().all(|(_, n)| *n == 1));
@@ -1613,7 +1647,7 @@ mod tests {
 
     #[test]
     fn drr_equal_weights_alternate() {
-        let order = drain_order(2, &[("a", 1, 4), ("b", 1, 4)]);
+        let order = drain_order(2, &[("a", 1, 4, 1), ("b", 1, 4, 1)]);
         let names: Vec<&str> = order.iter().map(|(n, _)| n.as_str()).collect();
         assert_eq!(names, vec!["a", "b", "a", "b"]);
         assert!(order.iter().all(|(_, n)| *n == 2), "full batches of 2");
@@ -1623,8 +1657,24 @@ mod tests {
     fn drr_single_model_is_plain_fifo() {
         // One tenant: consecutive full batches, remainder last — exactly
         // the PR 4 single-queue dispatch.
-        let order = drain_order(4, &[("only", 3, 10)]);
+        let order = drain_order(4, &[("only", 3, 10, 1)]);
         let full = ("only".to_string(), 4);
         assert_eq!(order, vec![full.clone(), full, ("only".to_string(), 2)]);
+    }
+
+    #[test]
+    fn drr_charges_quanta_by_byte_cost_for_mixed_dimension_tenants() {
+        // Equal weights, but 'fat' rows are 64 entries (512 B = 2 quanta)
+        // while 'thin' rows are 1 entry (1 quantum). Refill is
+        // weight × max_batch = 4 quanta, so a fat turn dispatches only 2
+        // requests to thin's 4 — per-round *bytes* match, not request
+        // counts. Under request-counting DRR every batch here would have
+        // been 4 requests and fat would get twice the bytes.
+        let order = drain_order(4, &[("fat", 1, 6, 64), ("thin", 1, 8, 1)]);
+        let pretty: Vec<(&str, usize)> = order.iter().map(|(n, c)| (n.as_str(), *c)).collect();
+        assert_eq!(
+            pretty,
+            vec![("fat", 2), ("thin", 4), ("fat", 2), ("thin", 4), ("fat", 2)]
+        );
     }
 }

@@ -1,0 +1,627 @@
+//! Blockwise dual coordinate ascent over a streaming [`DataSource`] —
+//! stage 2 without the resident `G`.
+//!
+//! The classic solver ([`crate::solver::cd`]) walks rows of a
+//! precomputed `G`. Out of core, `G` rows are recomputed on the fly:
+//! each epoch streams the active rows in blocks, evaluates the factor
+//! chunk for one *stripe* at a time (see [`crate::data::block`] for why
+//! stripes, not blocks, are the unit of computation), and runs the same
+//! O(rank) coordinate step — gradient from `⟨G_i, v⟩`, truncated-Newton
+//! update, incremental `v` maintenance.
+//!
+//! ## Residual carry (`pred`)
+//!
+//! Alongside `α` and `v` the solver maintains `pred[i] ≈ ⟨G_i, v⟩` for
+//! every subproblem row — the residual prediction carried across blocks
+//! and epochs (the `pred_old` of blockwise SVM training). It is updated
+//! exactly at each visit (`pred += Δα·y·⟨G_i,G_i⟩` after the axpy, a
+//! closed form of the new dot product), refreshed whenever a sweep
+//! recomputes a row, and serialized into [`BlockSnapshot`]. Its job is
+//! to make shrinking's re-activation sweeps cheap: the η-budget interim
+//! sweep first screens shrunk rows against `pred` and only streams
+//! feature bytes for rows whose *estimated* violation is at least
+//! [`REACT_PREFILTER`]·ε — rows that look KKT-clean from the carried
+//! residual cost no I/O at all. Convergence never depends on the
+//! estimate: the final sweep that certifies termination recomputes every
+//! shrunk row's gradient exactly.
+//!
+//! ## Bit-identity
+//!
+//! For a fixed subproblem and seed, the solve trajectory is a function
+//! of the stripe sequence only: visit order inside a stripe comes from a
+//! stateless per-`(epoch, stripe)` RNG, factor rows are computed per
+//! stripe, and sweeps iterate rows in ascending global order. Block
+//! boundaries (and hence `--block-budget-mb`, and the choice of
+//! in-memory vs sharded source) carry no information, so any budget and
+//! any source produce byte-identical models. Kill-and-resume restores
+//! [`BlockSnapshot`] — including the mid-epoch stripe cursor and the
+//! carried residuals — and replays the identical trajectory.
+
+use crate::data::block::{stripe_of, DataSource};
+use crate::linalg::dense::{axpy, dot};
+use crate::lowrank::factor::NativeBackend;
+use crate::lowrank::stream::StreamFactor;
+use crate::solver::cd::violation;
+use crate::solver::shrinking::ActiveSet;
+use crate::solver::{Solution, SolverOptions};
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// Interim re-activation sweeps only stream rows whose `pred`-estimated
+/// violation is at least this fraction of ε. Rows never evaluated this
+/// solve have `pred == 0`, estimate their violation at 1, and therefore
+/// always qualify — the filter can delay a re-activation but never
+/// starve one, and the terminal sweep is exact regardless.
+pub const REACT_PREFILTER: f64 = 0.5;
+
+/// One binary subproblem phrased against a streaming source: the rows
+/// (ascending global ids), their ±1 labels, and the stage-1 factor that
+/// turns feature rows into `G` rows.
+pub struct BlockProblem<'a> {
+    pub source: &'a dyn DataSource,
+    pub factor: &'a StreamFactor,
+    /// Global row ids of the subproblem, strictly ascending.
+    pub rows: Vec<usize>,
+    /// Label per local variable, aligned with `rows`.
+    pub y: Vec<f32>,
+    /// Byte budget handed to the source per streaming pass (0 = one block).
+    pub budget_bytes: usize,
+    pub backend: NativeBackend,
+}
+
+impl<'a> BlockProblem<'a> {
+    pub fn new(
+        source: &'a dyn DataSource,
+        factor: &'a StreamFactor,
+        rows: Vec<usize>,
+        y: Vec<f32>,
+        budget_bytes: usize,
+        backend: NativeBackend,
+    ) -> BlockProblem<'a> {
+        assert_eq!(rows.len(), y.len(), "rows/labels length mismatch");
+        debug_assert!(rows.windows(2).all(|w| w[0] < w[1]), "rows must be ascending");
+        debug_assert!(y.iter().all(|&v| v == 1.0 || v == -1.0));
+        BlockProblem { source, factor, rows, y, budget_bytes, backend }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+/// Everything the blockwise loop carries across a block boundary. Unlike
+/// the classic [`crate::solver::SolverSnapshot`] this can be captured
+/// *mid-epoch*: `cursor` is the next global stripe of the running epoch
+/// (0 = at an epoch boundary) and `flagged`/`epoch_max_viol` hold the
+/// epoch-so-far shrink flags and KKT maximum. No RNG state is stored —
+/// visit permutations come from stateless per-`(epoch, stripe)` seeds.
+#[derive(Clone, Debug)]
+pub struct BlockSnapshot {
+    /// Completed epochs.
+    pub epochs: u64,
+    /// Next global stripe to process in the current epoch (0 = fresh).
+    pub cursor: u64,
+    pub steps: u64,
+    pub active_work: u64,
+    pub check_work: u64,
+    /// Maximum KKT violation seen so far in the running epoch.
+    pub epoch_max_viol: f64,
+    pub alpha: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Carried residual predictions `pred[i] ≈ ⟨G_i, v⟩`.
+    pub pred: Vec<f32>,
+    pub active: Vec<u32>,
+    pub unchanged: Vec<u8>,
+    pub inactive: Vec<u32>,
+    /// Rows flagged for shrinking so far in the running epoch.
+    pub flagged: Vec<u32>,
+    pub total_shrunk: u64,
+    pub total_reactivated: u64,
+}
+
+/// Stateless per-(epoch, stripe) permutation seed (splitmix64-style
+/// finalizer) — resuming mid-epoch re-derives the exact visit order of
+/// every remaining stripe without carrying RNG state.
+fn stripe_seed(seed: u64, epoch: u64, stripe: u64) -> u64 {
+    let mut z = seed
+        .wrapping_add(epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_add(stripe.wrapping_mul(0xBF58_476D_1CE4_E5B9));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Stream `⟨G_i, v⟩` for every masked row, in ascending global order.
+/// The factor chunk is evaluated per stripe, keeping the values (and
+/// their float rounding) independent of the block budget.
+fn stream_dots(
+    p: &BlockProblem<'_>,
+    mask: &[bool],
+    v: &[f32],
+    f: &mut dyn FnMut(usize, f32),
+) -> anyhow::Result<()> {
+    p.source.for_each_block(p.budget_bytes, Some(mask), &mut |blk| {
+        for (_, s, e) in blk.stripes() {
+            let g = p.factor.g_rows(&p.backend, blk.x, &blk.local[s..e])?;
+            for i in s..e {
+                f(blk.rows[i], dot(g.row(i - s), v));
+            }
+        }
+        Ok(())
+    })
+}
+
+/// Train a linear SVM blockwise. See [`solve_blockwise_resumable`].
+pub fn solve_blockwise(p: &BlockProblem<'_>, opts: &SolverOptions) -> anyhow::Result<Solution> {
+    solve_blockwise_resumable(p, opts, None, 0, |_| {})
+}
+
+/// [`solve_blockwise`] with crash-safe checkpointing hooks, mirroring
+/// [`crate::solver::solve_resumable`]: `resume` restarts from a captured
+/// [`BlockSnapshot`] (possibly mid-epoch), and when `checkpoint_every >
+/// 0`, `sink` receives a snapshot after every streamed block of each
+/// `checkpoint_every`-th epoch plus one at that epoch's boundary.
+/// Persisting snapshots is the caller's business
+/// ([`crate::coordinator::checkpoint::CheckpointCtx::solve_blockwise`]).
+pub fn solve_blockwise_resumable(
+    p: &BlockProblem<'_>,
+    opts: &SolverOptions,
+    resume: Option<BlockSnapshot>,
+    checkpoint_every: usize,
+    mut sink: impl FnMut(&BlockSnapshot),
+) -> anyhow::Result<Solution> {
+    let m = p.len();
+    let rank = p.factor.rank;
+    let n_src = p.source.n_rows();
+    anyhow::ensure!(
+        opts.warm_alpha.is_none(),
+        "the blockwise solver does not support warm starts"
+    );
+    let c = opts.c as f32;
+    let t_start = Instant::now();
+
+    let mut alpha = vec![0.0f32; m];
+    let mut v = vec![0.0f32; rank];
+    let mut pred = vec![0.0f32; m];
+    // Diagonal ⟨G_i,G_i⟩, filled lazily on first visit (computing it up
+    // front would cost a full streaming pass). Pure function of the row,
+    // so laziness is not state: a resume recomputes identical values.
+    let mut diag = vec![f32::NAN; m];
+    let mut active = ActiveSet::new(m, opts.shrink_k);
+    let mut flagged: Vec<u32> = Vec::new();
+
+    let mut steps: u64 = 0;
+    let mut epochs: u64 = 0;
+    let mut cursor: u64 = 0;
+    let mut max_viol = 0.0f32;
+    let mut converged = false;
+    let mut final_violation = f64::MAX;
+    let mut active_work: u64 = 0;
+    let mut check_work: u64 = 0;
+
+    if let Some(snap) = resume {
+        anyhow::ensure!(
+            snap.alpha.len() == m && snap.unchanged.len() == m && snap.pred.len() == m,
+            "BlockSnapshot has {} variables but the problem has {m} — a \
+             checkpoint only resumes the exact problem it was taken from",
+            snap.alpha.len()
+        );
+        anyhow::ensure!(
+            snap.v.len() == rank,
+            "BlockSnapshot v has dim {} but the factor has rank {rank}",
+            snap.v.len()
+        );
+        alpha = snap.alpha;
+        v = snap.v;
+        pred = snap.pred;
+        active = ActiveSet::from_snapshot(
+            snap.active,
+            snap.unchanged,
+            snap.inactive,
+            snap.total_shrunk,
+            snap.total_reactivated,
+            opts.shrink_k,
+        );
+        flagged = snap.flagged;
+        steps = snap.steps;
+        epochs = snap.epochs;
+        cursor = snap.cursor;
+        max_viol = snap.epoch_max_viol as f32;
+        active_work = snap.active_work;
+        check_work = snap.check_work;
+    }
+
+    // Global→local variable map for the sweep callbacks.
+    let mut global_to_local = vec![u32::MAX; n_src];
+    for (li, &g) in p.rows.iter().enumerate() {
+        global_to_local[g] = li as u32;
+    }
+
+    if m == 0 {
+        return Ok(Solution {
+            alpha,
+            w: v,
+            objective: 0.0,
+            steps: 0,
+            epochs: 0,
+            sv_count: 0,
+            converged: true,
+            violation: 0.0,
+            train_secs: t_start.elapsed().as_secs_f64(),
+            final_active: 0,
+        });
+    }
+
+    let mut solve_span = crate::obs::Span::new("solve");
+    solve_span.arg("n", m as f64);
+    solve_span.arg("blockwise", 1.0);
+
+    while epochs < opts.max_epochs as u64 {
+        let cur = epochs; // 0-based index of the epoch now running
+        let snapshot_epoch = checkpoint_every > 0 && (cur + 1) % checkpoint_every as u64 == 0;
+        let mut epoch_span = crate::obs::Span::new("solve.epoch");
+        let mut epoch_reactivated: u64 = 0;
+
+        // --- main pass: stream the active rows of stripes >= cursor ---
+        let mut wanted = vec![false; n_src];
+        for &li in &active.active {
+            let g = p.rows[li as usize];
+            if (stripe_of(g) as u64) >= cursor {
+                wanted[g] = true;
+            }
+        }
+        p.source.for_each_block(p.budget_bytes, Some(&wanted), &mut |blk| {
+            for (sid, s, e) in blk.stripes() {
+                let g_mat = p.factor.g_rows(&p.backend, blk.x, &blk.local[s..e])?;
+                // Per-stripe permutation: the paper's randomized
+                // round-robin, scoped to the stripe so the order is a
+                // function of (seed, epoch, stripe) alone.
+                let k = e - s;
+                let mut order: Vec<u32> = (0..k as u32).collect();
+                let mut rng = Rng::new(stripe_seed(opts.seed, cur, sid as u64));
+                rng.shuffle(&mut order);
+                for &pos in &order {
+                    let gi = g_mat.row(pos as usize);
+                    let iu = global_to_local[blk.rows[s + pos as usize]] as usize;
+                    let yi = p.y[iu];
+                    let dotv = dot(gi, &v);
+                    pred[iu] = dotv;
+                    let grad = yi * dotv - 1.0;
+                    let a_old = alpha[iu];
+                    let viol = violation(grad, a_old, c);
+                    if viol > max_viol {
+                        max_viol = viol;
+                    }
+                    if diag[iu].is_nan() {
+                        diag[iu] = dot(gi, gi);
+                    }
+                    let d = diag[iu];
+                    let mut changed = false;
+                    if viol > 1e-12 && d > 0.0 {
+                        let a_new = (a_old - grad / d).clamp(0.0, c);
+                        let delta = a_new - a_old;
+                        if delta != 0.0 {
+                            alpha[iu] = a_new;
+                            axpy(delta * yi, gi, &mut v);
+                            // Exact closed form of the post-update dot:
+                            // ⟨G_i, v + Δ·y·G_i⟩ = dotv + Δ·y·⟨G_i,G_i⟩.
+                            pred[iu] = dotv + delta * yi * d;
+                            changed = true;
+                        }
+                    }
+                    steps += 1;
+                    active_work += 1;
+                    if opts.shrinking && active.visit(iu as u32, changed) {
+                        flagged.push(iu as u32);
+                    }
+                }
+            }
+            if snapshot_epoch {
+                let next_cursor = stripe_of(*blk.rows.last().unwrap()) as u64 + 1;
+                let (a, u, i, ts, tr) = active.snapshot();
+                sink(&BlockSnapshot {
+                    epochs: cur,
+                    cursor: next_cursor,
+                    steps,
+                    active_work,
+                    check_work,
+                    epoch_max_viol: max_viol as f64,
+                    alpha: alpha.clone(),
+                    v: v.clone(),
+                    pred: pred.clone(),
+                    active: a,
+                    unchanged: u,
+                    inactive: i,
+                    flagged: flagged.clone(),
+                    total_shrunk: ts,
+                    total_reactivated: tr,
+                });
+            }
+            Ok(())
+        })?;
+
+        // --- epoch boundary ---
+        epochs += 1;
+        cursor = 0;
+        if opts.shrinking {
+            active.shrink(&flagged);
+        }
+        flagged.clear();
+
+        let active_converged = (max_viol as f64) < opts.eps;
+        epoch_span.arg("epoch", epochs as f64);
+        epoch_span.arg("kkt", max_viol as f64);
+        epoch_span.arg("active", active.n_active() as f64);
+
+        if active_converged {
+            // Exact verification sweep over every shrunk row — the
+            // estimate filter below never gates termination.
+            let mut violators: Vec<u32> = Vec::new();
+            let mut max_inactive_viol = 0.0f32;
+            if !active.inactive.is_empty() {
+                let mut mask = vec![false; n_src];
+                for &li in &active.inactive {
+                    mask[p.rows[li as usize]] = true;
+                }
+                check_work += active.inactive.len() as u64;
+                stream_dots(p, &mask, &v, &mut |g, dotv| {
+                    let iu = global_to_local[g] as usize;
+                    pred[iu] = dotv;
+                    let viol = violation(p.y[iu] * dotv - 1.0, alpha[iu], c);
+                    if viol > max_inactive_viol {
+                        max_inactive_viol = viol;
+                    }
+                    if (viol as f64) >= opts.eps {
+                        violators.push(iu as u32);
+                    }
+                })?;
+                epoch_reactivated += violators.len() as u64;
+                active.reactivate_all(&violators);
+            }
+            if violators.is_empty() {
+                final_violation = max_viol.max(max_inactive_viol) as f64;
+                converged = true;
+                break;
+            }
+            // Violators re-activated: the violation just measured is
+            // stale the moment we continue (mirrors the classic solver).
+            final_violation = f64::MAX;
+        } else if opts.shrinking
+            && !active.inactive.is_empty()
+            && (check_work as f64) < opts.reactivate_frac * (active_work + check_work) as f64
+        {
+            // η-budget interim sweep, screened by the carried residuals:
+            // only rows whose estimated violation clears the prefilter
+            // threshold cost streaming I/O.
+            let mut mask = vec![false; n_src];
+            let mut n_cand: u64 = 0;
+            for &li in &active.inactive {
+                let iu = li as usize;
+                let est = violation(p.y[iu] * pred[iu] - 1.0, alpha[iu], c);
+                if (est as f64) >= REACT_PREFILTER * opts.eps {
+                    mask[p.rows[iu]] = true;
+                    n_cand += 1;
+                }
+            }
+            if n_cand > 0 {
+                let mut violators: Vec<u32> = Vec::new();
+                stream_dots(p, &mask, &v, &mut |g, dotv| {
+                    let iu = global_to_local[g] as usize;
+                    pred[iu] = dotv;
+                    let viol = violation(p.y[iu] * dotv - 1.0, alpha[iu], c);
+                    if (viol as f64) >= opts.eps {
+                        violators.push(iu as u32);
+                    }
+                })?;
+                epoch_reactivated += violators.len() as u64;
+                active.reactivate_all(&violators);
+            }
+            check_work += n_cand;
+        }
+        epoch_span.arg("reactivated", epoch_reactivated as f64);
+        drop(epoch_span);
+
+        max_viol = 0.0;
+        if snapshot_epoch && epochs < opts.max_epochs as u64 {
+            let (a, u, i, ts, tr) = active.snapshot();
+            sink(&BlockSnapshot {
+                epochs,
+                cursor: 0,
+                steps,
+                active_work,
+                check_work,
+                epoch_max_viol: 0.0,
+                alpha: alpha.clone(),
+                v: v.clone(),
+                pred: pred.clone(),
+                active: a,
+                unchanged: u,
+                inactive: i,
+                flagged: Vec::new(),
+                total_shrunk: ts,
+                total_reactivated: tr,
+            });
+        }
+    }
+
+    if final_violation == f64::MAX {
+        // Terminated on the epoch cap — one exact pass for the true
+        // violation of the final iterate, in ascending global order.
+        let mut mask = vec![false; n_src];
+        for &g in &p.rows {
+            mask[g] = true;
+        }
+        let mut mv = 0.0f32;
+        stream_dots(p, &mask, &v, &mut |g, dotv| {
+            let iu = global_to_local[g] as usize;
+            pred[iu] = dotv;
+            mv = mv.max(violation(p.y[iu] * dotv - 1.0, alpha[iu], c));
+        })?;
+        final_violation = mv as f64;
+        converged = final_violation < opts.eps;
+    }
+
+    solve_span.arg("epochs", epochs as f64);
+    solve_span.arg("steps", steps as f64);
+    solve_span.arg("converged", converged as u8 as f64);
+    solve_span.arg("kkt", final_violation);
+    crate::log_debug!(
+        "solver",
+        "blockwise n={m} epochs={epochs} steps={steps} converged={converged} \
+         kkt={final_violation:.3e} shrunk={} reactivated={}",
+        active.total_shrunk,
+        active.total_reactivated
+    );
+
+    let sum_a: f64 = alpha.iter().map(|&a| a as f64).sum();
+    let vv: f64 = v.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    Ok(Solution {
+        objective: sum_a - 0.5 * vv,
+        sv_count: alpha.iter().filter(|&&a| a > 0.0).count(),
+        final_active: active.n_active(),
+        alpha,
+        w: v,
+        steps,
+        epochs: epochs as usize,
+        converged,
+        violation: final_violation,
+        train_secs: t_start.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::block::MemorySource;
+    use crate::data::synth::{FeatureStyle, SynthSpec};
+    use crate::data::Dataset;
+    use crate::kernel::Kernel;
+    use crate::lowrank::factor::Stage1Config;
+    use crate::util::timer::StageClock;
+
+    fn dataset(n: usize, seed: u64) -> Dataset {
+        SynthSpec {
+            name: "t".into(),
+            n,
+            p: 8,
+            n_classes: 2,
+            sep: 1.5,
+            latent: 4,
+            noise: 1.0,
+            style: FeatureStyle::Dense,
+            seed,
+        }
+        .generate()
+    }
+
+    fn factor_for(src: &dyn DataSource) -> StreamFactor {
+        let cfg = Stage1Config { budget: 24, ..Default::default() };
+        StreamFactor::compute(src, Kernel::gaussian(0.2), &cfg, 0, &mut StageClock::new()).unwrap()
+    }
+
+    fn problem<'a>(
+        src: &'a dyn DataSource,
+        factor: &'a StreamFactor,
+        budget: usize,
+    ) -> BlockProblem<'a> {
+        let rows: Vec<usize> = (0..src.n_rows()).collect();
+        let y: Vec<f32> =
+            src.labels().iter().map(|&l| if l == 1 { 1.0 } else { -1.0 }).collect();
+        BlockProblem::new(src, factor, rows, y, budget, NativeBackend::default())
+    }
+
+    #[test]
+    fn solves_and_respects_box() {
+        let ds = dataset(2600, 1);
+        let src = MemorySource::new(&ds);
+        let factor = factor_for(&src);
+        let p = problem(&src, &factor, 0);
+        let opts = SolverOptions { c: 0.7, eps: 1e-2, ..Default::default() };
+        let sol = solve_blockwise(&p, &opts).unwrap();
+        assert!(sol.converged, "violation {}", sol.violation);
+        assert!(sol.violation < opts.eps);
+        for &a in &sol.alpha {
+            assert!((0.0..=0.7 + 1e-6).contains(&a), "alpha {a} outside box");
+        }
+        assert!(sol.sv_count > 0);
+    }
+
+    #[test]
+    fn bit_identical_across_block_budgets() {
+        let ds = dataset(2600, 2);
+        let src = MemorySource::new(&ds);
+        let factor = factor_for(&src);
+        let opts = SolverOptions { eps: 1e-3, ..Default::default() };
+        let reference = solve_blockwise(&problem(&src, &factor, 0), &opts).unwrap();
+        for budget in [8_000usize, 30_000, 1 << 30] {
+            let sol = solve_blockwise(&problem(&src, &factor, budget), &opts).unwrap();
+            assert_eq!(sol.alpha, reference.alpha, "budget {budget}");
+            assert_eq!(sol.w, reference.w, "budget {budget}");
+            assert_eq!(sol.steps, reference.steps, "budget {budget}");
+            assert_eq!(sol.violation, reference.violation, "budget {budget}");
+        }
+    }
+
+    #[test]
+    fn resume_from_any_snapshot_is_bit_identical() {
+        let ds = dataset(2600, 3);
+        let src = MemorySource::new(&ds);
+        let factor = factor_for(&src);
+        // Small budget → several blocks per epoch → mid-epoch snapshots.
+        let opts =
+            SolverOptions { c: 2.0, eps: 1e-3, max_epochs: 9, ..Default::default() };
+        let mut snaps = Vec::new();
+        let p = problem(&src, &factor, 10_000);
+        let full = solve_blockwise_resumable(&p, &opts, None, 3, |s| snaps.push(s.clone()))
+            .unwrap();
+        let mid_epoch = snaps.iter().filter(|s| s.cursor != 0).count();
+        assert!(mid_epoch > 0, "want mid-epoch snapshots, got cursors {:?}",
+            snaps.iter().map(|s| s.cursor).collect::<Vec<_>>());
+        for snap in snaps {
+            let at = (snap.epochs, snap.cursor);
+            let resumed =
+                solve_blockwise_resumable(&p, &opts, Some(snap), 0, |_| {}).unwrap();
+            assert_eq!(resumed.alpha, full.alpha, "alpha diverged resuming at {at:?}");
+            assert_eq!(resumed.w, full.w, "w diverged resuming at {at:?}");
+            assert_eq!(resumed.steps, full.steps, "steps diverged resuming at {at:?}");
+            assert_eq!(resumed.violation, full.violation);
+        }
+    }
+
+    #[test]
+    fn shrinking_matches_no_shrinking_objective() {
+        let ds = dataset(2100, 4);
+        let src = MemorySource::new(&ds);
+        let factor = factor_for(&src);
+        let base = SolverOptions { eps: 1e-4, ..Default::default() };
+        let with = solve_blockwise(&problem(&src, &factor, 20_000), &base).unwrap();
+        let without = solve_blockwise(
+            &problem(&src, &factor, 20_000),
+            &SolverOptions { shrinking: false, ..base },
+        )
+        .unwrap();
+        assert!(
+            (with.objective - without.objective).abs()
+                < 1e-3 * (1.0 + without.objective.abs()),
+            "{} vs {}",
+            with.objective,
+            without.objective
+        );
+    }
+
+    #[test]
+    fn empty_subproblem_is_trivially_converged() {
+        let ds = dataset(64, 5);
+        let src = MemorySource::new(&ds);
+        let factor = factor_for(&src);
+        let p = BlockProblem::new(&src, &factor, vec![], vec![], 0, NativeBackend::default());
+        let sol = solve_blockwise(&p, &SolverOptions::default()).unwrap();
+        assert!(sol.converged);
+        assert_eq!(sol.steps, 0);
+        assert_eq!(sol.w.len(), factor.rank);
+    }
+}

@@ -103,8 +103,10 @@ fn prefetch_row(problem: &ProblemView, i: usize) {
 
 /// Projected-gradient violation of variable `i` (LIBLINEAR eq. for the
 /// box-constrained dual): 0 when the KKT conditions hold at `α_i`.
+/// Shared with the blockwise solver ([`crate::solver::block`]) so both
+/// paths apply the identical KKT test.
 #[inline]
-fn violation(grad: f32, alpha: f32, c: f32) -> f32 {
+pub(crate) fn violation(grad: f32, alpha: f32, c: f32) -> f32 {
     if alpha <= 0.0 {
         (-grad).max(0.0) // gradient ascent direction blocked at 0? grad<0 ok
     } else if alpha >= c {

@@ -21,11 +21,13 @@
 //! deterministic from the recorded seed; mismatched `warm_alpha` fails
 //! fast instead of silently mis-warming.
 
+pub mod block;
 pub mod cd;
 pub mod shrinking;
 pub mod state;
 pub mod svr;
 
+pub use block::{solve_blockwise, solve_blockwise_resumable, BlockProblem, BlockSnapshot};
 pub use cd::{solve, solve_resumable, Solution, SolverOptions, SolverSnapshot};
 pub use state::ProblemView;
 pub use svr::{solve_svr, SvrOptions, SvrSolution};

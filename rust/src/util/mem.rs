@@ -1,0 +1,51 @@
+//! Process memory introspection for the out-of-core memory assertions.
+//!
+//! The bounded-memory CI smoke trains a dataset several times larger
+//! than the block budget and fails the run if the peak resident set
+//! exceeds budget + slack (`lpdsvm train --max-rss-mb`). The reading
+//! comes from the kernel's own high-water mark (`VmHWM` in
+//! `/proc/self/status`), so it covers every allocation in the process —
+//! there is no way for a resident-data-plane regression to hide from it.
+
+/// Peak resident set size of this process in bytes (`VmHWM`), or `None`
+/// where procfs is unavailable (non-Linux).
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    parse_vm_hwm(&status)
+}
+
+fn parse_vm_hwm(status: &str) -> Option<u64> {
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            // Format: "VmHWM:	  123456 kB"
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_vm_hwm_line() {
+        let status = "Name:\tlpdsvm\nVmPeak:\t  999 kB\nVmHWM:\t  4321 kB\nVmRSS:\t 100 kB\n";
+        assert_eq!(parse_vm_hwm(status), Some(4321 * 1024));
+    }
+
+    #[test]
+    fn missing_field_is_none() {
+        assert_eq!(parse_vm_hwm("Name:\tx\n"), None);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn live_reading_is_sane() {
+        let peak = peak_rss_bytes().expect("procfs on linux");
+        // A running test binary surely holds more than 1 MB and less
+        // than 1 TB resident.
+        assert!(peak > 1 << 20 && peak < 1 << 40, "peak {peak}");
+    }
+}

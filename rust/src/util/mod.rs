@@ -22,6 +22,7 @@ pub mod fault;
 pub mod fsio;
 pub mod hash;
 pub mod json;
+pub mod mem;
 pub mod rng;
 pub mod threads;
 pub mod timer;

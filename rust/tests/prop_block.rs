@@ -1,0 +1,180 @@
+//! Property tests for the out-of-core data plane (the blockwise
+//! byte-identity contract):
+//!
+//! 1. Training through the streaming path produces **byte-identical**
+//!    model files across block budgets {tiny, medium, ∞}, thread counts
+//!    {1, 2, 8}, and sources (in-memory vs LIBSVM shards, at several
+//!    shard counts). Block boundaries carry no information.
+//! 2. A mid-block kill (fault-injected panic inside a checkpoint write)
+//!    followed by a resume replays the exact trajectory of an
+//!    uninterrupted solve — α, w, step counts and the reported KKT
+//!    violation all match bitwise.
+
+use lpdsvm::coordinator::checkpoint::CheckpointCtx;
+use lpdsvm::coordinator::train::{train_streaming, TrainConfig};
+use lpdsvm::data::synth::{FeatureStyle, SynthSpec};
+use lpdsvm::data::{libsvm, DataSource, Dataset, MemorySource, ShardedSource};
+use lpdsvm::kernel::Kernel;
+use lpdsvm::lowrank::factor::NativeBackend;
+use lpdsvm::lowrank::{Stage1Config, StreamFactor};
+use lpdsvm::model::io as model_io;
+use lpdsvm::model::multiclass::MulticlassModel;
+use lpdsvm::solver::{solve_blockwise, BlockProblem, SolverOptions};
+use lpdsvm::util::fault;
+use lpdsvm::util::timer::StageClock;
+use std::path::{Path, PathBuf};
+
+fn temp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("lpdsvm_prop_block_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Dense features so the LIBSVM round-trip preserves the column count
+/// (every column appears) and n > 2 stripes so small budgets really
+/// produce multi-block epochs.
+fn dataset(n: usize, seed: u64) -> Dataset {
+    SynthSpec {
+        name: "prop-block".into(),
+        n,
+        p: 12,
+        n_classes: 2,
+        sep: 1.5,
+        latent: 4,
+        noise: 1.0,
+        style: FeatureStyle::Dense,
+        seed,
+    }
+    .generate()
+}
+
+fn train_cfg(threads: usize) -> TrainConfig {
+    TrainConfig {
+        kernel: Kernel::gaussian(0.2),
+        stage1: Stage1Config {
+            budget: 24,
+            ..Default::default()
+        },
+        solver: SolverOptions {
+            eps: 1e-3,
+            ..Default::default()
+        },
+        threads,
+        compact_pairs: true,
+    }
+}
+
+/// Serialize a model and return the file's exact bytes — the strongest
+/// equality there is: rank, landmarks, whitening map, and every head
+/// weight must agree bit for bit.
+fn model_bytes(model: &MulticlassModel, dir: &Path, name: &str) -> Vec<u8> {
+    let path = dir.join(name);
+    model_io::save(model, &path).unwrap();
+    std::fs::read(&path).unwrap()
+}
+
+#[test]
+fn models_are_byte_identical_across_budgets_threads_and_sources() {
+    let dir = temp_dir("identity");
+    let data = dataset(2200, 7);
+    let src = MemorySource::new(&data);
+
+    let reference = {
+        let model = train_streaming(&src, &train_cfg(0), 0, &mut StageClock::new(), None).unwrap();
+        model_bytes(&model, &dir, "reference.lpd")
+    };
+
+    // Any block budget × any thread count — tiny (one stripe per block),
+    // medium (a few stripes), and effectively-infinite budgets.
+    for budget in [2_000usize, 50_000, 1 << 30] {
+        for threads in [1usize, 2, 8] {
+            let model =
+                train_streaming(&src, &train_cfg(threads), budget, &mut StageClock::new(), None)
+                    .unwrap();
+            let bytes = model_bytes(&model, &dir, &format!("b{budget}_t{threads}.lpd"));
+            assert_eq!(
+                bytes, reference,
+                "model diverged at budget {budget} threads {threads}"
+            );
+        }
+    }
+
+    // Shard the same data through the LIBSVM text round-trip: the on-disk
+    // source must train the very same model, at any shard count.
+    let svm = dir.join("data.svm");
+    libsvm::write(&data, &svm).unwrap();
+    for parts in [3usize, 7] {
+        let shard_dir = dir.join(format!("shards{parts}"));
+        libsvm::split_shards(&svm, &shard_dir, parts).unwrap();
+        let sharded = ShardedSource::open(&shard_dir).unwrap();
+        assert_eq!(sharded.n_rows(), data.len());
+        let model =
+            train_streaming(&sharded, &train_cfg(2), 2_000, &mut StageClock::new(), None).unwrap();
+        let bytes = model_bytes(&model, &dir, &format!("shards{parts}.lpd"));
+        assert_eq!(bytes, reference, "model diverged training from {parts} shards");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mid_block_kill_and_resume_matches_uninterrupted_solve() {
+    let dir = temp_dir("kill_resume");
+    let data = dataset(2200, 11);
+    let src = MemorySource::new(&data);
+    let factor = StreamFactor::compute(
+        &src,
+        Kernel::gaussian(0.2),
+        &Stage1Config {
+            budget: 24,
+            ..Default::default()
+        },
+        0,
+        &mut StageClock::new(),
+    )
+    .unwrap();
+    let rows: Vec<usize> = (0..src.n_rows()).collect();
+    let y: Vec<f32> = data
+        .labels
+        .iter()
+        .map(|&l| if l == 1 { 1.0 } else { -1.0 })
+        .collect();
+    // Tiny budget → one stripe per block → several checkpoint writes per
+    // epoch (one per block plus the epoch boundary).
+    let p = BlockProblem::new(&src, &factor, rows, y, 2_000, NativeBackend::default());
+    let opts = SolverOptions {
+        eps: 1e-3,
+        ..Default::default()
+    };
+    let reference = solve_blockwise(&p, &opts).unwrap();
+
+    let ctx = CheckpointCtx::new(&dir, 1).unwrap();
+    {
+        let _gate = fault::test_lock();
+        // The 2nd checkpoint write of the run lands mid-epoch (the first
+        // epoch spans 3 blocks) — the panic kills the solve with a
+        // partially-advanced stripe cursor on disk.
+        fault::set_schedule("ckpt.after_tmp_write=panic@2").unwrap();
+        let killed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            ctx.solve_blockwise("drill", &p, &opts)
+        }));
+        fault::clear();
+        assert!(killed.is_err(), "injected fault did not kill the solve");
+    }
+    assert!(
+        dir.join("drill.ckpt").exists(),
+        "the kill left no snapshot to resume from"
+    );
+
+    let resumed = ctx.solve_blockwise("drill", &p, &opts).unwrap();
+    assert_eq!(resumed.alpha, reference.alpha, "alpha diverged after resume");
+    assert_eq!(resumed.w, reference.w, "w diverged after resume");
+    assert_eq!(resumed.steps, reference.steps, "step count diverged after resume");
+    assert_eq!(resumed.violation, reference.violation);
+    assert_eq!(resumed.objective, reference.objective);
+
+    // A second call short-circuits to the recorded solution.
+    let replay = ctx.solve_blockwise("drill", &p, &opts).unwrap();
+    assert_eq!(replay.alpha, reference.alpha);
+    let _ = std::fs::remove_dir_all(&dir);
+}
