@@ -1,0 +1,255 @@
+//! A minimal Rust lexer for the lint engine.
+//!
+//! The rules in [`super::rules`] need exactly one thing from the lexer:
+//! a trustworthy answer to "is this byte code, comment, or literal?".
+//! Everything else (pattern matching, scoping, graph building) is done
+//! line-by-line on the classified output. The lexer therefore
+//! understands the token classes that make naive `grep`-style analysis
+//! lie — line comments, nested block comments, string literals, raw
+//! strings with any `#` arity, byte strings, char literals vs
+//! lifetimes — and passes the rest through untouched.
+//!
+//! Output is per-line, in three channels:
+//!
+//! - `code`: the source line with comments removed and string/char
+//!   *contents* blanked to spaces. Delimiters (quotes) are kept so
+//!   token boundaries and brace counts survive.
+//! - `comment`: the text of every comment that touches the line
+//!   (`//`, `///`, `//!`, and block-comment interiors).
+//! - `strings`: the literal values of string literals on the line
+//!   (a literal spanning lines contributes its per-line fragments).
+//!
+//! This is deliberately not a full Rust grammar; it is a few hundred
+//! lines that make the six repo rules reliable on this crate.
+
+/// One source line, split into the three channels rules consume.
+#[derive(Debug, Clone, Default)]
+pub struct Line {
+    /// Source text with comments removed and string/char-literal
+    /// contents replaced by spaces (delimiters kept).
+    pub code: String,
+    /// Concatenated text of every comment touching this line.
+    pub comment: String,
+    /// String-literal values appearing on this line.
+    pub strings: Vec<String>,
+}
+
+#[derive(Copy, Clone, PartialEq)]
+enum State {
+    Code,
+    LineComment,
+    /// Nested block comment; the payload is the nesting depth.
+    Block(u32),
+    Str,
+    /// Raw string; the payload is the `#` count of the delimiter.
+    RawStr(u32),
+    CharLit,
+}
+
+/// Classify `src` into per-line code/comment/string channels.
+pub fn lex(src: &str) -> Vec<Line> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out: Vec<Line> = Vec::new();
+    let mut cur = Line::default();
+    let mut lit = String::new(); // accumulating string-literal value
+    let mut st = State::Code;
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            // A literal that continues past the line break contributes
+            // its fragment to this line and keeps accumulating.
+            if matches!(st, State::Str | State::RawStr(_)) && !lit.is_empty() {
+                cur.strings.push(std::mem::take(&mut lit));
+            }
+            if st == State::LineComment {
+                st = State::Code;
+            }
+            out.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match st {
+            State::Code => {
+                let next = |k: usize| chars.get(i + k).copied().unwrap_or('\0');
+                if c == '/' && next(1) == '/' {
+                    st = State::LineComment;
+                    i += 2;
+                } else if c == '/' && next(1) == '*' {
+                    st = State::Block(1);
+                    i += 2;
+                } else if c == 'r' && (next(1) == '"' || next(1) == '#') {
+                    // Possible raw string r"..." / r#"..."# (and the
+                    // lexer got here via `b` for br"...").
+                    let mut j = i + 1;
+                    let mut hashes = 0u32;
+                    while j < n && chars[j] == '#' {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if j < n && chars[j] == '"' {
+                        for k in i..=j {
+                            cur.code.push(chars[k]);
+                        }
+                        st = State::RawStr(hashes);
+                        i = j + 1;
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    cur.code.push(c);
+                    st = State::Str;
+                    i += 1;
+                } else if c == '\'' {
+                    // Char literal vs lifetime. A literal is either
+                    // escaped ('\n') or a single char followed by a
+                    // closing quote ('a', '}'); anything else ('a in
+                    // generics, 'static) is a lifetime and stays code.
+                    let is_lit = next(1) == '\\' || (next(2) == '\'' && next(1) != '\'');
+                    if is_lit {
+                        cur.code.push(c);
+                        st = State::CharLit;
+                        i += 1;
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            State::Block(d) => {
+                let next = chars.get(i + 1).copied().unwrap_or('\0');
+                if c == '/' && next == '*' {
+                    st = State::Block(d + 1);
+                    cur.comment.push(' ');
+                    i += 2;
+                } else if c == '*' && next == '/' {
+                    st = if d == 1 { State::Code } else { State::Block(d - 1) };
+                    cur.comment.push(' ');
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    // Escapes are blanked wholesale; their value never
+                    // matters to a rule.
+                    cur.code.push(' ');
+                    lit.push(' ');
+                    if i + 1 < n && chars[i + 1] != '\n' {
+                        cur.code.push(' ');
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    cur.code.push('"');
+                    cur.strings.push(std::mem::take(&mut lit));
+                    st = State::Code;
+                    i += 1;
+                } else {
+                    cur.code.push(' ');
+                    lit.push(c);
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' {
+                    let mut ok = true;
+                    for k in 0..hashes as usize {
+                        if chars.get(i + 1 + k).copied() != Some('#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        cur.code.push('"');
+                        for _ in 0..hashes {
+                            cur.code.push('#');
+                        }
+                        cur.strings.push(std::mem::take(&mut lit));
+                        st = State::Code;
+                        i += 1 + hashes as usize;
+                    } else {
+                        cur.code.push(' ');
+                        lit.push(c);
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(' ');
+                    lit.push(c);
+                    i += 1;
+                }
+            }
+            State::CharLit => {
+                if c == '\\' {
+                    cur.code.push(' ');
+                    if i + 1 < n && chars[i + 1] != '\n' {
+                        cur.code.push(' ');
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    cur.code.push('\'');
+                    st = State::Code;
+                    i += 1;
+                } else {
+                    cur.code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if matches!(st, State::Str | State::RawStr(_)) && !lit.is_empty() {
+        cur.strings.push(std::mem::take(&mut lit));
+    }
+    // Flush the final line even without a trailing newline, but do not
+    // invent an empty line for files that end with one.
+    if !cur.code.is_empty() || !cur.comment.is_empty() || !cur.strings.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// True when `code[pos..]` starts the word `word` on identifier
+/// boundaries (the char before `pos` and the char after the word are
+/// not identifier chars).
+pub fn word_at(code: &str, pos: usize, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    if pos + word.len() > bytes.len() || &bytes[pos..pos + word.len()] != word.as_bytes() {
+        return false;
+    }
+    let ident = |b: u8| b == b'_' || b.is_ascii_alphanumeric();
+    if pos > 0 && ident(bytes[pos - 1]) {
+        return false;
+    }
+    if pos + word.len() < bytes.len() && ident(bytes[pos + word.len()]) {
+        return false;
+    }
+    true
+}
+
+/// Find every identifier-boundary occurrence of `word` in `code`.
+pub fn find_word(code: &str, word: &str) -> Vec<usize> {
+    let mut hits = Vec::new();
+    let mut from = 0;
+    while let Some(off) = code[from..].find(word) {
+        let pos = from + off;
+        if word_at(code, pos, word) {
+            hits.push(pos);
+        }
+        from = pos + word.len().max(1);
+    }
+    hits
+}

@@ -1,0 +1,257 @@
+//! In-repo static analysis: the invariant lint engine.
+//!
+//! The crate's two load-bearing guarantees — bitwise-deterministic
+//! training at any thread/block/shard count, and a panic-safe,
+//! invariant-preserving serve engine — are enforced dynamically by the
+//! property tests. This module enforces the *source-level discipline*
+//! those guarantees rest on, before a single test runs:
+//!
+//! | rule | invariant protected |
+//! |---|---|
+//! | `unsafe-safety-comment` | every `unsafe` site states its proof obligation |
+//! | `atomic-ordering-justified` | every `Ordering::Relaxed` explains why relaxed is enough |
+//! | `determinism-domain` | no nondeterminism sources inside the bit-identity modules |
+//! | `lock-order` | the static lock-acquisition graph stays acyclic |
+//! | `panic-policy` | the serve request path cannot panic |
+//! | `fault-point-registry` | fault drills cannot target a typo |
+//!
+//! The engine is dependency-free: [`lexer`] classifies source bytes as
+//! code / comment / literal, [`rules`] pattern-matches on the classified
+//! lines, and this module handles file walking, `#[cfg(test)]` scoping,
+//! and `// lint: allow(rule)` suppression pragmas. It is exposed as the
+//! `lint` CLI subcommand and gated in CI on every push.
+//!
+//! ## Pragmas
+//!
+//! - `// lint: allow(rule-a, rule-b)` — suppress findings for the named
+//!   rules on the same line and the line below the comment.
+//! - `// lint: allow-file(rule)` — suppress a rule for the whole file;
+//!   used where an entire module is a justified domain (e.g. the
+//!   monotone relaxed counters of `serve/metrics.rs`).
+//!
+//! Pragmas are deliberately *visible* — every suppression is a
+//! greppable, reviewable statement that a human accepted the exception.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// One lint violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Path as walked (repo-relative when run via the CLI).
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule identifier (one of [`rules::RULE_NAMES`]).
+    pub rule: &'static str,
+    /// Human-readable explanation.
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+/// A lexed file plus the per-line facts rules key on: brace depth,
+/// `#[cfg(test)]` membership, and suppression pragmas.
+pub struct FileModel {
+    pub path: String,
+    pub lines: Vec<lexer::Line>,
+    /// Brace depth at the start of each line.
+    pub depth_at: Vec<i32>,
+    /// True for lines inside `#[cfg(test)]` scopes or integration-test
+    /// files (everything under `tests/`).
+    pub in_test: Vec<bool>,
+    /// Rules suppressed per line by `lint: allow(...)` pragmas.
+    pub allow: Vec<Vec<String>>,
+    /// Rules suppressed file-wide by `lint: allow-file(...)`.
+    pub file_allow: Vec<String>,
+    pub is_test_file: bool,
+}
+
+impl FileModel {
+    pub fn build(path: &str, src: &str) -> FileModel {
+        let path = path.replace('\\', "/");
+        let lines = lexer::lex(src);
+        let n = lines.len();
+        let is_test_file = path.contains("/tests/") || path.starts_with("tests/");
+        let mut depth_at = Vec::with_capacity(n);
+        let mut in_test = vec![is_test_file; n];
+        let mut allow = vec![Vec::new(); n];
+        let mut file_allow = Vec::new();
+
+        let mut depth: i32 = 0;
+        let mut pending_cfg_test = false;
+        // While Some(d), lines are test code until depth returns to d.
+        let mut test_until: Option<i32> = None;
+        for i in 0..n {
+            depth_at.push(depth);
+            let code = lines[i].code.as_str();
+            let mut test_here = test_until.is_some();
+            if code.contains("#[cfg(test)]") {
+                pending_cfg_test = true;
+                test_here = true;
+            }
+            let opens = code.matches('{').count() as i32;
+            let closes = code.matches('}').count() as i32;
+            if pending_cfg_test && opens > 0 {
+                test_until = Some(depth);
+                pending_cfg_test = false;
+                test_here = true;
+            }
+            depth += opens - closes;
+            if let Some(d) = test_until {
+                test_here = true;
+                if depth <= d {
+                    test_until = None;
+                }
+            }
+            if test_here {
+                in_test[i] = true;
+            }
+
+            let comment = lines[i].comment.as_str();
+            for r in pragma_rules(comment, "lint: allow(") {
+                allow[i].push(r);
+            }
+            for r in pragma_rules(comment, "lint: allow-file(") {
+                file_allow.push(r);
+            }
+        }
+        FileModel { path, lines, depth_at, in_test, allow, file_allow, is_test_file }
+    }
+
+    /// True when `rule` is suppressed at 1-based line `line`.
+    fn allowed(&self, line: usize, rule: &str) -> bool {
+        if self.file_allow.iter().any(|r| r == rule) {
+            return true;
+        }
+        let i = line.saturating_sub(1);
+        for j in [i, i.wrapping_sub(1)] {
+            if let Some(list) = self.allow.get(j) {
+                if list.iter().any(|r| r == rule) {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+}
+
+/// Extract rule names from a `marker(rule-a, rule-b)` pragma in a
+/// comment. Returns empty when the marker is absent or malformed.
+fn pragma_rules(comment: &str, marker: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(off) = comment[from..].find(marker) {
+        let start = from + off + marker.len();
+        match comment[start..].find(')') {
+            Some(end) => {
+                for r in comment[start..start + end].split(',') {
+                    let r = r.trim();
+                    if !r.is_empty() {
+                        out.push(r.to_string());
+                    }
+                }
+                from = start + end + 1;
+            }
+            None => break,
+        }
+    }
+    out
+}
+
+/// Lint a set of `(path, source)` pairs and return the surviving
+/// findings, sorted by path then line. Cross-file rules (lock-order,
+/// fault-point-registry) see the whole set at once.
+pub fn lint_files(files: &[(String, String)]) -> Vec<Finding> {
+    let models: Vec<FileModel> =
+        files.iter().map(|(p, s)| FileModel::build(p, s)).collect();
+    let mut findings = Vec::new();
+    for m in &models {
+        findings.extend(rules::unsafe_safety(m));
+        findings.extend(rules::atomic_ordering(m));
+        findings.extend(rules::determinism_domain(m));
+        findings.extend(rules::panic_policy(m));
+    }
+    findings.extend(rules::lock_order(&models));
+    findings.extend(rules::fault_registry(&models));
+    findings.retain(|f| {
+        models
+            .iter()
+            .find(|m| m.path == f.path)
+            .map(|m| !m.allowed(f.line, f.rule))
+            .unwrap_or(true)
+    });
+    findings.sort_by(|a, b| a.path.cmp(&b.path).then(a.line.cmp(&b.line)));
+    findings
+}
+
+/// Lint a single in-memory file. The `path` decides which path-scoped
+/// rules apply (e.g. name a fixture `serve/engine.rs` to exercise the
+/// panic-policy rule). Used by the fixture corpus in
+/// `tests/lint_rules.rs`.
+pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
+    lint_files(&[(path.to_string(), src.to_string())])
+}
+
+/// Walk `root` and lint the crate sources. Accepts either the repo
+/// root (containing `rust/src`) or the crate root (containing `src`);
+/// `rust/tests` / `tests` ride along when present.
+pub fn run_lint(root: &Path) -> Result<Vec<Finding>, String> {
+    let mut dirs: Vec<PathBuf> = Vec::new();
+    for base in ["rust/src", "src"] {
+        let d = root.join(base);
+        if d.is_dir() {
+            dirs.push(d);
+            let t = root.join(base.replace("src", "tests"));
+            if t.is_dir() {
+                dirs.push(t);
+            }
+            break;
+        }
+    }
+    if dirs.is_empty() {
+        return Err(format!(
+            "no rust/src or src directory under {}",
+            root.display()
+        ));
+    }
+    let mut files: Vec<PathBuf> = Vec::new();
+    for d in &dirs {
+        collect_rs(d, &mut files)?;
+    }
+    files.sort();
+    let mut inputs: Vec<(String, String)> = Vec::with_capacity(files.len());
+    for f in &files {
+        let src = std::fs::read_to_string(f)
+            .map_err(|e| format!("read {}: {}", f.display(), e))?;
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        inputs.push((rel, src));
+    }
+    Ok(lint_files(&inputs))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("read_dir {}: {}", dir.display(), e))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read_dir {}: {}", dir.display(), e))?;
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,573 @@
+//! The six repo-specific lint rules.
+//!
+//! Each rule is a pure function over one [`FileModel`] (or, for the
+//! cross-file rules, the whole set). Rules work on the lexer's
+//! classified channels, so string contents and comments can never
+//! produce false token matches. The catalog mirrors the "Static
+//! guarantees" section of `docs/ARCHITECTURE.md`; keep the two in sync.
+
+use super::lexer::find_word;
+use super::{FileModel, Finding};
+
+pub const UNSAFE_SAFETY: &str = "unsafe-safety-comment";
+pub const ATOMIC_ORDERING: &str = "atomic-ordering-justified";
+pub const DETERMINISM: &str = "determinism-domain";
+pub const LOCK_ORDER: &str = "lock-order";
+pub const PANIC_POLICY: &str = "panic-policy";
+pub const FAULT_REGISTRY: &str = "fault-point-registry";
+
+/// Every rule the engine ships, with a one-line description for
+/// `lint --list-rules`.
+pub const RULE_NAMES: &[(&str, &str)] = &[
+    (UNSAFE_SAFETY, "every `unsafe` site carries a SAFETY comment"),
+    (ATOMIC_ORDERING, "every Ordering::Relaxed has an adjacent justification"),
+    (DETERMINISM, "no HashMap/HashSet, wall-clock, or env reads in the bit-identity domain"),
+    (LOCK_ORDER, "the static lock-acquisition graph is acyclic"),
+    (PANIC_POLICY, "no unwrap/expect/indexing on the serve request path"),
+    (FAULT_REGISTRY, "every fault::point name appears in util::fault::FAULT_POINTS"),
+];
+
+fn finding(m: &FileModel, line0: usize, rule: &'static str, msg: String) -> Finding {
+    Finding { path: m.path.clone(), line: line0 + 1, rule, msg }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 1: unsafe-safety-comment
+// ---------------------------------------------------------------------------
+
+fn has_safety(comment: &str) -> bool {
+    comment.contains("SAFETY") || comment.contains("Safety")
+}
+
+/// Every `unsafe` keyword — block, fn, or impl — must carry a
+/// `// SAFETY:` (or rustdoc `# Safety`) comment: trailing on the same
+/// line, or in the contiguous comment/attribute block above it. A
+/// group of consecutive `unsafe impl` markers may share one comment.
+pub fn unsafe_safety(m: &FileModel) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for i in 0..m.lines.len() {
+        if find_word(&m.lines[i].code, "unsafe").is_empty() {
+            continue;
+        }
+        if has_safety(&m.lines[i].comment) {
+            continue;
+        }
+        let mut ok = false;
+        let mut j = i;
+        for _ in 0..12 {
+            if j == 0 {
+                break;
+            }
+            j -= 1;
+            let ln = &m.lines[j];
+            if has_safety(&ln.comment) {
+                ok = true;
+                break;
+            }
+            let code = ln.code.trim();
+            let skippable = code.is_empty()
+                || code.starts_with("#[")
+                || code.starts_with("#![")
+                || code.contains("unsafe impl")
+                || !ln.comment.is_empty();
+            if !skippable {
+                break;
+            }
+        }
+        if !ok {
+            out.push(finding(
+                m,
+                i,
+                UNSAFE_SAFETY,
+                "`unsafe` without a `// SAFETY:` comment stating the proof obligation"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 2: atomic-ordering-justified
+// ---------------------------------------------------------------------------
+
+/// Every `Ordering::Relaxed` in non-test code needs a justification
+/// comment mentioning "relaxed" on the same line or within the four
+/// lines above. Wholesale relaxed domains (monotone metric counters)
+/// use a file-level pragma next to a module-level justification.
+pub fn atomic_ordering(m: &FileModel) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for i in 0..m.lines.len() {
+        if m.in_test[i] || !m.lines[i].code.contains("Ordering::Relaxed") {
+            continue;
+        }
+        let lo = i.saturating_sub(4);
+        let justified = (lo..=i)
+            .any(|j| m.lines[j].comment.to_ascii_lowercase().contains("relaxed"));
+        if !justified {
+            out.push(finding(
+                m,
+                i,
+                ATOMIC_ORDERING,
+                "Ordering::Relaxed without an adjacent comment justifying the relaxed ordering"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 3: determinism-domain
+// ---------------------------------------------------------------------------
+
+const DOMAIN_DIRS: &[&str] = &["solver/", "lowrank/", "linalg/", "kernel/", "data/"];
+
+fn in_domain(path: &str) -> bool {
+    DOMAIN_DIRS
+        .iter()
+        .any(|d| path.starts_with(d) || path.contains(&format!("/{}", d)))
+}
+
+/// The bit-identity domain (`solver/`, `lowrank/`, `linalg/`,
+/// `kernel/`, `data/`) must not contain nondeterminism sources in
+/// non-test code: unordered map types, wall-clock reads, or
+/// environment-dependent branching. Timing that provably never feeds
+/// back into numerics carries an explicit `lint: allow` pragma.
+pub fn determinism_domain(m: &FileModel) -> Vec<Finding> {
+    if !in_domain(&m.path) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for i in 0..m.lines.len() {
+        if m.in_test[i] {
+            continue;
+        }
+        let code = &m.lines[i].code;
+        let mut hits: Vec<&str> = Vec::new();
+        for w in ["HashMap", "HashSet"] {
+            if !find_word(code, w).is_empty() {
+                hits.push(w);
+            }
+        }
+        for s in ["Instant::now", "SystemTime::now", "env::var", "var_os", "env!("] {
+            if code.contains(s) {
+                hits.push(s);
+            }
+        }
+        for h in hits {
+            out.push(finding(
+                m,
+                i,
+                DETERMINISM,
+                format!("`{}` inside the bit-identity domain", h),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 4: lock-order
+// ---------------------------------------------------------------------------
+
+/// Files whose lock-acquisition scopes participate in the static
+/// lock-order graph.
+const LOCK_FILES: &[&str] = &[
+    "util/threads.rs",
+    "serve/engine.rs",
+    "serve/session.rs",
+    "obs/span.rs",
+    "util/fault.rs",
+];
+
+#[derive(Debug)]
+struct LockEvent {
+    pos: usize,
+    kind: EventKind,
+}
+
+#[derive(Debug)]
+enum EventKind {
+    Acquire { name: String, var: Option<String> },
+    Drop { var: String },
+}
+
+/// Identifier-path segment ending right before byte `end` of `code`
+/// (e.g. for `self.shared.state.lock()` with `end` at the final
+/// `.lock`, returns `state`).
+fn last_segment_before(code: &str, end: usize) -> Option<String> {
+    let bytes = code.as_bytes();
+    let mut start = end;
+    while start > 0 {
+        let b = bytes[start - 1];
+        if b == b'_' || b.is_ascii_alphanumeric() {
+            start -= 1;
+        } else {
+            break;
+        }
+    }
+    if start == end {
+        return None;
+    }
+    Some(code[start..end].to_string())
+}
+
+/// Lock name from a helper call: the last path segment of the first
+/// argument, e.g. `lock_or_abort(&self.shared.queue, "pool queue")`
+/// yields `queue`.
+fn helper_arg_name(code: &str, open: usize) -> Option<String> {
+    let rest = &code[open..];
+    let end_rel = rest.find([',', ')'])?;
+    let arg = rest[..end_rel].trim().trim_start_matches('&').trim_start_matches("mut ");
+    let seg = arg.rsplit(['.', ':']).next()?.trim();
+    if seg.is_empty() || !seg.chars().all(|c| c == '_' || c.is_alphanumeric()) {
+        return None;
+    }
+    Some(seg.to_string())
+}
+
+/// Guard variable bound on this line before byte `pos`, if the
+/// acquisition is the initializer of a `let`.
+fn guard_var(code: &str, pos: usize) -> Option<String> {
+    let head = &code[..pos];
+    let let_at = head.rfind("let ")?;
+    // Only bind when nothing but the pattern and `=` separate the
+    // `let` from the acquisition (i.e. same statement).
+    let between = &head[let_at + 4..];
+    if between.contains(';') {
+        return None;
+    }
+    let pat = between.split('=').next()?.trim();
+    let pat = pat.trim_start_matches("mut ").trim();
+    if pat.is_empty() || !pat.chars().all(|c| c == '_' || c.is_alphanumeric()) {
+        return None;
+    }
+    Some(pat.to_string())
+}
+
+fn lock_events(code: &str) -> Vec<LockEvent> {
+    let mut ev = Vec::new();
+    // `path.lock()` — raw std acquisition.
+    let mut from = 0;
+    while let Some(off) = code[from..].find(".lock()") {
+        let pos = from + off;
+        if let Some(name) = last_segment_before(code, pos) {
+            ev.push(LockEvent {
+                pos,
+                kind: EventKind::Acquire { name, var: guard_var(code, pos) },
+            });
+        }
+        from = pos + ".lock()".len();
+    }
+    // Policy helpers from util::sync.
+    for h in ["lock_or_abort(", "lock_checked(", "lock_recover("] {
+        let mut from = 0;
+        while let Some(off) = code[from..].find(h) {
+            let pos = from + off;
+            // Skip the definitions themselves (`fn lock_or_abort(...)`).
+            let def = code[..pos].trim_end().ends_with("fn");
+            if !def {
+                if let Some(name) = helper_arg_name(code, pos + h.len()) {
+                    ev.push(LockEvent {
+                        pos,
+                        kind: EventKind::Acquire { name, var: guard_var(code, pos) },
+                    });
+                }
+            }
+            from = pos + h.len();
+        }
+    }
+    // `drop(guard)` releases a named guard early.
+    let mut from = 0;
+    while let Some(off) = code[from..].find("drop(") {
+        let pos = from + off;
+        let boundary = pos == 0 || {
+            let b = code.as_bytes()[pos - 1];
+            !(b == b'_' || b.is_ascii_alphanumeric())
+        };
+        if boundary {
+            if let Some(var) = helper_arg_name(code, pos + "drop(".len()) {
+                ev.push(LockEvent { pos, kind: EventKind::Drop { var } });
+            }
+        }
+        from = pos + "drop(".len();
+    }
+    ev.sort_by_key(|e| e.pos);
+    ev
+}
+
+struct Held {
+    name: String,
+    depth: i32,
+    var: Option<String>,
+}
+
+/// Build the static lock-acquisition graph from nested `.lock()` /
+/// `lock_or_abort()` / `lock_checked()` / `lock_recover()` scopes in
+/// the files of [`LOCK_FILES`], then flag (a) re-acquisition of a held
+/// lock and (b) cycles in the graph. The analysis is intra-function
+/// and name-based: a guard is held until its block closes or a
+/// `drop(guard)` releases it; helper calls that take locks internally
+/// are not inlined.
+pub fn lock_order(models: &[FileModel]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    // edge (from, to) -> first site proving it.
+    let mut edges: Vec<(String, String, String, usize)> = Vec::new();
+    for m in models {
+        if !LOCK_FILES.iter().any(|f| m.path.ends_with(f)) {
+            continue;
+        }
+        let mut stack: Vec<Held> = Vec::new();
+        for i in 0..m.lines.len() {
+            let code = &m.lines[i].code;
+            let events = lock_events(code);
+            let mut depth = m.depth_at[i];
+            let mut ei = 0;
+            for (pos, ch) in code.char_indices() {
+                while ei < events.len() && events[ei].pos <= pos {
+                    match &events[ei].kind {
+                        EventKind::Acquire { name, var } => {
+                            for h in stack.iter() {
+                                if &h.name == name {
+                                    out.push(finding(
+                                        m,
+                                        i,
+                                        LOCK_ORDER,
+                                        format!(
+                                            "lock `{}` acquired while already held",
+                                            name
+                                        ),
+                                    ));
+                                } else if !edges.iter().any(|(a, b, _, _)| {
+                                    a == &h.name && b == name
+                                }) {
+                                    edges.push((
+                                        h.name.clone(),
+                                        name.clone(),
+                                        m.path.clone(),
+                                        i + 1,
+                                    ));
+                                }
+                            }
+                            stack.push(Held {
+                                name: name.clone(),
+                                depth,
+                                var: var.clone(),
+                            });
+                        }
+                        EventKind::Drop { var } => {
+                            if let Some(k) = stack
+                                .iter()
+                                .rposition(|h| h.var.as_deref() == Some(var.as_str()))
+                            {
+                                stack.remove(k);
+                            }
+                        }
+                    }
+                    ei += 1;
+                }
+                if ch == '{' {
+                    depth += 1;
+                } else if ch == '}' {
+                    depth -= 1;
+                    while stack.last().map(|h| h.depth > depth).unwrap_or(false) {
+                        stack.pop();
+                    }
+                }
+            }
+            // Events positioned at end of line (past the last char).
+            while ei < events.len() {
+                if let EventKind::Acquire { name, var } = &events[ei].kind {
+                    stack.push(Held { name: name.clone(), depth, var: var.clone() });
+                }
+                ei += 1;
+            }
+        }
+    }
+    // Cycle detection over the global edge set (names are crate-wide
+    // nodes; distinct mutexes sharing a last path segment would merge,
+    // which errs on the side of reporting).
+    let mut nodes: Vec<&String> = Vec::new();
+    for (a, b, _, _) in &edges {
+        if !nodes.contains(&a) {
+            nodes.push(a);
+        }
+        if !nodes.contains(&b) {
+            nodes.push(b);
+        }
+    }
+    // DFS with an explicit path; small graphs only.
+    fn dfs(
+        node: &str,
+        edges: &[(String, String, String, usize)],
+        path: &mut Vec<String>,
+        done: &mut Vec<String>,
+        cycles: &mut Vec<Vec<String>>,
+    ) {
+        if done.iter().any(|d| d == node) {
+            return;
+        }
+        if let Some(k) = path.iter().position(|p| p == node) {
+            let mut cyc = path[k..].to_vec();
+            cyc.push(node.to_string());
+            cycles.push(cyc);
+            return;
+        }
+        path.push(node.to_string());
+        for (a, b, _, _) in edges {
+            if a == node {
+                dfs(b, edges, path, done, cycles);
+            }
+        }
+        path.pop();
+        done.push(node.to_string());
+    }
+    let mut cycles: Vec<Vec<String>> = Vec::new();
+    let mut done: Vec<String> = Vec::new();
+    for n in &nodes {
+        let mut path = Vec::new();
+        dfs(n, &edges, &mut path, &mut done, &mut cycles);
+    }
+    for cyc in cycles {
+        // Anchor the finding at the site of the cycle's first edge.
+        let (path, line) = edges
+            .iter()
+            .find(|(a, b, _, _)| a == &cyc[0] && b == &cyc[1])
+            .map(|(_, _, p, l)| (p.clone(), *l))
+            .unwrap_or_else(|| (String::from("<unknown>"), 1));
+        out.push(Finding {
+            path,
+            line,
+            rule: LOCK_ORDER,
+            msg: format!("lock-order cycle: {}", cyc.join(" -> ")),
+        });
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 5: panic-policy
+// ---------------------------------------------------------------------------
+
+/// Files carrying the serve request path (submit → dispatch): a panic
+/// here tears down a worker or a connection thread, so potential
+/// panic sites must be rewritten as graceful errors or carry an
+/// explicit, reviewed pragma.
+const PANIC_FILES: &[&str] = &["serve/http.rs", "serve/engine.rs"];
+
+/// No `unwrap()`, `expect()`, panicking macros, or direct indexing in
+/// non-test code of the serve request path.
+pub fn panic_policy(m: &FileModel) -> Vec<Finding> {
+    if !PANIC_FILES.iter().any(|f| m.path.ends_with(f)) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for i in 0..m.lines.len() {
+        if m.in_test[i] {
+            continue;
+        }
+        let code = &m.lines[i].code;
+        for pat in [".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!("] {
+            if code.contains(pat) {
+                out.push(finding(
+                    m,
+                    i,
+                    PANIC_POLICY,
+                    format!("`{}` on the serve request path", pat.trim_start_matches('.')),
+                ));
+            }
+        }
+        // Direct indexing `expr[...]`: `[` immediately preceded by an
+        // identifier char, `)`, or `]`. Types (`[f32; 4]`), attributes
+        // (`#[...]`), and macros (`vec![`) are not matched.
+        let bytes = code.as_bytes();
+        let mut flagged = false;
+        for p in 1..bytes.len() {
+            if bytes[p] == b'[' {
+                let prev = bytes[p - 1];
+                if (prev == b'_' || prev.is_ascii_alphanumeric() || prev == b')' || prev == b']')
+                    && !flagged
+                {
+                    out.push(finding(
+                        m,
+                        i,
+                        PANIC_POLICY,
+                        "direct indexing on the serve request path (can panic out of bounds)"
+                            .to_string(),
+                    ));
+                    flagged = true;
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 6: fault-point-registry
+// ---------------------------------------------------------------------------
+
+/// Every string literal passed to `fault::point("...")` in non-test
+/// code must appear in the central `FAULT_POINTS` registry constant in
+/// `util/fault.rs` — a drill schedule can then never target a typo'd
+/// point name that silently no-ops.
+pub fn fault_registry(models: &[FileModel]) -> Vec<Finding> {
+    // Collect the registry: every string between the FAULT_POINTS
+    // marker and the closing `]`.
+    let mut registry: Option<Vec<String>> = None;
+    for m in models {
+        if !m.path.ends_with("util/fault.rs") {
+            continue;
+        }
+        let mut names = Vec::new();
+        let mut active = false;
+        for ln in &m.lines {
+            if ln.code.contains("FAULT_POINTS") {
+                active = true;
+            }
+            if active {
+                names.extend(ln.strings.iter().cloned());
+                // `];` ends the constant; a bare `]` would false-trigger
+                // on the `&[&str]` type of the declaration line itself.
+                if ln.code.contains("];") {
+                    break;
+                }
+            }
+        }
+        if active {
+            registry = Some(names);
+        }
+    }
+    let mut out = Vec::new();
+    for m in models {
+        for i in 0..m.lines.len() {
+            if m.in_test[i] || !m.lines[i].code.contains("fault::point(") {
+                continue;
+            }
+            // Only the first literal on the line is the point name; a
+            // trailing `.expect("...")` message must not be checked.
+            if let Some(s) = m.lines[i].strings.first() {
+                match &registry {
+                    None => out.push(finding(
+                        m,
+                        i,
+                        FAULT_REGISTRY,
+                        format!(
+                            "fault point \"{}\" used but no FAULT_POINTS registry was found",
+                            s
+                        ),
+                    )),
+                    Some(reg) if !reg.iter().any(|r| r == s) => out.push(finding(
+                        m,
+                        i,
+                        FAULT_REGISTRY,
+                        format!("fault point \"{}\" is not in util::fault::FAULT_POINTS", s),
+                    )),
+                    _ => {}
+                }
+            }
+        }
+    }
+    out
+}

@@ -30,6 +30,12 @@
 //!   train/solve/serve with Chrome-trace (Perfetto) export, a leveled
 //!   `key=value` stderr logger, a Prometheus view of the serve metrics,
 //!   and per-worker pool utilization accounting — zero cost when off.
+//! * **Static analysis** ([`analysis`]): an in-repo invariant lint
+//!   engine (`lpdsvm lint`) that statically enforces the bit-identity
+//!   and concurrency contracts — SAFETY comments on every `unsafe`
+//!   site, justified relaxed atomics, a nondeterminism-free solver
+//!   domain, an acyclic lock-order graph, a panic-free serve request
+//!   path, and a closed fault-point registry.
 //!
 //! Quickstart:
 //!
@@ -48,6 +54,7 @@
 //! let preds = model.predict(&data.x).unwrap();
 //! ```
 
+pub mod analysis;
 pub mod baselines;
 pub mod coordinator;
 pub mod data;

@@ -298,12 +298,16 @@ fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
 fn avx2_available() -> bool {
     use std::sync::atomic::{AtomicU8, Ordering};
     static STATE: AtomicU8 = AtomicU8::new(0); // 0 unknown, 1 yes, 2 no
+    // Relaxed on both sides: the cached value is an idempotent CPUID
+    // fact, so racing initialisers all store the same byte and no other
+    // data is published through this flag.
     match STATE.load(Ordering::Relaxed) {
         1 => true,
         2 => false,
         _ => {
             let yes = std::arch::is_x86_feature_detected!("avx2")
                 && std::arch::is_x86_feature_detected!("fma");
+            // Relaxed: see above — any racing store writes the same value.
             STATE.store(if yes { 1 } else { 2 }, Ordering::Relaxed);
             yes
         }
@@ -311,6 +315,10 @@ fn avx2_available() -> bool {
 }
 
 /// AVX2+FMA dot: 4×8-lane accumulators (32 floats/iter) hide FMA latency.
+///
+/// # Safety
+/// Caller must verify AVX2+FMA support (`avx2_available`) and pass
+/// equal-length slices — the kernel reads `b` up to `a.len()`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
@@ -356,6 +364,9 @@ unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
 }
 
 /// Horizontal sum of an 8-lane f32 vector.
+///
+/// # Safety
+/// Caller must verify AVX2 support; pure register arithmetic otherwise.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 #[inline]
@@ -396,6 +407,9 @@ pub fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 
     ]
 }
 
+/// # Safety
+/// Caller must verify AVX2+FMA support and that all four `b` rows are at
+/// least `a.len()` long (asserted in `dot4`): each is read to `a.len()`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn dot4_avx2(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
@@ -445,6 +459,9 @@ pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
+/// # Safety
+/// Caller must verify AVX2+FMA support and `x.len() == y.len()` (the
+/// debug assert in `axpy`): the kernel reads/writes both to `x.len()`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn axpy_avx2(a: f32, x: &[f32], y: &mut [f32]) {
@@ -501,6 +518,9 @@ pub fn axpy2(a0: f32, x0: &[f32], a1: f32, x1: &[f32], y: &mut [f32]) {
     }
 }
 
+/// # Safety
+/// Caller must verify AVX2+FMA support and that both `x` rows are at
+/// least `y.len()` long (asserted in `axpy2`): each is read to `y.len()`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn axpy2_avx2(a0: f32, x0: &[f32], a1: f32, x1: &[f32], y: &mut [f32]) {

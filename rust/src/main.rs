@@ -8,6 +8,7 @@
 //!   grid       (C, γ) grid search with CV, warm starts, G-reuse
 //!   serve      micro-batching inference engine, HTTP front-end, load generator
 //!   info       show artifact / runtime information
+//!   lint       in-repo invariant lint engine (static analysis, CI gate)
 //!
 //! Every workload command takes `--log-level` (leveled diagnostics on
 //! stderr) and `--trace <path>` (span recording + Chrome-trace JSON
@@ -68,6 +69,7 @@ fn main() {
         "grid" => cmd_grid(&rest),
         "serve" => cmd_serve(&rest),
         "info" => cmd_info(&rest),
+        "lint" => cmd_lint(&rest),
         "--help" | "-h" | "help" => {
             print_usage();
             Ok(())
@@ -96,7 +98,8 @@ fn print_usage() {
            cv         k-fold cross-validation\n\
            grid       (C, gamma) grid search with CV + warm starts\n\
            serve      batched inference engine (optional HTTP front-end) + load generator\n\
-           info       artifact/runtime information\n\n\
+           info       artifact/runtime information\n\
+           lint       invariant lint engine over the crate sources (exit 1 on findings)\n\n\
          Out-of-core: train/cv/grid accept --block-budget-mb and/or --shards to\n\
          stream feature blocks under a fixed byte budget instead of holding the\n\
          dataset and G resident; models are byte-identical at any budget."
@@ -1068,6 +1071,8 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     }
     if saturate {
         let m = engine.metrics();
+        // Relaxed: post-run snapshot of monotone telemetry counters;
+        // every worker has already been joined by shutdown() above.
         let rejected_full = m.rejected_full.load(Ordering::Relaxed);
         let shed_expired = m.shed_expired.load(Ordering::Relaxed);
         let queue_max = m.queue_depth_max.load(Ordering::Relaxed);
@@ -1197,5 +1202,48 @@ fn cmd_info(args: &[String]) -> anyhow::Result<()> {
         }
         Err(e) => println!("artifacts: unavailable ({e})"),
     }
+    Ok(())
+}
+
+/// `lpdsvm lint` — run the in-repo invariant lint engine (see
+/// `lpdsvm::analysis`) over the crate sources and exit nonzero if any
+/// finding survives the pragma filter. CI runs this on every push.
+fn cmd_lint(args: &[String]) -> anyhow::Result<()> {
+    let specs = vec![
+        ArgSpec::opt(
+            "root",
+            ".",
+            "repo or crate root to lint (must contain rust/src or src)",
+        ),
+        ArgSpec::opt("out", "", "also write the findings to this file (one per line)"),
+        ArgSpec::flag("list-rules", "print the rule catalog and exit"),
+    ];
+    let p = parse("lint", "Statically enforce the crate's invariant contracts", &specs, args)?;
+    if p.flag("list-rules") {
+        for (name, desc) in lpdsvm::analysis::rules::RULE_NAMES {
+            println!("{name:<28} {desc}");
+        }
+        return Ok(());
+    }
+    let root = Path::new(p.str("root"));
+    let findings = lpdsvm::analysis::run_lint(root).map_err(|e| anyhow::anyhow!(e))?;
+    for f in &findings {
+        println!("{f}");
+    }
+    let out = p.str("out");
+    if !out.is_empty() {
+        let body: String = findings.iter().map(|f| format!("{f}\n")).collect();
+        std::fs::write(out, body)?;
+    }
+    anyhow::ensure!(
+        findings.is_empty(),
+        "lint: {} finding(s) — fix them or add a reviewed `// lint: allow(rule)` pragma",
+        findings.len()
+    );
+    println!(
+        "lint: clean ({} rules over {})",
+        lpdsvm::analysis::rules::RULE_NAMES.len(),
+        root.display()
+    );
     Ok(())
 }

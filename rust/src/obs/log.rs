@@ -65,6 +65,8 @@ static START: OnceLock<Instant> = OnceLock::new();
 
 /// Set the process-wide log level.
 pub fn set_level(level: Level) {
+    // Relaxed: the level is one independent byte; a racing reader
+    // seeing the old value logs one more (or fewer) line, nothing else.
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
@@ -78,6 +80,7 @@ pub fn set_level_str(s: &str) -> anyhow::Result<()> {
 
 /// The currently configured level.
 pub fn level() -> Level {
+    // Relaxed: see `set_level` — no data rides on the level byte.
     match LEVEL.load(Ordering::Relaxed) {
         0 => Level::Error,
         1 => Level::Warn,
@@ -90,6 +93,7 @@ pub fn level() -> Level {
 /// Would an event at `level` be emitted right now?
 #[inline]
 pub fn enabled(level: Level) -> bool {
+    // Relaxed: see `set_level` — no data rides on the level byte.
     (level as u8) <= LEVEL.load(Ordering::Relaxed)
 }
 

@@ -4,6 +4,11 @@
 //! so train and serve summarise distributions identically; `serve`
 //! re-exports it, so existing paths keep working).
 
+// lint: allow-file(atomic-ordering-justified) — histogram buckets are
+// monotone counters recorded with relaxed atomics by design (see the
+// `Histogram` docs); snapshots tolerate approximation, and no data is
+// published through them.
+
 use crate::util::json::{self, Json};
 use std::sync::atomic::{AtomicU64, Ordering};
 

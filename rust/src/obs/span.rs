@@ -25,9 +25,10 @@
 //! the first [`enable`] call — which keeps them small, positive, and
 //! consistent across threads.
 
+use crate::util::sync::lock_recover;
 use std::borrow::Cow;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 static ENABLED: AtomicBool = AtomicBool::new(false);
@@ -64,12 +65,6 @@ fn epoch() -> Instant {
     *EPOCH.get_or_init(Instant::now)
 }
 
-/// Mutex helper: telemetry must keep working (and never double-panic)
-/// even if a traced thread panicked while holding a buffer lock.
-fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(PoisonError::into_inner)
-}
-
 /// One completed span, ready for export.
 #[derive(Clone, Debug)]
 pub struct SpanRecord {
@@ -103,6 +98,7 @@ thread_local! {
 }
 
 fn register_thread() -> SharedBuffer {
+    // Relaxed: the counter only mints unique ids; no other data rides it.
     let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
     let name = std::thread::current()
         .name()
@@ -115,13 +111,17 @@ fn register_thread() -> SharedBuffer {
         head: 0,
         dropped: 0,
     }));
-    lock(&REGISTRY).push(Arc::clone(&buf));
+    // lock_recover: telemetry must keep working (and never
+    // double-panic) even if a traced thread panicked mid-record.
+    lock_recover(&REGISTRY).push(Arc::clone(&buf));
     buf
 }
 
 fn record(rec: SpanRecord) {
     LOCAL.with(|buf| {
-        let mut b = lock(buf);
+        // lock_recover: ring-buffer writes keep every field valid at
+        // statement boundaries; a poisoned flag carries no information.
+        let mut b = lock_recover(buf);
         if b.ring.len() < RING_CAPACITY {
             b.ring.push(rec);
         } else {
@@ -232,11 +232,14 @@ pub struct ThreadDump {
 /// Snapshot-and-reset every thread's buffer. Buffers of exited threads
 /// are included (the registry keeps them alive until drained).
 pub fn drain() -> Vec<ThreadDump> {
-    let registry = lock(&REGISTRY);
+    // lock_recover on both levels: an export must succeed even after a
+    // traced thread panicked while recording (crash forensics is
+    // exactly when the buffered spans matter most).
+    let registry = lock_recover(&REGISTRY);
     registry
         .iter()
         .map(|buf| {
-            let mut b = lock(buf);
+            let mut b = lock_recover(buf);
             let head = b.head;
             let mut records = std::mem::take(&mut b.ring);
             if head > 0 {

@@ -39,6 +39,7 @@ use crate::runtime::{AccelBackend, Runtime};
 use crate::serve::metrics::{ModelMetrics, ServeMetrics};
 use crate::serve::registry::{ModelRegistry, ModelServeConfig, ServingModel};
 use crate::serve::session::{self, Fulfiller, Prediction, PredictResult, ServeError, Ticket};
+use crate::util::sync::{lock_checked, lock_or_abort, wait_or_abort, wait_timeout_or_abort};
 use crate::util::threads;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -415,6 +416,9 @@ impl ServeEngine {
                 std::thread::Builder::new()
                     .name(format!("lpdsvm-serve-{i}"))
                     .spawn(move || supervise_worker(&shared, &*provider))
+                    // Engine construction, not the request path; an OS
+                    // refusing to spawn a thread at startup has no
+                    // graceful degradation. lint: allow(panic-policy)
                     .expect("spawning serve worker")
             })
             .collect();
@@ -466,7 +470,20 @@ impl ServeEngine {
         let mm = self.shared.metrics.model(bucket);
         let model = model.to_string();
 
-        let mut st = self.shared.state.lock().unwrap();
+        // Poisoning policy: admission is a client-facing fallible
+        // boundary that has not yet touched the guarded state, so a
+        // poisoned queue lock degrades to the typed, retryable
+        // `ServeError::Poisoned` instead of unwinding a connection
+        // thread. (Paths that mutate the state abort instead — see
+        // `util::sync`.)
+        let mut st = match lock_checked(&self.shared.state, "serve queue state") {
+            Ok(g) => g,
+            Err(e) => {
+                self.shared.metrics.note_rejected_at_submit();
+                mm.note_rejected_at_submit();
+                return Err(e.into());
+            }
+        };
         if st.shutdown {
             drop(st);
             self.shared.metrics.note_rejected_at_submit();
@@ -532,7 +549,17 @@ impl ServeEngine {
             s.queues
                 .insert(model.clone(), ModelQueue::new(&seed, !registered));
         }
-        let q = s.queues.get_mut(&model).unwrap();
+        let Some(q) = s.queues.get_mut(&model) else {
+            // Unreachable by construction (the queue was inserted just
+            // above, under the same lock); degrade to a counted failure
+            // rather than panicking the submitter.
+            drop(st);
+            self.shared.metrics.note_rejected_at_submit();
+            mm.note_rejected_at_submit();
+            return Err(ServeError::Failed(format!(
+                "sub-queue for model '{model}' vanished during admission"
+            )));
+        };
         if registered {
             mm.set_weight(q.weight);
         }
@@ -651,7 +678,7 @@ impl ServeEngine {
         );
         let cfg = self.shared.registry.update_serve_config(name, update);
         self.shared.metrics.model(name).set_weight(cfg.weight);
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock_checked(&self.shared.state, "serve queue state")?;
         if let Some(q) = st.queues.get_mut(name) {
             q.weight = cfg.weight;
             q.max_queue = cfg.max_queue;
@@ -669,7 +696,7 @@ impl ServeEngine {
     pub fn remove_model(&self, name: &str) -> Option<Arc<ServingModel>> {
         let removed = self.shared.registry.remove(name);
         let drained: VecDeque<PendingRequest> = {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_or_abort(&self.shared.state, "serve queue state");
             let (drained, counts_unregistered) = match st.queues.remove(name) {
                 Some(q) => (q.queue, q.counts_unregistered),
                 None => (VecDeque::new(), false),
@@ -718,11 +745,12 @@ impl ServeEngine {
     /// `Arc<ServeEngine>` (the HTTP front-end's handle) can shut down too.
     pub fn shutdown(&self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_or_abort(&self.shared.state, "serve queue state");
             st.shutdown = true;
         }
         self.shared.cv.notify_all();
-        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        let handles: Vec<_> =
+            lock_or_abort(&self.workers, "serve worker handles").drain(..).collect();
         for h in handles {
             let _ = h.join();
         }
@@ -775,7 +803,12 @@ fn trigger_fired(q: &ModelQueue, now: Instant, cfg: &ServeConfig, shutdown: bool
     if shutdown || q.queue.len() >= cfg.max_batch {
         return true;
     }
-    let front = q.queue.front().expect("ring holds only non-empty queues");
+    // Ring invariant: only non-empty queues ride the rotation. Were it
+    // ever violated, an empty queue reads as "not ready" rather than
+    // panicking a scoring worker.
+    let Some(front) = q.queue.front() else {
+        return false;
+    };
     now.saturating_duration_since(front.enqueued) >= cfg.max_wait
 }
 
@@ -802,13 +835,17 @@ fn trigger_fired(q: &ModelQueue, now: Instant, cfg: &ServeConfig, shutdown: bool
 /// Blocks until some sub-queue's size or latency trigger fires; `None`
 /// means shutdown with every queue empty, i.e. the worker should exit.
 fn next_batch(shared: &Shared) -> Option<Batch> {
-    let mut st = shared.state.lock().unwrap();
+    // Poisoning policy: dispatch mutates the multi-field scheduler
+    // accounting (ring / queues / total_depth), so a poisoned lock
+    // means the invariants may be torn — abort rather than serve from
+    // corrupt state (crash-only; the process supervisor restarts).
+    let mut st = lock_or_abort(&shared.state, "serve queue state");
     loop {
         if st.total_depth == 0 {
             if st.shutdown {
                 return None;
             }
-            st = shared.cv.wait(st).unwrap();
+            st = wait_or_abort(&shared.cv, st, "serve queue state");
             continue;
         }
         let now = Instant::now();
@@ -817,7 +854,9 @@ fn next_batch(shared: &Shared) -> Option<Batch> {
         let mut probe = false;
         let mut earliest_deadline: Option<Duration> = None;
         for i in 0..st.ring.len() {
-            let name = &st.ring[i];
+            let Some(name) = st.ring.get(i) else {
+                break;
+            };
             // Breaker gating. A quarantined model still cooling down is
             // skipped without losing its ring position (its cooldown expiry
             // is folded into the sleep below); once the cooldown elapses
@@ -839,13 +878,18 @@ fn next_batch(shared: &Shared) -> Option<Batch> {
                 Some((BreakerPhase::HalfOpen, _)) => is_probe = true,
                 _ => {}
             }
-            let q = &st.queues[name];
+            let Some(q) = st.queues.get(name) else {
+                continue;
+            };
             if trigger_fired(q, now, &shared.cfg, shutdown) {
                 chosen = Some(i);
                 probe = is_probe;
                 break;
             }
-            let waited = now.saturating_duration_since(q.queue.front().unwrap().enqueued);
+            let waited = q
+                .queue
+                .front()
+                .map_or(Duration::ZERO, |f| now.saturating_duration_since(f.enqueued));
             let until = shared.cfg.max_wait.saturating_sub(waited);
             earliest_deadline = Some(match earliest_deadline {
                 Some(e) if e < until => e,
@@ -856,12 +900,18 @@ fn next_batch(shared: &Shared) -> Option<Batch> {
             // No trigger fired: sleep until the earliest latency deadline
             // (or a submit/shutdown notification, whichever is first).
             let wait = earliest_deadline.unwrap_or(shared.cfg.max_wait);
-            let (guard, _) = shared.cv.wait_timeout(st, wait).unwrap();
+            let (guard, _) = wait_timeout_or_abort(&shared.cv, st, wait, "serve queue state");
             st = guard;
             continue;
         };
-        let name = st.ring[i].clone();
-        let q = st.queues.get_mut(&name).unwrap();
+        let Some(name) = st.ring.get(i).cloned() else {
+            continue;
+        };
+        let Some(q) = st.queues.get_mut(&name) else {
+            // The scan above just proved this queue exists; treat a
+            // miss as a spurious wakeup instead of panicking a worker.
+            continue;
+        };
         if q.deficit == 0 {
             q.deficit = q.weight.saturating_mul(shared.cfg.max_batch as u64);
         }
@@ -875,18 +925,24 @@ fn next_batch(shared: &Shared) -> Option<Batch> {
                 break;
             }
             q.deficit = q.deficit.saturating_sub(cost);
-            requests.push(q.queue.pop_front().unwrap());
+            let Some(r) = q.queue.pop_front() else {
+                break;
+            };
+            requests.push(r);
         }
         let emptied = q.queue.is_empty();
         if emptied {
             q.deficit = 0;
             st.ring.remove(i);
-        } else if q.deficit == 0 || q.queue.front().unwrap().drr_cost() > q.deficit {
+        } else if q.deficit == 0
+            || q.queue.front().is_some_and(|f| f.drr_cost() > q.deficit)
+        {
             // Credit spent (or too small for the next request): forfeit
             // the remainder and rotate to the back of the ring.
             q.deficit = 0;
-            let n = st.ring.remove(i).unwrap();
-            st.ring.push_back(n);
+            if let Some(n) = st.ring.remove(i) {
+                st.ring.push_back(n);
+            }
         }
         // else: credit remains — the model keeps its turn for the next
         // dispatch (a weight-w model gets w consecutive batches).
@@ -903,10 +959,13 @@ fn next_batch(shared: &Shared) -> Option<Batch> {
         }
         if probe {
             // Mark the probe in flight before releasing the lock so no
-            // second worker dispatches this model until the verdict is in.
-            let b = st.breakers.get_mut(&name).expect("probe implies a breaker entry");
-            b.phase = BreakerPhase::HalfOpen;
-            b.probe_in_flight = true;
+            // second worker dispatches this model until the verdict is
+            // in. (A probe dispatch implies a breaker entry exists; a
+            // missing one simply skips the marking.)
+            if let Some(b) = st.breakers.get_mut(&name) {
+                b.phase = BreakerPhase::HalfOpen;
+                b.probe_in_flight = true;
+            }
         }
         shared.metrics.note_batch(requests.len());
         for r in &requests {
@@ -930,7 +989,10 @@ fn drain_expired(queue: &mut VecDeque<PendingRequest>, max_wait: Duration) -> Ve
     let mut expired = Vec::new();
     while let Some(front) = queue.front() {
         if now.duration_since(front.enqueued) > max_wait {
-            expired.push(queue.pop_front().unwrap());
+            match queue.pop_front() {
+                Some(r) => expired.push(r),
+                None => break,
+            }
         } else {
             break;
         }
@@ -951,6 +1013,8 @@ fn worker_loop(shared: &Shared, backend: &dyn Stage1Backend) {
         // exercising the supervisor's respawn path. Deliberately placed
         // *before* the batch pull — the worker dies empty-handed, so no
         // request is abandoned and no half-open probe is stranded.
+        // The injected fault MUST panic: the whole point is to kill the
+        // worker and drill the supervisor. lint: allow(panic-policy)
         crate::util::fault::point("serve.worker").expect("injected worker fault");
         let Some(batch) = next_batch(shared) else {
             return;
@@ -964,6 +1028,8 @@ fn worker_loop(shared: &Shared, backend: &dyn Stage1Backend) {
         let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             // Fault point *inside* the catch: an injected panic here is
             // a batch panic — the circuit breaker's trigger.
+            // The injected fault MUST panic inside the catch to trip the
+            // breaker under drills. lint: allow(panic-policy)
             crate::util::fault::point("serve.batch").expect("injected batch fault");
             process_batch(shared, backend, batch);
         }));
@@ -985,7 +1051,7 @@ fn breaker_note_success(shared: &Shared, model: &str, probe: bool) {
     }
     let mut recovered = false;
     {
-        let mut st = shared.state.lock().unwrap();
+        let mut st = lock_or_abort(&shared.state, "serve queue state");
         if let Some(b) = st.breakers.get_mut(model) {
             b.consecutive_panics = 0;
             if probe {
@@ -1014,7 +1080,7 @@ fn breaker_note_panic(shared: &Shared, model: &str, probe: bool) {
         return;
     }
     let quarantined = {
-        let mut st = shared.state.lock().unwrap();
+        let mut st = lock_or_abort(&shared.state, "serve queue state");
         let b = st.breakers.entry(model.to_string()).or_insert_with(Breaker::new);
         b.consecutive_panics = b.consecutive_panics.saturating_add(1);
         if probe || b.consecutive_panics >= k {
@@ -1104,7 +1170,7 @@ fn supervise_worker(shared: &Shared, provider: &dyn BackendProvider) {
         }
         let shutting_down = wait_backoff(shared, backoff);
         if shutting_down {
-            let st = shared.state.lock().unwrap();
+            let st = lock_or_abort(&shared.state, "serve queue state");
             if st.total_depth == 0 {
                 // Shutdown with nothing left to drain: exit instead of
                 // respawning into a (possibly perpetual) crash loop that
@@ -1127,7 +1193,7 @@ fn supervise_worker(shared: &Shared, provider: &dyn BackendProvider) {
 /// Returns whether shutdown was observed.
 fn wait_backoff(shared: &Shared, backoff: Duration) -> bool {
     let deadline = Instant::now() + backoff;
-    let mut st = shared.state.lock().unwrap();
+    let mut st = lock_or_abort(&shared.state, "serve queue state");
     loop {
         if st.shutdown {
             return true;
@@ -1136,7 +1202,7 @@ fn wait_backoff(shared: &Shared, backoff: Duration) -> bool {
         if now >= deadline {
             return false;
         }
-        let (g, _) = shared.cv.wait_timeout(st, deadline - now).unwrap();
+        let (g, _) = wait_timeout_or_abort(&shared.cv, st, deadline - now, "serve queue state");
         st = g;
     }
 }

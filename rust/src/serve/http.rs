@@ -389,7 +389,13 @@ fn route(engine: &ServeEngine, req: &Request) -> (u16, &'static str, String) {
         ("GET", "/metrics") => metrics(engine, &req.query),
         ("GET", "/v1/models") => models(engine),
         ("POST", p) if p.starts_with(MODEL_PREFIX) && p.ends_with(PREDICT_SUFFIX) => {
-            let name = &p[MODEL_PREFIX.len()..p.len() - PREDICT_SUFFIX.len()];
+            // The guard proved both affixes, but strip (not slice) so a
+            // degenerate path like the bare prefix+suffix can never make
+            // the connection thread panic on an out-of-bounds range.
+            let name = p
+                .strip_prefix(MODEL_PREFIX)
+                .and_then(|s| s.strip_suffix(PREDICT_SUFFIX))
+                .unwrap_or_default();
             if name.is_empty() {
                 (400, "application/json", error_json("empty model name"))
             } else {
@@ -397,7 +403,10 @@ fn route(engine: &ServeEngine, req: &Request) -> (u16, &'static str, String) {
             }
         }
         ("PUT", p) if p.starts_with(MODEL_PREFIX) && p.ends_with(CONFIG_SUFFIX) => {
-            let name = &p[MODEL_PREFIX.len()..p.len() - CONFIG_SUFFIX.len()];
+            let name = p
+                .strip_prefix(MODEL_PREFIX)
+                .and_then(|s| s.strip_suffix(CONFIG_SUFFIX))
+                .unwrap_or_default();
             if name.is_empty() {
                 (400, "application/json", error_json("empty model name"))
             } else {
@@ -573,13 +582,17 @@ fn parse_rows(v: &Json) -> Result<Vec<Vec<(u32, f32)>>, String> {
         for e in entries {
             let pair = e
                 .as_arr()
-                .filter(|p| p.len() == 2)
                 .ok_or_else(|| format!("row {ri}: each feature must be a [column, value] pair"))?;
-            let col = pair[0]
+            // Slice pattern instead of indexing: enforces the pair shape
+            // and destructures it in one step, with no panic path.
+            let [col_j, val_j] = pair.as_slice() else {
+                return Err(format!("row {ri}: each feature must be a [column, value] pair"));
+            };
+            let col = col_j
                 .as_f64()
                 .filter(|c| *c >= 0.0 && c.fract() == 0.0 && *c <= u32::MAX as f64)
                 .ok_or_else(|| format!("row {ri}: column must be a non-negative integer"))?;
-            let val = pair[1]
+            let val = val_j
                 .as_f64()
                 .ok_or_else(|| format!("row {ri}: value must be a number"))?;
             parsed.push((col as u32, val as f32));

@@ -15,6 +15,11 @@
 //! every request is attributed to exactly one bucket for its whole
 //! lifetime, so the buckets sum to the global counters.
 
+// lint: allow-file(atomic-ordering-justified) — the whole module is
+// monotone telemetry counters recorded with relaxed atomics; the module
+// docs state that discipline once instead of ~50 identical per-site
+// comments. Nothing here publishes data through these counters.
+
 use crate::obs::export::PromText;
 use crate::report::Table;
 use crate::util::json::{self, Json};

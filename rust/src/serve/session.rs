@@ -3,6 +3,7 @@
 //! built on `Mutex` + `Condvar` (the offline registry has no tokio, and a
 //! blocking wait matches the synchronous client API anyway).
 
+use crate::util::sync::{lock_checked, lock_recover, PoisonedLock};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -54,9 +55,20 @@ pub enum ServeError {
     /// repeatedly and the model is quarantined until a half-open probe
     /// succeeds. Other models keep serving; retry this one after backoff.
     ModelQuarantined { model: String },
+    /// A ticket-slot lock was poisoned by a panic on another thread
+    /// while this client was reading it. The request's fate is unknown;
+    /// a retry runs through a fresh slot. See `util::sync` for the
+    /// crate's poisoning policy.
+    Poisoned { what: &'static str },
     /// Any other serving-side failure: unknown model, out-of-range
     /// feature index, stage-1 transform error, backend init failure.
     Failed(String),
+}
+
+impl From<PoisonedLock> for ServeError {
+    fn from(e: PoisonedLock) -> Self {
+        ServeError::Poisoned { what: e.what }
+    }
 }
 
 impl ServeError {
@@ -72,7 +84,8 @@ impl ServeError {
     /// Whether a client should retry this request (with backoff): the
     /// request itself was fine, the engine just could not take it *right
     /// now*. Everything here maps to HTTP 503; [`ServeError::Failed`] is
-    /// the one permanent, non-retryable kind.
+    /// the one permanent, non-retryable kind
+    /// ([`ServeError::Poisoned`] retries through a fresh ticket slot).
     pub fn is_retryable(&self) -> bool {
         !matches!(self, ServeError::Failed(_))
     }
@@ -97,6 +110,9 @@ impl std::fmt::Display for ServeError {
                 f,
                 "model '{model}' is quarantined after repeated batch panics; retry later"
             ),
+            ServeError::Poisoned { what } => {
+                write!(f, "internal lock poisoned ({what}); retry the request")
+            }
             ServeError::Abandoned(msg) | ServeError::Failed(msg) => write!(f, "{msg}"),
         }
     }
@@ -120,19 +136,30 @@ pub struct Ticket {
 
 impl Ticket {
     /// Block until the engine fulfils (or rejects) the request.
+    /// Poisoning of the slot lock surfaces as the typed, retryable
+    /// [`ServeError::Poisoned`] instead of panicking the client thread.
     pub fn wait(&self) -> PredictResult {
-        let mut v = self.slot.value.lock().unwrap();
+        let mut v = match lock_checked(&self.slot.value, "ticket slot") {
+            Ok(g) => g,
+            Err(e) => return Err(e.into()),
+        };
         loop {
             if let Some(r) = v.as_ref() {
                 return r.clone();
             }
-            v = self.slot.ready.wait(v).unwrap();
+            v = match self.slot.ready.wait(v) {
+                Ok(g) => g,
+                Err(_) => return Err(ServeError::Poisoned { what: "ticket slot" }),
+            };
         }
     }
 
     /// Block for at most `timeout`; `None` if the request is still pending.
     pub fn wait_timeout(&self, timeout: Duration) -> Option<PredictResult> {
-        let mut v = self.slot.value.lock().unwrap();
+        let mut v = match lock_checked(&self.slot.value, "ticket slot") {
+            Ok(g) => g,
+            Err(e) => return Some(Err(e.into())),
+        };
         let deadline = std::time::Instant::now() + timeout;
         loop {
             if let Some(r) = v.as_ref() {
@@ -142,19 +169,27 @@ impl Ticket {
             if now >= deadline {
                 return None;
             }
-            let (guard, _) = self.slot.ready.wait_timeout(v, deadline - now).unwrap();
+            let guard = match self.slot.ready.wait_timeout(v, deadline - now) {
+                Ok((g, _)) => g,
+                Err(_) => return Some(Err(ServeError::Poisoned { what: "ticket slot" })),
+            };
             v = guard;
         }
     }
 
     /// Non-blocking poll.
     pub fn try_get(&self) -> Option<PredictResult> {
-        self.slot.value.lock().unwrap().clone()
+        match lock_checked(&self.slot.value, "ticket slot") {
+            Ok(g) => g.clone(),
+            Err(e) => Some(Err(e.into())),
+        }
     }
 
-    /// Whether the engine has already resolved this request.
+    /// Whether the engine has already resolved this request. The slot
+    /// is a single `Option` (valid at every statement boundary), so a
+    /// poisoned flag is recovered through rather than surfaced.
     pub fn is_done(&self) -> bool {
-        self.slot.value.lock().unwrap().is_some()
+        lock_recover(&self.slot.value).is_some()
     }
 }
 
@@ -182,7 +217,10 @@ impl Fulfiller {
     }
 
     fn resolve(&self, result: PredictResult) {
-        let mut v = self.slot.value.lock().unwrap();
+        // lock_recover, not lock_checked: resolve runs from Drop on the
+        // abandonment path, where a panic would escalate to a double
+        // panic; the single-`Option` slot is always valid to write.
+        let mut v = lock_recover(&self.slot.value);
         if v.is_none() {
             *v = Some(result);
             self.slot.ready.notify_all();

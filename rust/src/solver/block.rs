@@ -182,6 +182,7 @@ pub fn solve_blockwise_resumable(
         "the blockwise solver does not support warm starts"
     );
     let c = opts.c as f32;
+    // lint: allow(determinism-domain) — feeds only the train_secs stat
     let t_start = Instant::now();
 
     let mut alpha = vec![0.0f32; m];

@@ -80,6 +80,9 @@ fn prefetch_row(problem: &ProblemView, i: usize) {
     {
         let row = problem.feature_row(i);
         let ptr = row.as_ptr() as *const i8;
+        // SAFETY: `_mm_prefetch` is a pure cache hint — it cannot fault
+        // even on an unmapped address — and `ptr` is a valid slice base;
+        // the +64/+128 offsets are gated on the row length below.
         unsafe {
             use core::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
             // First three cache lines only: enough to hide the row-start
@@ -186,6 +189,7 @@ pub fn solve_resumable(
         );
     }
     let c = opts.c as f32;
+    // lint: allow(determinism-domain) — feeds only the train_secs stat
     let t_start = Instant::now();
 
     let mut state = match &opts.warm_alpha {
@@ -250,6 +254,7 @@ pub fn solve_resumable(
 
     while epochs < opts.max_epochs {
         epochs += 1;
+        // lint: allow(determinism-domain) — epoch-time histogram only
         let epoch_start = Instant::now();
         let mut epoch_span = crate::obs::Span::new("solve.epoch");
         let mut epoch_reactivated: u64 = 0;

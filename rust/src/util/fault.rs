@@ -53,6 +53,22 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Mutex, MutexGuard};
 use std::time::Duration;
 
+/// Central registry of every fault point the codebase declares.
+///
+/// The `fault-point-registry` lint rule checks each literal
+/// `fault::point("...")` site against this list, so a drill schedule can
+/// never target a typo'd name that silently no-ops — and this constant
+/// doubles as the authoritative inventory for the fault-point table in
+/// `docs/ARCHITECTURE.md`. Names are `<subsystem>.<boundary>`.
+pub const FAULT_POINTS: &[&str] = &[
+    "ckpt.after_tmp_write",
+    "model.save.after_tmp_write",
+    "data.load",
+    "serve.worker",
+    "serve.batch",
+    "fsio.test.write",
+];
+
 /// What a triggered fault point does.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum FaultAction {
@@ -110,10 +126,11 @@ static SCHEDULE: Mutex<Option<HashMap<String, FaultRule>>> = Mutex::new(None);
 static TEST_GATE: Mutex<()> = Mutex::new(());
 
 fn lock_schedule() -> MutexGuard<'static, Option<HashMap<String, FaultRule>>> {
-    // A panic while holding the lock (FaultAction::Panic drops the guard
-    // first, but a user panic inside `set_schedule`'s parser could not)
-    // should not disable fault injection for the rest of the process.
-    SCHEDULE.lock().unwrap_or_else(|e| e.into_inner())
+    // lock_recover: a panic while holding the lock (FaultAction::Panic
+    // drops the guard first, but a user panic inside `set_schedule`'s
+    // parser could not) should not disable fault injection for the rest
+    // of the process; the single `Option<HashMap>` is always valid.
+    crate::util::sync::lock_recover(&SCHEDULE)
 }
 
 /// Declare a fault point. Returns `Ok(())` (after one atomic load) unless
@@ -125,6 +142,9 @@ fn lock_schedule() -> MutexGuard<'static, Option<HashMap<String, FaultRule>>> {
 /// route errors themselves) match on the result.
 #[inline]
 pub fn point(name: &str) -> Result<(), FaultError> {
+    // Relaxed: a pure on/off gate with no associated data to order —
+    // arming publishes the schedule through the SCHEDULE mutex, and a
+    // stale `false` just means the point stays a no-op one call longer.
     if !ARMED.load(Ordering::Relaxed) {
         return Ok(());
     }
@@ -277,7 +297,9 @@ pub fn hits(name: &str) -> u64 {
 /// exclusive lock released on drop. Poison-tolerant, because fault tests
 /// panic on purpose.
 pub fn test_lock() -> MutexGuard<'static, ()> {
-    TEST_GATE.lock().unwrap_or_else(|e| e.into_inner())
+    // lock_recover: the gate guards no data, so poisoning by a
+    // deliberately panicking fault test carries no information.
+    crate::util::sync::lock_recover(&TEST_GATE)
 }
 
 #[cfg(test)]

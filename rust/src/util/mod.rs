@@ -24,5 +24,6 @@ pub mod hash;
 pub mod json;
 pub mod mem;
 pub mod rng;
+pub mod sync;
 pub mod threads;
 pub mod timer;

@@ -1,0 +1,150 @@
+//! Lock acquisition with an explicit poisoning policy.
+//!
+//! `Mutex::lock().unwrap()` makes a silent policy decision: a panic on
+//! any thread that held the lock later panics *this* thread too. The
+//! crate used that default at ~26 sites; this module replaces them
+//! with three named policies so every call site states which failure
+//! semantics it wants — and the lint engine's lock-order rule can
+//! recognise all acquisition forms uniformly.
+//!
+//! - [`lock_or_abort`] — **compute and scheduler state.** The guarded
+//!   state has multi-field invariants (the pool's task queue, the
+//!   serve engine's ring/queues/depth accounting) that a mid-update
+//!   panic may have torn. Continuing could silently break the
+//!   bit-identity contract or the serve metrics conservation law, so
+//!   the process aborts; crash-safe checkpointing and the supervisor
+//!   are the recovery story (crash-only design).
+//! - [`lock_checked`] — **fallible serve boundaries.** Client-facing
+//!   paths that already return `Result` surface poisoning as a typed
+//!   error (`ServeError::Poisoned` via `From<PoisonedLock>`) instead
+//!   of panicking a connection thread.
+//! - [`lock_recover`] — **single-field observability state.** Span
+//!   ring buffers, fault schedules, ticket slots: every value the
+//!   guard protects is valid at every statement boundary, so the
+//!   poison flag carries no information and the data is safe to use.
+//!
+//! Condvar waits on policy-locked state use the matching
+//! [`wait_or_abort`] / [`wait_timeout_or_abort`].
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Typed poisoning error for fallible lock acquisition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoisonedLock {
+    /// Human-readable name of the lock, for diagnostics.
+    pub what: &'static str,
+}
+
+impl std::fmt::Display for PoisonedLock {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "lock poisoned: {}", self.what)
+    }
+}
+
+impl std::error::Error for PoisonedLock {}
+
+/// Acquire a lock whose state must never be observed after a
+/// mid-update panic. Poisoning aborts the process with a diagnostic
+/// instead of unwinding further: for training state the checkpoint
+/// layer replays the run bit-identically, for the serve engine the
+/// process supervisor restarts a coherent world.
+pub fn lock_or_abort<'a, T>(m: &'a Mutex<T>, what: &'static str) -> MutexGuard<'a, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(_) => die(what),
+    }
+}
+
+/// Acquire a lock on a fallible path, mapping poisoning to a typed
+/// error the caller can surface (`ServeError::Poisoned` on the serve
+/// request path).
+pub fn lock_checked<'a, T>(
+    m: &'a Mutex<T>,
+    what: &'static str,
+) -> Result<MutexGuard<'a, T>, PoisonedLock> {
+    m.lock().map_err(|_| PoisonedLock { what })
+}
+
+/// Acquire a lock whose guarded value is valid at every statement
+/// boundary (single-field slots, append-only buffers): recover the
+/// data and ignore the poison flag. Telemetry must keep working after
+/// an unrelated panic, and a panicking recorder must never cascade.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Condvar wait matching the [`lock_or_abort`] policy.
+pub fn wait_or_abort<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+    what: &'static str,
+) -> MutexGuard<'a, T> {
+    match cv.wait(g) {
+        Ok(g) => g,
+        Err(_) => die(what),
+    }
+}
+
+/// Timed condvar wait matching the [`lock_or_abort`] policy.
+pub fn wait_timeout_or_abort<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+    dur: Duration,
+    what: &'static str,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    match cv.wait_timeout(g, dur) {
+        Ok(r) => r,
+        Err(_) => die(what),
+    }
+}
+
+fn die(what: &'static str) -> ! {
+    // Abort, not panic: unwinding out of a poisoned-state observation
+    // would run Drop impls over state already known to be torn.
+    eprintln!(
+        "lpdsvm: fatal: lock `{}` poisoned by a panic on another thread; \
+         aborting (crash-only recovery: checkpoints / supervisor)",
+        what
+    );
+    std::process::abort();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_or_abort_plain() {
+        let m = Mutex::new(7);
+        assert_eq!(*lock_or_abort(&m, "t"), 7);
+    }
+
+    #[test]
+    fn lock_checked_maps_poison() {
+        let m = Arc::new(Mutex::new(1));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        let err = lock_checked(&m, "unit").unwrap_err();
+        assert_eq!(err, PoisonedLock { what: "unit" });
+        assert_eq!(err.to_string(), "lock poisoned: unit");
+    }
+
+    #[test]
+    fn lock_recover_reads_through_poison() {
+        let m = Arc::new(Mutex::new(41));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let mut g = m2.lock().unwrap();
+            *g = 42;
+            panic!("poison it");
+        })
+        .join();
+        assert_eq!(*lock_recover(&m), 42);
+    }
+}

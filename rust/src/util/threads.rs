@@ -36,6 +36,7 @@
 //! every pool-backed primitive keeps the bit-identity contract of
 //! `tests/prop_parallel.rs`.
 
+use crate::util::sync::{lock_or_abort, lock_recover, wait_or_abort};
 use std::any::Any;
 use std::ops::Range;
 use std::panic::{self, AssertUnwindSafe};
@@ -73,6 +74,8 @@ struct Task {
     /// claims `< n`, all of which finish before `ThreadPool::run`
     /// returns, so the borrow never outlives the referent.
     data: *const (),
+    /// SAFETY contract of the erased call: invoke only with this task's
+    /// `data` and a slot index `< n` — see [`call_shim`].
     call: unsafe fn(*const (), usize),
     /// First panic payload from any slot, re-raised by the submitter.
     panic: Mutex<Option<Box<dyn Any + Send + 'static>>>,
@@ -87,7 +90,8 @@ unsafe impl Sync for Task {}
 impl Task {
     /// Whether a scanning worker may still join this task. Checked (and
     /// `joined` bumped) only under the queue lock, so check-then-join is
-    /// race-free.
+    /// race-free — which is also why Relaxed loads suffice here: the
+    /// queue mutex already orders them against the bumps.
     fn joinable(&self) -> bool {
         self.claimed.load(Ordering::Relaxed) < self.n
             && self.joined.load(Ordering::Relaxed) < self.limit
@@ -178,6 +182,8 @@ impl ThreadPool {
 
     /// Snapshot the per-worker busy/idle/queue-wait accounting.
     pub fn stats(&self) -> PoolStats {
+        // Relaxed: monotone telemetry counters; a snapshot needs no
+        // ordering with the task data the workers touch.
         let us = |a: &AtomicU64| Duration::from_micros(a.load(Ordering::Relaxed));
         PoolStats {
             workers: self
@@ -185,6 +191,7 @@ impl ThreadPool {
                 .stats
                 .iter()
                 .map(|w| WorkerStats {
+                    // Relaxed: same telemetry-snapshot reasoning as `us`.
                     tasks: w.tasks.load(Ordering::Relaxed),
                     busy: us(&w.busy_us),
                     idle: us(&w.idle_us),
@@ -220,11 +227,11 @@ impl ThreadPool {
             .collect();
         let job = |i: usize| {
             let v = f(i);
+            let slot: *mut Option<T> = slots[i].0;
             // SAFETY: each slot index is claimed by exactly one
             // participant via the task's atomic counter, so each slot is
             // written once with no aliasing; `run` does not return until
             // every claimed slot has finished executing.
-            let slot: *mut Option<T> = slots[i].0;
             unsafe { *slot = Some(v) };
         };
         self.run(n, threads, &job);
@@ -321,7 +328,7 @@ impl ThreadPool {
             panic: Mutex::new(None),
         });
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = lock_or_abort(&self.shared.queue, "pool task queue");
             q.push(Arc::clone(&task));
         }
         self.shared.work_cv.notify_all();
@@ -330,19 +337,21 @@ impl ThreadPool {
         // De-list the task so late-waking workers skip it; any worker
         // already executing a claimed slot finishes independently.
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = lock_or_abort(&self.shared.queue, "pool task queue");
             if let Some(pos) = q.iter().position(|t| Arc::ptr_eq(t, &task)) {
                 q.remove(pos);
             }
         }
         // Wait for slots claimed by pool workers to finish executing.
         {
-            let mut guard = self.shared.done_mx.lock().unwrap();
+            let mut guard = lock_or_abort(&self.shared.done_mx, "pool completion");
             while task.completed.load(Ordering::Acquire) < task.n {
-                guard = self.shared.done_cv.wait(guard).unwrap();
+                guard = wait_or_abort(&self.shared.done_cv, guard, "pool completion");
             }
         }
-        let payload = task.panic.lock().unwrap().take();
+        // lock_recover: the payload slot is a single `Option`, valid at
+        // every statement boundary, and this runs after a slot panicked.
+        let payload = lock_recover(&task.panic).take();
         if let Some(p) = payload {
             panic::resume_unwind(p);
         }
@@ -356,7 +365,7 @@ impl Drop for ThreadPool {
             // its shutdown check and its wait still holds that lock, so
             // the store-and-notify cannot slip into the gap and leave it
             // parked forever (a lost wakeup would hang the join below).
-            let _q = self.shared.queue.lock().unwrap();
+            let _q = lock_or_abort(&self.shared.queue, "pool task queue");
             self.shared.shutdown.store(true, Ordering::Release);
         }
         self.shared.work_cv.notify_all();
@@ -380,6 +389,9 @@ unsafe fn call_shim<F: Fn(usize) + Sync>(data: *const (), i: usize) {
 /// by pool workers and the submitting thread.
 fn run_slots(shared: &PoolShared, task: &Task) {
     loop {
+        // Relaxed: the claim counter only partitions indices between
+        // participants; the closure itself was published to workers by
+        // the queue mutex, and completion ordering is the Release below.
         let i = task.claimed.fetch_add(1, Ordering::Relaxed);
         if i >= task.n {
             return;
@@ -389,7 +401,9 @@ fn run_slots(shared: &PoolShared, task: &Task) {
             unsafe { (task.call)(task.data, i) };
         }));
         if let Err(payload) = result {
-            let mut slot = task.panic.lock().unwrap();
+            // lock_recover: single-`Option` slot; this path is already
+            // handling a panic and must not cascade another.
+            let mut slot = lock_recover(&task.panic);
             if slot.is_none() {
                 *slot = Some(payload);
             }
@@ -398,7 +412,7 @@ fn run_slots(shared: &PoolShared, task: &Task) {
         if done == task.n {
             // Lock-then-notify so the submitter cannot miss the wakeup
             // between its predicate check and its wait.
-            let _guard = shared.done_mx.lock().unwrap();
+            let _guard = lock_or_abort(&shared.done_mx, "pool completion");
             shared.done_cv.notify_all();
         }
     }
@@ -409,28 +423,34 @@ fn worker_loop(shared: &PoolShared, idx: usize) {
     loop {
         let idle_from = Instant::now();
         let task = {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = lock_or_abort(&shared.queue, "pool task queue");
             loop {
                 if shared.shutdown.load(Ordering::Acquire) {
                     return;
                 }
                 let found = q.iter().find(|t| t.joinable()).map(Arc::clone);
                 if let Some(t) = found {
+                    // Relaxed: bumped under the queue lock (see
+                    // `Task::joinable`), which provides the ordering.
                     t.joined.fetch_add(1, Ordering::Relaxed);
                     break t;
                 }
-                q = shared.work_cv.wait(q).unwrap();
+                q = wait_or_abort(&shared.work_cv, q, "pool task queue");
             }
         };
         let joined_at = Instant::now();
+        // Relaxed: per-worker telemetry counters, read only by stats()
+        // snapshots; no ordering with task data is implied.
         stat.idle_us.fetch_add(
             joined_at.duration_since(idle_from).as_micros() as u64,
             Ordering::Relaxed,
         );
+        // Relaxed: telemetry, as above.
         stat.wait_us.fetch_add(
             joined_at.saturating_duration_since(task.enqueued).as_micros() as u64,
             Ordering::Relaxed,
         );
+        // Relaxed: telemetry, as above.
         stat.tasks.fetch_add(1, Ordering::Relaxed);
         {
             // One span per joined task (disarmed: one atomic check).
@@ -439,6 +459,7 @@ fn worker_loop(shared: &PoolShared, idx: usize) {
             span.arg("slots", task.n as f64);
             run_slots(shared, &task);
         }
+        // Relaxed: telemetry, as above.
         stat.busy_us
             .fetch_add(joined_at.elapsed().as_micros() as u64, Ordering::Relaxed);
     }

@@ -1,0 +1,405 @@
+//! Fixture corpus for the invariant lint engine (`src/analysis/`).
+//!
+//! One firing and one clean snippet per rule, plus the pragma
+//! suppression paths and a self-check that the crate's own tree is
+//! lint-clean. Fixture paths are virtual — the path string alone
+//! decides which path-scoped rules apply (see `lint_source`).
+
+use lpdsvm::analysis::{lint_files, lint_source, run_lint};
+use std::path::Path;
+
+fn rules_fired(findings: &[lpdsvm::analysis::Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+// ---------------------------------------------------------------------
+// Rule 1: unsafe-safety-comment
+// ---------------------------------------------------------------------
+
+#[test]
+fn unsafe_without_safety_comment_fires() {
+    let src = r#"
+pub fn store(p: *mut u8) {
+    unsafe { *p = 1 };
+}
+"#;
+    let f = lint_source("util/x.rs", src);
+    assert_eq!(rules_fired(&f), ["unsafe-safety-comment"]);
+}
+
+#[test]
+fn unsafe_with_safety_comment_is_clean() {
+    let src = r#"
+pub fn store(p: *mut u8) {
+    // SAFETY: caller guarantees `p` is valid and exclusively owned.
+    unsafe { *p = 1 };
+}
+"#;
+    assert!(lint_source("util/x.rs", src).is_empty());
+}
+
+#[test]
+fn safety_comment_reaches_through_attributes_and_blanks() {
+    let src = r#"
+// SAFETY: the pointer is pinned for the program's lifetime.
+
+#[allow(dead_code)]
+unsafe fn poke(p: *mut u8) {
+    *p = 1;
+}
+"#;
+    assert!(lint_source("util/x.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------------
+// Rule 2: atomic-ordering-justified
+// ---------------------------------------------------------------------
+
+#[test]
+fn relaxed_without_justification_fires() {
+    let src = r#"
+use std::sync::atomic::{AtomicU64, Ordering};
+pub fn bump(c: &AtomicU64) {
+    c.fetch_add(1, Ordering::Relaxed);
+}
+"#;
+    let f = lint_source("obs/x.rs", src);
+    assert_eq!(rules_fired(&f), ["atomic-ordering-justified"]);
+}
+
+#[test]
+fn relaxed_with_adjacent_justification_is_clean() {
+    let src = r#"
+use std::sync::atomic::{AtomicU64, Ordering};
+pub fn bump(c: &AtomicU64) {
+    // Relaxed: monotone telemetry counter, no data published through it.
+    c.fetch_add(1, Ordering::Relaxed);
+}
+"#;
+    assert!(lint_source("obs/x.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------------
+// Rule 3: determinism-domain
+// ---------------------------------------------------------------------
+
+#[test]
+fn hashmap_in_solver_fires() {
+    let src = r#"
+use std::collections::HashMap;
+pub fn weights() -> HashMap<usize, f64> {
+    HashMap::new()
+}
+"#;
+    let f = lint_source("solver/x.rs", src);
+    assert_eq!(f.iter().filter(|f| f.rule == "determinism-domain").count(), 3);
+}
+
+#[test]
+fn wall_clock_in_solver_fires() {
+    let src = r#"
+use std::time::Instant;
+pub fn stamp() -> std::time::Instant {
+    Instant::now()
+}
+"#;
+    let f = lint_source("solver/x.rs", src);
+    assert_eq!(rules_fired(&f), ["determinism-domain"]);
+}
+
+#[test]
+fn same_code_outside_the_domain_is_clean() {
+    let src = r#"
+use std::collections::HashMap;
+pub fn weights() -> HashMap<usize, f64> {
+    HashMap::new()
+}
+"#;
+    assert!(lint_source("serve/x.rs", src).is_empty());
+}
+
+#[test]
+fn btreemap_in_solver_is_clean() {
+    let src = r#"
+use std::collections::BTreeMap;
+pub fn weights() -> BTreeMap<usize, f64> {
+    BTreeMap::new()
+}
+"#;
+    assert!(lint_source("solver/x.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------------
+// Rule 4: lock-order
+// ---------------------------------------------------------------------
+
+#[test]
+fn conflicting_lock_order_fires() {
+    // `first` takes alpha before beta, `second` the reverse — a static
+    // deadlock cycle. The helper's first argument names the lock.
+    let src = r#"
+impl Engine {
+    fn first(&self) {
+        let _a = lock_or_abort(&self.alpha, "alpha state");
+        let _b = lock_or_abort(&self.beta, "beta state");
+    }
+    fn second(&self) {
+        let _b = lock_or_abort(&self.beta, "beta state");
+        let _a = lock_or_abort(&self.alpha, "alpha state");
+    }
+}
+"#;
+    let f = lint_source("serve/engine.rs", src);
+    assert!(
+        f.iter().any(|f| f.rule == "lock-order" && f.msg.contains("cycle")),
+        "expected a lock-order cycle finding, got: {f:?}"
+    );
+}
+
+#[test]
+fn consistent_lock_order_is_clean() {
+    let src = r#"
+impl Engine {
+    fn first(&self) {
+        let _a = lock_or_abort(&self.alpha, "alpha state");
+        let _b = lock_or_abort(&self.beta, "beta state");
+    }
+    fn second(&self) {
+        let _a = lock_or_abort(&self.alpha, "alpha state");
+        let _b = lock_or_abort(&self.beta, "beta state");
+    }
+}
+"#;
+    assert!(lint_source("serve/engine.rs", src).is_empty());
+}
+
+#[test]
+fn reacquiring_a_held_lock_fires() {
+    let src = r#"
+impl Pool {
+    fn relock(&self) {
+        let _a = self.queue.lock();
+        let _b = self.queue.lock();
+    }
+}
+"#;
+    let f = lint_source("util/threads.rs", src);
+    assert!(
+        f.iter().any(|f| f.rule == "lock-order" && f.msg.contains("re-acquired")),
+        "expected a re-acquisition finding, got: {f:?}"
+    );
+}
+
+#[test]
+fn dropping_the_guard_releases_the_edge() {
+    // With the first guard dropped before the second acquisition the
+    // two locks are never held together — no edge, no cycle.
+    let src = r#"
+impl Engine {
+    fn first(&self) {
+        let a = lock_or_abort(&self.alpha, "alpha state");
+        drop(a);
+        let _b = lock_or_abort(&self.beta, "beta state");
+    }
+    fn second(&self) {
+        let b = lock_or_abort(&self.beta, "beta state");
+        drop(b);
+        let _a = lock_or_abort(&self.alpha, "alpha state");
+    }
+}
+"#;
+    assert!(lint_source("serve/engine.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------------
+// Rule 5: panic-policy
+// ---------------------------------------------------------------------
+
+#[test]
+fn unwrap_on_the_serve_path_fires() {
+    let src = r#"
+pub fn head(v: &[u8]) -> u8 {
+    let first = v.first().copied();
+    first.unwrap()
+}
+"#;
+    let f = lint_source("serve/http.rs", src);
+    assert_eq!(rules_fired(&f), ["panic-policy"]);
+}
+
+#[test]
+fn indexing_on_the_serve_path_fires() {
+    let src = r#"
+pub fn head(v: &[u8]) -> u8 {
+    v[0]
+}
+"#;
+    let f = lint_source("serve/engine.rs", src);
+    assert_eq!(rules_fired(&f), ["panic-policy"]);
+}
+
+#[test]
+fn fallible_serve_code_is_clean() {
+    let src = r#"
+pub fn head(v: &[u8]) -> Result<u8, String> {
+    v.first().copied().ok_or_else(|| "empty body".to_string())
+}
+"#;
+    assert!(lint_source("serve/http.rs", src).is_empty());
+}
+
+#[test]
+fn panicking_code_off_the_serve_path_is_exempt() {
+    let src = r#"
+pub fn head(v: &[u8]) -> u8 {
+    v[0]
+}
+"#;
+    assert!(lint_source("solver/x.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------------
+// Rule 6: fault-point-registry
+// ---------------------------------------------------------------------
+
+fn fault_registry_fixture() -> (String, String) {
+    let src = r#"
+pub const FAULT_POINTS: &[&str] = &[
+    "ckpt.after_tmp_write",
+    "serve.worker",
+];
+"#;
+    ("util/fault.rs".to_string(), src.to_string())
+}
+
+#[test]
+fn unregistered_fault_point_fires() {
+    let user = r#"
+pub fn run() -> Result<(), String> {
+    fault::point("serve.wrker")
+}
+"#;
+    let f = lint_files(&[
+        fault_registry_fixture(),
+        ("serve/x.rs".to_string(), user.to_string()),
+    ]);
+    assert_eq!(rules_fired(&f), ["fault-point-registry"]);
+    assert!(f[0].msg.contains("serve.wrker"), "msg: {}", f[0].msg);
+}
+
+#[test]
+fn registered_fault_point_is_clean() {
+    let user = r#"
+pub fn run() -> Result<(), String> {
+    fault::point("serve.worker")
+}
+"#;
+    let f = lint_files(&[
+        fault_registry_fixture(),
+        ("serve/x.rs".to_string(), user.to_string()),
+    ]);
+    assert!(f.is_empty(), "unexpected findings: {f:?}");
+}
+
+// ---------------------------------------------------------------------
+// Pragma suppression
+// ---------------------------------------------------------------------
+
+#[test]
+fn line_pragma_suppresses_one_site() {
+    let src = r#"
+use std::sync::atomic::{AtomicU64, Ordering};
+pub fn bump(c: &AtomicU64) {
+    // lint: allow(atomic-ordering-justified)
+    c.fetch_add(1, Ordering::Relaxed);
+    c.fetch_add(2, Ordering::Relaxed);
+}
+"#;
+    // The pragma covers only the adjacent line — the second site still
+    // fires, so pragmas cannot blanket-disable a rule by accident.
+    let f = lint_source("obs/x.rs", src);
+    assert_eq!(rules_fired(&f), ["atomic-ordering-justified"]);
+    assert_eq!(f[0].line, 6);
+}
+
+#[test]
+fn file_pragma_suppresses_the_whole_file() {
+    let src = r#"
+// lint: allow-file(atomic-ordering-justified) — fixture: the whole
+// module is telemetry counters.
+use std::sync::atomic::{AtomicU64, Ordering};
+pub fn bump(c: &AtomicU64) {
+    c.fetch_add(1, Ordering::Relaxed);
+    c.fetch_add(2, Ordering::Relaxed);
+}
+"#;
+    assert!(lint_source("obs/x.rs", src).is_empty());
+}
+
+#[test]
+fn pragma_for_a_different_rule_does_not_suppress() {
+    let src = r#"
+use std::sync::atomic::{AtomicU64, Ordering};
+pub fn bump(c: &AtomicU64) {
+    // lint: allow(panic-policy)
+    c.fetch_add(1, Ordering::Relaxed);
+}
+"#;
+    let f = lint_source("obs/x.rs", src);
+    assert_eq!(rules_fired(&f), ["atomic-ordering-justified"]);
+}
+
+// ---------------------------------------------------------------------
+// Test scoping: `#[cfg(test)]` and tests/ paths are exempt from the
+// runtime-behaviour rules (they may unwrap, index, use HashMap...).
+// ---------------------------------------------------------------------
+
+#[test]
+fn cfg_test_modules_are_exempt() {
+    let src = r#"
+pub fn head(v: &[u8]) -> Option<u8> {
+    v.first().copied()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn heads() {
+        let v = vec![1u8];
+        assert_eq!(v[0], super::head(&v).unwrap());
+    }
+}
+"#;
+    assert!(lint_source("serve/http.rs", src).is_empty());
+}
+
+#[test]
+fn integration_test_paths_are_exempt() {
+    let src = r#"
+use std::collections::HashMap;
+pub fn fixture() -> HashMap<usize, f64> {
+    HashMap::new()
+}
+"#;
+    assert!(lint_source("tests/solver/x.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------------
+// The crate's own tree must be clean — the same gate CI enforces.
+// ---------------------------------------------------------------------
+
+#[test]
+fn crate_tree_is_lint_clean() {
+    // CARGO_MANIFEST_DIR is `rust/`, so `run_lint` takes its
+    // `src` + `tests` fallback.
+    let findings = run_lint(Path::new(env!("CARGO_MANIFEST_DIR")))
+        .expect("walking the crate tree");
+    assert!(
+        findings.is_empty(),
+        "the crate tree has lint findings:\n{}",
+        findings
+            .iter()
+            .map(|f| format!("  {f}\n"))
+            .collect::<String>()
+    );
+}
