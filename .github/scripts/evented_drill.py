@@ -1,0 +1,138 @@
+#!/usr/bin/env python3
+"""Connection-scale drill for the evented HTTP front-end.
+
+Opens N concurrent keep-alive connections against a running `lpdsvm serve
+--io-model evented` instance, completes a healthz round-trip on every one,
+re-checks a subset to prove the early connections are still alive, then
+asserts from the outside what the event loop promises:
+
+* the server's `/metrics` gauge shows all N connections open at once;
+* the server process holds a small, connection-independent thread count
+  (read from /proc/<pid>/status — a thread-per-connection design would
+  show ~N threads here);
+* every healthz round-trip answered 200.
+
+Writes a JSON report (client-side latency percentiles plus the server's
+shed/latency counters) for upload as a CI artifact.
+
+Usage: evented_drill.py PORT CONNECTIONS SERVER_PID REPORT_PATH
+"""
+
+import json
+import socket
+import sys
+import time
+
+HOST = "127.0.0.1"
+# Generous, connection-independent budget: engine workers + scoring pool
+# + supervisor + the one event-loop thread + runtime slack. The point of
+# the assertion is the gap to CONNECTIONS (4096), not the exact figure.
+MAX_THREADS = 24
+
+HEALTHZ = b"GET /healthz HTTP/1.1\r\nhost: drill\r\n\r\n"
+METRICS = b"GET /metrics HTTP/1.1\r\nhost: drill\r\nconnection: close\r\n\r\n"
+
+
+def request(sock, raw):
+    """One request on a keep-alive socket -> (status, body bytes)."""
+    sock.sendall(raw)
+    buf = b""
+    while b"\r\n\r\n" not in buf:
+        chunk = sock.recv(65536)
+        if not chunk:
+            raise RuntimeError("server closed mid-headers")
+        buf += chunk
+    head, _, body = buf.partition(b"\r\n\r\n")
+    status = int(head.split(None, 2)[1])
+    length = 0
+    for line in head.split(b"\r\n")[1:]:
+        name, _, value = line.partition(b":")
+        if name.strip().lower() == b"content-length":
+            length = int(value.strip())
+    while len(body) < length:
+        chunk = sock.recv(65536)
+        if not chunk:
+            raise RuntimeError("server closed mid-body")
+        body += chunk
+    return status, body[:length]
+
+
+def main():
+    port = int(sys.argv[1])
+    n_conns = int(sys.argv[2])
+    server_pid = int(sys.argv[3])
+    report_path = sys.argv[4]
+
+    socks = []
+    latencies = []
+    t0 = time.time()
+    for i in range(n_conns):
+        s = socket.create_connection((HOST, port), timeout=30)
+        s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        q0 = time.time()
+        status, _ = request(s, HEALTHZ)
+        latencies.append(time.time() - q0)
+        if status != 200:
+            raise SystemExit(f"connection {i}: healthz answered {status}")
+        socks.append(s)
+    ramp_secs = time.time() - t0
+
+    # Second round on a stride of survivors: the early connections must
+    # still be live while thousands of later ones are open.
+    for i in range(0, n_conns, 97):
+        status, _ = request(socks[i], HEALTHZ)
+        if status != 200:
+            raise SystemExit(f"connection {i} died during the drill ({status})")
+
+    # Scrape the gauge while every drill connection is still open.
+    scrape = socket.create_connection((HOST, port), timeout=30)
+    status, body = request(scrape, METRICS)
+    if status != 200:
+        raise SystemExit(f"metrics scrape answered {status}")
+    metrics = json.loads(body)
+    conn_open = metrics["conn_open"]
+    if conn_open < n_conns:
+        raise SystemExit(f"conn_open gauge {conn_open} < {n_conns} drill connections")
+
+    threads = None
+    with open(f"/proc/{server_pid}/status") as f:
+        for line in f:
+            if line.startswith("Threads:"):
+                threads = int(line.split()[1])
+    if threads is None:
+        raise SystemExit("no Threads line in /proc status")
+    if not 0 < threads <= MAX_THREADS:
+        raise SystemExit(
+            f"server holds {threads} threads for {n_conns} connections "
+            f"(budget {MAX_THREADS}) — connection plane is not evented"
+        )
+
+    latencies.sort()
+    report = {
+        "connections": n_conns,
+        "server_threads": threads,
+        "thread_budget": MAX_THREADS,
+        "conn_open_gauge": conn_open,
+        "ramp_secs": round(ramp_secs, 3),
+        "healthz_ms": {
+            "p50": round(latencies[len(latencies) // 2] * 1e3, 3),
+            "p99": round(latencies[(len(latencies) * 99) // 100 - 1] * 1e3, 3),
+            "max": round(latencies[-1] * 1e3, 3),
+        },
+        "server_latency_us": metrics.get("latency_us"),
+        "shed": {
+            "rejected_full": metrics.get("rejected_full"),
+            "shed_expired": metrics.get("shed_expired"),
+        },
+        "conn_idle_reaped": metrics.get("conn_idle_reaped"),
+    }
+    with open(report_path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps(report, indent=2))
+
+    for s in socks:
+        s.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -32,7 +32,9 @@ use lpdsvm::data::sparse::SparseMatrix;
 use lpdsvm::data::synth::{FeatureStyle, SynthSpec};
 use lpdsvm::lowrank::Stage1Config;
 use lpdsvm::report::Table;
-use lpdsvm::serve::{ModelRegistry, ServeConfig, ServeEngine};
+use lpdsvm::serve::{HttpOptions, HttpServer, IoModel, ModelRegistry, ServeConfig, ServeEngine};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -306,4 +308,147 @@ fn main() {
     t.print();
     t.write_tsv(&harness::report_dir().join("serve_fairness.tsv"))
         .ok();
+
+    // --- HTTP front-end: thread-per-connection vs evented loop ---
+    // The same predict workload pushed through the wire on keep-alive
+    // connections: C closed-loop clients, each re-using one connection
+    // for its whole share of the requests. Client-side latency includes
+    // parse + dispatch + engine + response drain, so this measures the
+    // connection plane, not just the engine. The evented loop must hold
+    // its own against the thread pool at this (modest) connection count
+    // — its payoff is holding thousands of connections on one thread,
+    // which `tests/serve_http_adversarial.rs` and the CI drill cover.
+    const HTTP_CLIENTS: usize = 32;
+    let io_models: &[IoModel] = if cfg!(target_os = "linux") {
+        &[IoModel::Threads, IoModel::Evented]
+    } else {
+        &[IoModel::Threads]
+    };
+    println!("\nHTTP front-end ({HTTP_CLIENTS} keep-alive client connections):");
+    let mut t = Table::new(
+        "http connection plane: threads vs evented",
+        &["io model", "req/s", "p50 ms", "p99 ms"],
+    );
+    for io in io_models {
+        let engine = Arc::new(ServeEngine::start(
+            Arc::clone(&registry),
+            ServeConfig {
+                max_batch: 64,
+                max_wait: Duration::from_micros(200),
+                workers: 0, // one per core
+                ..ServeConfig::default()
+            },
+        ));
+        let server = HttpServer::bind_with_opts(
+            Arc::clone(&engine),
+            "127.0.0.1:0",
+            HttpOptions {
+                io_model: *io,
+                ..HttpOptions::default()
+            },
+        )
+        .expect("http server binds");
+        let addr = server.addr();
+        // Pre-rendered keep-alive request frames over a rotating row set,
+        // so the clients spend their time on the wire, not on JSON.
+        let frames: Arc<Vec<Vec<u8>>> = Arc::new(
+            (0..256)
+                .map(|j| {
+                    let body = single_row_body(&rows[j % rows.len()]);
+                    format!(
+                        "POST /v1/models/m:predict HTTP/1.1\r\nhost: b\r\ncontent-length: {}\r\n\r\n{body}",
+                        body.len()
+                    )
+                    .into_bytes()
+                })
+                .collect(),
+        );
+        let per_client = (n_requests / HTTP_CLIENTS).max(1);
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..HTTP_CLIENTS)
+            .map(|c| {
+                let frames = Arc::clone(&frames);
+                std::thread::spawn(move || {
+                    let stream = TcpStream::connect(addr).expect("client connects");
+                    stream
+                        .set_read_timeout(Some(Duration::from_secs(60)))
+                        .expect("read timeout");
+                    stream.set_nodelay(true).ok();
+                    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+                    let mut writer = stream;
+                    let mut lat_us = Vec::with_capacity(per_client);
+                    for i in 0..per_client {
+                        let frame = &frames[(c + i * 31) % frames.len()];
+                        let q0 = Instant::now();
+                        writer.write_all(frame).expect("request written");
+                        let status = read_http_response(&mut reader);
+                        assert_eq!(status, 200, "predict over http failed");
+                        lat_us.push(q0.elapsed().as_micros() as u64);
+                    }
+                    lat_us
+                })
+            })
+            .collect();
+        let mut lat_us: Vec<u64> = handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("client thread"))
+            .collect();
+        let secs = t0.elapsed().as_secs_f64();
+        lat_us.sort_unstable();
+        let q = |f: f64| lat_us[((lat_us.len() - 1) as f64 * f) as usize] as f64 / 1e3;
+        t.row(&[
+            format!("{io:?}").to_lowercase(),
+            format!("{:.0}", lat_us.len() as f64 / secs),
+            format!("{:.3}", q(0.50)),
+            format!("{:.3}", q(0.99)),
+        ]);
+        server.shutdown();
+        engine.shutdown();
+    }
+    t.print();
+    t.write_tsv(&harness::report_dir().join("serve_http_io.tsv"))
+        .ok();
+}
+
+/// Single-row predict body in the batch (`rows`) shape.
+fn single_row_body(row: &[(u32, f32)]) -> String {
+    let mut body = String::from("{\"rows\": [[");
+    for (i, &(c, v)) in row.iter().enumerate() {
+        if i > 0 {
+            body.push_str(", ");
+        }
+        body.push_str(&format!("[{c}, {v}]"));
+    }
+    body.push_str("]]}");
+    body
+}
+
+/// Read one length-framed HTTP response off a keep-alive stream and
+/// return its status code (the body is drained and discarded).
+fn read_http_response<R: BufRead>(reader: &mut R) -> u16 {
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).expect("status line");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .expect("numeric status");
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        reader.read_line(&mut header).expect("header line");
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().expect("content-length");
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).expect("body");
+    status
 }

@@ -34,8 +34,8 @@ use lpdsvm::model::multiclass::error_rate;
 use lpdsvm::report::Table;
 use lpdsvm::runtime::{AccelBackend, Runtime};
 use lpdsvm::serve::{
-    BackendProvider, HttpServer, ModelRegistry, ModelServeConfig, NativeProvider, PjrtProvider,
-    ServeConfig, ServeEngine, ShedPolicy,
+    BackendProvider, HttpOptions, HttpServer, IoModel, ModelRegistry, ModelServeConfig,
+    NativeProvider, PjrtProvider, ServeConfig, ServeEngine, ShedPolicy,
 };
 use lpdsvm::solver::SolverOptions;
 use lpdsvm::util::cli::{parse, ArgSpec};
@@ -751,6 +751,17 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             "1024",
             "HTTP connection cap; over-limit accepts get 503 (0 = unbounded)",
         ),
+        ArgSpec::opt(
+            "io-model",
+            "threads",
+            "HTTP connection plane: threads (one per connection) | evented \
+             (single epoll event loop, Linux only)",
+        ),
+        ArgSpec::opt(
+            "idle-timeout-ms",
+            "30000",
+            "drop HTTP connections idle (or trickling one request phase) past this",
+        ),
         ArgSpec::flag(
             "saturate",
             "overload mode: unpaced arrivals against a bounded queue; fails unless the engine shed load",
@@ -895,18 +906,26 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         p.str("backend"),
     );
 
+    let io_model = IoModel::from_name(p.str("io-model")).ok_or_else(|| {
+        anyhow::anyhow!("unknown --io-model '{}' (threads | evented)", p.str("io-model"))
+    })?;
     let http = if p.str("listen").is_empty() {
         None
     } else {
-        let server = HttpServer::bind_with_limit(
+        let server = HttpServer::bind_with_opts(
             Arc::clone(&engine),
             p.str("listen"),
-            p.usize("max-connections")?,
+            HttpOptions {
+                max_connections: p.usize("max-connections")?,
+                io_model,
+                idle_timeout: Duration::from_millis(p.u64("idle-timeout-ms")?.max(1)),
+            },
         )?;
         lpdsvm::log_info!(
             "serve",
-            "http front-end on {} — POST /v1/models/default:predict, GET /v1/models /metrics /healthz",
-            server.addr()
+            "http front-end on {} ({:?} io) — POST /v1/models/default:predict, GET /v1/models /metrics /healthz",
+            server.addr(),
+            io_model
         );
         Some(server)
     };

@@ -1,0 +1,1102 @@
+//! Readiness-driven (evented) connection plane for the HTTP front-end.
+//!
+//! One thread multiplexes every connection through a level-triggered
+//! poller ([`crate::util::net::Poller`]: epoll by default, `poll(2)`
+//! fallback). The scoring workers never touch a socket and the loop
+//! never blocks on one:
+//!
+//! * **Accept** — the listener is non-blocking; accepts are batched per
+//!   readiness report. Over-cap connections get a best-effort `503` via
+//!   a single non-blocking write (plus a bounded number of short-lived
+//!   "closer" registrations that drain a partially-written 503), so a
+//!   peer that never reads can never stall the accept path.
+//! * **Read** — bytes accumulate in a per-connection buffer from a
+//!   reusable arena. An incremental [`HeadScan`] decides *when* a full
+//!   request (or a definite protocol error) is buffered; the actual
+//!   parse then replays the canonical blocking parser
+//!   ([`crate::serve::http::read_request`]) over the buffered bytes, so
+//!   framing decisions, error strings, and status codes are identical
+//!   to `--io-model threads` by construction.
+//! * **Dispatch** — predict rows are submitted through the same
+//!   `ServeEngine::try_submit` boundary as the threaded model. The
+//!   connection parks with no socket interest; a per-request countdown
+//!   fires [`crate::serve::session::Ticket::on_ready`] wakers that push
+//!   the connection token to a completion list and nudge the loop
+//!   through a wakeup pipe. No engine thread ever writes to a socket.
+//! * **Write** — responses are assembled with the shared
+//!   [`crate::serve::http::response_head`] and drained as writability
+//!   allows; pipelined requests already buffered are served next.
+//! * **Deadlines** — a coarse timer wheel arms one deadline per
+//!   connection *phase* (reading a request, draining a response, or
+//!   sitting idle between requests). The deadline is not extended per
+//!   byte, so a slow-loris client trickling one header byte per tick is
+//!   reaped after `idle_timeout` like any idle connection (counted in
+//!   `conn_idle_reaped`). Parked (dispatched) connections are never
+//!   reaped — the engine owns their latency.
+//!
+//! Shutdown is bounded: reading/idle connections close immediately,
+//! in-flight dispatches and response drains get a short grace period,
+//! then everything is dropped.
+
+use crate::obs::Span;
+use crate::serve::engine::ServeEngine;
+use crate::serve::http::{
+    self, HttpOptions, Routed, CONTINUE_LINE, MAX_BODY, MAX_HEADERS, MAX_HEADER_LINE,
+};
+use crate::serve::session::{ServeError, Ticket};
+use crate::util::net::{Event, Interest, Poller, WakePipe};
+use std::collections::HashMap;
+use std::io::{self, Cursor, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Poller token of the TCP listener.
+const TOKEN_LISTENER: u64 = 0;
+/// Poller token of the wakeup pipe's read end.
+const TOKEN_WAKE: u64 = 1;
+/// First token handed to a connection; tokens are monotonically
+/// increasing and never reused, so a stale completion or timer entry
+/// for a closed connection simply misses the map.
+const TOKEN_FIRST_CONN: u64 = 2;
+
+/// Accepts drained per listener readiness report; level-triggered
+/// polling re-reports a still-pending backlog immediately.
+const ACCEPT_BATCH: usize = 256;
+/// Read syscalls per connection per readiness report — a fairness cap
+/// so one fast peer cannot monopolise the loop. Level-triggered polling
+/// re-reports leftover bytes.
+const READ_ROUNDS: usize = 8;
+/// Scratch read chunk size.
+const READ_CHUNK: usize = 64 << 10;
+/// Arena keeps cleared buffers up to this capacity; anything ballooned
+/// by a large body is dropped rather than hoarded.
+const ARENA_KEEP_CAP: usize = 64 << 10;
+/// Arena free-list bound.
+const ARENA_MAX_FREE: usize = 256;
+/// Max concurrently registered over-cap "closer" connections draining a
+/// partially-written 503; beyond this the 503 body is dropped silently.
+const MAX_CLOSERS: usize = 64;
+/// Timer wheel slot count.
+const WHEEL_SLOTS: usize = 64;
+/// Grace period for in-flight dispatches and response drains at
+/// shutdown; reading/idle connections close immediately.
+const SHUTDOWN_GRACE: Duration = Duration::from_secs(5);
+/// Poll cadence while draining the shutdown grace period.
+const SHUTDOWN_POLL: Duration = Duration::from_millis(25);
+/// Upper bound on any poller wait — a liveness backstop independent of
+/// timer arithmetic.
+const MAX_POLL: Duration = Duration::from_secs(1);
+
+/// Spawn the event loop on its own thread. Returns the join handle and
+/// the wakeup pipe (`wake()` nudges the loop out of its poller wait —
+/// used for shutdown and by ticket completion wakers).
+pub(crate) fn spawn(
+    engine: Arc<ServeEngine>,
+    listener: TcpListener,
+    opts: &HttpOptions,
+    stop: Arc<AtomicBool>,
+) -> anyhow::Result<(std::thread::JoinHandle<()>, Arc<WakePipe>)> {
+    let wake = Arc::new(WakePipe::new()?);
+    let mut poller = Poller::new()?;
+    poller.register(listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)?;
+    poller.register(wake.read_fd(), TOKEN_WAKE, Interest::READ)?;
+    let loop_wake = Arc::clone(&wake);
+    let max_connections = opts.max_connections;
+    let idle_timeout = opts.idle_timeout.max(Duration::from_millis(1));
+    let handle = std::thread::Builder::new()
+        .name("lpdsvm-http-evented".to_string())
+        .spawn(move || {
+            let mut lp = EventLoop {
+                engine,
+                listener,
+                poller,
+                wake: loop_wake,
+                stop,
+                max_connections,
+                idle_timeout,
+                conns: HashMap::new(),
+                next_token: TOKEN_FIRST_CONN,
+                completions: Arc::new(Mutex::new(Vec::new())),
+                wheel: TimerWheel::new(wheel_tick(idle_timeout), Instant::now()),
+                events: Vec::new(),
+                scratch: vec![0u8; READ_CHUNK],
+                arena: BufArena::default(),
+                counted_conns: 0,
+                uncounted_conns: 0,
+            };
+            lp.run();
+        })?;
+    Ok((handle, wake))
+}
+
+/// Wheel granularity: fine enough that a reap lands within ~3% of the
+/// configured timeout, bounded to [1ms, 250ms].
+fn wheel_tick(idle_timeout: Duration) -> Duration {
+    (idle_timeout / 32).clamp(Duration::from_millis(1), Duration::from_millis(250))
+}
+
+/// Reusable buffer pool: connections hand their read/write buffers back
+/// on close so steady-state churn allocates nothing.
+#[derive(Default)]
+struct BufArena {
+    free: Vec<Vec<u8>>,
+}
+
+impl BufArena {
+    fn get(&mut self) -> Vec<u8> {
+        self.free.pop().unwrap_or_default()
+    }
+
+    fn put(&mut self, mut b: Vec<u8>) {
+        b.clear();
+        if b.capacity() > 0 && b.capacity() <= ARENA_KEEP_CAP && self.free.len() < ARENA_MAX_FREE {
+            self.free.push(b);
+        }
+    }
+}
+
+/// Coarse hashed timer wheel with lazy cancellation: entries carry the
+/// deadline they were armed for; on expiry the connection's *current*
+/// deadline is consulted, and a re-armed or cleared deadline just means
+/// the stale entry is dropped or re-inserted.
+struct TimerWheel {
+    slots: Vec<Vec<(u64, Instant)>>,
+    tick: Duration,
+    /// Time at which the cursor slot begins.
+    base: Instant,
+    cursor: usize,
+}
+
+impl TimerWheel {
+    fn new(tick: Duration, now: Instant) -> TimerWheel {
+        TimerWheel {
+            slots: vec![Vec::new(); WHEEL_SLOTS],
+            tick,
+            base: now,
+            cursor: 0,
+        }
+    }
+
+    fn insert(&mut self, token: u64, deadline: Instant) {
+        let nanos = deadline.saturating_duration_since(self.base).as_nanos();
+        let ticks = (nanos / self.tick.as_nanos().max(1)).min(WHEEL_SLOTS as u128 - 1) as usize;
+        let slot = (self.cursor + ticks) % WHEEL_SLOTS;
+        self.slots[slot].push((token, deadline));
+    }
+
+    /// Duration until the nearest armed slot fires; `None` when empty.
+    fn next_timeout(&self, now: Instant) -> Option<Duration> {
+        for i in 0..WHEEL_SLOTS {
+            let s = (self.cursor + i) % WHEEL_SLOTS;
+            if !self.slots[s].is_empty() {
+                // A slot fires when the cursor advances *past* it.
+                let fire_at = self.base + self.tick * (i as u32 + 1);
+                let wait = fire_at.saturating_duration_since(now);
+                return Some(wait.max(Duration::from_millis(1)));
+            }
+        }
+        None
+    }
+
+    /// Advance the cursor to `now`, draining every slot it passes.
+    fn expired(&mut self, now: Instant) -> Vec<(u64, Instant)> {
+        let mut out = Vec::new();
+        while now.saturating_duration_since(self.base) >= self.tick {
+            out.append(&mut self.slots[self.cursor]);
+            self.cursor = (self.cursor + 1) % WHEEL_SLOTS;
+            self.base += self.tick;
+        }
+        out
+    }
+}
+
+/// Incremental completeness scanner for the buffered request head.
+///
+/// This is *not* a second parser: it only decides when the canonical
+/// parser ([`http::read_request`]) can run over the buffer and produce
+/// a definitive answer without more input — either because a complete
+/// head + body is buffered, or because a protocol violation is already
+/// visible (oversized line, header flood, bad `content-length`,
+/// `transfer-encoding`, malformed request line, over-cap body, non-UTF-8
+/// head). The replay then yields byte-identical results to the blocking
+/// path, because it *is* the blocking path.
+#[derive(Default)]
+struct HeadScan {
+    /// Bytes of the buffer already scanned.
+    pos: usize,
+    /// Start of the current (possibly incomplete) line.
+    line_start: usize,
+    saw_request_line: bool,
+    /// Completed non-blank header lines.
+    header_lines: usize,
+    /// One past the head's terminating blank line, once seen.
+    head_end: Option<usize>,
+    content_length: usize,
+    expect_continue: bool,
+    /// The canonical parser is guaranteed to error within the bytes
+    /// already buffered — replay now, do not wait for more input.
+    fatal: bool,
+    /// The interim `100 Continue` has been queued for this request.
+    interim_queued: bool,
+}
+
+impl HeadScan {
+    fn reset(&mut self) {
+        *self = HeadScan::default();
+    }
+
+    /// Scan any newly buffered bytes. Idempotent over already-scanned
+    /// prefixes; stops at the end of the head.
+    fn step(&mut self, buf: &[u8]) {
+        while self.head_end.is_none() && !self.fatal {
+            let Some(rel) = buf[self.pos..].iter().position(|&b| b == b'\n') else {
+                self.pos = buf.len();
+                // A line whose first MAX_HEADER_LINE bytes hold no
+                // newline is already over the cap the parser enforces.
+                if (self.pos - self.line_start) as u64 >= MAX_HEADER_LINE {
+                    self.fatal = true;
+                }
+                return;
+            };
+            let nl = self.pos + rel;
+            if (nl - self.line_start) as u64 >= MAX_HEADER_LINE {
+                self.fatal = true;
+                return;
+            }
+            let line = &buf[self.line_start..nl];
+            self.pos = nl + 1;
+            self.line_start = self.pos;
+            // The parser reads lines via `read_line`, which fails on
+            // invalid UTF-8 — also a definite, buffered error.
+            let Ok(text) = std::str::from_utf8(line) else {
+                self.fatal = true;
+                return;
+            };
+            let text = text.trim_end();
+            if !self.saw_request_line {
+                self.saw_request_line = true;
+                let mut parts = text.split_whitespace();
+                if parts.next().is_none() || parts.next().is_none() || parts.next().is_none() {
+                    self.fatal = true;
+                    return;
+                }
+                continue;
+            }
+            if text.is_empty() {
+                self.head_end = Some(self.pos);
+                if self.content_length > MAX_BODY {
+                    // PayloadTooLarge fires before the body is read.
+                    self.fatal = true;
+                }
+                return;
+            }
+            self.header_lines += 1;
+            if self.header_lines >= MAX_HEADERS {
+                // The parser refuses to read a line past the cap — it
+                // errors as soon as MAX_HEADERS non-blank headers exist,
+                // with no further input needed.
+                self.fatal = true;
+                return;
+            }
+            if let Some((name, value)) = text.split_once(':') {
+                let value = value.trim();
+                match name.trim().to_ascii_lowercase().as_str() {
+                    "content-length" => match value.parse::<usize>() {
+                        Ok(v) => self.content_length = v,
+                        Err(_) => {
+                            self.fatal = true;
+                            return;
+                        }
+                    },
+                    "expect" => self.expect_continue = value.eq_ignore_ascii_case("100-continue"),
+                    "transfer-encoding" => {
+                        self.fatal = true;
+                        return;
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    /// A complete request (head + declared body) is buffered.
+    fn request_ready(&self, buffered: usize) -> bool {
+        !self.fatal
+            && self
+                .head_end
+                .is_some_and(|end| buffered >= end + self.content_length)
+    }
+
+    /// The interim `100 Continue` is owed for the current request.
+    fn wants_interim(&self) -> bool {
+        !self.fatal
+            && !self.interim_queued
+            && self.head_end.is_some()
+            && self.expect_continue
+            && self.content_length > 0
+    }
+}
+
+/// Per-connection state-machine position.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum ConnState {
+    /// Waiting for (more of) a request. Covers idle keep-alive, head,
+    /// and body phases; the gauges split idle from mid-request via the
+    /// scan's progress.
+    Reading,
+    /// A predict is in flight in the engine; no socket interest beyond
+    /// implicit error/hangup.
+    Dispatched,
+    /// Draining a response (or an over-cap 503 for uncounted closers).
+    Writing,
+}
+
+/// A predict parked in the engine: resolved tickets are collected when
+/// the completion countdown fires.
+struct Pending {
+    model: String,
+    tickets: Vec<Result<Ticket, ServeError>>,
+    keep_alive: bool,
+}
+
+struct Conn {
+    stream: TcpStream,
+    fd: RawFd,
+    state: ConnState,
+    /// Counted against `max_connections` and the `conn_open` gauge;
+    /// false for over-cap 503 closers.
+    counted: bool,
+    rbuf: Vec<u8>,
+    scan: HeadScan,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Unflushed part of an interim `100 Continue` (flushed during
+    /// Reading, before the body arrives; any remainder is prepended to
+    /// the final response so wire order is preserved).
+    interim: Vec<u8>,
+    interim_pos: usize,
+    keep_alive_after_write: bool,
+    peer_closed: bool,
+    pending: Option<Pending>,
+    /// Phase deadline; `None` while dispatched (the engine owns it).
+    deadline: Option<Instant>,
+    /// Deadline the wheel currently has an entry for (lazy re-arm).
+    armed: Option<Instant>,
+    interest: Interest,
+}
+
+enum Verdict {
+    Keep,
+    Close,
+}
+
+struct EventLoop {
+    engine: Arc<ServeEngine>,
+    listener: TcpListener,
+    poller: Poller,
+    wake: Arc<WakePipe>,
+    stop: Arc<AtomicBool>,
+    max_connections: usize,
+    idle_timeout: Duration,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+    /// Tokens whose dispatch fully resolved; pushed by ticket wakers on
+    /// engine threads, drained by the loop after each poller wait.
+    completions: Arc<Mutex<Vec<u64>>>,
+    wheel: TimerWheel,
+    events: Vec<Event>,
+    scratch: Vec<u8>,
+    arena: BufArena,
+    counted_conns: usize,
+    uncounted_conns: usize,
+}
+
+impl EventLoop {
+    fn run(&mut self) {
+        let mut stop_seen = false;
+        let mut grace = Instant::now();
+        loop {
+            if !stop_seen && self.stop.load(Ordering::Acquire) {
+                stop_seen = true;
+                grace = Instant::now() + SHUTDOWN_GRACE;
+                let _ = self.poller.deregister(self.listener.as_raw_fd());
+                // No response is owed to a connection that is idle or
+                // mid-request: close those immediately. In-flight
+                // dispatches and response drains get the grace period.
+                let doomed: Vec<u64> = self
+                    .conns
+                    .iter()
+                    .filter(|(_, c)| c.state == ConnState::Reading)
+                    .map(|(t, _)| *t)
+                    .collect();
+                for t in doomed {
+                    self.close_conn(t);
+                }
+            }
+            if stop_seen && (self.conns.is_empty() || Instant::now() >= grace) {
+                break;
+            }
+            let timeout = if stop_seen {
+                SHUTDOWN_POLL
+            } else {
+                self.wheel
+                    .next_timeout(Instant::now())
+                    .map_or(MAX_POLL, |t| t.min(MAX_POLL))
+            };
+            let mut events = std::mem::take(&mut self.events);
+            {
+                let mut span = Span::new("serve.io_wait");
+                // A failed wait (beyond EINTR, which yields an empty
+                // set) is treated as a timeout tick; persistent poller
+                // failure degrades to timer-driven progress.
+                let _ = self.poller.wait(&mut events, Some(timeout));
+                span.arg("events", events.len() as f64);
+            }
+            for ev in &events {
+                match ev.token {
+                    TOKEN_LISTENER => {
+                        if !stop_seen {
+                            self.accept_ready();
+                        }
+                    }
+                    TOKEN_WAKE => self.wake.drain(),
+                    token => self.conn_event(token, *ev),
+                }
+            }
+            events.clear();
+            self.events = events;
+            self.drain_completions();
+            self.expire_deadlines();
+            self.publish_gauges();
+        }
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for t in tokens {
+            self.close_conn(t);
+        }
+        self.engine.metrics().set_conn_states(0, 0, 0);
+    }
+
+    fn accept_ready(&mut self) {
+        for _ in 0..ACCEPT_BATCH {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => self.admit(stream),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                // Transient accept failure (e.g. the peer reset before
+                // we got to it): keep draining the backlog.
+                Err(_) => {}
+            }
+        }
+    }
+
+    fn admit(&mut self, stream: TcpStream) {
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        stream.set_nodelay(true).ok();
+        if self.max_connections > 0 && self.counted_conns >= self.max_connections {
+            self.reject_over_cap(stream);
+            return;
+        }
+        let token = self.next_token;
+        self.next_token += 1;
+        let fd = stream.as_raw_fd();
+        if self.poller.register(fd, token, Interest::READ).is_err() {
+            return;
+        }
+        self.counted_conns += 1;
+        self.engine.metrics().note_conn_opened();
+        let now = Instant::now();
+        let deadline = now + self.idle_timeout;
+        self.wheel.insert(token, deadline);
+        let conn = Conn {
+            stream,
+            fd,
+            state: ConnState::Reading,
+            counted: true,
+            rbuf: self.arena.get(),
+            scan: HeadScan::default(),
+            wbuf: self.arena.get(),
+            wpos: 0,
+            interim: Vec::new(),
+            interim_pos: 0,
+            keep_alive_after_write: false,
+            peer_closed: false,
+            pending: None,
+            deadline: Some(deadline),
+            armed: Some(deadline),
+            interest: Interest::READ,
+        };
+        self.conns.insert(token, conn);
+    }
+
+    /// Over-cap accept: one non-blocking write of the 503 frame. If the
+    /// socket buffer takes it whole, done; otherwise park a bounded
+    /// number of "closer" connections to drain the remainder, and past
+    /// that bound just drop — the close is the real back-off signal.
+    fn reject_over_cap(&mut self, mut stream: TcpStream) {
+        let body = http::error_json(&format!(
+            "connection limit reached ({} open); retry",
+            self.max_connections
+        ));
+        let head = http::response_head(503, "application/json", body.len(), false);
+        let mut frame = head.into_bytes();
+        frame.extend_from_slice(body.as_bytes());
+        let mut pos = 0usize;
+        match write_some(&mut stream, &frame, &mut pos) {
+            Ok(true) | Err(_) => {}
+            Ok(false) => {
+                if self.uncounted_conns < MAX_CLOSERS {
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    let fd = stream.as_raw_fd();
+                    if self.poller.register(fd, token, Interest::WRITE).is_err() {
+                        return;
+                    }
+                    self.uncounted_conns += 1;
+                    let deadline = Instant::now() + self.idle_timeout.min(Duration::from_secs(1));
+                    self.wheel.insert(token, deadline);
+                    let conn = Conn {
+                        stream,
+                        fd,
+                        state: ConnState::Writing,
+                        counted: false,
+                        rbuf: Vec::new(),
+                        scan: HeadScan::default(),
+                        wbuf: frame,
+                        wpos: pos,
+                        interim: Vec::new(),
+                        interim_pos: 0,
+                        keep_alive_after_write: false,
+                        peer_closed: false,
+                        pending: None,
+                        deadline: Some(deadline),
+                        armed: Some(deadline),
+                        interest: Interest::WRITE,
+                    };
+                    self.conns.insert(token, conn);
+                }
+            }
+        }
+    }
+
+    fn conn_event(&mut self, token: u64, ev: Event) {
+        let Some(mut conn) = self.conns.remove(&token) else {
+            return;
+        };
+        if ev.error {
+            self.discard(conn);
+            return;
+        }
+        if ev.readable && conn.state == ConnState::Reading && self.fill_rbuf(&mut conn).is_err() {
+            self.discard(conn);
+            return;
+        }
+        let v = self.advance(token, &mut conn);
+        self.settle(token, conn, v);
+    }
+
+    /// Pull newly readable bytes into the connection buffer, up to the
+    /// fairness cap. `Err` = hard socket error (close without response).
+    fn fill_rbuf(&mut self, conn: &mut Conn) -> Result<(), ()> {
+        for _ in 0..READ_ROUNDS {
+            match conn.stream.read(&mut self.scratch) {
+                Ok(0) => {
+                    conn.peer_closed = true;
+                    return Ok(());
+                }
+                Ok(n) => {
+                    conn.rbuf.extend_from_slice(&self.scratch[..n]);
+                    if n < self.scratch.len() {
+                        // Kernel buffer likely drained; anything more is
+                        // re-reported by the level-triggered poller.
+                        return Ok(());
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(()),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => return Err(()),
+            }
+        }
+        Ok(())
+    }
+
+    /// Drive the connection's state machine as far as it can go without
+    /// blocking: scan → (interim) → replay-parse → route → dispatch or
+    /// respond → write → next pipelined request.
+    fn advance(&mut self, token: u64, conn: &mut Conn) -> Verdict {
+        loop {
+            match conn.state {
+                ConnState::Reading => {
+                    // Flush any partially-written interim 100 Continue
+                    // first — the client is waiting on it for the body.
+                    if conn.interim_pos < conn.interim.len() {
+                        let interim = std::mem::take(&mut conn.interim);
+                        let r = write_some(&mut conn.stream, &interim, &mut conn.interim_pos);
+                        conn.interim = interim;
+                        match r {
+                            Ok(true) => {
+                                conn.interim.clear();
+                                conn.interim_pos = 0;
+                            }
+                            Ok(false) => {}
+                            Err(_) => return Verdict::Close,
+                        }
+                    }
+                    conn.scan.step(&conn.rbuf);
+                    if conn.scan.wants_interim() {
+                        conn.scan.interim_queued = true;
+                        conn.interim.extend_from_slice(CONTINUE_LINE);
+                        // Loop back to flush it (and re-check readiness:
+                        // the body may already be buffered).
+                        continue;
+                    }
+                    if conn.scan.fatal || conn.scan.request_ready(conn.rbuf.len()) {
+                        match self.take_request(token, conn) {
+                            Step::Dispatched => return Verdict::Keep,
+                            Step::Respond => continue,
+                            Step::Close => return Verdict::Close,
+                        }
+                    }
+                    if conn.peer_closed {
+                        if conn.rbuf.is_empty() {
+                            return Verdict::Close;
+                        }
+                        // A partial request with no more bytes coming:
+                        // the replay produces the canonical error
+                        // (mid-headers close, truncated body, …).
+                        match self.take_request(token, conn) {
+                            Step::Dispatched => return Verdict::Keep,
+                            Step::Respond => continue,
+                            Step::Close => return Verdict::Close,
+                        }
+                    }
+                    return Verdict::Keep;
+                }
+                ConnState::Dispatched => return Verdict::Keep,
+                ConnState::Writing => {
+                    let wbuf = std::mem::take(&mut conn.wbuf);
+                    let r = write_some(&mut conn.stream, &wbuf, &mut conn.wpos);
+                    conn.wbuf = wbuf;
+                    match r {
+                        Ok(true) => {
+                            if !conn.keep_alive_after_write {
+                                return Verdict::Close;
+                            }
+                            conn.wbuf.clear();
+                            conn.wpos = 0;
+                            conn.state = ConnState::Reading;
+                            conn.scan.reset();
+                            // Fresh phase budget for the next request
+                            // (possibly already buffered, pipelined).
+                            conn.deadline = Some(Instant::now() + self.idle_timeout);
+                        }
+                        Ok(false) => return Verdict::Keep,
+                        Err(_) => return Verdict::Close,
+                    }
+                }
+            }
+        }
+    }
+
+    /// Replay the canonical parser over the buffered bytes, then route.
+    fn take_request(&mut self, token: u64, conn: &mut Conn) -> Step {
+        let mut cur = Cursor::new(&conn.rbuf[..]);
+        let parsed = http::read_request(&mut cur, None);
+        let consumed = cur.position() as usize;
+        match parsed {
+            Ok(Some(req)) => {
+                conn.rbuf.drain(..consumed);
+                conn.scan.reset();
+                let keep_alive = req.keep_alive;
+                match http::route_request(&self.engine, &req) {
+                    Routed::Ready(status, content_type, body) => {
+                        self.start_response(conn, status, content_type, &body, keep_alive);
+                        Step::Respond
+                    }
+                    Routed::Predict { model, tickets } => {
+                        let n_ok = tickets.iter().filter(|t| t.is_ok()).count();
+                        if n_ok == 0 {
+                            let (status, content_type, body) = http::predict_response(
+                                &model,
+                                tickets.into_iter().map(|t| match t {
+                                    Ok(t) => finished(&t),
+                                    Err(e) => Err(e),
+                                }),
+                            );
+                            self.start_response(conn, status, content_type, &body, keep_alive);
+                            return Step::Respond;
+                        }
+                        self.dispatch(token, conn, model, tickets, n_ok, keep_alive);
+                        Step::Dispatched
+                    }
+                }
+            }
+            Ok(None) => Step::Close,
+            Err(e) => match http::parse_error_response(&e) {
+                Some((status, content_type, body)) => {
+                    self.start_response(conn, status, content_type, &body, false);
+                    Step::Respond
+                }
+                // Timeout-kind errors cannot come off a Cursor, but the
+                // mapping is total: close silently like the threaded path.
+                None => Step::Close,
+            },
+        }
+    }
+
+    /// Park the connection while the engine scores its rows. The last
+    /// ticket to resolve pushes the token to the completion list and
+    /// wakes the loop; nothing here ever blocks.
+    fn dispatch(
+        &mut self,
+        token: u64,
+        conn: &mut Conn,
+        model: String,
+        tickets: Vec<Result<Ticket, ServeError>>,
+        n_ok: usize,
+        keep_alive: bool,
+    ) {
+        let remaining = Arc::new(AtomicUsize::new(n_ok));
+        for t in tickets.iter().flatten() {
+            let remaining = Arc::clone(&remaining);
+            let completions = Arc::clone(&self.completions);
+            let wake = Arc::clone(&self.wake);
+            t.on_ready(move || {
+                if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    let mut done = completions.lock().unwrap_or_else(|p| p.into_inner());
+                    done.push(token);
+                    drop(done);
+                    wake.wake();
+                }
+            });
+        }
+        conn.pending = Some(Pending {
+            model,
+            tickets,
+            keep_alive,
+        });
+        conn.state = ConnState::Dispatched;
+        conn.deadline = None;
+    }
+
+    /// Collect the resolved dispatch for `token` and start its response.
+    fn finish_dispatch(&mut self, token: u64) {
+        let Some(mut conn) = self.conns.remove(&token) else {
+            return; // connection died while dispatched; tickets dropped
+        };
+        if conn.state != ConnState::Dispatched {
+            self.conns.insert(token, conn);
+            return;
+        }
+        let Some(p) = conn.pending.take() else {
+            self.discard(conn);
+            return;
+        };
+        let (status, content_type, body) = http::predict_response(
+            &p.model,
+            p.tickets.into_iter().map(|t| match t {
+                Ok(t) => finished(&t),
+                Err(e) => Err(e),
+            }),
+        );
+        self.start_response(&mut conn, status, content_type, &body, p.keep_alive);
+        let v = self.advance(token, &mut conn);
+        self.settle(token, conn, v);
+    }
+
+    fn start_response(
+        &mut self,
+        conn: &mut Conn,
+        status: u16,
+        content_type: &str,
+        body: &str,
+        keep_alive: bool,
+    ) {
+        conn.wbuf.clear();
+        conn.wpos = 0;
+        // Wire order: any unflushed interim bytes precede the response.
+        if conn.interim_pos < conn.interim.len() {
+            let rest = conn.interim.split_off(conn.interim_pos);
+            conn.wbuf.extend_from_slice(&rest);
+        }
+        conn.interim.clear();
+        conn.interim_pos = 0;
+        let head = http::response_head(status, content_type, body.len(), keep_alive);
+        conn.wbuf.extend_from_slice(head.as_bytes());
+        conn.wbuf.extend_from_slice(body.as_bytes());
+        conn.keep_alive_after_write = keep_alive && !conn.peer_closed;
+        conn.state = ConnState::Writing;
+        conn.deadline = Some(Instant::now() + self.idle_timeout);
+    }
+
+    fn drain_completions(&mut self) {
+        let done = {
+            let mut g = self.completions.lock().unwrap_or_else(|p| p.into_inner());
+            std::mem::take(&mut *g)
+        };
+        for token in done {
+            self.finish_dispatch(token);
+        }
+    }
+
+    fn expire_deadlines(&mut self) {
+        let now = Instant::now();
+        for (token, _armed_for) in self.wheel.expired(now) {
+            let verdict = match self.conns.get_mut(&token) {
+                None => continue,
+                Some(conn) => match conn.deadline {
+                    // Dispatched (or re-armed then cleared): entry stale.
+                    None => {
+                        conn.armed = None;
+                        continue;
+                    }
+                    Some(d) if d <= now => Some(conn.state),
+                    Some(d) => {
+                        // Re-armed to a later phase deadline: lazily
+                        // re-insert and keep going.
+                        conn.armed = Some(d);
+                        self.wheel.insert(token, d);
+                        continue;
+                    }
+                },
+            };
+            if let Some(state) = verdict {
+                if state == ConnState::Reading {
+                    // Idle keep-alive or a trickling (slow-loris) read
+                    // phase: both exhausted their phase budget.
+                    self.engine.metrics().note_conn_idle_reaped();
+                }
+                self.close_conn(token);
+            }
+        }
+    }
+
+    fn publish_gauges(&self) {
+        let (mut reading, mut writing, mut idle) = (0u64, 0u64, 0u64);
+        for c in self.conns.values() {
+            match c.state {
+                ConnState::Reading => {
+                    if c.scan.pos == 0 && c.rbuf.is_empty() {
+                        idle += 1;
+                    } else {
+                        reading += 1;
+                    }
+                }
+                ConnState::Writing => writing += 1,
+                // Dispatched conns are in none of the three: conn_open
+                // minus their sum is the in-engine count.
+                ConnState::Dispatched => {}
+            }
+        }
+        self.engine.metrics().set_conn_states(reading, writing, idle);
+    }
+
+    fn settle(&mut self, token: u64, mut conn: Conn, v: Verdict) {
+        match v {
+            Verdict::Close => self.discard(conn),
+            Verdict::Keep => {
+                let want = desired_interest(&conn);
+                if want != conn.interest {
+                    if self.poller.modify(conn.fd, token, want).is_err() {
+                        self.discard(conn);
+                        return;
+                    }
+                    conn.interest = want;
+                }
+                if conn.deadline != conn.armed {
+                    if let Some(d) = conn.deadline {
+                        self.wheel.insert(token, d);
+                    }
+                    conn.armed = conn.deadline;
+                }
+                self.conns.insert(token, conn);
+            }
+        }
+    }
+
+    fn close_conn(&mut self, token: u64) {
+        if let Some(conn) = self.conns.remove(&token) {
+            self.discard(conn);
+        }
+    }
+
+    fn discard(&mut self, mut conn: Conn) {
+        // Deregister before the fd is closed by the stream drop.
+        let _ = self.poller.deregister(conn.fd);
+        if conn.counted {
+            self.counted_conns -= 1;
+            self.engine.metrics().note_conn_closed();
+        } else {
+            self.uncounted_conns -= 1;
+        }
+        self.arena.put(std::mem::take(&mut conn.rbuf));
+        self.arena.put(std::mem::take(&mut conn.wbuf));
+    }
+}
+
+enum Step {
+    Dispatched,
+    Respond,
+    Close,
+}
+
+/// The socket interest implied by the connection's current phase.
+fn desired_interest(conn: &Conn) -> Interest {
+    match conn.state {
+        ConnState::Reading => {
+            if conn.interim_pos < conn.interim.len() {
+                Interest::BOTH
+            } else {
+                Interest::READ
+            }
+        }
+        ConnState::Dispatched => Interest::NONE,
+        ConnState::Writing => Interest::WRITE,
+    }
+}
+
+/// A resolved ticket's result. The completion countdown guarantees
+/// every ticket is resolved before this runs; the fallback arm exists
+/// so an impossible race degrades to a retryable error, never a hang.
+fn finished(t: &Ticket) -> crate::serve::session::PredictResult {
+    t.try_get()
+        .unwrap_or_else(|| Err(ServeError::Abandoned("ticket unresolved at completion".into())))
+}
+
+/// Non-blocking bulk write: advances `pos`, returns `Ok(true)` when the
+/// whole buffer is out, `Ok(false)` on `WouldBlock`.
+fn write_some(stream: &mut TcpStream, buf: &[u8], pos: &mut usize) -> io::Result<bool> {
+    while *pos < buf.len() {
+        match stream.write(&buf[*pos..]) {
+            Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+            Ok(n) => *pos += n,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(false),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan_over(raw: &[u8], chunk: usize) -> HeadScan {
+        let mut scan = HeadScan::default();
+        let mut buf = Vec::new();
+        for piece in raw.chunks(chunk.max(1)) {
+            buf.extend_from_slice(piece);
+            scan.step(&buf);
+            if scan.fatal || scan.head_end.is_some() {
+                break;
+            }
+        }
+        scan
+    }
+
+    #[test]
+    fn scan_finds_head_and_body_bounds_at_any_fragmentation() {
+        let raw = b"POST /x HTTP/1.1\r\ncontent-length: 4\r\n\r\nabcd";
+        for chunk in [1, 2, 3, 7, raw.len()] {
+            let scan = scan_over(raw, chunk);
+            assert!(!scan.fatal, "chunk {chunk}");
+            assert_eq!(scan.head_end, Some(raw.len() - 4), "chunk {chunk}");
+            assert_eq!(scan.content_length, 4);
+            assert!(scan.request_ready(raw.len()));
+            assert!(!scan.request_ready(raw.len() - 1), "body byte missing");
+        }
+    }
+
+    #[test]
+    fn scan_flags_definite_errors_without_more_input() {
+        // Malformed request line: error the moment the line completes.
+        let scan = scan_over(b"nonsense\r\nrest-never-read", 1);
+        assert!(scan.fatal);
+        // Newline-free stream at the line cap.
+        let long = vec![b'A'; MAX_HEADER_LINE as usize];
+        let scan = scan_over(&long, 512);
+        assert!(scan.fatal);
+        // A sane request line with its newline in place is fine.
+        let mut ok_line = vec![b'G'; 3];
+        ok_line.extend_from_slice(b"ET / HTTP/1.1\r\n\r\n");
+        assert!(!scan_over(&ok_line, 4).fatal);
+        // Bad content-length and transfer-encoding are fatal at the line.
+        assert!(scan_over(b"GET / HTTP/1.1\r\ncontent-length: banana\r\n", 5).fatal);
+        assert!(scan_over(b"POST / HTTP/1.1\r\ntransfer-encoding: chunked\r\n", 5).fatal);
+        // Declared body over the cap is fatal at head end.
+        let raw = format!("POST / HTTP/1.1\r\ncontent-length: {}\r\n\r\n", MAX_BODY + 1);
+        assert!(scan_over(raw.as_bytes(), 16).fatal);
+        let raw = format!("POST / HTTP/1.1\r\ncontent-length: {MAX_BODY}\r\n\r\n");
+        assert!(!scan_over(raw.as_bytes(), 16).fatal, "exactly at cap is legal");
+    }
+
+    #[test]
+    fn scan_header_count_boundary_matches_parser() {
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..MAX_HEADERS - 1 {
+            raw.extend_from_slice(format!("x-{i}: v\r\n").as_bytes());
+        }
+        raw.extend_from_slice(b"\r\n");
+        let scan = scan_over(&raw, 64);
+        assert!(!scan.fatal, "{} headers are legal", MAX_HEADERS - 1);
+        assert!(scan.head_end.is_some());
+        // One more header crosses the limit even before the blank line.
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..MAX_HEADERS {
+            raw.extend_from_slice(format!("x-{i}: v\r\n").as_bytes());
+        }
+        let scan = scan_over(&raw, 64);
+        assert!(scan.fatal);
+    }
+
+    #[test]
+    fn scan_tracks_expect_continue_and_interim_gate() {
+        let raw = b"POST / HTTP/1.1\r\nexpect: 100-continue\r\ncontent-length: 2\r\n\r\n";
+        let mut scan = HeadScan::default();
+        scan.step(raw);
+        assert!(scan.wants_interim());
+        scan.interim_queued = true;
+        assert!(!scan.wants_interim(), "interim is owed exactly once");
+        // Zero-length body never triggers the interim (parser parity).
+        let raw = b"POST / HTTP/1.1\r\nexpect: 100-continue\r\ncontent-length: 0\r\n\r\n";
+        let mut scan = HeadScan::default();
+        scan.step(raw);
+        assert!(!scan.wants_interim());
+    }
+
+    #[test]
+    fn timer_wheel_fires_on_time_and_honors_rearm() {
+        let t0 = Instant::now();
+        let tick = Duration::from_millis(10);
+        let mut wheel = TimerWheel::new(tick, t0);
+        wheel.insert(7, t0 + Duration::from_millis(25));
+        assert!(wheel.expired(t0 + Duration::from_millis(5)).is_empty());
+        let fired = wheel.expired(t0 + Duration::from_millis(40));
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].0, 7);
+        // Beyond-horizon deadlines land in the last slot and are the
+        // caller's job to re-insert (lazy re-arm).
+        wheel.insert(9, t0 + Duration::from_secs(3600));
+        let fired = wheel.expired(t0 + Duration::from_secs(2));
+        assert_eq!(fired.len(), 1, "early fire at the horizon is expected");
+        assert_eq!(fired[0].0, 9);
+    }
+
+    #[test]
+    fn arena_recycles_small_buffers_only() {
+        let mut arena = BufArena::default();
+        let mut small = Vec::with_capacity(1024);
+        small.extend_from_slice(b"data");
+        arena.put(small);
+        let big = Vec::with_capacity(ARENA_KEEP_CAP * 4);
+        arena.put(big);
+        let reused = arena.get();
+        assert!(reused.is_empty());
+        assert_eq!(reused.capacity(), 1024, "small buffer recycled, big dropped");
+        assert_eq!(arena.get().capacity(), 0, "free list exhausted");
+    }
+}

@@ -1,10 +1,22 @@
 //! Dependency-free HTTP/1.1 front-end for the serving engine.
 //!
 //! The engine itself is in-process; this module puts a network boundary in
-//! front of it using nothing but `std::net` — a blocking `TcpListener`
-//! accept loop and one thread per connection with keep-alive (the same
-//! no-external-crates constraint as the rest of the repo; no tokio, no
-//! hyper). Request bodies are the repo's own JSON ([`crate::util::json`]).
+//! front of it using nothing but `std::net` (the same no-external-crates
+//! constraint as the rest of the repo; no tokio, no hyper). Two I/O models
+//! share this module's parser, router, and response writer, selectable
+//! per server via [`HttpOptions::io_model`] (`--io-model` on the CLI):
+//!
+//! * [`IoModel::Threads`] — a blocking `TcpListener` accept loop and one
+//!   thread per connection with keep-alive (the original model; capped at
+//!   `max_connections` threads).
+//! * [`IoModel::Evented`] — a single readiness-driven event loop over
+//!   every connection (Linux epoll with a `poll(2)` fallback; see
+//!   `serve::evented`), with per-connection state machines, reusable
+//!   buffer arenas, and deadline reaping. Responses are byte-identical
+//!   to the threaded model — the two paths are differentially tested
+//!   against each other.
+//!
+//! Request bodies are the repo's own JSON ([`crate::util::json`]).
 //!
 //! Endpoints:
 //!
@@ -34,14 +46,17 @@
 //! * `GET /healthz` — 200 with the healthy-worker count, 503 when no
 //!   worker survived backend init.
 //!
-//! Connection threads are *bounded*: at most `max_connections` (default
-//! [`DEFAULT_MAX_CONNECTIONS`], configurable via
-//! [`HttpServer::bind_with_limit`]) connections are served concurrently,
-//! and over-limit accepts are answered `503` and closed immediately —
-//! an accept storm degrades into fast retryable rejections instead of
-//! unbounded thread growth.
+//! Connections are *bounded* under both models: at most `max_connections`
+//! (default [`DEFAULT_MAX_CONNECTIONS`], configurable via
+//! [`HttpServer::bind_with_limit`] / [`HttpOptions::max_connections`])
+//! connections are served concurrently, and over-limit accepts are
+//! answered `503` via a single non-blocking write and closed immediately
+//! — an accept storm degrades into fast retryable rejections instead of
+//! unbounded thread growth, and a peer that refuses to read its 503 can
+//! never stall the accept path.
 
 use crate::serve::engine::ServeEngine;
+use crate::serve::session::{PredictResult, ServeError, Ticket};
 use crate::util::json::{self, Json};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -51,15 +66,19 @@ use std::time::Duration;
 
 /// Upper bound on request bodies: far above any sane predict batch, far
 /// below what a misbehaving client could use to exhaust memory.
-const MAX_BODY: usize = 16 << 20;
+pub const MAX_BODY: usize = 16 << 20;
 /// Upper bound on the request line and each header line; reads stop at
 /// this many bytes, so a newline-free byte stream cannot grow a String
 /// without limit.
-const MAX_HEADER_LINE: u64 = 8 << 10;
+pub const MAX_HEADER_LINE: u64 = 8 << 10;
 /// Upper bound on the number of header lines per request.
-const MAX_HEADERS: usize = 128;
-/// Idle keep-alive connections are dropped after this long.
-const IDLE_TIMEOUT: Duration = Duration::from_secs(30);
+pub const MAX_HEADERS: usize = 128;
+/// Default for [`HttpOptions::idle_timeout`]: idle keep-alive
+/// connections are dropped after this long.
+pub const DEFAULT_IDLE_TIMEOUT: Duration = Duration::from_secs(30);
+/// The interim response for `Expect: 100-continue`, shared by both io
+/// models so the byte stream is identical.
+pub(crate) const CONTINUE_LINE: &[u8] = b"HTTP/1.1 100 Continue\r\n\r\n";
 /// Poll interval of the non-blocking accept loop — the worst-case added
 /// latency for establishing a brand-new connection (keep-alive traffic
 /// never pays it), and the bound on shutdown latency.
@@ -69,23 +88,81 @@ const ACCEPT_POLL: Duration = Duration::from_millis(10);
 /// storm would need to exhaust memory with connection threads.
 pub const DEFAULT_MAX_CONNECTIONS: usize = 1024;
 
-/// Decrements the live-connection count when a connection ends for any
-/// reason — clean close, idle timeout, handler error, or a failed thread
-/// spawn (the guard is created before the spawn and travels into it).
+/// How the front-end multiplexes connections onto threads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoModel {
+    /// One blocking thread per connection (the original model). Simple
+    /// and portable; memory and scheduler load grow with the connection
+    /// count, so it is capped at `max_connections` threads.
+    Threads,
+    /// One readiness-driven event loop over every connection (Linux
+    /// epoll with a `poll(2)` fallback — see `serve::evented`).
+    /// Thousands of mostly-idle keep-alive connections cost one thread
+    /// total; scoring still happens on the engine's worker pool.
+    Evented,
+}
+
+impl IoModel {
+    /// Parse a `--io-model` flag value.
+    pub fn from_name(name: &str) -> Option<IoModel> {
+        match name {
+            "threads" => Some(IoModel::Threads),
+            "evented" => Some(IoModel::Evented),
+            _ => None,
+        }
+    }
+}
+
+/// Tunables for [`HttpServer::bind_with_opts`]. `..Default::default()`
+/// fills unspecified fields with the documented defaults.
+#[derive(Clone, Debug)]
+pub struct HttpOptions {
+    /// Cap on concurrently served connections; `0` means unbounded
+    /// (trusted closed-loop clients only). Default
+    /// [`DEFAULT_MAX_CONNECTIONS`].
+    pub max_connections: usize,
+    /// Connection multiplexing model. Default [`IoModel::Threads`].
+    pub io_model: IoModel,
+    /// Connections idle at a request boundary longer than this are
+    /// dropped. Under [`IoModel::Evented`] the same budget also bounds
+    /// each *phase* of a request (reading the head, reading the body,
+    /// draining the response), so a slow-loris trickler is reaped even
+    /// though it never goes fully quiet. Default
+    /// [`DEFAULT_IDLE_TIMEOUT`].
+    pub idle_timeout: Duration,
+}
+
+impl Default for HttpOptions {
+    fn default() -> HttpOptions {
+        HttpOptions {
+            max_connections: DEFAULT_MAX_CONNECTIONS,
+            io_model: IoModel::Threads,
+            idle_timeout: DEFAULT_IDLE_TIMEOUT,
+        }
+    }
+}
+
+/// Decrements the live-connection count (and the `conn_open` gauge) when
+/// a connection ends for any reason — clean close, idle timeout, handler
+/// error, or a failed thread spawn (the guard is created before the
+/// spawn and travels into it).
 struct ConnGuard {
     active: Arc<AtomicUsize>,
+    engine: Arc<ServeEngine>,
 }
 
 impl ConnGuard {
-    fn new(active: Arc<AtomicUsize>) -> ConnGuard {
+    fn new(active: Arc<AtomicUsize>, engine: Arc<ServeEngine>) -> ConnGuard {
         active.fetch_add(1, Ordering::AcqRel);
-        ConnGuard { active }
+        engine.metrics().note_conn_opened();
+        ConnGuard { active, engine }
     }
 }
 
 impl Drop for ConnGuard {
     fn drop(&mut self) {
         self.active.fetch_sub(1, Ordering::AcqRel);
+        self.engine.metrics().note_conn_closed();
     }
 }
 
@@ -98,14 +175,17 @@ pub struct HttpServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    /// Nudges the evented loop out of its poller wait so shutdown is
+    /// immediate; `None` for the threaded model, whose accept loop polls.
+    waker: Option<Box<dyn Fn() + Send + Sync>>,
 }
 
 impl HttpServer {
     /// Bind `addr` (e.g. `"127.0.0.1:8080"`, or port 0 for an ephemeral
     /// port — read the chosen one back via [`HttpServer::addr`]) and
-    /// start serving `engine`, with the default connection cap.
+    /// start serving `engine`, with the default options.
     pub fn bind(engine: Arc<ServeEngine>, addr: &str) -> anyhow::Result<HttpServer> {
-        Self::bind_with_limit(engine, addr, DEFAULT_MAX_CONNECTIONS)
+        Self::bind_with_opts(engine, addr, HttpOptions::default())
     }
 
     /// [`HttpServer::bind`] with an explicit cap on concurrently served
@@ -117,6 +197,23 @@ impl HttpServer {
         addr: &str,
         max_connections: usize,
     ) -> anyhow::Result<HttpServer> {
+        Self::bind_with_opts(
+            engine,
+            addr,
+            HttpOptions {
+                max_connections,
+                ..HttpOptions::default()
+            },
+        )
+    }
+
+    /// [`HttpServer::bind`] with the full option set, including the io
+    /// model. `IoModel::Evented` is Linux-only and fails fast elsewhere.
+    pub fn bind_with_opts(
+        engine: Arc<ServeEngine>,
+        addr: &str,
+        opts: HttpOptions,
+    ) -> anyhow::Result<HttpServer> {
         let listener = TcpListener::bind(addr)
             .map_err(|e| anyhow::anyhow!("binding HTTP listener on {addr}: {e}"))?;
         let addr = listener.local_addr()?;
@@ -127,6 +224,23 @@ impl HttpServer {
         // cannot connect back to.)
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
+        if opts.io_model == IoModel::Evented {
+            #[cfg(target_os = "linux")]
+            {
+                let (handle, wake) =
+                    crate::serve::evented::spawn(engine, listener, &opts, Arc::clone(&stop))?;
+                return Ok(HttpServer {
+                    addr,
+                    stop,
+                    accept_thread: Some(handle),
+                    waker: Some(Box::new(move || wake.wake())),
+                });
+            }
+            #[cfg(not(target_os = "linux"))]
+            anyhow::bail!("io-model 'evented' requires Linux (epoll); use --io-model threads");
+        }
+        let max_connections = opts.max_connections;
+        let idle_timeout = opts.idle_timeout;
         let accept_stop = Arc::clone(&stop);
         // Only the accept thread increments the count (via ConnGuard), so
         // the check below is race-free: the cap can never be exceeded.
@@ -144,30 +258,25 @@ impl HttpServer {
                             if max_connections > 0
                                 && active.load(Ordering::Acquire) >= max_connections
                             {
-                                // Over the cap: fast 503 on the accept
-                                // thread, bounded by a write timeout so a
-                                // slow-reading peer cannot stall accepts.
-                                let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
-                                let body = error_json(&format!(
-                                    "connection limit reached ({max_connections} open); retry"
-                                ));
-                                let _ = write_response(
-                                    &mut stream,
-                                    503,
-                                    "application/json",
-                                    body.as_bytes(),
-                                    false,
-                                );
+                                // Over the cap: best-effort 503 via one
+                                // non-blocking write, then drop. The old
+                                // blocking write (even with a timeout)
+                                // let a single peer that never reads
+                                // stall every subsequent accept behind
+                                // it; now a full socket buffer just
+                                // loses the courtesy body.
+                                reject_over_cap(stream, max_connections);
                                 continue;
                             }
-                            let guard = ConnGuard::new(Arc::clone(&active));
+                            let guard =
+                                ConnGuard::new(Arc::clone(&active), Arc::clone(&engine));
                             let engine = Arc::clone(&engine);
                             let stop = Arc::clone(&accept_stop);
                             let _ = std::thread::Builder::new()
                                 .name("lpdsvm-http-conn".to_string())
                                 .spawn(move || {
                                     let _guard = guard;
-                                    let _ = serve_connection(stream, &engine, &stop);
+                                    let _ = serve_connection(stream, &engine, &stop, idle_timeout);
                                 });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -183,6 +292,7 @@ impl HttpServer {
             addr,
             stop,
             accept_thread: Some(accept_thread),
+            waker: None,
         })
     }
 
@@ -198,7 +308,11 @@ impl HttpServer {
 
     fn do_shutdown(&mut self) {
         self.stop.store(true, Ordering::Release);
-        // The poll-based accept loop observes the flag within ACCEPT_POLL.
+        // The poll-based accept loop observes the flag within
+        // ACCEPT_POLL; the evented loop is woken explicitly.
+        if let Some(w) = &self.waker {
+            w();
+        }
         if let Some(h) = self.accept_thread.take() {
             let _ = h.join();
         }
@@ -215,7 +329,7 @@ impl Drop for HttpServer {
 /// 413 (a size problem the client can fix by splitting the batch) instead
 /// of a generic 400.
 #[derive(Debug)]
-struct PayloadTooLarge(usize);
+pub(crate) struct PayloadTooLarge(usize);
 
 impl std::fmt::Display for PayloadTooLarge {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
@@ -226,12 +340,12 @@ impl std::fmt::Display for PayloadTooLarge {
 impl std::error::Error for PayloadTooLarge {}
 
 /// One parsed HTTP request.
-struct Request {
-    method: String,
-    path: String,
-    query: String,
-    body: Vec<u8>,
-    keep_alive: bool,
+pub(crate) struct Request {
+    pub(crate) method: String,
+    pub(crate) path: String,
+    pub(crate) query: String,
+    pub(crate) body: Vec<u8>,
+    pub(crate) keep_alive: bool,
 }
 
 /// Read one line, refusing to buffer more than [`MAX_HEADER_LINE`] bytes
@@ -256,7 +370,7 @@ fn read_limited_line<R: BufRead>(r: &mut R) -> anyhow::Result<Option<String>> {
 /// `Expect: 100-continue` — without it, curl-style clients stall ~1 s
 /// before every POST body waiting for a go-ahead this server would never
 /// send.
-fn read_request<R: BufRead>(
+pub(crate) fn read_request<R: BufRead>(
     r: &mut R,
     mut writer: Option<&mut TcpStream>,
 ) -> anyhow::Result<Option<Request>> {
@@ -304,7 +418,7 @@ fn read_request<R: BufRead>(
     }
     if expect_continue && content_length > 0 {
         if let Some(w) = writer.as_deref_mut() {
-            w.write_all(b"HTTP/1.1 100 Continue\r\n\r\n")?;
+            w.write_all(CONTINUE_LINE)?;
             w.flush()?;
         }
     }
@@ -328,12 +442,34 @@ fn read_request<R: BufRead>(
     }))
 }
 
+/// Best-effort 503 for an over-cap accept: a single non-blocking write,
+/// then drop. This path must never block the accept thread — a peer
+/// with a full (or never-read) receive window simply misses the
+/// courtesy body and observes the close.
+fn reject_over_cap(mut stream: TcpStream, max_connections: usize) {
+    if stream.set_nonblocking(true).is_err() {
+        return;
+    }
+    let body = error_json(&format!(
+        "connection limit reached ({max_connections} open); retry"
+    ));
+    let mut frame = response_head(503, "application/json", body.len(), false).into_bytes();
+    frame.extend_from_slice(body.as_bytes());
+    match stream.write(&frame) {
+        // One shot, no retry loop: a short write truncates the courtesy
+        // body, and the close that follows is the real back-off signal.
+        Ok(_sent) => {}
+        Err(_) => {}
+    }
+}
+
 fn serve_connection(
     stream: TcpStream,
     engine: &ServeEngine,
     stop: &AtomicBool,
+    idle_timeout: Duration,
 ) -> std::io::Result<()> {
-    stream.set_read_timeout(Some(IDLE_TIMEOUT))?;
+    stream.set_read_timeout(Some(idle_timeout))?;
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
@@ -347,24 +483,13 @@ fn serve_connection(
             Err(e) => {
                 // Idle timeout: the peer just went quiet — close without
                 // a response. Anything else is a malformed request:
-                // best-effort 400, then close (framing is untrustable).
-                let timed_out = e.downcast_ref::<std::io::Error>().is_some_and(|io| {
-                    matches!(
-                        io.kind(),
-                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                    )
-                });
-                if !timed_out {
-                    let status = if e.downcast_ref::<PayloadTooLarge>().is_some() {
-                        413
-                    } else {
-                        400
-                    };
-                    let body = error_json(&format!("bad request: {e}"));
+                // best-effort 400/413, then close (framing is
+                // untrustable).
+                if let Some((status, content_type, body)) = parse_error_response(&e) {
                     let _ = write_response(
                         &mut writer,
                         status,
-                        "application/json",
+                        content_type,
                         body.as_bytes(),
                         false,
                     );
@@ -380,11 +505,65 @@ fn serve_connection(
     }
 }
 
+/// Mapping of a request-parse failure to its wire response, shared by
+/// both io models so the byte stream is identical. `None` = the peer
+/// just went quiet past the idle timeout: close without a response.
+pub(crate) fn parse_error_response(e: &anyhow::Error) -> Option<(u16, &'static str, String)> {
+    let timed_out = e.downcast_ref::<std::io::Error>().is_some_and(|io| {
+        matches!(
+            io.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        )
+    });
+    if timed_out {
+        return None;
+    }
+    let status = if e.downcast_ref::<PayloadTooLarge>().is_some() {
+        413
+    } else {
+        400
+    };
+    Some((
+        status,
+        "application/json",
+        error_json(&format!("bad request: {e}")),
+    ))
+}
+
+/// Outcome of [`route_request`]: either a complete response, or a
+/// predict whose rows were submitted to the engine and whose tickets
+/// are still pending. The caller decides how to wait — blocking
+/// (threaded model) or via completion callbacks (evented model) — and
+/// then assembles the body with [`predict_response`].
+pub(crate) enum Routed {
+    Ready(u16, &'static str, String),
+    Predict {
+        model: String,
+        tickets: Vec<Result<Ticket, ServeError>>,
+    },
+}
+
 fn route(engine: &ServeEngine, req: &Request) -> (u16, &'static str, String) {
+    match route_request(engine, req) {
+        Routed::Ready(status, content_type, body) => (status, content_type, body),
+        Routed::Predict { model, tickets } => predict_response(
+            &model,
+            tickets.into_iter().map(|t| match t {
+                Ok(t) => t.wait(),
+                Err(e) => Err(e),
+            }),
+        ),
+    }
+}
+
+/// Route one request: answer everything but predict inline, and for
+/// predict submit every row (so one POST coalesces into the same
+/// micro-batches as in-process traffic) without waiting on any ticket.
+pub(crate) fn route_request(engine: &ServeEngine, req: &Request) -> Routed {
     const MODEL_PREFIX: &str = "/v1/models/";
     const PREDICT_SUFFIX: &str = ":predict";
     const CONFIG_SUFFIX: &str = ":config";
-    match (req.method.as_str(), req.path.as_str()) {
+    let ready = match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => healthz(engine),
         ("GET", "/metrics") => metrics(engine, &req.query),
         ("GET", "/v1/models") => models(engine),
@@ -399,7 +578,7 @@ fn route(engine: &ServeEngine, req: &Request) -> (u16, &'static str, String) {
             if name.is_empty() {
                 (400, "application/json", error_json("empty model name"))
             } else {
-                predict(engine, name, &req.body)
+                return predict(engine, name, &req.body);
             }
         }
         ("PUT", p) if p.starts_with(MODEL_PREFIX) && p.ends_with(CONFIG_SUFFIX) => {
@@ -415,7 +594,8 @@ fn route(engine: &ServeEngine, req: &Request) -> (u16, &'static str, String) {
         }
         ("GET" | "POST" | "PUT", _) => (404, "application/json", error_json("no such endpoint")),
         _ => (405, "application/json", error_json("method not allowed")),
-    }
+    };
+    Routed::Ready(ready.0, ready.1, ready.2)
 }
 
 /// `PUT /v1/models/{name}:config` — update a registered model's serve
@@ -491,34 +671,49 @@ fn set_config(engine: &ServeEngine, name: &str, body: &[u8]) -> (u16, &'static s
     (200, "application/json", body)
 }
 
-fn predict(engine: &ServeEngine, model: &str, body: &[u8]) -> (u16, &'static str, String) {
+fn predict(engine: &ServeEngine, model: &str, body: &[u8]) -> Routed {
     let text = match std::str::from_utf8(body) {
         Ok(t) => t,
-        Err(_) => return (400, "application/json", error_json("body is not UTF-8")),
+        Err(_) => {
+            return Routed::Ready(400, "application/json", error_json("body is not UTF-8"))
+        }
     };
     let parsed = match Json::parse(text) {
         Ok(v) => v,
         Err(e) => {
-            return (400, "application/json", error_json(&format!("invalid JSON: {e}")))
+            return Routed::Ready(
+                400,
+                "application/json",
+                error_json(&format!("invalid JSON: {e}")),
+            )
         }
     };
     let rows = match parse_rows(&parsed) {
         Ok(rows) => rows,
-        Err(msg) => return (400, "application/json", error_json(&msg)),
+        Err(msg) => return Routed::Ready(400, "application/json", error_json(&msg)),
     };
 
     // Submit every row before waiting on any, so one POST coalesces into
     // the same micro-batches as in-process traffic instead of serialising
     // row by row.
     let tickets: Vec<_> = rows.iter().map(|r| engine.try_submit(model, r)).collect();
+    Routed::Predict {
+        model: model.to_string(),
+        tickets,
+    }
+}
+
+/// Assemble the predict response from per-row results, in submit order.
+/// Shared by both io models so the body (and the 200/400/503 status
+/// policy) is identical however the tickets were awaited.
+pub(crate) fn predict_response(
+    model: &str,
+    results: impl IntoIterator<Item = PredictResult>,
+) -> (u16, &'static str, String) {
     let mut any_unavailable = false;
     let mut any_failed = false;
-    let mut predictions = Vec::with_capacity(tickets.len());
-    for ticket in tickets {
-        let result = match ticket {
-            Ok(t) => t.wait(),
-            Err(e) => Err(e),
-        };
+    let mut predictions = Vec::new();
+    for result in results {
         match result {
             Ok(p) => predictions.push(json::obj(vec![
                 ("label", json::unum(p.label as u64)),
@@ -637,17 +832,18 @@ fn models(engine: &ServeEngine) -> (u16, &'static str, String) {
     (200, "application/json", body)
 }
 
-fn error_json(msg: &str) -> String {
+pub(crate) fn error_json(msg: &str) -> String {
     json::obj(vec![("error", json::s(msg))]).to_string()
 }
 
-fn write_response(
-    stream: &mut TcpStream,
+/// The response head, byte-identical across both io models (the evented
+/// loop builds its write buffers from this same function).
+pub(crate) fn response_head(
     status: u16,
     content_type: &str,
-    body: &[u8],
+    body_len: usize,
     keep_alive: bool,
-) -> std::io::Result<()> {
+) -> String {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
@@ -657,11 +853,21 @@ fn write_response(
         503 => "Service Unavailable",
         _ => "Error",
     };
-    let head = format!(
+    format!(
         "HTTP/1.1 {status} {reason}\r\ncontent-type: {content_type}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
-        body.len(),
+        body_len,
         if keep_alive { "keep-alive" } else { "close" }
-    );
+    )
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let head = response_head(status, content_type, body.len(), keep_alive);
     stream.write_all(head.as_bytes())?;
     stream.write_all(body)?;
     stream.flush()

@@ -227,6 +227,23 @@ pub struct ServeMetrics {
     pub queue_depth: AtomicU64,
     /// High-water mark of `queue_depth`.
     pub queue_depth_max: AtomicU64,
+    /// Open HTTP connections across every front-end bound to this
+    /// engine, both io models (a gauge: accept increments, close
+    /// decrements).
+    pub conn_open: AtomicU64,
+    /// Evented front-end census: connections mid-request (reading a
+    /// head or body). Republished by the event loop after every event
+    /// batch; always 0 under `--io-model threads`.
+    pub conn_reading: AtomicU64,
+    /// Evented front-end census: connections draining a response.
+    pub conn_writing: AtomicU64,
+    /// Evented front-end census: idle keep-alive connections (between
+    /// requests, nothing buffered).
+    pub conn_idle: AtomicU64,
+    /// Connections reaped by the idle/header/write deadline
+    /// (`--idle-timeout-ms`): slow-loris tricklers, silent peers, and
+    /// stalled response readers.
+    pub conn_idle_reaped: AtomicU64,
     /// End-to-end request latency, microseconds.
     pub latency_us: Histogram,
     /// Time spent waiting in the queue, microseconds.
@@ -371,6 +388,30 @@ impl ServeMetrics {
         self.service_us.record(service.as_micros() as u64);
     }
 
+    /// An HTTP front-end accepted a connection (both io models).
+    pub(crate) fn note_conn_opened(&self) {
+        self.conn_open.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An HTTP connection ended, for any reason.
+    pub(crate) fn note_conn_closed(&self) {
+        self.conn_open.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// The evented loop republishes its per-state connection census
+    /// after each event batch — a full recount of a map it owns, so the
+    /// gauges can never drift the way per-transition bookkeeping could.
+    pub(crate) fn set_conn_states(&self, reading: u64, writing: u64, idle: u64) {
+        self.conn_reading.store(reading, Ordering::Relaxed);
+        self.conn_writing.store(writing, Ordering::Relaxed);
+        self.conn_idle.store(idle, Ordering::Relaxed);
+    }
+
+    /// A connection was reaped by the idle/header/write deadline.
+    pub(crate) fn note_conn_idle_reaped(&self) {
+        self.conn_idle_reaped.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Completed requests per second over `elapsed`.
     pub fn throughput(&self, elapsed: Duration) -> f64 {
         let secs = elapsed.as_secs_f64();
@@ -400,6 +441,8 @@ impl ServeMetrics {
         t.row(&["quarantine recoveries".into(), c(&self.quarantine_recoveries)]);
         t.row(&["mean batch size".into(), format!("{:.1}", self.batch_size.mean())]);
         t.row(&["max queue depth".into(), c(&self.queue_depth_max)]);
+        t.row(&["open connections".into(), c(&self.conn_open)]);
+        t.row(&["connections reaped (idle)".into(), c(&self.conn_idle_reaped)]);
         t.row(&["latency p50 (ms)".into(), ms(self.latency_us.quantile(0.50))]);
         t.row(&["latency p90 (ms)".into(), ms(self.latency_us.quantile(0.90))]);
         t.row(&["latency p99 (ms)".into(), ms(self.latency_us.quantile(0.99))]);
@@ -435,6 +478,11 @@ impl ServeMetrics {
             ("healthy_workers", c(&self.healthy_workers)),
             ("queue_depth", c(&self.queue_depth)),
             ("queue_depth_max", c(&self.queue_depth_max)),
+            ("conn_open", c(&self.conn_open)),
+            ("conn_reading", c(&self.conn_reading)),
+            ("conn_writing", c(&self.conn_writing)),
+            ("conn_idle", c(&self.conn_idle)),
+            ("conn_idle_reaped", c(&self.conn_idle_reaped)),
             ("elapsed_secs", json::num(elapsed.as_secs_f64())),
             ("throughput_rps", json::num(self.throughput(elapsed))),
             ("latency_us", self.latency_us.to_json()),
@@ -538,6 +586,38 @@ impl ServeMetrics {
             "Scoring workers currently alive and accepting batches.",
         );
         p.sample("lpdsvm_serve_healthy_workers", &[], v(&self.healthy_workers));
+        let conn_gauges: [(&str, &AtomicU64, &str); 4] = [
+            (
+                "lpdsvm_serve_conn_open",
+                &self.conn_open,
+                "Open HTTP connections across every bound front-end.",
+            ),
+            (
+                "lpdsvm_serve_conn_reading",
+                &self.conn_reading,
+                "Evented front-end connections mid-request (head or body).",
+            ),
+            (
+                "lpdsvm_serve_conn_writing",
+                &self.conn_writing,
+                "Evented front-end connections draining a response.",
+            ),
+            (
+                "lpdsvm_serve_conn_idle",
+                &self.conn_idle,
+                "Evented front-end idle keep-alive connections.",
+            ),
+        ];
+        for (name, a, help) in conn_gauges {
+            p.family(name, "gauge", help);
+            p.sample(name, &[], v(a));
+        }
+        p.family(
+            "lpdsvm_serve_conn_idle_reaped_total",
+            "counter",
+            "Connections reaped by the idle/header/write deadline.",
+        );
+        p.sample("lpdsvm_serve_conn_idle_reaped_total", &[], v(&self.conn_idle_reaped));
 
         let histograms: [(&str, &Histogram, &str); 4] = [
             (

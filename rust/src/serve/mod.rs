@@ -45,10 +45,14 @@
 //!   queue depth, shed/rejection counters, batch-size distribution,
 //!   throughput; per-model rollups; JSON, table, and Prometheus text
 //!   exposition snapshots.
-//! * [`session`] — per-request tickets (futures-style result delivery).
+//! * [`session`] — per-request tickets (futures-style result delivery,
+//!   blocking waits or completion callbacks).
 //! * [`http`] — dependency-free HTTP/1.1 front-end (`:predict`,
 //!   `:config`, `/v1/models`, `/metrics`, `/healthz`) over the same
-//!   engine, with a bounded connection-thread pool.
+//!   engine. Two io models ([`IoModel`]): a bounded thread-per-connection
+//!   pool, or a single readiness-driven event loop (`evented`, Linux
+//!   epoll/poll) that serves thousands of keep-alive connections from
+//!   one thread with byte-identical responses.
 //!
 //! ```no_run
 //! use lpdsvm::prelude::*;
@@ -65,6 +69,8 @@
 //! ```
 
 pub mod engine;
+#[cfg(target_os = "linux")]
+pub(crate) mod evented;
 pub mod http;
 pub mod metrics;
 pub mod registry;
@@ -74,7 +80,7 @@ pub use engine::{
     BackendProvider, NativeProvider, PjrtProvider, ServeConfig, ServeEngine, ShedPolicy,
     UNREGISTERED_BUCKET,
 };
-pub use http::HttpServer;
+pub use http::{HttpOptions, HttpServer, IoModel};
 pub use metrics::{Histogram, ModelMetrics, ServeMetrics};
 pub use registry::{ModelRegistry, ModelServeConfig, ServingModel};
 pub use session::{PredictResult, Prediction, ServeError, Ticket};

@@ -123,8 +123,20 @@ impl std::error::Error for ServeError {}
 /// Result type delivered through a [`Ticket`].
 pub type PredictResult = Result<Prediction, ServeError>;
 
+/// Interior of a ticket slot: the one-shot result plus an optional
+/// completion hook. Both live under a single mutex so "resolved" and
+/// "waker consumed" can never be observed in contradictory orders.
+struct SlotState {
+    result: Option<PredictResult>,
+    /// Completion hook for non-blocking waiters (the evented HTTP front
+    /// end): fired exactly once, after the result is stored, *outside*
+    /// the slot lock — a waker may take its own locks (the event loop's
+    /// completion queue) and must not nest them under this one.
+    waker: Option<Box<dyn FnOnce() + Send>>,
+}
+
 struct Slot {
-    value: Mutex<Option<PredictResult>>,
+    value: Mutex<SlotState>,
     ready: Condvar,
 }
 
@@ -144,7 +156,7 @@ impl Ticket {
             Err(e) => return Err(e.into()),
         };
         loop {
-            if let Some(r) = v.as_ref() {
+            if let Some(r) = v.result.as_ref() {
                 return r.clone();
             }
             v = match self.slot.ready.wait(v) {
@@ -162,7 +174,7 @@ impl Ticket {
         };
         let deadline = std::time::Instant::now() + timeout;
         loop {
-            if let Some(r) = v.as_ref() {
+            if let Some(r) = v.result.as_ref() {
                 return Some(r.clone());
             }
             let now = std::time::Instant::now();
@@ -180,16 +192,41 @@ impl Ticket {
     /// Non-blocking poll.
     pub fn try_get(&self) -> Option<PredictResult> {
         match lock_checked(&self.slot.value, "ticket slot") {
-            Ok(g) => g.clone(),
+            Ok(g) => g.result.clone(),
             Err(e) => Some(Err(e.into())),
         }
     }
 
     /// Whether the engine has already resolved this request. The slot
-    /// is a single `Option` (valid at every statement boundary), so a
-    /// poisoned flag is recovered through rather than surfaced.
+    /// state is valid at every statement boundary, so a poisoned flag is
+    /// recovered through rather than surfaced.
     pub fn is_done(&self) -> bool {
-        lock_recover(&self.slot.value).is_some()
+        lock_recover(&self.slot.value).result.is_some()
+    }
+
+    /// Register `f` to run as soon as the engine resolves this request —
+    /// the non-blocking counterpart of [`Ticket::wait`], used by the
+    /// evented HTTP front end to get completions delivered to its wakeup
+    /// pipe instead of parking a thread per request.
+    ///
+    /// Exactly-once semantics: if the ticket is already resolved, `f`
+    /// runs immediately on the calling thread; otherwise it runs on
+    /// whichever engine thread resolves the ticket (worker, shed path,
+    /// or shutdown). In every case it runs *outside* the slot lock, so a
+    /// waker may freely inspect the ticket or take its own locks. At
+    /// most one waker per ticket: a second registration replaces an
+    /// unfired first.
+    pub fn on_ready(&self, f: impl FnOnce() + Send + 'static) {
+        // lock_recover: a poisoned slot still carries a valid state, and
+        // the waker path must fire even after a panic elsewhere —
+        // swallowing it would strand an evented connection forever.
+        let mut v = lock_recover(&self.slot.value);
+        if v.result.is_some() {
+            drop(v);
+            f();
+        } else {
+            v.waker = Some(Box::new(f));
+        }
     }
 }
 
@@ -219,11 +256,21 @@ impl Fulfiller {
     fn resolve(&self, result: PredictResult) {
         // lock_recover, not lock_checked: resolve runs from Drop on the
         // abandonment path, where a panic would escalate to a double
-        // panic; the single-`Option` slot is always valid to write.
+        // panic; the slot state is always valid to write.
         let mut v = lock_recover(&self.slot.value);
-        if v.is_none() {
-            *v = Some(result);
+        let waker = if v.result.is_none() {
+            v.result = Some(result);
             self.slot.ready.notify_all();
+            v.waker.take()
+        } else {
+            None
+        };
+        // Fire the completion hook outside the slot lock: it may push
+        // into the event loop's completion queue (its own lock) and must
+        // not nest that acquisition under this one.
+        drop(v);
+        if let Some(w) = waker {
+            w();
         }
     }
 }
@@ -244,7 +291,7 @@ impl Drop for Fulfiller {
 /// Create a connected (client, engine) pair for one request.
 pub(crate) fn channel() -> (Ticket, Fulfiller) {
     let slot = Arc::new(Slot {
-        value: Mutex::new(None),
+        value: Mutex::new(SlotState { result: None, waker: None }),
         ready: Condvar::new(),
     });
     (
@@ -335,5 +382,45 @@ mod tests {
         let (ticket, _keep) = channel();
         assert!(ticket.wait_timeout(Duration::from_millis(5)).is_none());
         assert!(!ticket.is_done());
+    }
+
+    #[test]
+    fn on_ready_fires_on_fulfil() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let hits = Arc::new(AtomicU32::new(0));
+
+        // Pending ticket: the waker fires on the fulfilling thread.
+        let (ticket, fulfiller) = channel();
+        let h = Arc::clone(&hits);
+        ticket.on_ready(move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 0, "waker fired before resolution");
+        fulfiller.fulfill(Ok(Prediction { label: 2, batch_size: 1, queue_us: 0, total_us: 0 }));
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+        assert_eq!(ticket.try_get().unwrap().unwrap().label, 2);
+
+        // Already-resolved ticket: the waker fires inline, exactly once.
+        ticket.on_ready({
+            let h = Arc::clone(&hits);
+            move || {
+                h.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn on_ready_fires_on_abandonment() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let hits = Arc::new(AtomicU32::new(0));
+        let (ticket, fulfiller) = channel();
+        let h = Arc::clone(&hits);
+        ticket.on_ready(move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        });
+        drop(fulfiller);
+        assert_eq!(hits.load(Ordering::Relaxed), 1, "abandonment must fire the waker");
+        assert!(ticket.try_get().unwrap().is_err());
     }
 }

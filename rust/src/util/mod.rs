@@ -23,6 +23,8 @@ pub mod fsio;
 pub mod hash;
 pub mod json;
 pub mod mem;
+#[cfg(target_os = "linux")]
+pub mod net;
 pub mod rng;
 pub mod sync;
 pub mod threads;

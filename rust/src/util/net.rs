@@ -1,0 +1,490 @@
+//! Readiness polling without a libc crate: `epoll` (with a `poll(2)`
+//! fallback) and a self-wake pipe, declared directly against the platform
+//! C library that `std` already links.
+//!
+//! This is the substrate of the evented HTTP front-end
+//! (`crate::serve::evented`): a [`Poller`] multiplexes thousands of
+//! nonblocking sockets onto one thread, and a [`WakePipe`] lets scoring
+//! workers nudge that thread from the outside without touching a socket.
+//! Everything here is Linux-only (the module is gated in `util/mod.rs`);
+//! the rest of the crate compiles without it and the CLI rejects
+//! `--io-model evented` on other platforms.
+//!
+//! Why two pollers: `epoll` is the scalable production path (O(ready)
+//! wakeups), while [`PollPoller`] drives the identical event loop through
+//! portable `poll(2)` — a differential double-check of the readiness
+//! plumbing (`LPDSVM_POLLER=poll` selects it at runtime) and the fallback
+//! the tentpole design calls for.
+
+use std::io;
+use std::os::unix::io::RawFd;
+use std::time::Duration;
+
+// Linux ABI constants (asm-generic values; x86_64 and aarch64 agree).
+const EPOLL_CLOEXEC: i32 = 0o2000000;
+const EPOLL_CTL_ADD: i32 = 1;
+const EPOLL_CTL_DEL: i32 = 2;
+const EPOLL_CTL_MOD: i32 = 3;
+const EPOLLIN: u32 = 0x001;
+const EPOLLOUT: u32 = 0x004;
+const EPOLLERR: u32 = 0x008;
+const EPOLLHUP: u32 = 0x010;
+const POLLIN: i16 = 0x001;
+const POLLOUT: i16 = 0x004;
+const POLLERR: i16 = 0x008;
+const POLLHUP: i16 = 0x010;
+const POLLNVAL: i16 = 0x020;
+const O_NONBLOCK: i32 = 0o4000;
+const O_CLOEXEC: i32 = 0o2000000;
+
+/// `struct epoll_event`. The kernel ABI packs it on x86_64 (12 bytes,
+/// align 1) and leaves natural alignment elsewhere; mirror glibc's
+/// `__EPOLL_PACKED` split or `epoll_wait` would scribble past every
+/// other entry of the event array.
+#[cfg(target_arch = "x86_64")]
+#[repr(C, packed)]
+#[derive(Clone, Copy)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+/// `struct epoll_event` with the natural (non-x86_64) layout.
+#[cfg(not(target_arch = "x86_64"))]
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+/// `struct pollfd` — identical layout on every Linux target.
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct PollFd {
+    fd: i32,
+    events: i16,
+    revents: i16,
+}
+
+extern "C" {
+    fn epoll_create1(flags: i32) -> i32;
+    fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+    fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+    fn poll(fds: *mut PollFd, nfds: u64, timeout: i32) -> i32;
+    fn pipe2(fds: *mut i32, flags: i32) -> i32;
+    fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+    fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    fn close(fd: i32) -> i32;
+}
+
+/// Which directions a registered fd wants readiness for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest { readable: true, writable: false };
+    pub const WRITE: Interest = Interest { readable: false, writable: true };
+    pub const BOTH: Interest = Interest { readable: true, writable: true };
+    /// Error/hangup only — a parked connection (e.g. one waiting on the
+    /// engine) that should still learn about a peer disappearing.
+    pub const NONE: Interest = Interest { readable: false, writable: false };
+}
+
+/// One readiness report from [`Poller::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// The token the fd was registered under.
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    /// Error or hangup: the fd needs attention regardless of interest.
+    pub error: bool,
+}
+
+fn last_err() -> io::Error {
+    io::Error::last_os_error()
+}
+
+/// `Duration` → poll/epoll millisecond timeout. `None` blocks forever;
+/// sub-millisecond waits round up so a short deadline cannot spin.
+fn timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        None => -1,
+        Some(d) => {
+            let ms = d.as_millis().min(i32::MAX as u128) as i32;
+            if ms == 0 && !d.is_zero() {
+                1
+            } else {
+                ms
+            }
+        }
+    }
+}
+
+/// Readiness multiplexer: epoll by default, `poll(2)` when constructed
+/// via [`Poller::new_poll`] (or `LPDSVM_POLLER=poll`). Both variants
+/// expose the same level-triggered register/modify/deregister/wait
+/// surface, so the event loop above is oblivious to the backend.
+pub enum Poller {
+    Epoll(EpollPoller),
+    Poll(PollPoller),
+}
+
+impl Poller {
+    /// Backend chosen by `LPDSVM_POLLER` (`epoll` default, `poll` the
+    /// portable fallback).
+    pub fn new() -> io::Result<Poller> {
+        match std::env::var("LPDSVM_POLLER").as_deref() {
+            Ok("poll") => Ok(Self::new_poll()),
+            _ => Ok(Poller::Epoll(EpollPoller::new()?)),
+        }
+    }
+
+    pub fn new_poll() -> Poller {
+        Poller::Poll(PollPoller::new())
+    }
+
+    /// Human-readable backend name (for startup logs).
+    pub fn backend(&self) -> &'static str {
+        match self {
+            Poller::Epoll(_) => "epoll",
+            Poller::Poll(_) => "poll",
+        }
+    }
+
+    pub fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        match self {
+            Poller::Epoll(p) => p.ctl(EPOLL_CTL_ADD, fd, token, interest),
+            Poller::Poll(p) => p.register(fd, token, interest),
+        }
+    }
+
+    pub fn modify(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        match self {
+            Poller::Epoll(p) => p.ctl(EPOLL_CTL_MOD, fd, token, interest),
+            Poller::Poll(p) => p.modify(fd, interest),
+        }
+    }
+
+    /// Forget `fd`. Call before the fd is closed: epoll drops closed fds
+    /// on its own, but the poll fallback would keep seeing POLLNVAL.
+    pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        match self {
+            Poller::Epoll(p) => p.ctl(EPOLL_CTL_DEL, fd, 0, Interest::NONE),
+            Poller::Poll(p) => p.deregister(fd),
+        }
+    }
+
+    /// Number of registered fds (the leak-check surface for tests).
+    pub fn registered(&self) -> usize {
+        match self {
+            Poller::Epoll(p) => p.registered,
+            Poller::Poll(p) => p.fds.len(),
+        }
+    }
+
+    /// Block up to `timeout` for readiness; `events` is cleared and
+    /// refilled. A signal (EINTR) returns an empty set rather than an
+    /// error so callers just re-loop.
+    pub fn wait(&mut self, events: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+        match self {
+            Poller::Epoll(p) => p.wait(events, timeout),
+            Poller::Poll(p) => p.wait(events, timeout),
+        }
+    }
+}
+
+/// The epoll backend: one epoll instance, fds tagged with u64 tokens.
+pub struct EpollPoller {
+    epfd: RawFd,
+    /// Scratch buffer reused across waits.
+    buf: Vec<EpollEvent>,
+    registered: usize,
+}
+
+impl EpollPoller {
+    fn new() -> io::Result<EpollPoller> {
+        // SAFETY: epoll_create1 takes a flags word and returns a new fd
+        // or -1; no pointers are involved.
+        let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(last_err());
+        }
+        Ok(EpollPoller { epfd, buf: vec![EpollEvent { events: 0, data: 0 }; 1024], registered: 0 })
+    }
+
+    fn ctl(&mut self, op: i32, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        let mut ev = EpollEvent { events: interest_bits(interest), data: token };
+        // SAFETY: `ev` is a valid epoll_event for the duration of the
+        // call (the kernel copies it); for EPOLL_CTL_DEL the pointer is
+        // ignored on any kernel ≥ 2.6.9 but still valid here.
+        let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(last_err());
+        }
+        match op {
+            EPOLL_CTL_ADD => self.registered += 1,
+            EPOLL_CTL_DEL => self.registered = self.registered.saturating_sub(1),
+            _ => {}
+        }
+        Ok(())
+    }
+
+    fn wait(&mut self, events: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+        events.clear();
+        // SAFETY: `buf` is a live, writable array of epoll_event and the
+        // length passed never exceeds its capacity.
+        let n = unsafe {
+            epoll_wait(self.epfd, self.buf.as_mut_ptr(), self.buf.len() as i32, timeout_ms(timeout))
+        };
+        if n < 0 {
+            let e = last_err();
+            if e.kind() == io::ErrorKind::Interrupted {
+                return Ok(());
+            }
+            return Err(e);
+        }
+        for i in 0..n as usize {
+            // Copy out of the (possibly packed) struct before using.
+            let bits = self.buf[i].events;
+            let token = self.buf[i].data;
+            events.push(Event {
+                token,
+                readable: bits & EPOLLIN != 0,
+                writable: bits & EPOLLOUT != 0,
+                error: bits & (EPOLLERR | EPOLLHUP) != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+impl Drop for EpollPoller {
+    fn drop(&mut self) {
+        // SAFETY: epfd is a valid fd owned by this struct and closed
+        // exactly once.
+        unsafe { close(self.epfd) };
+    }
+}
+
+fn interest_bits(interest: Interest) -> u32 {
+    let mut bits = 0;
+    if interest.readable {
+        bits |= EPOLLIN;
+    }
+    if interest.writable {
+        bits |= EPOLLOUT;
+    }
+    bits
+}
+
+/// The `poll(2)` fallback: a flat pollfd array re-submitted every wait.
+/// O(n) per wakeup, which is fine for its role as a differential check
+/// and portability fallback.
+pub struct PollPoller {
+    fds: Vec<PollFd>,
+    tokens: Vec<u64>,
+}
+
+impl PollPoller {
+    fn new() -> PollPoller {
+        PollPoller { fds: Vec::new(), tokens: Vec::new() }
+    }
+
+    fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        if self.fds.iter().any(|p| p.fd == fd) {
+            return Err(io::Error::new(io::ErrorKind::AlreadyExists, "fd already registered"));
+        }
+        self.fds.push(PollFd { fd, events: poll_bits(interest), revents: 0 });
+        self.tokens.push(token);
+        Ok(())
+    }
+
+    fn modify(&mut self, fd: RawFd, interest: Interest) -> io::Result<()> {
+        match self.fds.iter_mut().find(|p| p.fd == fd) {
+            Some(p) => {
+                p.events = poll_bits(interest);
+                Ok(())
+            }
+            None => Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered")),
+        }
+    }
+
+    fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        match self.fds.iter().position(|p| p.fd == fd) {
+            Some(i) => {
+                self.fds.swap_remove(i);
+                self.tokens.swap_remove(i);
+                Ok(())
+            }
+            None => Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered")),
+        }
+    }
+
+    fn wait(&mut self, events: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+        events.clear();
+        // SAFETY: the pollfd array is live and writable for the duration
+        // of the call and nfds matches its length.
+        let n = unsafe { poll(self.fds.as_mut_ptr(), self.fds.len() as u64, timeout_ms(timeout)) };
+        if n < 0 {
+            let e = last_err();
+            if e.kind() == io::ErrorKind::Interrupted {
+                return Ok(());
+            }
+            return Err(e);
+        }
+        for (i, p) in self.fds.iter().enumerate() {
+            let bits = p.revents;
+            if bits == 0 {
+                continue;
+            }
+            events.push(Event {
+                token: self.tokens[i],
+                readable: bits & POLLIN != 0,
+                writable: bits & POLLOUT != 0,
+                error: bits & (POLLERR | POLLHUP | POLLNVAL) != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+fn poll_bits(interest: Interest) -> i16 {
+    let mut bits = 0;
+    if interest.readable {
+        bits |= POLLIN;
+    }
+    if interest.writable {
+        bits |= POLLOUT;
+    }
+    bits
+}
+
+/// Self-wake channel for the event loop: any thread calls
+/// [`WakePipe::wake`], the loop sees the read end become readable and
+/// [`WakePipe::drain`]s it. Both ends are nonblocking, so a wake can
+/// never stall the waker (a full pipe already guarantees a pending
+/// wakeup) and a drain can never stall the loop.
+pub struct WakePipe {
+    read_fd: RawFd,
+    write_fd: RawFd,
+}
+
+impl WakePipe {
+    pub fn new() -> io::Result<WakePipe> {
+        let mut fds = [0i32; 2];
+        // SAFETY: pipe2 writes exactly two fds into the array provided.
+        let rc = unsafe { pipe2(fds.as_mut_ptr(), O_NONBLOCK | O_CLOEXEC) };
+        if rc < 0 {
+            return Err(last_err());
+        }
+        Ok(WakePipe { read_fd: fds[0], write_fd: fds[1] })
+    }
+
+    /// The end to register with the [`Poller`].
+    pub fn read_fd(&self) -> RawFd {
+        self.read_fd
+    }
+
+    /// Nudge the loop. Best-effort by design: EAGAIN means the pipe is
+    /// already full of unconsumed wakeups, which is itself a wakeup.
+    pub fn wake(&self) {
+        let byte = [1u8];
+        // SAFETY: writes one byte from a live buffer to an fd this
+        // struct owns; the fd is nonblocking so the call cannot stall.
+        unsafe { write(self.write_fd, byte.as_ptr(), 1) };
+    }
+
+    /// Consume every pending wakeup byte (called by the loop once per
+    /// readiness report).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        loop {
+            // SAFETY: reads into a live, writable buffer from an fd this
+            // struct owns; nonblocking, so it returns -1/EAGAIN when dry.
+            let n = unsafe { read(self.read_fd, buf.as_mut_ptr(), buf.len()) };
+            if n <= 0 {
+                return;
+            }
+        }
+    }
+}
+
+impl Drop for WakePipe {
+    fn drop(&mut self) {
+        // SAFETY: both fds are owned by this struct and closed exactly
+        // once each.
+        unsafe {
+            close(self.read_fd);
+            close(self.write_fd);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_wake_cycle(mut poller: Poller) {
+        let pipe = WakePipe::new().expect("pipe");
+        poller.register(pipe.read_fd(), 7, Interest::READ).expect("register");
+        assert_eq!(poller.registered(), 1);
+        let mut events = Vec::new();
+
+        // No wake yet: a short wait times out empty.
+        poller.wait(&mut events, Some(Duration::from_millis(5))).expect("wait");
+        assert!(events.is_empty(), "spurious readiness before wake");
+
+        // Wakes from another thread surface as readability on the token.
+        pipe.wake();
+        pipe.wake();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).expect("wait");
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 7);
+        assert!(events[0].readable);
+
+        // Drained pipe goes quiet again (level-triggered: undrained
+        // bytes would re-report forever).
+        pipe.drain();
+        poller.wait(&mut events, Some(Duration::from_millis(5))).expect("wait");
+        assert!(events.is_empty(), "drain did not clear readiness");
+
+        poller.deregister(pipe.read_fd()).expect("deregister");
+        assert_eq!(poller.registered(), 0);
+    }
+
+    #[test]
+    fn epoll_wake_cycle() {
+        check_wake_cycle(Poller::Epoll(EpollPoller::new().expect("epoll")));
+    }
+
+    #[test]
+    fn poll_fallback_wake_cycle() {
+        check_wake_cycle(Poller::new_poll());
+    }
+
+    #[test]
+    fn modify_switches_interest() {
+        for mut poller in [
+            Poller::Epoll(EpollPoller::new().expect("epoll")),
+            Poller::new_poll(),
+        ] {
+            let pipe = WakePipe::new().expect("pipe");
+            pipe.wake();
+            let mut events = Vec::new();
+            // Registered with no interest: the pending byte is invisible.
+            poller.register(pipe.read_fd(), 1, Interest::NONE).expect("register");
+            poller.wait(&mut events, Some(Duration::from_millis(5))).expect("wait");
+            assert!(events.iter().all(|e| !e.readable), "interest NONE reported readable");
+            // Flip to READ: the same byte becomes visible immediately.
+            poller.modify(pipe.read_fd(), 1, Interest::READ).expect("modify");
+            poller.wait(&mut events, Some(Duration::from_secs(5))).expect("wait");
+            assert!(events.iter().any(|e| e.token == 1 && e.readable));
+            poller.deregister(pipe.read_fd()).expect("deregister");
+        }
+    }
+}

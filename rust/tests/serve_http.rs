@@ -1,12 +1,18 @@
 //! Integration tests for the HTTP front-end: a listener on an ephemeral
 //! port, predictions identical to the in-process engine path, health and
 //! metrics endpoints, keep-alive, and error/unavailability mapping.
+//!
+//! Every scenario runs under **both** io models — the bounded
+//! thread-per-connection pool and the single epoll event loop — via a
+//! shared scenario function and one `#[test]` wrapper per model. A
+//! differential test additionally asserts the two models produce
+//! byte-identical wire responses on deterministic endpoints.
 
 use lpdsvm::coordinator::train::{train, TrainConfig};
 use lpdsvm::data::dataset::Dataset;
 use lpdsvm::data::synth::{FeatureStyle, SynthSpec};
 use lpdsvm::lowrank::Stage1Config;
-use lpdsvm::serve::{HttpServer, ModelRegistry, ServeConfig, ServeEngine};
+use lpdsvm::serve::{HttpOptions, HttpServer, IoModel, ModelRegistry, ServeConfig, ServeEngine};
 use lpdsvm::util::json::{self, Json};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -28,7 +34,7 @@ fn dataset(seed: u64) -> Dataset {
     .generate()
 }
 
-fn served_engine(seed: u64) -> (Dataset, Vec<u32>, Arc<ServeEngine>, HttpServer) {
+fn engine_only(seed: u64) -> (Dataset, Vec<u32>, Arc<ServeEngine>) {
     let data = dataset(seed);
     let cfg = TrainConfig {
         stage1: Stage1Config {
@@ -50,8 +56,27 @@ fn served_engine(seed: u64) -> (Dataset, Vec<u32>, Arc<ServeEngine>, HttpServer)
             ..ServeConfig::default()
         },
     ));
+    (data, expected, engine)
+}
+
+fn bind_with(engine: &Arc<ServeEngine>, io: IoModel, max_connections: usize) -> HttpServer {
     // Port 0: the OS picks a free ephemeral port; read it back via addr().
-    let server = HttpServer::bind(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+    HttpServer::bind_with_opts(
+        Arc::clone(engine),
+        "127.0.0.1:0",
+        HttpOptions {
+            io_model: io,
+            max_connections,
+            ..HttpOptions::default()
+        },
+    )
+    .unwrap()
+}
+
+fn served_engine_with(seed: u64, io: IoModel) -> (Dataset, Vec<u32>, Arc<ServeEngine>, HttpServer) {
+    let (data, expected, engine) = engine_only(seed);
+    let max_connections = HttpOptions::default().max_connections;
+    let server = bind_with(&engine, io, max_connections);
     (data, expected, engine, server)
 }
 
@@ -139,9 +164,8 @@ fn labels_of(response_body: &str) -> Vec<u32> {
         .collect()
 }
 
-#[test]
-fn http_predictions_match_in_process_engine() {
-    let (data, expected, engine, server) = served_engine(41);
+fn predictions_scenario(io: IoModel) {
+    let (data, expected, engine, server) = served_engine_with(41, io);
     let rows: Vec<Vec<(u32, f32)>> = (0..data.len()).map(|i| data.x.row_entries(i)).collect();
 
     // In-process path.
@@ -181,8 +205,18 @@ fn http_predictions_match_in_process_engine() {
 }
 
 #[test]
-fn healthz_metrics_and_model_listing() {
-    let (data, _expected, engine, server) = served_engine(42);
+fn http_predictions_match_in_process_engine() {
+    predictions_scenario(IoModel::Threads);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn http_predictions_match_in_process_engine_evented() {
+    predictions_scenario(IoModel::Evented);
+}
+
+fn healthz_metrics_scenario(io: IoModel) {
+    let (data, _expected, engine, server) = served_engine_with(42, io);
     let addr = server.addr();
 
     let (status, body) = http_call(addr, "GET", "/healthz", None);
@@ -254,8 +288,18 @@ fn healthz_metrics_and_model_listing() {
 }
 
 #[test]
-fn keep_alive_serves_sequential_requests_on_one_connection() {
-    let (_data, _expected, engine, server) = served_engine(43);
+fn healthz_metrics_and_model_listing() {
+    healthz_metrics_scenario(IoModel::Threads);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn healthz_metrics_and_model_listing_evented() {
+    healthz_metrics_scenario(IoModel::Evented);
+}
+
+fn keep_alive_scenario(io: IoModel) {
+    let (_data, _expected, engine, server) = served_engine_with(43, io);
     let stream = TcpStream::connect(server.addr()).unwrap();
     stream
         .set_read_timeout(Some(Duration::from_secs(30)))
@@ -281,8 +325,18 @@ fn keep_alive_serves_sequential_requests_on_one_connection() {
 }
 
 #[test]
-fn expect_100_continue_gets_interim_response() {
-    let (data, expected, engine, server) = served_engine(45);
+fn keep_alive_serves_sequential_requests_on_one_connection() {
+    keep_alive_scenario(IoModel::Threads);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn keep_alive_serves_sequential_requests_on_one_connection_evented() {
+    keep_alive_scenario(IoModel::Evented);
+}
+
+fn expect_continue_scenario(io: IoModel) {
+    let (data, expected, engine, server) = served_engine_with(45, io);
     let row = data.x.row_entries(0);
     let body = rows_body(&[row]);
 
@@ -309,8 +363,18 @@ fn expect_100_continue_gets_interim_response() {
 }
 
 #[test]
-fn put_config_updates_weight_and_metrics_expose_per_model() {
-    let (data, _expected, engine, server) = served_engine(46);
+fn expect_100_continue_gets_interim_response() {
+    expect_continue_scenario(IoModel::Threads);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn expect_100_continue_gets_interim_response_evented() {
+    expect_continue_scenario(IoModel::Evented);
+}
+
+fn put_config_scenario(io: IoModel) {
+    let (data, _expected, engine, server) = served_engine_with(46, io);
     let addr = server.addr();
 
     // Update the registered model's scheduler policy.
@@ -369,14 +433,24 @@ fn put_config_updates_weight_and_metrics_expose_per_model() {
 }
 
 #[test]
-fn connection_cap_503s_excess_connections_and_recovers() {
-    let (_data, _expected, engine, _default_server) = served_engine(47);
+fn put_config_updates_weight_and_metrics_expose_per_model() {
+    put_config_scenario(IoModel::Threads);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn put_config_updates_weight_and_metrics_expose_per_model_evented() {
+    put_config_scenario(IoModel::Evented);
+}
+
+fn connection_cap_scenario(io: IoModel) {
+    let (_data, _expected, engine) = engine_only(47);
     // A dedicated listener with a single-connection budget.
-    let server = HttpServer::bind_with_limit(Arc::clone(&engine), "127.0.0.1:0", 1).unwrap();
+    let server = bind_with(&engine, io, 1);
     let addr = server.addr();
 
     // Occupy the only slot with a keep-alive connection; completing one
-    // request proves its thread is up and counted.
+    // request proves the connection is up and counted.
     let stream = TcpStream::connect(addr).unwrap();
     stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
     let mut reader = BufReader::new(stream.try_clone().unwrap());
@@ -398,9 +472,9 @@ fn connection_cap_503s_excess_connections_and_recovers() {
     assert_eq!(status, 503, "body: {body}");
     assert!(body.contains("connection limit"), "body: {body}");
 
-    // Release the slot; the server recovers once the connection thread
-    // notices the close (poll briefly — the decrement is asynchronous,
-    // and probes that still hit the cap may see resets: tolerate them).
+    // Release the slot; the server recovers once it notices the close
+    // (poll briefly — the decrement is asynchronous, and probes that
+    // still hit the cap may see resets: tolerate them).
     drop(reader);
     drop(writer);
     let t0 = std::time::Instant::now();
@@ -420,8 +494,18 @@ fn connection_cap_503s_excess_connections_and_recovers() {
 }
 
 #[test]
-fn error_mapping_bad_input_unknown_model_and_shutdown() {
-    let (data, _expected, engine, server) = served_engine(44);
+fn connection_cap_503s_excess_connections_and_recovers() {
+    connection_cap_scenario(IoModel::Threads);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn connection_cap_503s_excess_connections_and_recovers_evented() {
+    connection_cap_scenario(IoModel::Evented);
+}
+
+fn error_mapping_scenario(io: IoModel) {
+    let (data, _expected, engine, server) = served_engine_with(44, io);
     let addr = server.addr();
     let row = data.x.row_entries(0);
 
@@ -451,4 +535,101 @@ fn error_mapping_bad_input_unknown_model_and_shutdown() {
     assert_eq!(status, 200);
 
     server.shutdown();
+}
+
+#[test]
+fn error_mapping_bad_input_unknown_model_and_shutdown() {
+    error_mapping_scenario(IoModel::Threads);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn error_mapping_bad_input_unknown_model_and_shutdown_evented() {
+    error_mapping_scenario(IoModel::Evented);
+}
+
+/// Write one raw request and capture the complete wire response (the
+/// request carries `connection: close`, so EOF frames it).
+#[cfg(target_os = "linux")]
+fn raw_call(addr: SocketAddr, request: &[u8]) -> Vec<u8> {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    stream.write_all(request).unwrap();
+    let mut out = Vec::new();
+    stream.read_to_end(&mut out).unwrap();
+    out
+}
+
+/// The headline tentpole guarantee: for any request whose response does
+/// not embed timing fields, the evented loop produces **byte-identical**
+/// wire output to the threaded model — same status line, same headers,
+/// same body, same framing. Both servers share one engine so dynamic
+/// state (worker counts, registry) cannot diverge.
+#[cfg(target_os = "linux")]
+#[test]
+fn evented_and_threaded_responses_are_byte_identical() {
+    let (data, expected, engine) = engine_only(48);
+    let max_connections = HttpOptions::default().max_connections;
+    let threaded = bind_with(&engine, IoModel::Threads, max_connections);
+    let evented = bind_with(&engine, IoModel::Evented, max_connections);
+
+    let predict_bad = "{not json";
+    let ghost = rows_body(&[data.x.row_entries(0)]);
+    // A newline-free header line at exactly the cap: both models must
+    // reject with the same 400, and the exact sizing means the server
+    // consumes every sent byte before closing (clean close, no reset).
+    let cap = lpdsvm::serve::http::MAX_HEADER_LINE as usize;
+    let mut long_header = b"GET /healthz HTTP/1.1\r\nx-junk: ".to_vec();
+    long_header.extend(vec![b'a'; cap - "x-junk: ".len()]);
+    let cases: Vec<Vec<u8>> = vec![
+        b"GET /healthz HTTP/1.1\r\nhost: t\r\nconnection: close\r\n\r\n".to_vec(),
+        b"GET /v1/models HTTP/1.1\r\nhost: t\r\nconnection: close\r\n\r\n".to_vec(),
+        b"GET /nope HTTP/1.1\r\nhost: t\r\nconnection: close\r\n\r\n".to_vec(),
+        b"DELETE /healthz HTTP/1.1\r\nhost: t\r\nconnection: close\r\n\r\n".to_vec(),
+        format!(
+            "POST /v1/models/m:predict HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{predict_bad}",
+            predict_bad.len()
+        )
+        .into_bytes(),
+        format!(
+            "POST /v1/models/ghost:predict HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{ghost}",
+            ghost.len()
+        )
+        .into_bytes(),
+        b"POST /v1/models/m:predict HTTP/1.1\r\nhost: t\r\ntransfer-encoding: chunked\r\nconnection: close\r\n\r\n"
+            .to_vec(),
+        long_header,
+    ];
+    for case in &cases {
+        let from_threads = raw_call(threaded.addr(), case);
+        let from_evented = raw_call(evented.addr(), case);
+        assert!(
+            !from_threads.is_empty(),
+            "no response for {:?}",
+            String::from_utf8_lossy(case)
+        );
+        assert_eq!(
+            from_threads,
+            from_evented,
+            "wire bytes diverge for request {:?}:\n threads: {:?}\n evented: {:?}",
+            String::from_utf8_lossy(case),
+            String::from_utf8_lossy(&from_threads),
+            String::from_utf8_lossy(&from_evented)
+        );
+    }
+
+    // Successful predict bodies embed queue/total timing that varies per
+    // run, so compare the decision-relevant content: status and labels.
+    let body = rows_body(&(0..8).map(|i| data.x.row_entries(i)).collect::<Vec<_>>());
+    let (ts, tb) = http_call(threaded.addr(), "POST", "/v1/models/m:predict", Some(&body));
+    let (es, eb) = http_call(evented.addr(), "POST", "/v1/models/m:predict", Some(&body));
+    assert_eq!((ts, es), (200, 200), "threads: {tb}\nevented: {eb}");
+    assert_eq!(labels_of(&tb), expected[..8].to_vec());
+    assert_eq!(labels_of(&eb), expected[..8].to_vec());
+
+    threaded.shutdown();
+    evented.shutdown();
+    engine.shutdown();
 }

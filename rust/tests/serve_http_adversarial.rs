@@ -1,0 +1,657 @@
+//! Adversarial protocol battery for the HTTP front-end.
+//!
+//! Every scenario throws malformed, hostile, or pathological traffic at
+//! the server and asserts three things: the response (if any) maps to
+//! the documented 4xx/close, the process never panics, and the engine's
+//! accounting invariant (`submitted == completed + failed + queued`)
+//! survives. Scenarios run under **both** io models; the slow-loris
+//! drill is evented-only because only the event loop owns a deadline
+//! reaper (`--idle-timeout-ms`).
+//!
+//! No scenario needs a trained model: predict POSTs target an
+//! unregistered name, which still exercises submit/fail accounting.
+
+use lpdsvm::serve::http::{MAX_BODY, MAX_HEADERS, MAX_HEADER_LINE};
+
+/// [`MAX_HEADER_LINE`] as a length (the crate constant is `u64` because
+/// it feeds `Read::take`).
+const LINE_CAP: usize = MAX_HEADER_LINE as usize;
+use lpdsvm::serve::{HttpOptions, HttpServer, IoModel, ModelRegistry, ServeConfig, ServeEngine};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn engine() -> Arc<ServeEngine> {
+    Arc::new(ServeEngine::start(
+        Arc::new(ModelRegistry::new()),
+        ServeConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            workers: 1,
+            ..ServeConfig::default()
+        },
+    ))
+}
+
+fn serve_opts(
+    io: IoModel,
+    max_connections: usize,
+    idle_timeout: Duration,
+) -> (Arc<ServeEngine>, HttpServer) {
+    let engine = engine();
+    let server = HttpServer::bind_with_opts(
+        Arc::clone(&engine),
+        "127.0.0.1:0",
+        HttpOptions {
+            io_model: io,
+            max_connections,
+            idle_timeout,
+        },
+    )
+    .unwrap();
+    (engine, server)
+}
+
+fn serve(io: IoModel) -> (Arc<ServeEngine>, HttpServer) {
+    let cap = HttpOptions::default().max_connections;
+    serve_opts(io, cap, HttpOptions::default().idle_timeout)
+}
+
+/// Read one length-framed response off a (possibly keep-alive) stream.
+fn read_response<R: BufRead>(reader: &mut R) -> (u16, String) {
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).unwrap();
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .expect("status line")
+        .parse()
+        .unwrap();
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        reader.read_line(&mut header).unwrap();
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().unwrap();
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).unwrap();
+    (status, String::from_utf8(body).unwrap())
+}
+
+/// Write raw request bytes on a fresh connection and read one response.
+fn send_raw(addr: SocketAddr, request: &[u8]) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    stream.write_all(request).unwrap();
+    let mut reader = BufReader::new(stream);
+    read_response(&mut reader)
+}
+
+fn healthz(addr: SocketAddr) -> (u16, String) {
+    send_raw(addr, b"GET /healthz HTTP/1.1\r\nhost: t\r\nconnection: close\r\n\r\n")
+}
+
+/// The load-bearing invariant: after the engine quiesces, every
+/// submitted request is accounted for — completed, failed, or still
+/// queued — and nothing ever panicked inside batch scoring.
+fn assert_engine_sane(engine: &ServeEngine) {
+    let m = engine.metrics();
+    let t0 = Instant::now();
+    loop {
+        let submitted = m.submitted.load(Ordering::SeqCst);
+        let accounted = m.completed.load(Ordering::SeqCst)
+            + m.failed.load(Ordering::SeqCst)
+            + m.queue_depth.load(Ordering::SeqCst);
+        if submitted == accounted {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "metrics invariant violated: submitted={submitted} accounted={accounted}"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(m.batch_panics.load(Ordering::SeqCst), 0, "a batch panicked");
+}
+
+// ---------------------------------------------------------------------------
+// Fragmented delivery
+// ---------------------------------------------------------------------------
+
+fn drip_fed_request_scenario(io: IoModel) {
+    let (engine, server) = serve(io);
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    // One byte per write: every head-scan resume path gets exercised.
+    for byte in b"GET /healthz HTTP/1.1\r\nhost: t\r\nconnection: close\r\n\r\n" {
+        stream.write_all(&[*byte]).unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let (status, body) = read_response(&mut BufReader::new(stream));
+    assert_eq!(status, 200, "body: {body}");
+    assert_engine_sane(&engine);
+    server.shutdown();
+    engine.shutdown();
+}
+
+#[test]
+fn drip_fed_request_is_served() {
+    drip_fed_request_scenario(IoModel::Threads);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn drip_fed_request_is_served_evented() {
+    drip_fed_request_scenario(IoModel::Evented);
+}
+
+// ---------------------------------------------------------------------------
+// Line and header caps, at the boundary and one past it
+// ---------------------------------------------------------------------------
+
+fn line_cap_scenario(io: IoModel) {
+    let (engine, server) = serve(io);
+    let addr = server.addr();
+
+    // A request line of exactly MAX_HEADER_LINE bytes (CRLF included)
+    // parses; the padded path just routes to 404.
+    let prefix = "GET /nope?";
+    let suffix = " HTTP/1.1\r\n";
+    let pad = "a".repeat(LINE_CAP - prefix.len() - suffix.len());
+    let req = format!("{prefix}{pad}{suffix}connection: close\r\n\r\n");
+    let (status, body) = send_raw(addr, req.as_bytes());
+    assert_eq!(status, 404, "at-cap request line must parse; body: {body}");
+
+    // A newline-free flood hits the cap and is rejected without ever
+    // finding a request. Exactly LINE_CAP bytes: the server consumes
+    // everything sent before erroring, so the close is clean (no unread
+    // bytes, no reset racing the 400).
+    let flood = vec![b'a'; LINE_CAP];
+    let (status, body) = send_raw(addr, &flood);
+    assert_eq!(status, 400, "body: {body}");
+    assert!(body.contains("byte limit"), "body: {body}");
+
+    // Same cap applies to header lines (again sized for exact
+    // consumption: request line + one newline-free LINE_CAP header).
+    let mut req = b"GET /healthz HTTP/1.1\r\nx-junk: ".to_vec();
+    req.extend(vec![b'a'; LINE_CAP - "x-junk: ".len()]);
+    let (status, body) = send_raw(addr, &req);
+    assert_eq!(status, 400, "body: {body}");
+    assert!(body.contains("byte limit"), "body: {body}");
+
+    assert_engine_sane(&engine);
+    server.shutdown();
+    engine.shutdown();
+}
+
+#[test]
+fn line_cap_enforced_at_boundary() {
+    line_cap_scenario(IoModel::Threads);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn line_cap_enforced_at_boundary_evented() {
+    line_cap_scenario(IoModel::Evented);
+}
+
+fn header_count_scenario(io: IoModel) {
+    let (engine, server) = serve(io);
+    let addr = server.addr();
+
+    // MAX_HEADERS - 1 headers (the last one is connection: close) parse.
+    let mut ok = String::from("GET /healthz HTTP/1.1\r\n");
+    for i in 0..MAX_HEADERS - 2 {
+        ok.push_str(&format!("x-h{i}: v\r\n"));
+    }
+    ok.push_str("connection: close\r\n\r\n");
+    let (status, body) = send_raw(addr, ok.as_bytes());
+    assert_eq!(status, 200, "body: {body}");
+
+    // One more header tips over the cap.
+    let mut over = String::from("GET /healthz HTTP/1.1\r\n");
+    for i in 0..MAX_HEADERS - 1 {
+        over.push_str(&format!("x-h{i}: v\r\n"));
+    }
+    over.push_str("connection: close\r\n\r\n");
+    let (status, body) = send_raw(addr, over.as_bytes());
+    assert_eq!(status, 400, "body: {body}");
+    assert!(body.contains("header lines"), "body: {body}");
+
+    assert_engine_sane(&engine);
+    server.shutdown();
+    engine.shutdown();
+}
+
+#[test]
+fn header_count_enforced_at_boundary() {
+    header_count_scenario(IoModel::Threads);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn header_count_enforced_at_boundary_evented() {
+    header_count_scenario(IoModel::Evented);
+}
+
+// ---------------------------------------------------------------------------
+// Body cap: 413 before the body is read; exactly-at-cap is accepted
+// ---------------------------------------------------------------------------
+
+fn body_cap_scenario(io: IoModel) {
+    let (engine, server) = serve(io);
+    let addr = server.addr();
+
+    // Declaring one byte over the cap draws the 413 immediately — the
+    // client never has to (and here never does) send the body.
+    let req = format!(
+        "POST /v1/models/m:predict HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        MAX_BODY + 1
+    );
+    let (status, body) = send_raw(addr, req.as_bytes());
+    assert_eq!(status, 413, "body: {body}");
+    assert!(body.contains("exceeds"), "body: {body}");
+
+    // Exactly at the cap the body is read in full; the payload is
+    // garbage JSON, so the predict route answers 400 — but the framing
+    // layer accepted it.
+    let payload = vec![b'x'; MAX_BODY];
+    let mut req = format!(
+        "POST /v1/models/m:predict HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        payload.len()
+    )
+    .into_bytes();
+    req.extend_from_slice(&payload);
+    let (status, body) = send_raw(addr, &req);
+    assert_eq!(status, 400, "body: {body}");
+    assert!(body.contains("invalid JSON"), "body: {body}");
+
+    assert_engine_sane(&engine);
+    server.shutdown();
+    engine.shutdown();
+}
+
+#[test]
+fn body_cap_413_at_cap_plus_one_accepts_at_cap() {
+    body_cap_scenario(IoModel::Threads);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn body_cap_413_at_cap_plus_one_accepts_at_cap_evented() {
+    body_cap_scenario(IoModel::Evented);
+}
+
+// ---------------------------------------------------------------------------
+// Framing abuse: chunked encoding, binary garbage, pipelining
+// ---------------------------------------------------------------------------
+
+fn bad_framing_scenario(io: IoModel) {
+    let (engine, server) = serve(io);
+    let addr = server.addr();
+
+    let (status, body) = send_raw(
+        addr,
+        b"POST /v1/models/m:predict HTTP/1.1\r\nhost: t\r\ntransfer-encoding: chunked\r\nconnection: close\r\n\r\n",
+    );
+    assert_eq!(status, 400, "body: {body}");
+    assert!(body.contains("transfer-encoding"), "body: {body}");
+
+    let (status, _body) = send_raw(addr, b"\xff\xfe\xfd\xfc garbage\r\n\r\n");
+    assert_eq!(status, 400, "binary garbage must map to 400, not a hang");
+
+    let (status, body) = send_raw(
+        addr,
+        b"GET /healthz HTTP/1.1\r\ncontent-length: banana\r\nconnection: close\r\n\r\n",
+    );
+    assert_eq!(status, 400, "body: {body}");
+    assert!(body.contains("bad content-length"), "body: {body}");
+
+    assert_engine_sane(&engine);
+    server.shutdown();
+    engine.shutdown();
+}
+
+#[test]
+fn bad_framing_maps_to_400() {
+    bad_framing_scenario(IoModel::Threads);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn bad_framing_maps_to_400_evented() {
+    bad_framing_scenario(IoModel::Evented);
+}
+
+fn pipelined_scenario(io: IoModel) {
+    let (engine, server) = serve(io);
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    // Three requests in one write; the final one asks to close.
+    stream
+        .write_all(
+            b"GET /healthz HTTP/1.1\r\nhost: t\r\n\r\n\
+              GET /v1/models HTTP/1.1\r\nhost: t\r\n\r\n\
+              GET /nope HTTP/1.1\r\nhost: t\r\nconnection: close\r\n\r\n",
+        )
+        .unwrap();
+    let mut reader = BufReader::new(stream);
+    let (s1, b1) = read_response(&mut reader);
+    let (s2, b2) = read_response(&mut reader);
+    let (s3, _) = read_response(&mut reader);
+    assert_eq!((s1, s2, s3), (200, 200, 404));
+    assert!(b1.contains("status"), "healthz first: {b1}");
+    assert!(b2.contains("models"), "listing second: {b2}");
+    // The close directive on the last request was honoured.
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty());
+
+    assert_engine_sane(&engine);
+    server.shutdown();
+    engine.shutdown();
+}
+
+#[test]
+fn pipelined_requests_answered_in_order() {
+    pipelined_scenario(IoModel::Threads);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn pipelined_requests_answered_in_order_evented() {
+    pipelined_scenario(IoModel::Evented);
+}
+
+// ---------------------------------------------------------------------------
+// Abrupt disconnects
+// ---------------------------------------------------------------------------
+
+fn abrupt_disconnect_scenario(io: IoModel) {
+    let (engine, server) = serve(io);
+    let addr = server.addr();
+
+    // Mid-body: declare 4096 bytes, deliver 64, vanish.
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .write_all(
+            b"POST /v1/models/m:predict HTTP/1.1\r\nhost: t\r\ncontent-length: 4096\r\n\r\n",
+        )
+        .unwrap();
+    stream.write_all(&[b'{'; 64]).unwrap();
+    drop(stream);
+
+    // Mid-headers: vanish after half a request line.
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(b"GET /heal").unwrap();
+    drop(stream);
+
+    // Connect-and-vanish without a single byte.
+    drop(TcpStream::connect(addr).unwrap());
+
+    // The server shrugs all three off: still answering, accounts intact.
+    let (status, body) = healthz(addr);
+    assert_eq!(status, 200, "body: {body}");
+    assert_engine_sane(&engine);
+    server.shutdown();
+    engine.shutdown();
+}
+
+#[test]
+fn abrupt_disconnects_leave_server_healthy() {
+    abrupt_disconnect_scenario(IoModel::Threads);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn abrupt_disconnects_leave_server_healthy_evented() {
+    abrupt_disconnect_scenario(IoModel::Evented);
+}
+
+// ---------------------------------------------------------------------------
+// Slow-loris: tricklers are reaped by the idle deadline, bystanders
+// keep their latency (evented only — the deadline reaper lives in the
+// event loop; the threaded model bounds the same abuse with its socket
+// read timeout but does not count reaps)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+#[test]
+fn slow_loris_tricklers_are_reaped_and_counted() {
+    const TRICKLERS: usize = 6;
+    let (engine, server) = serve_opts(
+        IoModel::Evented,
+        HttpOptions::default().max_connections,
+        Duration::from_millis(400),
+    );
+    let addr = server.addr();
+
+    // Each trickler leaks one header byte per 100 ms — a full request
+    // would take ~4 s against a 400 ms deadline.
+    let handles: Vec<_> = (0..TRICKLERS)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let mut stream = match TcpStream::connect(addr) {
+                    Ok(s) => s,
+                    Err(_) => return,
+                };
+                for byte in b"GET /healthz HTTP/1.1\r\nhost: t\r\n\r\n" {
+                    if stream.write_all(&[*byte]).is_err() {
+                        return; // reaped: the server closed on us
+                    }
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+            })
+        })
+        .collect();
+
+    // A well-behaved bystander is not head-of-line blocked by the
+    // tricklers: p99 for a healthz round-trip stays interactive.
+    std::thread::sleep(Duration::from_millis(150));
+    let mut worst = Duration::ZERO;
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        let (status, _) = healthz(addr);
+        worst = worst.max(t0.elapsed());
+        assert_eq!(status, 200);
+    }
+    assert!(
+        worst < Duration::from_secs(2),
+        "bystander latency degraded to {worst:?} under slow-loris"
+    );
+
+    // Every trickler is reaped by the deadline and counted.
+    let t0 = Instant::now();
+    loop {
+        let reaped = engine.metrics().conn_idle_reaped.load(Ordering::SeqCst);
+        if reaped >= TRICKLERS as u64 {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "only {reaped}/{TRICKLERS} tricklers reaped"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_engine_sane(&engine);
+    server.shutdown();
+    engine.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Connection churn: the open-connection gauge returns to baseline no
+// matter how clients leave
+// ---------------------------------------------------------------------------
+
+fn churn_scenario(io: IoModel) {
+    let (engine, server) = serve(io);
+    let addr = server.addr();
+    let baseline = engine.metrics().conn_open.load(Ordering::SeqCst);
+
+    for round in 0..40 {
+        match round % 3 {
+            // Clean keep-alive client: two requests, then EOF from us.
+            0 => {
+                let stream = TcpStream::connect(addr).unwrap();
+                stream
+                    .set_read_timeout(Some(Duration::from_secs(30)))
+                    .unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = stream;
+                writer
+                    .write_all(b"GET /healthz HTTP/1.1\r\nhost: t\r\n\r\n")
+                    .unwrap();
+                let (status, _) = read_response(&mut reader);
+                assert_eq!(status, 200, "round {round}");
+                writer
+                    .write_all(b"GET /healthz HTTP/1.1\r\nhost: t\r\nconnection: close\r\n\r\n")
+                    .unwrap();
+                let (status, _) = read_response(&mut reader);
+                assert_eq!(status, 200, "round {round}");
+            }
+            // Abrupt closer with a half-written request.
+            1 => {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                let _ = stream.write_all(b"POST /v1/mod");
+                drop(stream);
+            }
+            // Connect-and-vanish.
+            _ => {
+                drop(TcpStream::connect(addr).unwrap());
+            }
+        }
+    }
+
+    // Every connection path — clean close, abrupt close, silent vanish —
+    // must decrement what accept incremented.
+    let t0 = Instant::now();
+    loop {
+        let open = engine.metrics().conn_open.load(Ordering::SeqCst);
+        if open == baseline {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "conn_open stuck at {open}, baseline {baseline}: leaked connection accounting"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let (status, _) = healthz(addr);
+    assert_eq!(status, 200);
+    assert_engine_sane(&engine);
+    server.shutdown();
+    engine.shutdown();
+}
+
+#[test]
+fn connection_churn_returns_gauge_to_baseline() {
+    churn_scenario(IoModel::Threads);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn connection_churn_returns_gauge_to_baseline_evented() {
+    churn_scenario(IoModel::Evented);
+}
+
+// ---------------------------------------------------------------------------
+// Over-cap 503 delivery must not depend on earlier victims reading
+// theirs (regression: the accept path once wrote the 503 blocking,
+// so one unread rejection could stall every later accept)
+// ---------------------------------------------------------------------------
+
+fn over_cap_scenario(io: IoModel) {
+    let (engine, server) = serve_opts(io, 1, HttpOptions::default().idle_timeout);
+    let addr = server.addr();
+
+    // Occupy the single slot.
+    let stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writer
+        .write_all(b"GET /healthz HTTP/1.1\r\nhost: t\r\nconnection: keep-alive\r\n\r\n")
+        .unwrap();
+    let (status, _) = read_response(&mut reader);
+    assert_eq!(status, 200);
+
+    // Victim A connects over the cap and never reads its 503.
+    let victim_a = TcpStream::connect(addr).unwrap();
+
+    // Victim B must still get its 503 promptly — A's unread rejection
+    // cannot be allowed to stall the accept path.
+    let t0 = Instant::now();
+    let probe = TcpStream::connect(addr).unwrap();
+    probe
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut probe_reader = BufReader::new(probe);
+    let (status, body) = read_response(&mut probe_reader);
+    assert_eq!(status, 503, "body: {body}");
+    assert!(body.contains("connection limit"), "body: {body}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "503 delivery stalled {:?} behind an unread rejection",
+        t0.elapsed()
+    );
+
+    // Release everything; the server recovers.
+    drop(victim_a);
+    drop(reader);
+    drop(writer);
+    let t0 = Instant::now();
+    loop {
+        match TcpStream::connect(addr).and_then(|mut s| {
+            s.set_read_timeout(Some(Duration::from_secs(5)))?;
+            s.write_all(b"GET /healthz HTTP/1.1\r\nhost: t\r\nconnection: close\r\n\r\n")?;
+            let mut line = String::new();
+            BufReader::new(s).read_line(&mut line)?;
+            Ok(line.contains(" 200 "))
+        }) {
+            Ok(true) => break,
+            _ => {
+                assert!(
+                    t0.elapsed() < Duration::from_secs(10),
+                    "connection slot never freed"
+                );
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+
+    assert_engine_sane(&engine);
+    server.shutdown();
+    engine.shutdown();
+}
+
+#[test]
+fn over_cap_503_not_stalled_by_unread_rejections() {
+    over_cap_scenario(IoModel::Threads);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn over_cap_503_not_stalled_by_unread_rejections_evented() {
+    over_cap_scenario(IoModel::Evented);
+}
